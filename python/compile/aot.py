@@ -1,0 +1,107 @@
+"""AOT compile path: lower the per-service JAX models to HLO text.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per service ``s`` in {cp, kp, sr, pr, vr}:
+
+  artifacts/model_<s>.hlo.txt       HLO text consumed by rust runtime/
+  artifacts/model_<s>.meta.txt      input signature: ``key value`` lines
+  artifacts/model_<s>.expected.txt  sample input/output dump for the Rust
+                                    end-to-end numerics test
+
+Run via ``make artifacts`` (no-op when inputs are unchanged). Python never
+runs on the request path — the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import SERVICE_CONFIGS, ModelConfig, example_inputs, make_inference_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default HLO printer
+    # elides big constants as `{...}`, which the Rust side's HLO *text*
+    # parser silently reads back as zeros — every baked-in model weight
+    # would vanish and the model would output sigmoid(0) = 0.5 forever.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_service(cfg: ModelConfig) -> str:
+    fn = make_inference_fn(cfg)
+    stat, seq, mask, cloud = (
+        jax.ShapeDtypeStruct((cfg.n_stat,), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.seq_len, cfg.seq_dim), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.seq_len,), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n_cloud,), jnp.float32),
+    )
+    lowered = jax.jit(fn).lower(stat, seq, mask, cloud)
+    return to_hlo_text(lowered)
+
+
+def write_meta(cfg: ModelConfig, path: str) -> None:
+    with open(path, "w") as f:
+        f.write(f"service {cfg.name}\n")
+        f.write(f"n_user {cfg.n_user}\n")
+        f.write(f"n_device {cfg.n_device}\n")
+        f.write(f"n_stat {cfg.n_stat}\n")
+        f.write(f"seq_len {cfg.seq_len}\n")
+        f.write(f"seq_dim {cfg.seq_dim}\n")
+        f.write(f"n_cloud {cfg.n_cloud}\n")
+
+
+def write_expected(cfg: ModelConfig, path: str) -> None:
+    """Dump a deterministic sample (inputs flattened + expected output)."""
+    fn = make_inference_fn(cfg)
+    stat, seq, mask, cloud = example_inputs(cfg)
+    (out,) = jax.jit(fn)(stat, seq, mask, cloud)
+    with open(path, "w") as f:
+        for name, arr in (
+            ("stat", stat),
+            ("seq", seq),
+            ("seq_mask", mask),
+            ("cloud", cloud),
+        ):
+            flat = jnp.ravel(arr)
+            f.write(f"{name} {' '.join(repr(float(x)) for x in flat)}\n")
+        f.write(f"output {float(out)!r}\n")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--services",
+        default=",".join(SERVICE_CONFIGS),
+        help="comma-separated subset of services to lower",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name in args.services.split(","):
+        cfg = SERVICE_CONFIGS[name]
+        hlo = lower_service(cfg)
+        hlo_path = os.path.join(args.out_dir, f"model_{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(hlo)
+        write_meta(cfg, os.path.join(args.out_dir, f"model_{name}.meta.txt"))
+        write_expected(cfg, os.path.join(args.out_dir, f"model_{name}.expected.txt"))
+        print(f"[aot] {name}: wrote {len(hlo)} chars -> {hlo_path}")
+
+
+if __name__ == "__main__":
+    main()

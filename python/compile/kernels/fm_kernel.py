@@ -1,0 +1,105 @@
+"""Pallas kernel: factorization-machine second-order interaction (Layer 1).
+
+Computes, for feature values ``x [B, n]`` and latent factors ``v [n, d]``:
+
+    out = 0.5 * ((x @ v)^2 - (x*x) @ (v*v))        # [B, d]
+
+which is the O(n*d) FM identity for the O(n^2*d) pairwise-interaction sum.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the kernel tiles the
+batch into ``block_b`` rows per grid step and streams the field dimension
+``n`` through VMEM in ``block_n`` chunks with a ``fori_loop`` accumulator,
+so both matmuls hit the MXU with [block_b, block_n] x [block_n, d] tiles
+and VMEM holds only O(block_b*block_n + block_n*d + block_b*d) floats.
+On this CPU-only image the kernel runs under ``interpret=True`` (Mosaic
+custom-calls are TPU-only); correctness is asserted against
+``ref.fm_interaction_ref`` by the pytest/hypothesis suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fm_kernel(x_ref, v_ref, o_ref, *, block_n: int, n_total: int):
+    """One grid step: a block of batch rows, full field reduction."""
+    num_blocks = (n_total + block_n - 1) // block_n
+
+    def body(i, carry):
+        s_acc, q_acc = carry
+        start = i * block_n
+        xb = jax.lax.dynamic_slice(
+            x_ref[...], (0, start), (x_ref.shape[0], block_n)
+        )
+        vb = jax.lax.dynamic_slice(v_ref[...], (start, 0), (block_n, v_ref.shape[1]))
+        # Padding columns (start+j >= n_total) are zero (we pad inputs), so
+        # they contribute nothing to either accumulator.
+        s_acc = s_acc + jnp.dot(xb, vb, preferred_element_type=jnp.float32)
+        q_acc = q_acc + jnp.dot(xb * xb, vb * vb, preferred_element_type=jnp.float32)
+        return s_acc, q_acc
+
+    zero = jnp.zeros((x_ref.shape[0], v_ref.shape[1]), jnp.float32)
+    s, q = jax.lax.fori_loop(0, num_blocks, body, (zero, zero))
+    o_ref[...] = 0.5 * (s * s - q)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n"))
+def fm_interaction(
+    x: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_b: int = 8,
+    block_n: int = 128,
+) -> jnp.ndarray:
+    """FM second-order interaction via a Pallas kernel.
+
+    Args:
+      x: ``[B, n]`` float32 feature values.
+      v: ``[n, d]`` float32 latent factors.
+      block_b: batch rows per grid step.
+      block_n: field-dimension VMEM tile (128 = MXU lane width).
+
+    Returns:
+      ``[B, d]`` float32 interaction vector, identical (up to float
+      association) to ``ref.fm_interaction_ref(x, v)``.
+    """
+    b, n = x.shape
+    n2, d = v.shape
+    assert n == n2, f"x fields {n} != v fields {n2}"
+    x = x.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+
+    # Pad fields to the tile size (zeros are exact no-ops for FM sums) and
+    # batch to the block size.
+    eff_block_n = min(block_n, max(8, n))
+    xp = _pad_to(_pad_to(x, 1, eff_block_n), 0, block_b)
+    vp = _pad_to(v, 0, eff_block_n)
+    bp, np_ = xp.shape
+
+    kernel = functools.partial(_fm_kernel, block_n=eff_block_n, n_total=np_)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, np_), lambda i: (i, 0)),
+            pl.BlockSpec((np_, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, d), jnp.float32),
+        interpret=True,  # CPU image: Mosaic lowering is TPU-only
+    )(xp, vp)
+    return out[:b]

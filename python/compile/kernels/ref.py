@@ -1,0 +1,55 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1).
+
+These are the ground truth that `fm_kernel.py` and `seq_attention.py` are
+validated against (pytest + hypothesis in ``python/tests/``). They are also
+used directly by the model when ``use_ref=True``, which gives an
+end-to-end kernel-vs-ref equivalence check at the model level.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fm_interaction_ref(x: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Factorization-machine second-order interaction vector.
+
+    Standard FM identity (Rendle 2010): for each latent dim d,
+
+        out_d = 0.5 * ((sum_i v_id x_i)^2 - sum_i v_id^2 x_i^2)
+
+    Args:
+      x: ``[B, n]`` feature values.
+      v: ``[n, d]`` latent factor matrix.
+
+    Returns:
+      ``[B, d]`` interaction vector.
+    """
+    s = x @ v  # [B, d]
+    q = (x * x) @ (v * v)  # [B, d]
+    return 0.5 * (s * s - q)
+
+
+def attention_pool_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Masked single-head attention pooling.
+
+    Args:
+      q: ``[B, d]`` query (one per sequence).
+      k: ``[B, L, d]`` keys.
+      v: ``[B, L, d]`` values.
+      mask: ``[B, L]`` 1.0 for valid positions, 0.0 for padding.
+
+    Returns:
+      ``[B, d]`` pooled vector: softmax(q.k/sqrt(d), masked) @ v.
+    """
+    d = q.shape[-1]
+    logits = jnp.einsum("bd,bld->bl", q, k) / jnp.sqrt(jnp.float32(d))
+    logits = jnp.where(mask > 0, logits, jnp.float32(-1e30))
+    # Numerically stable softmax; fully-masked rows yield a zero vector.
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m) * (mask > 0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    w = e / jnp.maximum(z, 1e-30)
+    return jnp.einsum("bl,bld->bd", w, v)

@@ -1,0 +1,94 @@
+"""Pallas kernel: masked single-head attention pooling (Layer 1).
+
+The sequence encoder of the paper's Fig. 13 model pools the recent
+behavior-sequence features into one vector per request:
+
+    out = softmax(q . K^T / sqrt(d), masked) @ V        # [B, d]
+
+TPU mapping: one grid step per batch row; K/V for that row live in VMEM
+([L, d] tiles), the logit/softmax reduction is VPU work and the weighted
+sum is a [1, L] x [L, d] MXU matmul. L and d are padded to multiples of 8
+so tiles stay aligned. Runs under ``interpret=True`` on this CPU image;
+validated against ``ref.attention_pool_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, true_d: int):
+    q = q_ref[...]  # [1, d_padded]
+    k = k_ref[0]  # block is [1, L, d] -> [L, d]
+    v = v_ref[0]  # [L, d]
+    mask = mask_ref[...]  # [1, L]
+
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [1, L]
+    # Scale by the *unpadded* head dim: padding lanes are zero and add
+    # nothing to the dot product, but they must not change the scale.
+    logits = logits / (true_d**0.5)
+    logits = jnp.where(mask > 0, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m) * (mask > 0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    w = e / jnp.maximum(z, 1e-30)  # [1, L]
+    o_ref[...] = jnp.dot(w, v, preferred_element_type=jnp.float32)
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    rem = x.shape[axis] % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@jax.jit
+def attention_pool(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Masked attention pooling via a Pallas kernel.
+
+    Args:
+      q: ``[B, d]`` queries.
+      k: ``[B, L, d]`` keys.
+      v: ``[B, L, d]`` values.
+      mask: ``[B, L]`` validity mask (1 = valid, 0 = padding). Padding
+        introduced internally is masked out, so results match the ref
+        oracle exactly for any L/d.
+
+    Returns:
+      ``[B, d]`` pooled vectors.
+    """
+    b, l, d = k.shape
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    # Align L and d to 8-lane tiles; padded keys are masked out.
+    kp = _pad_axis(_pad_axis(k, 1, 8), 2, 8)
+    vp = _pad_axis(_pad_axis(v, 1, 8), 2, 8)
+    qp = _pad_axis(q, 1, 8)
+    mp = _pad_axis(mask, 1, 8)
+    lp, dp = kp.shape[1], kp.shape[2]
+
+    kernel = functools.partial(_attn_kernel, true_d=d)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, dp), lambda i: (i, 0)),
+            pl.BlockSpec((1, lp, dp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, lp, dp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, lp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, dp), jnp.float32),
+        interpret=True,  # CPU image: Mosaic lowering is TPU-only
+    )(qp, kp, vp, mp)
+    return out[:, :d]

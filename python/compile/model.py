@@ -1,0 +1,152 @@
+"""Layer 2: the paper's generic on-device model (Fig. 13), in JAX.
+
+Structure (verbatim from the paper's "Model Architecture" section):
+
+  * Input layer — three feature categories:
+      - ``stat``  [n_stat]        statistical user features + device features
+      - ``seq``   [L, seq_dim]    sequential behavior features
+      - ``cloud`` [n_cloud]       cloud-provided embeddings
+  * Processing layer —
+      - factorization-machine layer crossing the statistical/device
+        features (Pallas kernel ``fm_kernel.fm_interaction``),
+      - sequence encoder capturing temporal dynamics: a learned projection
+        to keys/values plus masked attention pooling (Pallas kernel
+        ``seq_attention.attention_pool``).
+  * Output layer — two dense ReLU layers + sigmoid head.
+
+Weights are generated deterministically from a per-service seed so the
+Rust integration tests can compare the PJRT-executed artifact against
+outputs dumped at AOT time. Batch size is fixed at 1: on-device inference
+serves a single request at a time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.fm_kernel import fm_interaction
+from .kernels.seq_attention import attention_pool
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Per-service model dimensions (Fig. 12a feature counts)."""
+
+    name: str
+    n_user: int  # user features (paper Fig. 12a)
+    n_device: int = 8  # device features (volume, battery, ...)
+    n_cloud: int = 16  # cloud embedding width
+    seq_len: int = 32  # recent-behavior sequence length
+    seq_dim: int = 8  # per-step behavior feature width
+    emb_d: int = 16  # FM latent dimension
+    hidden: int = 64  # dense layer width
+    seed: int = 0
+
+    @property
+    def n_stat(self) -> int:
+        return self.n_user + self.n_device
+
+
+# The five services evaluated in the paper (§4.1), with their user-feature
+# counts from Fig. 12a.
+SERVICE_CONFIGS: Dict[str, ModelConfig] = {
+    "cp": ModelConfig(name="cp", n_user=86, seed=101),
+    "kp": ModelConfig(name="kp", n_user=53, seed=102),
+    "sr": ModelConfig(name="sr", n_user=40, seed=103),
+    "pr": ModelConfig(name="pr", n_user=103, seed=104),
+    "vr": ModelConfig(name="vr", n_user=134, seed=105),
+}
+
+
+def init_params(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Deterministic parameter init from the config seed."""
+    key = jax.random.PRNGKey(cfg.seed)
+    ks = jax.random.split(key, 10)
+    d = cfg.emb_d
+
+    def glorot(k, shape):
+        fan_in = shape[0]
+        return jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(
+            jnp.float32(fan_in)
+        )
+
+    concat_dim = d + d + cfg.n_cloud + 1  # fm_vec, pooled, cloud, fm_linear
+    return {
+        "fm_w0": jnp.zeros((), jnp.float32),
+        "fm_w": glorot(ks[0], (cfg.n_stat, 1)).reshape(cfg.n_stat),
+        "fm_v": glorot(ks[1], (cfg.n_stat, d)),
+        "seq_wk": glorot(ks[2], (cfg.seq_dim, d)),
+        "seq_wv": glorot(ks[3], (cfg.seq_dim, d)),
+        "seq_q": jax.random.normal(ks[4], (d,), jnp.float32),
+        "mlp_w1": glorot(ks[5], (concat_dim, cfg.hidden)),
+        "mlp_b1": jnp.zeros((cfg.hidden,), jnp.float32),
+        "mlp_w2": glorot(ks[6], (cfg.hidden, cfg.hidden)),
+        "mlp_b2": jnp.zeros((cfg.hidden,), jnp.float32),
+        "mlp_w3": glorot(ks[7], (cfg.hidden, 1)),
+        "mlp_b3": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def forward(
+    params: Dict[str, jnp.ndarray],
+    stat: jnp.ndarray,  # [n_stat]
+    seq: jnp.ndarray,  # [L, seq_dim]
+    seq_mask: jnp.ndarray,  # [L]
+    cloud: jnp.ndarray,  # [n_cloud]
+    *,
+    use_ref: bool = False,
+) -> jnp.ndarray:
+    """Single-request forward pass -> scalar prediction in (0, 1).
+
+    ``use_ref=True`` swaps the Pallas kernels for the pure-jnp oracles;
+    the pytest suite asserts both paths agree, which validates the kernels
+    *inside* the full model graph, not just in isolation.
+    """
+    fm_fn = ref.fm_interaction_ref if use_ref else fm_interaction
+    pool_fn = ref.attention_pool_ref if use_ref else attention_pool
+
+    x = stat[None, :]  # [1, n_stat]
+    fm_vec = fm_fn(x, params["fm_v"])  # [1, d]
+    fm_linear = params["fm_w0"] + x @ params["fm_w"][:, None]  # [1, 1]
+
+    k = seq @ params["seq_wk"]  # [L, d]
+    v = seq @ params["seq_wv"]  # [L, d]
+    pooled = pool_fn(
+        params["seq_q"][None, :], k[None], v[None], seq_mask[None, :]
+    )  # [1, d]
+
+    h = jnp.concatenate([fm_vec, pooled, cloud[None, :], fm_linear], axis=-1)
+    h = jax.nn.relu(h @ params["mlp_w1"] + params["mlp_b1"])
+    h = jax.nn.relu(h @ params["mlp_w2"] + params["mlp_b2"])
+    logit = h @ params["mlp_w3"] + params["mlp_b3"]
+    return jax.nn.sigmoid(logit)[0, 0]
+
+
+def make_inference_fn(cfg: ModelConfig, *, use_ref: bool = False):
+    """Close over deterministic params -> fn(stat, seq, seq_mask, cloud).
+
+    This is the function AOT-lowered to HLO: parameters are baked in as
+    constants so the Rust runtime only feeds the four feature inputs.
+    """
+    params = init_params(cfg)
+
+    def fn(stat, seq, seq_mask, cloud):
+        return (forward(params, stat, seq, seq_mask, cloud, use_ref=use_ref),)
+
+    return fn
+
+
+def example_inputs(cfg: ModelConfig, seed: int = 7):
+    """Deterministic sample inputs (used for AOT lowering + e2e checks)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    stat = jax.random.uniform(k1, (cfg.n_stat,), jnp.float32)
+    seq = jax.random.normal(k2, (cfg.seq_len, cfg.seq_dim), jnp.float32)
+    mask = jnp.ones((cfg.seq_len,), jnp.float32).at[cfg.seq_len // 2 :].set(0.0)
+    cloud = jax.random.normal(k3, (cfg.n_cloud,), jnp.float32)
+    return stat, seq, mask, cloud

@@ -1,0 +1,68 @@
+"""AOT lowering tests: HLO text well-formedness + expected-output dump."""
+
+import os
+
+import jax
+import pytest
+
+from compile.aot import lower_service, write_expected, write_meta
+from compile.model import SERVICE_CONFIGS, ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = ModelConfig(name="tiny", n_user=12, seq_len=8, seq_dim=4, emb_d=8, hidden=16, seed=9)
+
+
+def test_hlo_text_well_formed():
+    hlo = lower_service(SMALL)
+    assert "ENTRY" in hlo
+    assert "HloModule" in hlo
+    # Four input parameters: stat, seq, seq_mask, cloud.
+    assert hlo.count("parameter(") >= 4
+
+
+def test_hlo_constants_are_not_elided():
+    """Regression: the default HLO printer elides large constants as
+    `{...}`; the Rust text parser would silently read them as zeros and
+    every baked-in weight would vanish (model stuck at sigmoid(0)=0.5)."""
+    hlo = lower_service(SMALL)
+    assert "constant({...})" not in hlo
+    assert "{...}" not in hlo
+
+
+def test_hlo_output_is_tuple():
+    """return_tuple=True so the Rust side can unwrap with to_tuple1()."""
+    hlo = lower_service(SMALL)
+    assert "tuple(" in hlo or "ROOT" in hlo
+
+
+@pytest.mark.parametrize("name", ["sr"])  # one real service keeps CI fast
+def test_real_service_lowering(name):
+    hlo = lower_service(SERVICE_CONFIGS[name])
+    assert len(hlo) > 1000
+
+
+def test_meta_and_expected_roundtrip(tmp_path):
+    meta = tmp_path / "m.meta.txt"
+    exp = tmp_path / "m.expected.txt"
+    write_meta(SMALL, str(meta))
+    write_expected(SMALL, str(exp))
+
+    kv = dict(line.split(maxsplit=1) for line in meta.read_text().splitlines())
+    assert int(kv["n_stat"]) == SMALL.n_user + SMALL.n_device
+    assert int(kv["seq_len"]) == SMALL.seq_len
+
+    lines = exp.read_text().splitlines()
+    fields = dict((ln.split(" ", 1)[0], ln.split(" ", 1)[1]) for ln in lines)
+    assert set(fields) == {"stat", "seq", "seq_mask", "cloud", "output"}
+    assert len(fields["stat"].split()) == SMALL.n_user + SMALL.n_device
+    assert len(fields["seq"].split()) == SMALL.seq_len * SMALL.seq_dim
+    out = float(fields["output"])
+    assert 0.0 < out < 1.0
+
+
+def test_expected_deterministic(tmp_path):
+    a, b = tmp_path / "a.txt", tmp_path / "b.txt"
+    write_expected(SMALL, str(a))
+    write_expected(SMALL, str(b))
+    assert a.read_text() == b.read_text()

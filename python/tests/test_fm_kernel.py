@@ -1,0 +1,94 @@
+"""Pallas FM kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fm_kernel import fm_interaction
+from compile.kernels.ref import fm_interaction_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    n=st.integers(1, 48),
+    d=st.integers(1, 24),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref_random_shapes(b, n, d, seed):
+    x = _rand(seed, (b, n))
+    v = _rand(seed + 1, (n, d))
+    got = fm_interaction(x, v)
+    want = fm_interaction_ref(x, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    block_b=st.sampled_from([1, 2, 8, 16]),
+    block_n=st.sampled_from([8, 16, 128, 256]),
+)
+def test_block_shape_invariance(block_b, block_n):
+    """Tiling parameters must never change the numerics."""
+    x = _rand(3, (5, 37))
+    v = _rand(4, (37, 11))
+    got = fm_interaction(x, v, block_b=block_b, block_n=block_n)
+    want = fm_interaction_ref(x, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_zero_input_gives_zero():
+    x = jnp.zeros((4, 20), jnp.float32)
+    v = _rand(0, (20, 8))
+    np.testing.assert_array_equal(np.asarray(fm_interaction(x, v)), 0.0)
+
+
+def test_single_field_is_zero_interaction():
+    """One field has no pairwise partner: interaction must be exactly 0."""
+    x = _rand(1, (3, 1))
+    v = _rand(2, (1, 6))
+    np.testing.assert_allclose(np.asarray(fm_interaction(x, v)), 0.0, atol=1e-6)
+
+
+def test_two_fields_closed_form():
+    """n=2: out_d must equal v_0d * v_1d * x_0 * x_1 exactly."""
+    x = jnp.array([[2.0, 3.0]], jnp.float32)
+    v = jnp.array([[1.0, -1.0], [0.5, 2.0]], jnp.float32)
+    want = (v[0] * v[1] * 6.0)[None, :]
+    np.testing.assert_allclose(np.asarray(fm_interaction(x, v)), np.asarray(want), rtol=1e-5)
+
+
+def test_large_values_stable():
+    x = 100.0 * _rand(9, (2, 16))
+    v = _rand(10, (16, 8))
+    got = fm_interaction(x, v)
+    want = fm_interaction_ref(x, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3)
+    assert np.all(np.isfinite(np.asarray(got)))
+
+
+def test_scale_quadratically():
+    """FM interactions are 2-homogeneous: f(a*x) = a^2 * f(x)."""
+    x = _rand(11, (3, 12))
+    v = _rand(12, (12, 5))
+    one = np.asarray(fm_interaction(x, v))
+    three = np.asarray(fm_interaction(3.0 * x, v))
+    np.testing.assert_allclose(three, 9.0 * one, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [1, 7, 8, 127, 128, 129])
+def test_padding_boundaries(n):
+    """Field counts at/around the tile boundary."""
+    x = _rand(20 + n, (2, n))
+    v = _rand(21 + n, (n, 4))
+    got = fm_interaction(x, v)
+    want = fm_interaction_ref(x, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,86 @@
+"""Model-level (L2) tests: shapes, determinism, kernel-vs-ref inside the
+full graph, and per-service configs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    SERVICE_CONFIGS,
+    ModelConfig,
+    example_inputs,
+    forward,
+    init_params,
+    make_inference_fn,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name", sorted(SERVICE_CONFIGS))
+def test_forward_scalar_in_unit_interval(name):
+    cfg = SERVICE_CONFIGS[name]
+    params = init_params(cfg)
+    out = forward(params, *example_inputs(cfg))
+    assert out.shape == ()
+    assert 0.0 < float(out) < 1.0
+
+
+@pytest.mark.parametrize("name", sorted(SERVICE_CONFIGS))
+def test_pallas_path_matches_ref_path(name):
+    """Kernels validated *inside* the full model graph."""
+    cfg = SERVICE_CONFIGS[name]
+    params = init_params(cfg)
+    inputs = example_inputs(cfg)
+    got = forward(params, *inputs, use_ref=False)
+    want = forward(params, *inputs, use_ref=True)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4, atol=1e-5)
+
+
+def test_deterministic_params():
+    cfg = SERVICE_CONFIGS["sr"]
+    a, b = init_params(cfg), init_params(cfg)
+    for key in a:
+        np.testing.assert_array_equal(np.asarray(a[key]), np.asarray(b[key]))
+
+
+def test_different_seeds_different_params():
+    a = init_params(ModelConfig(name="x", n_user=10, seed=1))
+    b = init_params(ModelConfig(name="x", n_user=10, seed=2))
+    assert not np.allclose(np.asarray(a["fm_v"]), np.asarray(b["fm_v"]))
+
+
+def test_inference_fn_is_jittable_and_deterministic():
+    cfg = SERVICE_CONFIGS["kp"]
+    fn = jax.jit(make_inference_fn(cfg))
+    inputs = example_inputs(cfg)
+    (a,) = fn(*inputs)
+    (b,) = fn(*inputs)
+    assert float(a) == float(b)
+
+
+def test_mask_changes_prediction():
+    """The sequence mask must actually gate the sequence contribution."""
+    cfg = SERVICE_CONFIGS["cp"]
+    params = init_params(cfg)
+    stat, seq, mask, cloud = example_inputs(cfg)
+    full = forward(params, stat, seq, jnp.ones_like(mask), cloud)
+    none = forward(params, stat, seq, jnp.zeros_like(mask), cloud)
+    assert abs(float(full) - float(none)) > 1e-6
+
+
+def test_stat_features_change_prediction():
+    cfg = SERVICE_CONFIGS["vr"]
+    params = init_params(cfg)
+    stat, seq, mask, cloud = example_inputs(cfg)
+    base = forward(params, stat, seq, mask, cloud)
+    bumped = forward(params, stat + 1.0, seq, mask, cloud)
+    assert abs(float(base) - float(bumped)) > 1e-7
+
+
+@pytest.mark.parametrize("name", sorted(SERVICE_CONFIGS))
+def test_service_dims_match_paper(name):
+    """Fig. 12a feature counts."""
+    expected = {"cp": 86, "kp": 53, "sr": 40, "pr": 103, "vr": 134}
+    assert SERVICE_CONFIGS[name].n_user == expected[name]

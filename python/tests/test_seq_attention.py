@@ -1,0 +1,98 @@
+"""Pallas attention-pooling kernel vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import attention_pool_ref
+from compile.kernels.seq_attention import attention_pool
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _mask(key, b, l, p_valid=0.7):
+    u = jax.random.uniform(jax.random.PRNGKey(key), (b, l))
+    m = (u < p_valid).astype(jnp.float32)
+    # Guarantee at least one valid position per row (fully-masked rows are
+    # tested separately).
+    return m.at[:, 0].set(1.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    l=st.integers(1, 40),
+    d=st.integers(1, 24),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref_random_shapes(b, l, d, seed):
+    q = _rand(seed, (b, d))
+    k = _rand(seed + 1, (b, l, d))
+    v = _rand(seed + 2, (b, l, d))
+    m = _mask(seed + 3, b, l)
+    got = attention_pool(q, k, v, m)
+    want = attention_pool_ref(q, k, v, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_all_valid_mask():
+    q, k, v = _rand(1, (3, 8)), _rand(2, (3, 16, 8)), _rand(3, (3, 16, 8))
+    m = jnp.ones((3, 16))
+    got = attention_pool(q, k, v, m)
+    want = attention_pool_ref(q, k, v, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_fully_masked_row_is_zero():
+    q, k, v = _rand(4, (2, 8)), _rand(5, (2, 10, 8)), _rand(6, (2, 10, 8))
+    m = jnp.zeros((2, 10)).at[1, 3].set(1.0)  # row 0 fully masked
+    got = np.asarray(attention_pool(q, k, v, m))
+    np.testing.assert_allclose(got[0], 0.0, atol=1e-6)
+    want = np.asarray(attention_pool_ref(q, k, v, m))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_single_valid_position_selects_value():
+    """With exactly one valid key, the output must equal its value row."""
+    q, k = _rand(7, (1, 6)), _rand(8, (1, 12, 6))
+    v = _rand(9, (1, 12, 6))
+    m = jnp.zeros((1, 12)).at[0, 5].set(1.0)
+    got = np.asarray(attention_pool(q, k, v, m))
+    np.testing.assert_allclose(got[0], np.asarray(v)[0, 5], rtol=1e-5, atol=1e-6)
+
+
+def test_large_logits_stable():
+    """Softmax must survive huge logits (stability guard in kernel)."""
+    q = 50.0 * _rand(10, (2, 8))
+    k = 50.0 * _rand(11, (2, 20, 8))
+    v = _rand(12, (2, 20, 8))
+    m = jnp.ones((2, 20))
+    got = np.asarray(attention_pool(q, k, v, m))
+    want = np.asarray(attention_pool_ref(q, k, v, m))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_permutation_invariance():
+    """Attention pooling is permutation-invariant over (k, v, mask) rows."""
+    q, k, v = _rand(13, (1, 8)), _rand(14, (1, 16, 8)), _rand(15, (1, 16, 8))
+    m = _mask(16, 1, 16)
+    perm = jax.random.permutation(jax.random.PRNGKey(17), 16)
+    a = np.asarray(attention_pool(q, k, v, m))
+    b = np.asarray(attention_pool(q, k[:, perm], v[:, perm], m[:, perm]))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("l,d", [(1, 1), (7, 7), (8, 8), (9, 9), (33, 17)])
+def test_padding_boundaries(l, d):
+    q, k, v = _rand(20, (2, d)), _rand(21, (2, l, d)), _rand(22, (2, l, d))
+    m = _mask(23, 2, l)
+    got = attention_pool(q, k, v, m)
+    want = attention_pool_ref(q, k, v, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,38 @@
+//! Shared bench scaffolding (the build image vendors no criterion; each
+//! bench is a `harness = false` main that regenerates one paper
+//! table/figure and prints paper-comparable rows — see DESIGN.md
+//! §Substitutions).
+
+#![allow(dead_code)] // each bench uses a subset of the helpers
+
+use std::time::Instant;
+
+use autofeature::harness::experiments::Scale;
+
+/// Scale selection: `BENCH_QUICK=1 cargo bench` for smoke runs.
+pub fn scale() -> Scale {
+    if std::env::var("BENCH_QUICK").is_ok() {
+        Scale::Quick
+    } else {
+        Scale::Full
+    }
+}
+
+/// Run a named experiment, timing the whole regeneration.
+pub fn run(name: &str, f: impl FnOnce() -> anyhow::Result<()>) {
+    println!("\n################ bench: {name} ################");
+    let t0 = Instant::now();
+    if let Err(e) = f() {
+        eprintln!("bench {name} failed: {e:#}");
+        std::process::exit(1);
+    }
+    println!("[{name}] regenerated in {:.2} s", t0.elapsed().as_secs_f64());
+}
+
+/// Artifact-aware model loader for benches.
+pub fn models() -> impl Fn(
+    autofeature::workload::services::ServiceKind,
+) -> Option<autofeature::runtime::ModelRuntime> {
+    let dir = autofeature::harness::default_artifact_dir();
+    move |kind| autofeature::harness::try_load_model(&dir, kind)
+}

@@ -1,0 +1,11 @@
+//! Bench: Fig. 4 — on-device execution time breakdown.
+//! Regenerates the corresponding paper figure (see DESIGN.md §3).
+//! `BENCH_QUICK=1` shrinks the workload for smoke runs.
+
+mod common;
+
+use autofeature::harness::experiments;
+
+fn main() {
+    common::run("fig04_breakdown", || experiments::fig04_breakdown(common::scale(), &common::models()).map(|_| ()));
+}

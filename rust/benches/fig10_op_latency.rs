@@ -1,0 +1,11 @@
+//! Bench: Fig. 10 — per-operation latency vs attribute count.
+//! Regenerates the corresponding paper figure (see DESIGN.md §3).
+//! `BENCH_QUICK=1` shrinks the workload for smoke runs.
+
+mod common;
+
+use autofeature::harness::experiments;
+
+fn main() {
+    common::run("fig10_op_latency", || experiments::fig10_op_latency(common::scale()).map(|_| ()));
+}

@@ -1,0 +1,11 @@
+//! Bench: Fig. 11 — hierarchical vs direct fused filter.
+//! Regenerates the corresponding paper figure (see DESIGN.md §3).
+//! `BENCH_QUICK=1` shrinks the workload for smoke runs.
+
+mod common;
+
+use autofeature::harness::experiments;
+
+fn main() {
+    common::run("fig11_hier_filter", || experiments::fig11_hier_filter(common::scale()).map(|_| ()));
+}

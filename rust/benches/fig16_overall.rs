@@ -1,0 +1,11 @@
+//! Bench: Fig. 16 — overall latency across services/methods/periods.
+//! Regenerates the corresponding paper figure (see DESIGN.md §3).
+//! `BENCH_QUICK=1` shrinks the workload for smoke runs.
+
+mod common;
+
+use autofeature::harness::experiments;
+
+fn main() {
+    common::run("fig16_overall", || experiments::fig16_overall(common::scale(), &common::models()).map(|_| ()));
+}

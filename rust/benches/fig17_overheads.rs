@@ -1,0 +1,11 @@
+//! Bench: Fig. 17 — offline optimization cost + online cache memory.
+//! Regenerates the corresponding paper figure (see DESIGN.md §3).
+//! `BENCH_QUICK=1` shrinks the workload for smoke runs.
+
+mod common;
+
+use autofeature::harness::experiments;
+
+fn main() {
+    common::run("fig17_overheads", || experiments::fig17_overheads(common::scale()).map(|_| ()));
+}

@@ -1,0 +1,11 @@
+//! Bench: Fig. 18 / Table 1 — cloud-side feature extraction baselines.
+//! Regenerates the corresponding paper figure (see DESIGN.md §3).
+//! `BENCH_QUICK=1` shrinks the workload for smoke runs.
+
+mod common;
+
+use autofeature::harness::experiments;
+
+fn main() {
+    common::run("fig18_cloud", || experiments::fig18_cloud(common::scale(), &common::models()).map(|_| ()));
+}

@@ -1,0 +1,15 @@
+//! Bench: Fig. 19 — component-wise analysis on the VR service:
+//! (a) per-operation latency before/after inter-feature fusion,
+//! (b) greedy vs random cache policy under a budget sweep.
+
+mod common;
+
+use autofeature::harness::experiments;
+
+fn main() {
+    common::run("fig19_component", || {
+        experiments::fig19a_component(common::scale())?;
+        experiments::fig19b_cache_policy(common::scale())?;
+        Ok(())
+    });
+}

@@ -1,0 +1,11 @@
+//! Bench: Fig. 20 — speedup vs model execution interval.
+//! Regenerates the corresponding paper figure (see DESIGN.md §3).
+//! `BENCH_QUICK=1` shrinks the workload for smoke runs.
+
+mod common;
+
+use autofeature::harness::experiments;
+
+fn main() {
+    common::run("fig20_interval", || experiments::fig20_interval(common::scale()).map(|_| ()));
+}

@@ -1,0 +1,11 @@
+//! Bench: Fig. 21 — speedup vs inter-feature redundancy.
+//! Regenerates the corresponding paper figure (see DESIGN.md §3).
+//! `BENCH_QUICK=1` shrinks the workload for smoke runs.
+
+mod common;
+
+use autofeature::harness::experiments;
+
+fn main() {
+    common::run("fig21_redundancy", || experiments::fig21_redundancy(common::scale()).map(|_| ()));
+}

@@ -1,0 +1,160 @@
+//! Micro-benchmarks of the engine's hot paths (the §Perf instrument).
+//!
+//! Reports ns/op for: codec decode (jsonish vs binary), indexed
+//! retrieve, hierarchical filter walk vs direct walk, cache-row
+//! projection, and a full AutoFeature extraction on the VR service.
+//! Before/after numbers from this bench drive EXPERIMENTS.md §Perf.
+
+mod common;
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use autofeature::applog::codec::{AttrCodec, BinaryCodec, JsonishCodec};
+use autofeature::applog::query::{retrieve, TimeWindow};
+use autofeature::applog::store::{AppLogStore, StoreConfig};
+use autofeature::engine::config::EngineConfig;
+use autofeature::engine::online::Engine;
+use autofeature::harness::{eval_catalog, Method};
+use autofeature::optimizer::fusion::fuse;
+use autofeature::optimizer::hierarchical::{DirectWalker, LaneWalker, RowView};
+use autofeature::optimizer::plan::FeatureAcc;
+use autofeature::util::rng::SimRng;
+use autofeature::workload::driver::{run_simulation, SimConfig};
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+
+fn time_per_op(label: &str, iters: u64, mut f: impl FnMut()) -> f64 {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{label:44} {per:12.1} ns/op  ({iters} iters)");
+    per
+}
+
+fn main() {
+    println!("=== micro_hotpath — engine hot-path ns/op ===");
+    let catalog = eval_catalog();
+    let mut rng = SimRng::seed_from_u64(1);
+
+    // --- codec decode ---------------------------------------------------
+    let schema = catalog.schema(0); // first type; paper-shaped attr count
+    let attrs = schema.sample_attrs(&mut rng);
+    let json = JsonishCodec.encode(&attrs);
+    let bin = BinaryCodec.encode(&attrs);
+    println!(
+        "payload: {} attrs, jsonish {} B, binary {} B",
+        attrs.len(),
+        json.len(),
+        bin.len()
+    );
+    time_per_op("decode jsonish", 20_000, || {
+        black_box(JsonishCodec.decode(black_box(&json)).unwrap());
+    });
+    time_per_op("decode binary", 20_000, || {
+        black_box(BinaryCodec.decode(black_box(&bin)).unwrap());
+    });
+
+    // --- retrieve ---------------------------------------------------------
+    let mut store = AppLogStore::new(StoreConfig::default());
+    for i in 0..20_000i64 {
+        let t = (i % 8) as u16;
+        store
+            .append(t, i * 50, JsonishCodec.encode(&attrs))
+            .unwrap();
+    }
+    let w = TimeWindow::last(1_000_000, 500_000);
+    time_per_op("retrieve 1 type (~1.2k rows)", 2_000, || {
+        black_box(retrieve(black_box(&store), &[0], w));
+    });
+    time_per_op("retrieve 4 types (k-way merge)", 1_000, || {
+        black_box(retrieve(black_box(&store), &[0, 1, 2, 3], w));
+    });
+
+    // --- hierarchical vs direct filter walk -------------------------------
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let plan = fuse(&svc.features, true);
+    let lane = plan
+        .lanes
+        .iter()
+        .max_by_key(|l| l.groups.iter().map(|g| g.members.len()).sum::<usize>())
+        .unwrap();
+    let members: usize = lane.groups.iter().map(|g| g.members.len()).sum();
+    let now = 10_000_000i64;
+    let rows: Vec<(i64, u64, Vec<(u16, autofeature::applog::event::AttrValue)>)> = (0..2000)
+        .map(|i| {
+            (
+                now - lane.max_window.duration_ms + i as i64 * (lane.max_window.duration_ms / 2000),
+                i as u64,
+                schema.sample_attrs(&mut rng),
+            )
+        })
+        .collect();
+    println!("lane: {} members, {} window groups, 2000 rows", members, lane.groups.len());
+    time_per_op("hierarchical walk (per 2k-row lane)", 200, || {
+        let mut sinks: Vec<FeatureAcc> = svc
+            .features
+            .iter()
+            .map(|f| FeatureAcc::new(f, now))
+            .collect();
+        let mut wlk = LaneWalker::new(lane, now);
+        for (ts, seq, attrs) in &rows {
+            wlk.push_row(lane, RowView { ts: *ts, seq: *seq, attrs }, &mut sinks);
+        }
+        black_box(sinks);
+    });
+    time_per_op("direct walk (per 2k-row lane)", 200, || {
+        let mut sinks: Vec<FeatureAcc> = svc
+            .features
+            .iter()
+            .map(|f| FeatureAcc::new(f, now))
+            .collect();
+        let mut wlk = DirectWalker::new();
+        for (ts, seq, attrs) in &rows {
+            wlk.push_row(lane, now, RowView { ts: *ts, seq: *seq, attrs }, &mut sinks);
+        }
+        black_box(sinks);
+    });
+
+    // --- full extraction (VR) ---------------------------------------------
+    let sim = SimConfig {
+        warmup_ms: 45 * 60_000,
+        duration_ms: 2 * 60_000,
+        inference_interval_ms: 5_000,
+        seed: 77,
+        ..SimConfig::default()
+    };
+    for method in [Method::Naive, Method::FusionOnly, Method::AutoFeature] {
+        let mut ex = autofeature::harness::make_extractor(
+            method,
+            svc.features.clone(),
+            &catalog,
+            256 * 1024,
+        )
+        .unwrap();
+        let out = run_simulation(&catalog, ex.as_mut(), None, &sim).unwrap();
+        println!(
+            "full VR extraction [{:16}] {:10.3} ms/req over {} reqs",
+            method.label(),
+            out.mean_extraction_ms(),
+            out.records.len()
+        );
+    }
+
+    // Engine construction cost (offline phase).
+    time_per_op("engine offline compile (VR)", 20, || {
+        black_box(
+            Engine::new(
+                svc.features.clone(),
+                &catalog,
+                EngineConfig::autofeature(),
+            )
+            .unwrap(),
+        );
+    });
+}

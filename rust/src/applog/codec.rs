@@ -1,0 +1,503 @@
+//! Compressed-attribute codecs for the app log's payload column.
+//!
+//! The paper (§3.2, *Decode*) notes behavior-specific attributes are
+//! compressed into one column at logging time and decoded with
+//! "lightweight data transformation tools like JSON parsing", making
+//! `Decode` CPU-bound and — together with `Retrieve` — the dominant
+//! extraction cost (Fig. 10). [`JsonishCodec`] reproduces exactly that: a
+//! JSON-compatible text encoding whose decode path does real parsing
+//! work per row. [`BinaryCodec`] is a compact tag+varint format used for
+//! ablations (how much of the bottleneck is the text format itself).
+
+use anyhow::{bail, Context, Result};
+
+use super::event::{AttrId, AttrValue};
+
+/// A codec for the compressed behavior-specific attribute column.
+pub trait AttrCodec: Send + Sync {
+    /// Encode `(attr id, value)` pairs (sorted by id) into a payload blob.
+    fn encode(&self, attrs: &[(AttrId, AttrValue)]) -> Vec<u8>;
+    /// Decode a payload blob back into sorted `(attr id, value)` pairs.
+    fn decode(&self, payload: &[u8]) -> Result<Vec<(AttrId, AttrValue)>>;
+    /// Decode only the attributes in `wanted` (sorted ascending).
+    ///
+    /// §Perf: the engine's fused lanes never look at attributes outside
+    /// their attr union, so materializing all ~25–115 decoded values
+    /// (string allocations included) per row just to drop most of them
+    /// is pure allocator churn. Codecs can parse-and-skip instead. The
+    /// default falls back to full decode + filter.
+    fn decode_project(
+        &self,
+        payload: &[u8],
+        wanted: &[AttrId],
+    ) -> Result<Vec<(AttrId, AttrValue)>> {
+        Ok(self
+            .decode(payload)?
+            .into_iter()
+            .filter(|(a, _)| wanted.binary_search(a).is_ok())
+            .collect())
+    }
+    /// Short name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Selector for the two built-in codecs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CodecKind {
+    /// JSON-like text codec (the paper's production setting; default).
+    #[default]
+    Jsonish,
+    /// Compact binary codec (ablation).
+    Binary,
+}
+
+impl CodecKind {
+    /// Instantiate the codec.
+    pub fn build(self) -> Box<dyn AttrCodec> {
+        match self {
+            CodecKind::Jsonish => Box::new(JsonishCodec),
+            CodecKind::Binary => Box::new(BinaryCodec),
+        }
+    }
+}
+
+/// JSON-like text codec: `{"a12":34,"a13":1.5,"a14":"str"}`.
+///
+/// The decode path does genuine per-character parsing (no serde): number
+/// scanning, float parsing, string unescaping — the same class of CPU
+/// work a mobile SDK's JSON parser performs per event row.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JsonishCodec;
+
+impl AttrCodec for JsonishCodec {
+    fn encode(&self, attrs: &[(AttrId, AttrValue)]) -> Vec<u8> {
+        let mut out = String::with_capacity(attrs.len() * 12 + 2);
+        out.push('{');
+        for (i, (id, v)) in attrs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\"a");
+            out.push_str(&id.to_string());
+            out.push_str("\":");
+            match v {
+                AttrValue::Int(x) => out.push_str(&x.to_string()),
+                AttrValue::Float(x) => {
+                    // Always keep a decimal point so decode can
+                    // distinguish Int from Float.
+                    if x.fract() == 0.0 && x.is_finite() {
+                        out.push_str(&format!("{x:.1}"));
+                    } else {
+                        out.push_str(&x.to_string());
+                    }
+                }
+                AttrValue::Str(s) => {
+                    out.push('"');
+                    for c in s.chars() {
+                        match c {
+                            '"' => out.push_str("\\\""),
+                            '\\' => out.push_str("\\\\"),
+                            c => out.push(c),
+                        }
+                    }
+                    out.push('"');
+                }
+            }
+        }
+        out.push('}');
+        out.into_bytes()
+    }
+
+    fn decode(&self, payload: &[u8]) -> Result<Vec<(AttrId, AttrValue)>> {
+        let s = std::str::from_utf8(payload).context("payload is not utf-8")?;
+        let bytes = s.as_bytes();
+        let mut attrs = Vec::new();
+        let mut i = 0usize;
+        if bytes.is_empty() || bytes[i] != b'{' {
+            bail!("expected '{{' at 0");
+        }
+        i += 1;
+        loop {
+            if i >= bytes.len() {
+                bail!("unterminated object");
+            }
+            if bytes[i] == b'}' {
+                break;
+            }
+            if bytes[i] == b',' {
+                i += 1;
+            }
+            // Key: "a<digits>"
+            if bytes[i] != b'"' || i + 1 >= bytes.len() || bytes[i + 1] != b'a' {
+                bail!("expected key at {i}");
+            }
+            i += 2;
+            let id_start = i;
+            while i < bytes.len() && bytes[i].is_ascii_digit() {
+                i += 1;
+            }
+            let id: AttrId = s[id_start..i].parse().context("bad attr id")?;
+            if i + 1 >= bytes.len() || bytes[i] != b'"' || bytes[i + 1] != b':' {
+                bail!("expected '\":' at {i}");
+            }
+            i += 2;
+            if i >= bytes.len() {
+                bail!("missing value at {i}");
+            }
+            // Value: string | number
+            let value = if bytes[i] == b'"' {
+                i += 1;
+                let mut buf = String::new();
+                while i < bytes.len() && bytes[i] != b'"' {
+                    if bytes[i] == b'\\' && i + 1 < bytes.len() {
+                        buf.push(bytes[i + 1] as char);
+                        i += 2;
+                    } else {
+                        buf.push(bytes[i] as char);
+                        i += 1;
+                    }
+                }
+                if i >= bytes.len() {
+                    bail!("unterminated string");
+                }
+                i += 1; // closing quote
+                AttrValue::Str(buf)
+            } else {
+                let start = i;
+                let mut is_float = false;
+                while i < bytes.len() {
+                    match bytes[i] {
+                        b'0'..=b'9' | b'-' | b'+' => i += 1,
+                        b'.' | b'e' | b'E' => {
+                            is_float = true;
+                            i += 1;
+                        }
+                        _ => break,
+                    }
+                }
+                let tok = &s[start..i];
+                if is_float {
+                    AttrValue::Float(tok.parse().context("bad float")?)
+                } else {
+                    AttrValue::Int(tok.parse().context("bad int")?)
+                }
+            };
+            attrs.push((id, value));
+        }
+        Ok(attrs)
+    }
+
+    fn decode_project(
+        &self,
+        payload: &[u8],
+        wanted: &[AttrId],
+    ) -> Result<Vec<(AttrId, AttrValue)>> {
+        // Same scanner as `decode`, but values of unwanted attributes
+        // are skipped without materializing Strings/parses.
+        let s = std::str::from_utf8(payload).context("payload is not utf-8")?;
+        let bytes = s.as_bytes();
+        let mut attrs = Vec::with_capacity(wanted.len());
+        let mut i = 0usize;
+        if bytes.is_empty() || bytes[i] != b'{' {
+            bail!("expected '{{' at 0");
+        }
+        i += 1;
+        loop {
+            if i >= bytes.len() {
+                bail!("unterminated object");
+            }
+            if bytes[i] == b'}' {
+                break;
+            }
+            if bytes[i] == b',' {
+                i += 1;
+            }
+            if bytes[i] != b'"' || i + 1 >= bytes.len() || bytes[i + 1] != b'a' {
+                bail!("expected key at {i}");
+            }
+            i += 2;
+            let id_start = i;
+            while i < bytes.len() && bytes[i].is_ascii_digit() {
+                i += 1;
+            }
+            let id: AttrId = s[id_start..i].parse().context("bad attr id")?;
+            if i + 1 >= bytes.len() || bytes[i] != b'"' || bytes[i + 1] != b':' {
+                bail!("expected '\":' at {i}");
+            }
+            i += 2;
+            if i >= bytes.len() {
+                bail!("missing value at {i}");
+            }
+            let keep = wanted.binary_search(&id).is_ok();
+            if bytes[i] == b'"' {
+                i += 1;
+                if keep {
+                    let mut buf = String::new();
+                    while i < bytes.len() && bytes[i] != b'"' {
+                        if bytes[i] == b'\\' && i + 1 < bytes.len() {
+                            buf.push(bytes[i + 1] as char);
+                            i += 2;
+                        } else {
+                            buf.push(bytes[i] as char);
+                            i += 1;
+                        }
+                    }
+                    if i >= bytes.len() {
+                        bail!("unterminated string");
+                    }
+                    i += 1;
+                    attrs.push((id, AttrValue::Str(buf)));
+                } else {
+                    while i < bytes.len() && bytes[i] != b'"' {
+                        if bytes[i] == b'\\' && i + 1 < bytes.len() {
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    if i >= bytes.len() {
+                        bail!("unterminated string");
+                    }
+                    i += 1;
+                }
+            } else {
+                let start = i;
+                let mut is_float = false;
+                while i < bytes.len() {
+                    match bytes[i] {
+                        b'0'..=b'9' | b'-' | b'+' => i += 1,
+                        b'.' | b'e' | b'E' => {
+                            is_float = true;
+                            i += 1;
+                        }
+                        _ => break,
+                    }
+                }
+                if keep {
+                    let tok = &s[start..i];
+                    let v = if is_float {
+                        AttrValue::Float(tok.parse().context("bad float")?)
+                    } else {
+                        AttrValue::Int(tok.parse().context("bad int")?)
+                    };
+                    attrs.push((id, v));
+                }
+            }
+        }
+        Ok(attrs)
+    }
+
+    fn name(&self) -> &'static str {
+        "jsonish"
+    }
+}
+
+/// Compact binary codec: `[count: u16] ( [id: u16][tag: u8][value] )*`.
+///
+/// Ints/floats are fixed 8-byte little-endian; strings are
+/// `[len: u16][bytes]`. Used to ablate how much of the `Decode`
+/// bottleneck comes from text parsing vs. raw data movement.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BinaryCodec;
+
+impl AttrCodec for BinaryCodec {
+    fn encode(&self, attrs: &[(AttrId, AttrValue)]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(attrs.len() * 11 + 2);
+        out.extend_from_slice(&(attrs.len() as u16).to_le_bytes());
+        for (id, v) in attrs {
+            out.extend_from_slice(&id.to_le_bytes());
+            match v {
+                AttrValue::Int(x) => {
+                    out.push(0);
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+                AttrValue::Float(x) => {
+                    out.push(1);
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+                AttrValue::Str(s) => {
+                    out.push(2);
+                    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+                    out.extend_from_slice(s.as_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    fn decode(&self, payload: &[u8]) -> Result<Vec<(AttrId, AttrValue)>> {
+        let mut i = 0usize;
+        let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+            if *i + n > payload.len() {
+                bail!("truncated payload at {i}");
+            }
+            let s = &payload[*i..*i + n];
+            *i += n;
+            Ok(s)
+        };
+        let count = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap()) as usize;
+        let mut attrs = Vec::with_capacity(count);
+        for _ in 0..count {
+            let id = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap());
+            let tag = take(&mut i, 1)?[0];
+            let v = match tag {
+                0 => AttrValue::Int(i64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap())),
+                1 => AttrValue::Float(f64::from_le_bytes(
+                    take(&mut i, 8)?.try_into().unwrap(),
+                )),
+                2 => {
+                    let len =
+                        u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap()) as usize;
+                    AttrValue::Str(String::from_utf8(take(&mut i, len)?.to_vec())?)
+                }
+                t => bail!("bad tag {t}"),
+            };
+            attrs.push((id, v));
+        }
+        Ok(attrs)
+    }
+
+    fn decode_project(
+        &self,
+        payload: &[u8],
+        wanted: &[AttrId],
+    ) -> Result<Vec<(AttrId, AttrValue)>> {
+        let mut i = 0usize;
+        let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+            if *i + n > payload.len() {
+                bail!("truncated payload at {i}");
+            }
+            let s = &payload[*i..*i + n];
+            *i += n;
+            Ok(s)
+        };
+        let count = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap()) as usize;
+        let mut attrs = Vec::with_capacity(wanted.len());
+        for _ in 0..count {
+            let id = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap());
+            let tag = take(&mut i, 1)?[0];
+            let keep = wanted.binary_search(&id).is_ok();
+            match tag {
+                0 => {
+                    let b = take(&mut i, 8)?;
+                    if keep {
+                        attrs.push((id, AttrValue::Int(i64::from_le_bytes(b.try_into().unwrap()))));
+                    }
+                }
+                1 => {
+                    let b = take(&mut i, 8)?;
+                    if keep {
+                        attrs.push((id, AttrValue::Float(f64::from_le_bytes(b.try_into().unwrap()))));
+                    }
+                }
+                2 => {
+                    let len =
+                        u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap()) as usize;
+                    let b = take(&mut i, len)?;
+                    if keep {
+                        attrs.push((id, AttrValue::Str(String::from_utf8(b.to_vec())?)));
+                    }
+                }
+                t => bail!("bad tag {t}"),
+            }
+        }
+        Ok(attrs)
+    }
+
+    fn name(&self) -> &'static str {
+        "binary"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<(AttrId, AttrValue)> {
+        vec![
+            (0, AttrValue::Int(42)),
+            (3, AttrValue::Float(1.5)),
+            (4, AttrValue::Float(-2.0)),
+            (7, AttrValue::Str("comedy \"live\"".into())),
+            (12, AttrValue::Int(-9)),
+        ]
+    }
+
+    #[test]
+    fn jsonish_roundtrip() {
+        let c = JsonishCodec;
+        let attrs = sample();
+        assert_eq!(c.decode(&c.encode(&attrs)).unwrap(), attrs);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let c = BinaryCodec;
+        let attrs = sample();
+        assert_eq!(c.decode(&c.encode(&attrs)).unwrap(), attrs);
+    }
+
+    #[test]
+    fn jsonish_empty() {
+        let c = JsonishCodec;
+        assert_eq!(c.decode(&c.encode(&[])).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn jsonish_float_with_integral_value_stays_float() {
+        let c = JsonishCodec;
+        let attrs = vec![(1, AttrValue::Float(5.0))];
+        assert_eq!(c.decode(&c.encode(&attrs)).unwrap(), attrs);
+    }
+
+    #[test]
+    fn decode_project_equals_decode_then_filter() {
+        let attrs = sample();
+        for codec in [&JsonishCodec as &dyn AttrCodec, &BinaryCodec] {
+            let payload = codec.encode(&attrs);
+            for wanted in [vec![], vec![0u16], vec![3, 7], vec![0, 3, 4, 7, 12], vec![99]] {
+                let got = codec.decode_project(&payload, &wanted).unwrap();
+                let want: Vec<_> = codec
+                    .decode(&payload)
+                    .unwrap()
+                    .into_iter()
+                    .filter(|(a, _)| wanted.binary_search(a).is_ok())
+                    .collect();
+                assert_eq!(got, want, "{} {wanted:?}", codec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn decode_project_rejects_garbage() {
+        assert!(JsonishCodec.decode_project(b"nope", &[0]).is_err());
+        let enc = BinaryCodec.encode(&sample());
+        assert!(BinaryCodec.decode_project(&enc[..5], &[0]).is_err());
+    }
+
+    #[test]
+    fn jsonish_rejects_garbage() {
+        let c = JsonishCodec;
+        assert!(c.decode(b"not json").is_err());
+        assert!(c.decode(b"{\"a1\":").is_err());
+    }
+
+    #[test]
+    fn binary_rejects_truncation() {
+        let c = BinaryCodec;
+        let enc = c.encode(&sample());
+        assert!(c.decode(&enc[..enc.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn binary_size_is_exact_fixed_width() {
+        // count(2) + per attr: id(2)+tag(1)+8 for numerics, or
+        // id(2)+tag(1)+len(2)+bytes for strings.
+        let attrs = sample();
+        let strlen = "comedy \"live\"".len();
+        assert_eq!(
+            BinaryCodec.encode(&attrs).len(),
+            2 + 4 * (2 + 1 + 8) + (2 + 1 + 2 + strlen)
+        );
+    }
+}

@@ -1,0 +1,165 @@
+//! Behavior events and attribute values.
+
+use std::fmt;
+
+/// Identifier of a behavior type (e.g. `Video-Play`, `Add-to-Cart`).
+pub type EventTypeId = u16;
+/// Identifier of a behavior-specific attribute within its type's schema.
+pub type AttrId = u16;
+/// Milliseconds since the (simulated) epoch.
+pub type TimestampMs = i64;
+
+/// A decoded behavior-specific attribute value.
+///
+/// Real app logs mix integers (counts, ids), floats (durations, prices)
+/// and strings (genres, queries); all three appear in the compressed
+/// attribute column and must survive a codec round-trip exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    /// Integer-valued attribute (counts, ids, flags).
+    Int(i64),
+    /// Float-valued attribute (durations, prices, ratios).
+    Float(f64),
+    /// String-valued attribute (genres, queries, page names).
+    Str(String),
+}
+
+impl AttrValue {
+    /// Numeric view used by [`crate::features::compute`]: ints and floats
+    /// convert directly; strings hash to a stable value so that
+    /// equality-based computations (`DistinctCount`, `Concat` of genre
+    /// ids) remain meaningful.
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            AttrValue::Int(i) => *i as f64,
+            AttrValue::Float(f) => *f,
+            AttrValue::Str(s) => {
+                // FNV-1a, folded to 32 bits so the value is exactly
+                // representable in f64 (keeps equality semantics).
+                let mut h: u64 = 0xcbf29ce484222325;
+                for b in s.as_bytes() {
+                    h ^= *b as u64;
+                    h = h.wrapping_mul(0x100000001b3);
+                }
+                ((h >> 32) ^ (h & 0xffff_ffff)) as u32 as f64
+            }
+        }
+    }
+
+    /// Approximate in-memory size in bytes (used by cache accounting).
+    pub fn approx_size(&self) -> usize {
+        match self {
+            AttrValue::Int(_) | AttrValue::Float(_) => 8,
+            AttrValue::Str(s) => s.len() + 8,
+        }
+    }
+}
+
+impl fmt::Display for AttrValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AttrValue::Int(i) => write!(f, "{i}"),
+            AttrValue::Float(x) => write!(f, "{x}"),
+            AttrValue::Str(s) => write!(f, "{s:?}"),
+        }
+    }
+}
+
+/// One behavior-event row in the app log.
+///
+/// Mirrors the paper's Fig. 2 storage layout: behavior-independent
+/// attributes (`seq_no`, `event_type`, `timestamp_ms`) live in dedicated
+/// columns for retrieval; behavior-specific attributes are compressed
+/// into the single `payload` column and require a `Decode` operation.
+#[derive(Debug, Clone)]
+pub struct BehaviorEvent {
+    /// Monotonically increasing row id (append order).
+    pub seq_no: u64,
+    /// Behavior type of this event.
+    pub event_type: EventTypeId,
+    /// Event time; rows are stored in chronological order.
+    pub timestamp_ms: TimestampMs,
+    /// Compressed behavior-specific attributes (see [`super::codec`]).
+    pub payload: Vec<u8>,
+}
+
+impl BehaviorEvent {
+    /// Storage footprint of this row (header columns + payload blob).
+    pub fn storage_bytes(&self) -> usize {
+        // seq_no (8) + event_type (2) + timestamp (8) + payload length.
+        18 + self.payload.len()
+    }
+}
+
+/// Decoded behavior-specific attributes of one event, sorted by
+/// [`AttrId`]. Output of the `Decode` operation node.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DecodedAttrs {
+    /// `(attr id, value)` pairs sorted ascending by id.
+    pub attrs: Vec<(AttrId, AttrValue)>,
+}
+
+impl DecodedAttrs {
+    /// Look up an attribute by id (binary search — attrs are sorted).
+    pub fn get(&self, id: AttrId) -> Option<&AttrValue> {
+        self.attrs
+            .binary_search_by_key(&id, |(a, _)| *a)
+            .ok()
+            .map(|i| &self.attrs[i].1)
+    }
+
+    /// Approximate in-memory size in bytes.
+    pub fn approx_size(&self) -> usize {
+        self.attrs
+            .iter()
+            .map(|(_, v)| 2 + v.approx_size())
+            .sum::<usize>()
+            + 24
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attr_value_as_f64_int_float() {
+        assert_eq!(AttrValue::Int(42).as_f64(), 42.0);
+        assert_eq!(AttrValue::Float(1.5).as_f64(), 1.5);
+    }
+
+    #[test]
+    fn attr_value_str_hash_stable_and_distinct() {
+        let a = AttrValue::Str("comedy".into()).as_f64();
+        let b = AttrValue::Str("comedy".into()).as_f64();
+        let c = AttrValue::Str("drama".into()).as_f64();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // Exactly representable (32-bit integer in f64).
+        assert_eq!(a, a.trunc());
+    }
+
+    #[test]
+    fn decoded_attrs_get_binary_search() {
+        let d = DecodedAttrs {
+            attrs: vec![
+                (1, AttrValue::Int(10)),
+                (5, AttrValue::Float(0.5)),
+                (9, AttrValue::Str("x".into())),
+            ],
+        };
+        assert_eq!(d.get(5), Some(&AttrValue::Float(0.5)));
+        assert_eq!(d.get(2), None);
+    }
+
+    #[test]
+    fn storage_bytes_counts_header_and_payload() {
+        let e = BehaviorEvent {
+            seq_no: 1,
+            event_type: 2,
+            timestamp_ms: 3,
+            payload: vec![0u8; 100],
+        };
+        assert_eq!(e.storage_bytes(), 118);
+    }
+}

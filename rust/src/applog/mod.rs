@@ -1,0 +1,27 @@
+//! The on-device app-log substrate (paper §2.1, Stage 1).
+//!
+//! Mobile apps record every GUI interaction as a *behavior event* row in
+//! an on-device log (SQLite in production). Each row carries
+//! behavior-independent columns (`timestamp`, `event_name`) plus one
+//! column holding the behavior-specific attributes *compressed* into a
+//! single blob — storing them as separate columns would explode null
+//! counts and storage cost (paper footnote 1).
+//!
+//! This module provides that substrate:
+//! * [`event`] — event rows and attribute values,
+//! * [`schema`] — the behavior-type catalog (attribute schemas follow the
+//!   paper's Fig. 3 distribution),
+//! * [`codec`] — the compressed-attribute codecs (a JSON-like text codec
+//!   matching the paper's "lightweight data transformation tools like
+//!   JSON parsing", plus a binary codec for ablations),
+//! * [`store`] — the chronological log store,
+//! * [`persist`] — snapshot save/load (the log's on-disk role),
+//! * [`query`] — the `Retrieve` query path
+//!   (`SELECT * WHERE event_name IN (..) AND timestamp > t`).
+
+pub mod codec;
+pub mod event;
+pub mod persist;
+pub mod query;
+pub mod schema;
+pub mod store;

@@ -1,0 +1,179 @@
+//! App-log persistence (the SQLite-analogue's on-disk role).
+//!
+//! Mobile app logs survive process restarts; this module gives
+//! [`AppLogStore`] a compact binary snapshot format:
+//!
+//! ```text
+//! magic "AFLG" | version u16 | row_count u64 |
+//!   ( seq u64 | event_type u16 | ts i64 | payload_len u32 | payload )*
+//! ```
+//!
+//! Snapshots round-trip exactly (rows, order, payload bytes) and load
+//! validates magic/version/lengths, so a corrupted file never produces a
+//! silently wrong log.
+
+use anyhow::{bail, Context, Result};
+
+use super::store::{AppLogStore, StoreConfig};
+
+const MAGIC: &[u8; 4] = b"AFLG";
+const VERSION: u16 = 1;
+
+/// Serialize the live log to a snapshot blob.
+pub fn to_bytes(store: &AppLogStore) -> Vec<u8> {
+    let rows = store.rows();
+    let mut out = Vec::with_capacity(14 + rows.iter().map(|r| 22 + r.payload.len()).sum::<usize>());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(rows.len() as u64).to_le_bytes());
+    for r in rows {
+        out.extend_from_slice(&r.seq_no.to_le_bytes());
+        out.extend_from_slice(&r.event_type.to_le_bytes());
+        out.extend_from_slice(&r.timestamp_ms.to_le_bytes());
+        out.extend_from_slice(&(r.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&r.payload);
+    }
+    out
+}
+
+/// Load a snapshot blob into a fresh store.
+pub fn from_bytes(data: &[u8], cfg: StoreConfig) -> Result<AppLogStore> {
+    let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+        if *i + n > data.len() {
+            bail!("truncated snapshot at offset {i}");
+        }
+        let s = &data[*i..*i + n];
+        *i += n;
+        Ok(s)
+    };
+    let mut i = 0usize;
+    if take(&mut i, 4)? != MAGIC {
+        bail!("bad snapshot magic");
+    }
+    let version = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported snapshot version {version}");
+    }
+    let count = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap()) as usize;
+    let mut store = AppLogStore::new(cfg);
+    let mut expected_seq: Option<u64> = None;
+    for _ in 0..count {
+        let seq = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
+        let event_type = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap());
+        let ts = i64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
+        let len = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+        let payload = take(&mut i, len)?.to_vec();
+        if let Some(e) = expected_seq {
+            if seq <= e {
+                bail!("non-monotonic seq {seq} after {e}");
+            }
+        }
+        expected_seq = Some(seq);
+        store
+            .append(event_type, ts, payload)
+            .context("snapshot rows out of chronological order")?;
+    }
+    if i != data.len() {
+        bail!("trailing garbage after snapshot ({} bytes)", data.len() - i);
+    }
+    Ok(store)
+}
+
+/// Write a snapshot to a file.
+pub fn save(store: &AppLogStore, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, to_bytes(store)).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Load a snapshot from a file.
+pub fn load(path: &std::path::Path, cfg: StoreConfig) -> Result<AppLogStore> {
+    from_bytes(
+        &std::fs::read(path).with_context(|| format!("reading {}", path.display()))?,
+        cfg,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::codec::{AttrCodec, JsonishCodec};
+    use crate::applog::schema::{Catalog, CatalogConfig};
+    use crate::util::rng::SimRng;
+
+    fn populated() -> AppLogStore {
+        let cat = Catalog::generate(&CatalogConfig::small(), 1);
+        let mut rng = SimRng::seed_from_u64(2);
+        let mut s = AppLogStore::new(StoreConfig::default());
+        for i in 0..100i64 {
+            let t = (i % 4) as u16;
+            let attrs = cat.schema(t).sample_attrs(&mut rng);
+            s.append(t, i * 777, JsonishCodec.encode(&attrs)).unwrap();
+        }
+        s
+    }
+
+    #[test]
+    fn roundtrip_preserves_rows_exactly() {
+        let a = populated();
+        let b = from_bytes(&to_bytes(&a), StoreConfig::default()).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.rows().iter().zip(b.rows()) {
+            assert_eq!(x.event_type, y.event_type);
+            assert_eq!(x.timestamp_ms, y.timestamp_ms);
+            assert_eq!(x.payload, y.payload);
+        }
+        assert_eq!(a.storage_bytes(), b.storage_bytes());
+    }
+
+    #[test]
+    fn loaded_store_answers_queries_identically() {
+        use crate::applog::query::{retrieve, TimeWindow};
+        let a = populated();
+        let b = from_bytes(&to_bytes(&a), StoreConfig::default()).unwrap();
+        let w = TimeWindow::last(80_000, 50_000);
+        let ra = retrieve(&a, &[0, 2], w);
+        let rb = retrieve(&b, &[0, 2], w);
+        assert_eq!(ra.len(), rb.len());
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.timestamp_ms, y.timestamp_ms);
+            assert_eq!(x.payload, y.payload);
+        }
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let bytes = to_bytes(&populated());
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(from_bytes(&bad, StoreConfig::default()).is_err());
+        // Truncation.
+        assert!(from_bytes(&bytes[..bytes.len() - 5], StoreConfig::default()).is_err());
+        // Trailing garbage.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(from_bytes(&long, StoreConfig::default()).is_err());
+        // Bad version.
+        let mut v = bytes;
+        v[4] = 9;
+        assert!(from_bytes(&v, StoreConfig::default()).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("autofeature_persist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("log.aflg");
+        let a = populated();
+        save(&a, &path).unwrap();
+        let b = load(&path, StoreConfig::default()).unwrap();
+        assert_eq!(a.len(), b.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_store_roundtrips() {
+        let s = AppLogStore::new(StoreConfig::default());
+        let b = from_bytes(&to_bytes(&s), StoreConfig::default()).unwrap();
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,206 @@
+//! The `Retrieve` query path (paper §3.2, operation 1).
+//!
+//! Mirrors the SQL the paper shows in footnote 2:
+//! `SELECT * FROM applog WHERE event_name IN {event_names} AND
+//! timestamp > {current_time - time_range}`.
+//!
+//! Two strategies are provided:
+//! * [`retrieve`] — the indexed path: binary-search each requested type's
+//!   chronological position list for the window start, then merge the
+//!   per-type runs back into global timestamp order (k-way merge). This
+//!   is what both the naive baseline and AutoFeature lanes use.
+//! * [`retrieve_scan`] — a full-table linear scan, the reference oracle
+//!   used by tests to validate the indexed path.
+
+use super::event::{BehaviorEvent, EventTypeId, TimestampMs};
+use super::store::AppLogStore;
+
+/// Inclusive-exclusive time window `[start, end)` over event timestamps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimeWindow {
+    /// Window start (inclusive).
+    pub start_ms: TimestampMs,
+    /// Window end (exclusive).
+    pub end_ms: TimestampMs,
+}
+
+impl TimeWindow {
+    /// The paper's `timestamp > now - time_range` window, i.e.
+    /// `[now - range, now)` with `end` exclusive (events logged at the
+    /// trigger instant belong to the *next* execution).
+    pub fn last(now: TimestampMs, range_ms: i64) -> Self {
+        TimeWindow {
+            start_ms: now - range_ms,
+            end_ms: now,
+        }
+    }
+
+    /// Whether a timestamp falls inside the window.
+    #[inline]
+    pub fn contains(&self, ts: TimestampMs) -> bool {
+        ts >= self.start_ms && ts < self.end_ms
+    }
+}
+
+/// Indexed retrieve: rows of any of `event_types` within `window`,
+/// returned as cloned rows in global chronological order.
+///
+/// The clone is deliberate: in production this operation copies rows from
+/// storage (SQLite pages) into process memory, and that data movement is
+/// part of the `Retrieve` cost the paper measures.
+pub fn retrieve(
+    store: &AppLogStore,
+    event_types: &[EventTypeId],
+    window: TimeWindow,
+) -> Vec<BehaviorEvent> {
+    // SQL `IN` semantics: duplicate listed types match rows once.
+    let mut types: Vec<EventTypeId> = event_types.to_vec();
+    types.sort_unstable();
+    types.dedup();
+    let mut runs: Vec<&[u32]> = Vec::with_capacity(types.len());
+    for &t in types.iter() {
+        let pos = store.type_positions(t);
+        // Binary search window start / end within this type's run.
+        let lo = pos.partition_point(|&p| store.row(p).timestamp_ms < window.start_ms);
+        let hi = pos.partition_point(|&p| store.row(p).timestamp_ms < window.end_ms);
+        if lo < hi {
+            runs.push(&pos[lo..hi]);
+        }
+    }
+    match runs.len() {
+        0 => Vec::new(),
+        1 => runs[0].iter().map(|&p| store.row(p).clone()).collect(),
+        _ => {
+            // K-way merge on row position (positions are append order,
+            // which is chronological).
+            let total: usize = runs.iter().map(|r| r.len()).sum();
+            let mut cursors = vec![0usize; runs.len()];
+            let mut out = Vec::with_capacity(total);
+            loop {
+                let mut best: Option<(usize, u32)> = None;
+                for (i, run) in runs.iter().enumerate() {
+                    if cursors[i] < run.len() {
+                        let p = run[cursors[i]];
+                        if best.map_or(true, |(_, bp)| p < bp) {
+                            best = Some((i, p));
+                        }
+                    }
+                }
+                match best {
+                    Some((i, p)) => {
+                        cursors[i] += 1;
+                        out.push(store.row(p).clone());
+                    }
+                    None => break,
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Reference retrieve: full-table scan. O(total rows); used by tests and
+/// by the paper's Fig. 10-style op-cost probes as the unindexed worst
+/// case.
+pub fn retrieve_scan(
+    store: &AppLogStore,
+    event_types: &[EventTypeId],
+    window: TimeWindow,
+) -> Vec<BehaviorEvent> {
+    store
+        .rows()
+        .iter()
+        .filter(|r| window.contains(r.timestamp_ms) && event_types.contains(&r.event_type))
+        .cloned()
+        .collect()
+}
+
+/// Count rows matching the query without materializing them (used by the
+/// event evaluator to estimate `Num(E_i)` cheaply).
+pub fn count(store: &AppLogStore, event_type: EventTypeId, window: TimeWindow) -> usize {
+    let pos = store.type_positions(event_type);
+    let lo = pos.partition_point(|&p| store.row(p).timestamp_ms < window.start_ms);
+    let hi = pos.partition_point(|&p| store.row(p).timestamp_ms < window.end_ms);
+    hi - lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::store::StoreConfig;
+
+    fn store() -> AppLogStore {
+        let mut s = AppLogStore::new(StoreConfig::default());
+        // Interleave 4 types over 100 rows, 1s apart.
+        for i in 0..100i64 {
+            s.append((i % 4) as EventTypeId, i * 1000, vec![i as u8]).unwrap();
+        }
+        s
+    }
+
+    #[test]
+    fn indexed_matches_scan() {
+        let s = store();
+        let w = TimeWindow::last(80_000, 50_000);
+        for types in [vec![0u16], vec![1, 3], vec![0, 1, 2, 3], vec![9]] {
+            let a = retrieve(&s, &types, w);
+            let b = retrieve_scan(&s, &types, w);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.seq_no, y.seq_no);
+            }
+        }
+    }
+
+    #[test]
+    fn results_are_chronological() {
+        let s = store();
+        let out = retrieve(&s, &[0, 1, 2, 3], TimeWindow::last(100_000, 100_000));
+        assert_eq!(out.len(), 100);
+        for pair in out.windows(2) {
+            assert!(pair[0].timestamp_ms <= pair[1].timestamp_ms);
+        }
+    }
+
+    #[test]
+    fn window_end_is_exclusive() {
+        let s = store();
+        // Event at ts=50_000 must not be in [0, 50_000).
+        let out = retrieve(&s, &[0, 1, 2, 3], TimeWindow { start_ms: 0, end_ms: 50_000 });
+        assert!(out.iter().all(|r| r.timestamp_ms < 50_000));
+        assert_eq!(out.len(), 50);
+    }
+
+    #[test]
+    fn window_start_is_inclusive() {
+        let s = store();
+        let out = retrieve(&s, &[0], TimeWindow { start_ms: 0, end_ms: 1 });
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].timestamp_ms, 0);
+    }
+
+    #[test]
+    fn duplicate_types_match_rows_once() {
+        let s = store();
+        let w = TimeWindow::last(100_000, 100_000);
+        assert_eq!(
+            retrieve(&s, &[2, 2, 2], w).len(),
+            retrieve(&s, &[2], w).len()
+        );
+    }
+
+    #[test]
+    fn unknown_type_is_empty() {
+        let s = store();
+        assert!(retrieve(&s, &[42], TimeWindow::last(100_000, 100_000)).is_empty());
+    }
+
+    #[test]
+    fn count_matches_retrieve() {
+        let s = store();
+        let w = TimeWindow::last(70_000, 30_000);
+        for t in 0..4u16 {
+            assert_eq!(count(&s, t, w), retrieve(&s, &[t], w).len());
+        }
+    }
+}

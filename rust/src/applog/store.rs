@@ -1,0 +1,214 @@
+//! The chronological app-log store (SQLite-analogue).
+//!
+//! Rows are appended in timestamp order (behavior logging is inherently
+//! chronological — paper §3.3 observation (i)), held in a contiguous
+//! vector, and indexed per behavior type. `Retrieve` is served by
+//! [`super::query`], which mirrors the SQL the paper shows in footnote 2.
+
+use anyhow::{ensure, Result};
+
+use super::event::{BehaviorEvent, EventTypeId, TimestampMs};
+
+/// Store configuration.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Retention horizon: rows older than `now - retention_ms` may be
+    /// pruned. Mirrors mobile app-log rotation.
+    pub retention_ms: i64,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        // One week: covers the longest feature window the paper mentions.
+        StoreConfig {
+            retention_ms: 7 * 24 * 3600 * 1000,
+        }
+    }
+}
+
+/// The on-device app log: chronological behavior-event rows plus a
+/// per-type secondary index.
+#[derive(Debug)]
+pub struct AppLogStore {
+    cfg: StoreConfig,
+    /// Rows in strictly non-decreasing timestamp order.
+    rows: Vec<BehaviorEvent>,
+    /// Secondary index: for each behavior type, the positions (into
+    /// `rows`) of its events, in chronological order.
+    type_index: Vec<Vec<u32>>,
+    /// Offset subtracted from positions after pruning (kept simple: we
+    /// compact eagerly, so this stays 0 between prunes).
+    next_seq: u64,
+    total_appended: u64,
+}
+
+impl AppLogStore {
+    /// Create an empty store.
+    pub fn new(cfg: StoreConfig) -> Self {
+        AppLogStore {
+            cfg,
+            rows: Vec::new(),
+            type_index: Vec::new(),
+            next_seq: 0,
+            total_appended: 0,
+        }
+    }
+
+    /// Append one behavior event. Timestamps must be non-decreasing
+    /// (behavior logging is chronological).
+    pub fn append(&mut self, event_type: EventTypeId, timestamp_ms: TimestampMs, payload: Vec<u8>) -> Result<u64> {
+        if let Some(last) = self.rows.last() {
+            ensure!(
+                timestamp_ms >= last.timestamp_ms,
+                "out-of-order append: {timestamp_ms} < {}",
+                last.timestamp_ms
+            );
+        }
+        let seq_no = self.next_seq;
+        self.next_seq += 1;
+        self.total_appended += 1;
+        let pos = self.rows.len() as u32;
+        self.rows.push(BehaviorEvent {
+            seq_no,
+            event_type,
+            timestamp_ms,
+            payload,
+        });
+        let idx = event_type as usize;
+        if self.type_index.len() <= idx {
+            self.type_index.resize_with(idx + 1, Vec::new);
+        }
+        self.type_index[idx].push(pos);
+        Ok(seq_no)
+    }
+
+    /// All rows, chronological. Used by linear-scan reference queries and
+    /// by the storage accounting of the cloud baselines.
+    pub fn rows(&self) -> &[BehaviorEvent] {
+        &self.rows
+    }
+
+    /// Positions of rows of one behavior type (chronological).
+    pub(crate) fn type_positions(&self, t: EventTypeId) -> &[u32] {
+        self.type_index
+            .get(t as usize)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Row by position.
+    pub(crate) fn row(&self, pos: u32) -> &BehaviorEvent {
+        &self.rows[pos as usize]
+    }
+
+    /// Number of live rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether the log is empty.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Total events ever appended (monotonic, unaffected by pruning).
+    pub fn total_appended(&self) -> u64 {
+        self.total_appended
+    }
+
+    /// Storage footprint of the live log in bytes (header + payload per
+    /// row) — the quantity inflated by the cloud baselines (Fig. 18b).
+    pub fn storage_bytes(&self) -> usize {
+        self.rows.iter().map(|r| r.storage_bytes()).sum()
+    }
+
+    /// Drop rows older than the retention horizon relative to `now`.
+    /// Returns the number of rows pruned.
+    pub fn prune(&mut self, now: TimestampMs) -> usize {
+        let cutoff = now - self.cfg.retention_ms;
+        let keep_from = self.rows.partition_point(|r| r.timestamp_ms < cutoff);
+        if keep_from == 0 {
+            return 0;
+        }
+        self.rows.drain(..keep_from);
+        // Rebuild the per-type index (prune is rare: amortized cost ok).
+        for v in &mut self.type_index {
+            v.clear();
+        }
+        for (pos, r) in self.rows.iter().enumerate() {
+            let idx = r.event_type as usize;
+            if self.type_index.len() <= idx {
+                self.type_index.resize_with(idx + 1, Vec::new);
+            }
+            self.type_index[idx].push(pos as u32);
+        }
+        keep_from
+    }
+
+    /// Timestamp of the newest row, if any.
+    pub fn latest_timestamp(&self) -> Option<TimestampMs> {
+        self.rows.last().map(|r| r.timestamp_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store_with(n: usize) -> AppLogStore {
+        let mut s = AppLogStore::new(StoreConfig::default());
+        for i in 0..n {
+            s.append((i % 3) as EventTypeId, (i as i64) * 1000, vec![b'x'; 10])
+                .unwrap();
+        }
+        s
+    }
+
+    #[test]
+    fn append_assigns_monotonic_seq() {
+        let s = store_with(5);
+        let seqs: Vec<_> = s.rows().iter().map(|r| r.seq_no).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rejects_out_of_order_append() {
+        let mut s = store_with(3);
+        assert!(s.append(0, 500, vec![]).is_err());
+    }
+
+    #[test]
+    fn type_index_positions_are_chronological() {
+        let s = store_with(9);
+        for t in 0..3u16 {
+            let pos = s.type_positions(t);
+            assert_eq!(pos.len(), 3);
+            let mut last = -1i64;
+            for &p in pos {
+                let ts = s.row(p).timestamp_ms;
+                assert!(ts > last);
+                last = ts;
+            }
+        }
+    }
+
+    #[test]
+    fn prune_drops_old_rows_and_reindexes() {
+        let mut s = AppLogStore::new(StoreConfig { retention_ms: 5000 });
+        for i in 0..10 {
+            s.append(0, i * 1000, vec![]).unwrap();
+        }
+        let dropped = s.prune(10_000);
+        assert_eq!(dropped, 5); // rows with ts < 5000
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.type_positions(0).len(), 5);
+        assert_eq!(s.row(s.type_positions(0)[0]).timestamp_ms, 5000);
+        assert_eq!(s.total_appended(), 10);
+    }
+
+    #[test]
+    fn storage_bytes_sums_rows() {
+        let s = store_with(4);
+        assert_eq!(s.storage_bytes(), 4 * (18 + 10));
+    }
+}

@@ -1,0 +1,18 @@
+//! Comparison systems.
+//!
+//! * [`naive`] — the industry-standard *w/o AutoFeature* pipeline: every
+//!   feature extracts independently (direct FE-graph execution).
+//! * [`decoded_log`] — cloud-side baseline 1 (Table 1): `Decode` is
+//!   offloaded to logging time; the device keeps a wide-column decoded
+//!   mirror of the app log (one column per unique attribute).
+//! * [`feature_store`] — cloud-side baseline 2 (Table 1): `Decode` and
+//!   `Retrieve` are offloaded; the device keeps one pre-filtered row per
+//!   (behavior event × requiring feature).
+//! * [`storage`] — storage-accounting helpers behind Fig. 18(b): both
+//!   cloud baselines trade latency for a 2.5–3× app-log inflation, which
+//!   is what makes them impractical on-device.
+
+pub mod decoded_log;
+pub mod feature_store;
+pub mod naive;
+pub mod storage;

@@ -1,0 +1,73 @@
+//! Storage accounting for the cloud-side baselines (Table 1, Fig. 18b).
+//!
+//! SQLite-style cost model:
+//! * raw app log row — header columns + the compressed attr blob
+//!   ([`crate::applog::event::BehaviorEvent::storage_bytes`]);
+//! * wide-column decoded row — header + each present attribute stored
+//!   decoded + a null bitmap over the table's *global* column set (one
+//!   column per unique attribute across all behavior types — the
+//!   "massive columns" of Table 1).
+
+use crate::applog::event::{AttrId, AttrValue};
+use crate::applog::schema::Catalog;
+
+/// Decoded in-storage size of one attribute value (SQLite serial-type
+/// style: 8-byte numerics, length-prefixed text).
+pub fn decoded_value_bytes(v: &AttrValue) -> usize {
+    match v {
+        AttrValue::Int(_) | AttrValue::Float(_) => 8,
+        AttrValue::Str(s) => s.len() + 2,
+    }
+}
+
+/// Total unique attribute columns across all behavior types: attributes
+/// of different behavior types are distinct columns (heterogeneous
+/// schemas — paper footnote 1).
+pub fn global_column_count(catalog: &Catalog) -> usize {
+    catalog.schemas.iter().map(|s| s.attrs.len()).sum()
+}
+
+/// Bytes of one wide-column decoded row: header + present values +
+/// null bitmap over the global column set.
+pub fn wide_row_bytes(present: &[(AttrId, AttrValue)], global_columns: usize) -> usize {
+    let header = 18; // seq, type, timestamp — as in the raw log
+    let values: usize = present.iter().map(|(_, v)| 2 + decoded_value_bytes(v)).sum();
+    let null_bitmap = global_columns.div_ceil(8);
+    header + values + null_bitmap
+}
+
+/// Bytes of one per-feature pre-filtered row (Feature Store): header +
+/// only the feature's needed attrs + the same global null bitmap
+/// (Table 1 lists Feature Store's structure as redundant rows *and*
+/// massive columns).
+pub fn feature_row_bytes(needed: &[(AttrId, AttrValue)], global_columns: usize) -> usize {
+    wide_row_bytes(needed, global_columns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::schema::CatalogConfig;
+
+    #[test]
+    fn global_columns_sum_schema_sizes() {
+        let cat = Catalog::generate(&CatalogConfig::small(), 1);
+        let want: usize = cat.schemas.iter().map(|s| s.attrs.len()).sum();
+        assert_eq!(global_column_count(&cat), want);
+    }
+
+    #[test]
+    fn wide_row_charges_null_bitmap() {
+        let present = vec![(0u16, AttrValue::Int(5))];
+        let narrow = wide_row_bytes(&present, 8);
+        let wide = wide_row_bytes(&present, 4000);
+        assert_eq!(wide - narrow, 4000 / 8 - 1);
+    }
+
+    #[test]
+    fn string_values_cost_their_length() {
+        let a = wide_row_bytes(&[(0, AttrValue::Str("x".into()))], 8);
+        let b = wide_row_bytes(&[(0, AttrValue::Str("xxxxxxxxxx".into()))], 8);
+        assert_eq!(b - a, 9);
+    }
+}

@@ -1,0 +1,146 @@
+//! Cached decoded rows per behavior type.
+
+use std::collections::VecDeque;
+
+use crate::applog::event::{AttrId, AttrValue, EventTypeId, TimestampMs};
+
+/// One cached row: the needed-attribute projection of a decoded event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedRow {
+    /// Event timestamp.
+    pub ts: TimestampMs,
+    /// Log row id.
+    pub seq: u64,
+    /// Projection of the decoded attributes onto the type's attr union,
+    /// sorted by id.
+    pub attrs: Vec<(AttrId, AttrValue)>,
+}
+
+impl CachedRow {
+    /// Approximate in-memory size (bytes) for budget accounting.
+    pub fn approx_size(&self) -> usize {
+        // ts + seq + vec header + per-attr (id + value).
+        16 + 24
+            + self
+                .attrs
+                .iter()
+                .map(|(_, v)| 2 + v.approx_size())
+                .sum::<usize>()
+    }
+}
+
+/// All cached rows of one behavior type, chronological, plus the
+/// watermark up to which the log has been ingested.
+#[derive(Debug, Clone)]
+pub struct CachedLane {
+    /// The behavior type.
+    pub event_type: EventTypeId,
+    /// Rows, ascending `(ts, seq)`.
+    pub rows: VecDeque<CachedRow>,
+    /// End (exclusive) of the ingested interval: all log rows of this
+    /// type with `ts < watermark` within the retention window are
+    /// present.
+    pub watermark: TimestampMs,
+    /// Cached byte total (kept incrementally).
+    bytes: usize,
+}
+
+impl CachedLane {
+    /// Empty lane with watermark at the retention-window start.
+    pub fn new(event_type: EventTypeId, watermark: TimestampMs) -> Self {
+        CachedLane {
+            event_type,
+            rows: VecDeque::new(),
+            watermark,
+            bytes: 0,
+        }
+    }
+
+    /// Cached bytes.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Number of cached rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether the lane holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Append a freshly decoded row (must be newest).
+    pub fn push(&mut self, row: CachedRow) {
+        debug_assert!(
+            self.rows
+                .back()
+                .map_or(true, |b| (b.ts, b.seq) < (row.ts, row.seq)),
+            "cache rows must stay chronological"
+        );
+        self.bytes += row.approx_size();
+        self.rows.push_back(row);
+    }
+
+    /// Drop rows older than `cutoff` (retention = the type's max feature
+    /// window). Returns bytes freed.
+    pub fn prune_before(&mut self, cutoff: TimestampMs) -> usize {
+        let mut freed = 0;
+        while let Some(front) = self.rows.front() {
+            if front.ts < cutoff {
+                freed += front.approx_size();
+                self.rows.pop_front();
+            } else {
+                break;
+            }
+        }
+        self.bytes -= freed;
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(ts: i64, seq: u64) -> CachedRow {
+        CachedRow {
+            ts,
+            seq,
+            attrs: vec![(0, AttrValue::Int(ts)), (1, AttrValue::Str("xy".into()))],
+        }
+    }
+
+    #[test]
+    fn bytes_track_push_and_prune() {
+        let mut lane = CachedLane::new(0, 0);
+        for i in 0..10 {
+            lane.push(row(i * 1000, i as u64));
+        }
+        let full = lane.bytes();
+        assert_eq!(full, lane.rows.iter().map(|r| r.approx_size()).sum());
+        let freed = lane.prune_before(5000);
+        assert_eq!(lane.len(), 5);
+        assert_eq!(lane.bytes(), full - freed);
+    }
+
+    #[test]
+    fn prune_keeps_boundary_row() {
+        let mut lane = CachedLane::new(0, 0);
+        lane.push(row(1000, 0));
+        lane.push(row(2000, 1));
+        lane.prune_before(2000);
+        assert_eq!(lane.len(), 1);
+        assert_eq!(lane.rows[0].ts, 2000);
+    }
+
+    #[test]
+    #[should_panic(expected = "chronological")]
+    #[cfg(debug_assertions)]
+    fn push_out_of_order_panics_in_debug() {
+        let mut lane = CachedLane::new(0, 0);
+        lane.push(row(2000, 1));
+        lane.push(row(1000, 0));
+    }
+}

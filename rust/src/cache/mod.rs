@@ -1,0 +1,22 @@
+//! The event evaluator: cross-execution redundancy minimization
+//! (paper §3.4).
+//!
+//! Consecutive model executions re-process overlapping behavior events.
+//! AutoFeature caches *decoded attributes at behavior level* — per event
+//! type, all of its events' needed attributes — so the dominant
+//! `Retrieve`/`Decode` work is never repeated on overlapping rows.
+//! Which behavior types to cache under a memory budget is a 0/1 knapsack
+//! over per-type utility (`Num_Overlap × Cost_Opt`) and cost
+//! (`Num × Size`); a greedy utility-to-cost-ratio policy gives a
+//! 2-approximation with O(1) per-type ratio computation via term
+//! decomposition.
+//!
+//! * [`entry`] — cached decoded rows per behavior type with watermarks,
+//! * [`valuation`] — utility/cost metrics and term decomposition,
+//! * [`policy`] — greedy / DP-knapsack / random / all-or-nothing,
+//! * [`store`] — the memory-budgeted cache store.
+
+pub mod entry;
+pub mod policy;
+pub mod store;
+pub mod valuation;

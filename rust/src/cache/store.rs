@@ -1,0 +1,191 @@
+//! The memory-budgeted cache store.
+//!
+//! Holds one [`CachedLane`] per selected behavior type. The budget is
+//! dynamic (mobile OSes shrink per-app allocations under pressure):
+//! [`CacheStore::set_budget`] re-applies the policy's selection on the
+//! next update. The invariant `used_bytes <= budget_bytes` holds after
+//! every public mutation.
+
+use std::collections::HashMap;
+
+use crate::applog::event::{EventTypeId, TimestampMs};
+
+use super::entry::CachedLane;
+
+/// Memory-budgeted store of cached decoded attributes.
+#[derive(Debug)]
+pub struct CacheStore {
+    lanes: HashMap<EventTypeId, CachedLane>,
+    budget_bytes: usize,
+}
+
+impl CacheStore {
+    /// Create an empty store with a byte budget.
+    pub fn new(budget_bytes: usize) -> Self {
+        CacheStore {
+            lanes: HashMap::new(),
+            budget_bytes,
+        }
+    }
+
+    /// Current budget.
+    pub fn budget(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Adjust the budget (dynamic OS memory pressure). If the new budget
+    /// is below current usage, lanes are evicted lowest-priority first
+    /// according to `priority` (higher = keep), until usage fits.
+    pub fn set_budget(&mut self, budget_bytes: usize, priority: impl Fn(EventTypeId) -> f64) {
+        self.budget_bytes = budget_bytes;
+        while self.used_bytes() > self.budget_bytes {
+            let victim = self
+                .lanes
+                .iter()
+                .min_by(|a, b| {
+                    priority(*a.0)
+                        .partial_cmp(&priority(*b.0))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .map(|(t, _)| *t);
+            match victim {
+                Some(t) => {
+                    self.lanes.remove(&t);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Bytes currently cached.
+    pub fn used_bytes(&self) -> usize {
+        self.lanes.values().map(|l| l.bytes()).sum()
+    }
+
+    /// Number of cached behavior types.
+    pub fn num_types(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Total cached rows across lanes.
+    pub fn num_rows(&self) -> usize {
+        self.lanes.values().map(|l| l.len()).sum()
+    }
+
+    /// Lane for a type, if cached.
+    pub fn lane(&self, t: EventTypeId) -> Option<&CachedLane> {
+        self.lanes.get(&t)
+    }
+
+    /// Mutable lane access.
+    pub fn lane_mut(&mut self, t: EventTypeId) -> Option<&mut CachedLane> {
+        self.lanes.get_mut(&t)
+    }
+
+    /// Insert or replace a lane. Returns `Err(lane)` without inserting if
+    /// it would exceed the budget (callers must pre-select under budget).
+    pub fn insert(&mut self, lane: CachedLane) -> Result<(), CachedLane> {
+        let others: usize = self
+            .lanes
+            .iter()
+            .filter(|(t, _)| **t != lane.event_type)
+            .map(|(_, l)| l.bytes())
+            .sum();
+        if others + lane.bytes() > self.budget_bytes {
+            return Err(lane);
+        }
+        self.lanes.insert(lane.event_type, lane);
+        Ok(())
+    }
+
+    /// Evict a type's lane.
+    pub fn evict(&mut self, t: EventTypeId) -> Option<CachedLane> {
+        self.lanes.remove(&t)
+    }
+
+    /// Drop everything (app restart / memory purge: the paper notes the
+    /// first execution of each period starts cold).
+    pub fn clear(&mut self) {
+        self.lanes.clear();
+    }
+
+    /// Prune all lanes to their retention cutoffs. `cutoff(t)` returns
+    /// the oldest timestamp worth keeping for type `t`.
+    pub fn prune(&mut self, cutoff: impl Fn(EventTypeId) -> TimestampMs) {
+        for (t, lane) in self.lanes.iter_mut() {
+            lane.prune_before(cutoff(*t));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::event::AttrValue;
+    use crate::cache::entry::CachedRow;
+
+    fn lane(t: EventTypeId, n: usize) -> CachedLane {
+        let mut l = CachedLane::new(t, 0);
+        for i in 0..n {
+            l.push(CachedRow {
+                ts: i as i64 * 1000,
+                seq: i as u64,
+                attrs: vec![(0, AttrValue::Int(i as i64))],
+            });
+        }
+        l
+    }
+
+    #[test]
+    fn insert_respects_budget() {
+        let one = lane(0, 10).bytes();
+        let mut store = CacheStore::new(one * 2 + 10);
+        assert!(store.insert(lane(0, 10)).is_ok());
+        assert!(store.insert(lane(1, 10)).is_ok());
+        assert!(store.insert(lane(2, 10)).is_err());
+        assert!(store.used_bytes() <= store.budget());
+    }
+
+    #[test]
+    fn replace_does_not_double_count() {
+        let one = lane(0, 10).bytes();
+        let mut store = CacheStore::new(one + 10);
+        store.insert(lane(0, 10)).unwrap();
+        // Replacing the same type must account only once.
+        assert!(store.insert(lane(0, 10)).is_ok());
+        assert_eq!(store.num_types(), 1);
+    }
+
+    #[test]
+    fn shrinking_budget_evicts_lowest_priority() {
+        let mut store = CacheStore::new(1 << 20);
+        store.insert(lane(0, 10)).unwrap();
+        store.insert(lane(1, 10)).unwrap();
+        store.insert(lane(2, 10)).unwrap();
+        let one = store.lane(0).unwrap().bytes();
+        // Keep type 2 (highest priority), evict 0 then 1.
+        store.set_budget(one + 10, |t| t as f64);
+        assert!(store.used_bytes() <= store.budget());
+        assert!(store.lane(2).is_some());
+        assert!(store.lane(0).is_none());
+    }
+
+    #[test]
+    fn prune_applies_per_type_cutoffs() {
+        let mut store = CacheStore::new(1 << 20);
+        store.insert(lane(0, 10)).unwrap();
+        store.insert(lane(1, 10)).unwrap();
+        store.prune(|t| if t == 0 { 5000 } else { 0 });
+        assert_eq!(store.lane(0).unwrap().len(), 5);
+        assert_eq!(store.lane(1).unwrap().len(), 10);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut store = CacheStore::new(1 << 20);
+        store.insert(lane(0, 3)).unwrap();
+        store.clear();
+        assert_eq!(store.used_bytes(), 0);
+        assert_eq!(store.num_types(), 0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Latency metrics for the service coordinator.
+
+use crate::fegraph::node::OpBreakdown;
+
+/// Online latency recorder (extraction / inference / end-to-end).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    extraction_ns: Vec<u64>,
+    inference_ns: Vec<u64>,
+    breakdown: OpBreakdown,
+}
+
+impl LatencyRecorder {
+    /// Create an empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request.
+    pub fn record(&mut self, extraction_ns: u64, inference_ns: u64, bd: &OpBreakdown) {
+        self.extraction_ns.push(extraction_ns);
+        self.inference_ns.push(inference_ns);
+        self.breakdown.merge(bd);
+    }
+
+    /// Number of recorded requests.
+    pub fn len(&self) -> usize {
+        self.extraction_ns.len()
+    }
+
+    /// Whether nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.extraction_ns.is_empty()
+    }
+
+    /// Mean end-to-end latency (ms).
+    pub fn mean_ms(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.extraction_ns
+            .iter()
+            .zip(&self.inference_ns)
+            .map(|(e, i)| (e + i) as f64)
+            .sum::<f64>()
+            / self.len() as f64
+            / 1e6
+    }
+
+    /// End-to-end latency percentile (ms).
+    pub fn percentile_ms(&self, q: f64) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let mut v: Vec<u64> = self
+            .extraction_ns
+            .iter()
+            .zip(&self.inference_ns)
+            .map(|(e, i)| e + i)
+            .collect();
+        v.sort_unstable();
+        let idx = ((v.len() - 1) as f64 * q).round() as usize;
+        v[idx] as f64 / 1e6
+    }
+
+    /// Share of total time spent in feature extraction (the Fig. 4
+    /// bottleneck statistic).
+    pub fn extraction_share(&self) -> f64 {
+        let e: u64 = self.extraction_ns.iter().sum();
+        let i: u64 = self.inference_ns.iter().sum();
+        if e + i == 0 {
+            0.0
+        } else {
+            e as f64 / (e + i) as f64
+        }
+    }
+
+    /// Accumulated per-op breakdown.
+    pub fn breakdown(&self) -> &OpBreakdown {
+        &self.breakdown
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_over_known_samples() {
+        let mut rec = LatencyRecorder::new();
+        for e in [1_000_000u64, 2_000_000, 3_000_000] {
+            rec.record(e, 1_000_000, &OpBreakdown::default());
+        }
+        assert_eq!(rec.len(), 3);
+        assert!((rec.mean_ms() - 3.0).abs() < 1e-9);
+        assert!((rec.percentile_ms(0.5) - 3.0).abs() < 1e-9);
+        assert!((rec.extraction_share() - 6.0 / 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_recorder_is_zero() {
+        let rec = LatencyRecorder::new();
+        assert_eq!(rec.mean_ms(), 0.0);
+        assert_eq!(rec.percentile_ms(0.9), 0.0);
+        assert_eq!(rec.extraction_share(), 0.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! The concurrent service coordinator (Layer 3 runtime).
+//!
+//! Wires the full on-device pipeline the way a mobile SDK would: a
+//! behavior-logging thread streams trace events into the shared app log
+//! through a bounded channel (backpressure) while the inference loop
+//! fires model executions at the service's frequency — each execution
+//! running AutoFeature extraction followed by PJRT model inference.
+//! Simulated time is compressed (no wall-clock sleeps per simulated
+//! second) but event/trigger interleaving follows the trace exactly.
+//!
+//! Built on `std::thread` + `std::sync::mpsc` (the build image vendors
+//! no async runtime — see DESIGN.md §Substitutions; the architecture is
+//! identical to the tokio variant: producer task, bounded queue,
+//! consumer loop).
+
+pub mod metrics;
+
+use std::sync::mpsc::{sync_channel, TryRecvError};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::applog::store::{AppLogStore, StoreConfig};
+use crate::engine::Extractor;
+use crate::runtime::{pack_inputs, ModelRuntime};
+use crate::workload::driver::{recent_observations, SimConfig};
+use crate::workload::traces::{log_events, TraceConfig, TraceEvent, TraceGenerator};
+
+use metrics::LatencyRecorder;
+
+/// Outcome of a coordinator run.
+#[derive(Debug)]
+pub struct CoordinatorReport {
+    /// Request latency metrics.
+    pub metrics: LatencyRecorder,
+    /// Events logged over the run.
+    pub events_logged: usize,
+    /// Inference requests served.
+    pub requests: usize,
+    /// Last prediction (NaN when no model attached).
+    pub last_prediction: f32,
+}
+
+/// Run the concurrent pipeline: behavior producer thread + inference
+/// loop. `model` is optional so extraction-only deployments reuse the
+/// same loop.
+pub fn run_service(
+    catalog: &crate::applog::schema::Catalog,
+    extractor: &mut dyn Extractor,
+    model: Option<&ModelRuntime>,
+    cfg: &SimConfig,
+) -> Result<CoordinatorReport> {
+    let trace = TraceGenerator::new(catalog).generate(&TraceConfig {
+        period: cfg.period,
+        activity: cfg.activity,
+        start_ms: 0,
+        duration_ms: cfg.warmup_ms + cfg.duration_ms,
+        seed: cfg.seed,
+    });
+    let codec = cfg.codec.build();
+    let store = Arc::new(Mutex::new(AppLogStore::new(StoreConfig::default())));
+
+    // Warmup history, synchronously.
+    let warm_end = trace.partition_point(|e| e.timestamp_ms < cfg.warmup_ms);
+    {
+        let mut s = store.lock().unwrap();
+        log_events(&mut s, codec.as_ref(), &trace[..warm_end])?;
+    }
+
+    // Behavior-logging thread: bounded channel gives backpressure — the
+    // producer can run at most 256 events ahead of the consumer.
+    let (tx, rx) = sync_channel::<TraceEvent>(256);
+    let tail: Vec<TraceEvent> = trace[warm_end..].to_vec();
+    let producer = std::thread::spawn(move || {
+        for e in tail {
+            if tx.send(e).is_err() {
+                break;
+            }
+        }
+    });
+
+    let mut recorder = LatencyRecorder::new();
+    let device_feats = [0.6f32, 0.8, 0.3, 0.5, 0.2, 0.9, 0.1, 0.7];
+    let cloud: Vec<f32> = (0..64)
+        .map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 - 0.5)
+        .collect();
+
+    let mut now = cfg.warmup_ms + cfg.inference_interval_ms;
+    let horizon = cfg.warmup_ms + cfg.duration_ms;
+    let mut pending: Option<TraceEvent> = None;
+    let mut last_prediction = f32::NAN;
+    let mut requests = 0usize;
+    let mut producer_done = false;
+
+    while now <= horizon {
+        // Drain behaviors logged strictly before this trigger. Because
+        // the channel preserves trace order, we stop at the first event
+        // at/after `now` and park it.
+        {
+            let mut s = store.lock().unwrap();
+            if let Some(e) = pending.take() {
+                if e.timestamp_ms < now {
+                    let payload = codec.encode(&e.attrs);
+                    s.append(e.event_type, e.timestamp_ms, payload)?;
+                } else {
+                    pending = Some(e);
+                }
+            }
+            while pending.is_none() && !producer_done {
+                match rx.try_recv() {
+                    Ok(e) => {
+                        if e.timestamp_ms < now {
+                            let payload = codec.encode(&e.attrs);
+                            s.append(e.event_type, e.timestamp_ms, payload)?;
+                        } else {
+                            pending = Some(e);
+                        }
+                    }
+                    Err(TryRecvError::Empty) => {
+                        // Producer still running: wait for it to catch up
+                        // to simulated time (blocking recv keeps order).
+                        match rx.recv() {
+                            Ok(e) => {
+                                if e.timestamp_ms < now {
+                                    let payload = codec.encode(&e.attrs);
+                                    s.append(e.event_type, e.timestamp_ms, payload)?;
+                                } else {
+                                    pending = Some(e);
+                                }
+                            }
+                            Err(_) => producer_done = true,
+                        }
+                    }
+                    Err(TryRecvError::Disconnected) => producer_done = true,
+                }
+            }
+        }
+
+        // Serve the inference request.
+        let s = store.lock().unwrap();
+        let extraction = extractor.extract(&s, now)?;
+        let inference_ns = if let Some(rt) = model {
+            let meta = rt.meta();
+            let recent = recent_observations(&s, now, meta.seq_len, meta.seq_dim);
+            let inputs = pack_inputs(meta, &extraction.values, &device_feats, &recent, &cloud);
+            let t0 = std::time::Instant::now();
+            last_prediction = rt.infer(&inputs)?;
+            t0.elapsed().as_nanos() as u64
+        } else {
+            0
+        };
+        drop(s);
+
+        recorder.record(extraction.wall_ns, inference_ns, &extraction.breakdown);
+        requests += 1;
+        now += cfg.inference_interval_ms;
+    }
+
+    drop(rx);
+    let _ = producer.join();
+    let events_logged = store.lock().unwrap().len();
+    Ok(CoordinatorReport {
+        metrics: recorder,
+        events_logged,
+        requests,
+        last_prediction,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::codec::CodecKind;
+    use crate::applog::schema::{Catalog, CatalogConfig};
+    use crate::baseline::naive::NaiveExtractor;
+    use crate::features::catalog::{generate_feature_set, FeatureSetConfig, MEANINGFUL_WINDOWS};
+
+    #[test]
+    fn coordinator_serves_requests() {
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        let specs = generate_feature_set(
+            &cat,
+            &FeatureSetConfig {
+                num_features: 10,
+                num_types: 4,
+                identical_share: 0.6,
+                windows: MEANINGFUL_WINDOWS[..3].to_vec(),
+                multi_type_prob: 0.2,
+                seed: 1,
+            },
+        );
+        let mut naive = NaiveExtractor::new(specs, CodecKind::Jsonish);
+        let cfg = SimConfig {
+            warmup_ms: 5 * 60_000,
+            duration_ms: 2 * 60_000,
+            inference_interval_ms: 20_000,
+            ..SimConfig::default()
+        };
+        let report = run_service(&cat, &mut naive, None, &cfg).unwrap();
+        assert_eq!(report.requests, 6);
+        assert_eq!(report.metrics.len(), 6);
+        assert!(report.events_logged > 0);
+    }
+
+    #[test]
+    fn coordinator_matches_sequential_driver() {
+        // The concurrent pipeline must see exactly the same events per
+        // trigger as the sequential driver (same trace, same cut-offs).
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        let specs = generate_feature_set(
+            &cat,
+            &FeatureSetConfig {
+                num_features: 8,
+                num_types: 3,
+                identical_share: 0.5,
+                windows: MEANINGFUL_WINDOWS[..2].to_vec(),
+                multi_type_prob: 0.0,
+                seed: 2,
+            },
+        );
+        let cfg = SimConfig {
+            warmup_ms: 6 * 60_000,
+            duration_ms: 3 * 60_000,
+            inference_interval_ms: 30_000,
+            ..SimConfig::default()
+        };
+        let mut a = NaiveExtractor::new(specs.clone(), CodecKind::Jsonish);
+        let seq = crate::workload::driver::run_simulation(&cat, &mut a, None, &cfg).unwrap();
+        let mut b = NaiveExtractor::new(specs, CodecKind::Jsonish);
+        let conc = run_service(&cat, &mut b, None, &cfg).unwrap();
+        assert_eq!(seq.records.len(), conc.requests);
+        assert_eq!(seq.events_logged, conc.events_logged);
+    }
+}

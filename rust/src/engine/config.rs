@@ -1,0 +1,107 @@
+//! Engine configuration.
+
+use crate::applog::codec::CodecKind;
+use crate::cache::policy::PolicyKind;
+
+/// Configuration of one engine instance (per deployed model).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Inter-feature fusion (graph optimizer, §3.3). Off = every
+    /// sub-chain runs its own Retrieve/Decode.
+    pub enable_fusion: bool,
+    /// Cross-execution caching (event evaluator, §3.4).
+    pub enable_cache: bool,
+    /// Hierarchical filtering in fused lanes (off = direct fused filter,
+    /// the Fig. 11 "original design" ablation).
+    pub hierarchical_filter: bool,
+    /// Cache memory budget in bytes (dynamic in production; §4.2 shows
+    /// full caches stay under 100 KB).
+    pub cache_budget_bytes: usize,
+    /// Cache selection policy.
+    pub policy: PolicyKind,
+    /// Interval estimate used before the first measured interval.
+    pub expected_interval_ms: i64,
+    /// Staleness-tolerant serving (§5 "Model-Engine Co-Design"): when
+    /// > 0, an extraction triggered within `staleness_ttl_ms` of the
+    /// previous one returns the previous values unchanged — trading a
+    /// bounded feature staleness for near-zero latency. 0 disables it
+    /// (the paper's deployed setting: exact values always).
+    pub staleness_ttl_ms: i64,
+    /// Payload codec of the app log this engine reads.
+    pub codec: CodecKind,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self::autofeature()
+    }
+}
+
+impl EngineConfig {
+    /// Full AutoFeature (fusion + cache + hierarchical filter).
+    pub fn autofeature() -> Self {
+        EngineConfig {
+            enable_fusion: true,
+            enable_cache: true,
+            hierarchical_filter: true,
+            cache_budget_bytes: 256 * 1024,
+            policy: PolicyKind::Greedy,
+            expected_interval_ms: 5_000,
+            staleness_ttl_ms: 0,
+            codec: CodecKind::Jsonish,
+        }
+    }
+
+    /// Staleness-tolerant co-design variant (§5): serve values up to
+    /// `ttl_ms` old without re-extracting.
+    pub fn stale_tolerant(ttl_ms: i64) -> Self {
+        EngineConfig {
+            staleness_ttl_ms: ttl_ms,
+            ..Self::autofeature()
+        }
+    }
+
+    /// *w/ Fusion* ablation: graph optimizer only.
+    pub fn fusion_only() -> Self {
+        EngineConfig {
+            enable_cache: false,
+            ..Self::autofeature()
+        }
+    }
+
+    /// *w/ Cache* ablation: cache policy only.
+    pub fn cache_only() -> Self {
+        EngineConfig {
+            enable_fusion: false,
+            ..Self::autofeature()
+        }
+    }
+
+    /// Engine-shaped naive configuration (used by sanity tests; the
+    /// measured *w/o AutoFeature* baseline is
+    /// [`crate::baseline::naive::NaiveExtractor`]).
+    pub fn naive() -> Self {
+        EngineConfig {
+            enable_fusion: false,
+            enable_cache: false,
+            ..Self::autofeature()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_toggle_the_right_components() {
+        assert!(EngineConfig::autofeature().enable_fusion);
+        assert!(EngineConfig::autofeature().enable_cache);
+        assert!(!EngineConfig::fusion_only().enable_cache);
+        assert!(EngineConfig::fusion_only().enable_fusion);
+        assert!(!EngineConfig::cache_only().enable_fusion);
+        assert!(EngineConfig::cache_only().enable_cache);
+        assert!(!EngineConfig::naive().enable_fusion);
+        assert!(!EngineConfig::naive().enable_cache);
+    }
+}

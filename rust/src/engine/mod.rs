@@ -1,0 +1,36 @@
+//! The AutoFeature engine: offline optimization + online execution
+//! (paper §3.1, Fig. 7).
+//!
+//! * [`config`] — engine configuration (fusion/cache toggles map to the
+//!   paper's ablations),
+//! * [`profiler`] — offline per-type cost/size profiling,
+//! * [`offline`] — the one-time offline phase run when a model is
+//!   (re)deployed: graph generation → optimization → profiling →
+//!   valuation constants,
+//! * [`online`] — the per-request online phase: fetch cached results →
+//!   extract missing → assemble features → update cache.
+
+pub mod config;
+pub mod offline;
+pub mod online;
+pub mod profiler;
+
+use crate::applog::event::TimestampMs;
+use crate::applog::store::AppLogStore;
+
+use anyhow::Result;
+
+/// Anything that can extract a model's features from the app log at a
+/// trigger time. Implemented by the AutoFeature [`online::Engine`], the
+/// naive baseline and the cloud baselines, so the workload driver and
+/// benches treat all methods uniformly.
+pub trait Extractor {
+    /// Extract all features at trigger time `now`.
+    fn extract(&mut self, store: &AppLogStore, now: TimestampMs) -> Result<online::ExtractionResult>;
+
+    /// Method label for reports.
+    fn label(&self) -> &'static str;
+
+    /// Reset warm state (cache etc.) — start of a new test period.
+    fn reset(&mut self) {}
+}

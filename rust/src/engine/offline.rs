@@ -1,0 +1,176 @@
+//! The offline optimization phase (paper §3.1, Fig. 7 ①②③).
+//!
+//! Runs once when a model (or an updated configuration) is deployed:
+//! 1. **Graph generator** — formulate the FE-graph from the feature
+//!    conditions,
+//! 2. **Graph optimizer** — intra-feature partition + inter-feature
+//!    fusion into the optimized plan,
+//! 3. **Output evaluator** — profile per-type costs/sizes for the cache
+//!    valuation's static terms.
+//!
+//! The paper measures this phase at millisecond scale (Fig. 17a);
+//! [`OfflineStats`] records the same breakdown.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::applog::event::{AttrId, EventTypeId};
+use crate::applog::schema::Catalog;
+use crate::features::spec::FeatureSpec;
+use crate::fegraph::graph::FeGraph;
+use crate::optimizer::fusion::fuse;
+use crate::optimizer::plan::OptimizedPlan;
+
+use super::config::EngineConfig;
+use super::profiler::{profile, ProfileTable};
+
+/// Wall-clock breakdown of the offline phase (Fig. 17a).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OfflineStats {
+    /// FE-graph construction time.
+    pub graph_build_ns: u64,
+    /// Partition + fusion time.
+    pub optimize_ns: u64,
+    /// Per-type profiling time (the dominant bar in Fig. 17a).
+    pub profile_ns: u64,
+}
+
+impl OfflineStats {
+    /// Total offline time.
+    pub fn total_ns(&self) -> u64 {
+        self.graph_build_ns + self.optimize_ns + self.profile_ns
+    }
+}
+
+/// Everything the online phase needs, produced once offline.
+#[derive(Debug)]
+pub struct CompiledEngine {
+    /// The unoptimized FE-graph (kept for reporting/inspection).
+    pub graph: FeGraph,
+    /// The optimized execution plan.
+    pub plan: OptimizedPlan,
+    /// Profiled static valuation terms.
+    pub profile: ProfileTable,
+    /// Per-type retention horizon: max member window (cache prune
+    /// cutoff and missing-interval bound).
+    pub type_windows: HashMap<EventTypeId, i64>,
+    /// Per-type attr unions (cache row projection).
+    pub attr_unions: HashMap<EventTypeId, Vec<AttrId>>,
+    /// Offline phase timing.
+    pub stats: OfflineStats,
+}
+
+/// Compile a feature set for online execution.
+pub fn compile(
+    features: Vec<FeatureSpec>,
+    catalog: &Catalog,
+    cfg: &EngineConfig,
+) -> Result<CompiledEngine> {
+    let mut stats = OfflineStats::default();
+
+    // ① Graph generator.
+    let t0 = Instant::now();
+    let graph = FeGraph::from_specs(features);
+    stats.graph_build_ns = t0.elapsed().as_nanos() as u64;
+
+    // ② Graph optimizer (partition + fusion).
+    let t0 = Instant::now();
+    let plan = fuse(&graph.features, cfg.enable_fusion);
+    let mut type_windows: HashMap<EventTypeId, i64> = HashMap::new();
+    let mut attr_unions: HashMap<EventTypeId, Vec<AttrId>> = HashMap::new();
+    for lane in &plan.lanes {
+        let w = type_windows.entry(lane.event_type).or_insert(0);
+        *w = (*w).max(lane.max_window.duration_ms);
+        let u = attr_unions.entry(lane.event_type).or_default();
+        u.extend(lane.attr_union.iter().copied());
+    }
+    for u in attr_unions.values_mut() {
+        u.sort_unstable();
+        u.dedup();
+    }
+    stats.optimize_ns = t0.elapsed().as_nanos() as u64;
+
+    // ③ Output evaluator: profile static terms.
+    let codec = cfg.codec.build();
+    let prof = profile(catalog, codec.as_ref(), &attr_unions)?;
+    stats.profile_ns = prof.profile_time_ns;
+
+    Ok(CompiledEngine {
+        graph,
+        plan,
+        profile: prof,
+        type_windows,
+        attr_unions,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::schema::CatalogConfig;
+    use crate::features::catalog::{generate_feature_set, FeatureSetConfig, MEANINGFUL_WINDOWS};
+
+    fn setup(enable_fusion: bool) -> CompiledEngine {
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        let specs = generate_feature_set(
+            &cat,
+            &FeatureSetConfig {
+                num_features: 40,
+                num_types: 10,
+                identical_share: 0.6,
+                windows: MEANINGFUL_WINDOWS.to_vec(),
+                multi_type_prob: 0.3,
+                seed: 5,
+            },
+        );
+        let cfg = EngineConfig {
+            enable_fusion,
+            ..EngineConfig::autofeature()
+        };
+        compile(specs, &cat, &cfg).unwrap()
+    }
+
+    #[test]
+    fn compile_profiles_every_plan_type() {
+        let c = setup(true);
+        for lane in &c.plan.lanes {
+            assert!(c.profile.contains(lane.event_type));
+            assert!(c.type_windows.contains_key(&lane.event_type));
+        }
+    }
+
+    #[test]
+    fn fused_plan_has_fewer_lanes() {
+        let fused = setup(true);
+        let unfused = setup(false);
+        assert!(fused.plan.num_retrieves() < unfused.plan.num_retrieves());
+    }
+
+    #[test]
+    fn offline_phase_is_fast_and_timed() {
+        let c = setup(true);
+        assert!(c.stats.graph_build_ns > 0);
+        assert!(c.stats.profile_ns > 0);
+        // Paper: millisecond-scale offline cost. Allow generous slack on
+        // CI boxes but catch pathological blowups.
+        assert!(c.stats.total_ns() < 500_000_000, "{}", c.stats.total_ns());
+    }
+
+    #[test]
+    fn attr_unions_cover_member_attrs() {
+        let c = setup(true);
+        for lane in &c.plan.lanes {
+            let u = &c.attr_unions[&lane.event_type];
+            for g in &lane.groups {
+                for m in &g.members {
+                    for a in &m.attrs {
+                        assert!(u.binary_search(a).is_ok());
+                    }
+                }
+            }
+        }
+    }
+}

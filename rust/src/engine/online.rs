@@ -1,0 +1,632 @@
+//! The online execution phase (paper §3.1, Fig. 7 ❶–❹).
+//!
+//! Per inference request:
+//! ❶ fetch previously computed intermediate results (decoded attribute
+//!   rows) from the cache,
+//! ❷ run `Retrieve`/`Decode` only for the missing interval of newly
+//!   logged events,
+//! ❸ feed cached + fresh rows through the (hierarchically) fused filter
+//!   and assemble real-time feature values,
+//! ❹ update the cache under the current memory budget via the greedy
+//!   valuation policy.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::applog::codec::AttrCodec;
+use crate::applog::event::{EventTypeId, TimestampMs};
+use crate::applog::query::{self, TimeWindow};
+use crate::applog::schema::Catalog;
+use crate::applog::store::AppLogStore;
+use crate::cache::entry::{CachedLane, CachedRow};
+use crate::cache::policy::select;
+use crate::cache::store::CacheStore;
+use crate::cache::valuation::{evaluate, Candidate};
+use crate::features::spec::FeatureSpec;
+use crate::features::value::FeatureValue;
+use crate::fegraph::node::OpBreakdown;
+use crate::optimizer::hierarchical::{DirectWalker, LaneWalker, RowView};
+use crate::optimizer::plan::FeatureAcc;
+
+use super::config::EngineConfig;
+use super::offline::{compile, CompiledEngine};
+use super::Extractor;
+
+/// Output of one online extraction.
+#[derive(Debug, Clone)]
+pub struct ExtractionResult {
+    /// Feature values, in feature order.
+    pub values: Vec<FeatureValue>,
+    /// Per-operation breakdown.
+    pub breakdown: OpBreakdown,
+    /// End-to-end extraction wall time (ns).
+    pub wall_ns: u64,
+    /// Cache bytes held after the update step.
+    pub cache_bytes: usize,
+    /// Behavior types cached after the update step.
+    pub cached_types: usize,
+    /// Hierarchical-filter boundary comparisons (Fig. 11 metric).
+    pub boundary_cmps: u64,
+    /// Whether the values were served from the staleness fast path
+    /// (§5 co-design mode) without re-extraction.
+    pub served_stale: bool,
+    /// App-log storage the method requires beyond the raw log (cloud
+    /// baselines inflate this; AutoFeature keeps it 0).
+    pub extra_storage_bytes: usize,
+}
+
+/// Rows available for one behavior type during one extraction.
+struct TypeRows {
+    cached: CachedLane,
+    fresh: Vec<CachedRow>,
+}
+
+/// The AutoFeature online engine.
+pub struct Engine {
+    cfg: EngineConfig,
+    compiled: CompiledEngine,
+    codec: Box<dyn AttrCodec>,
+    cache: CacheStore,
+    last_now: Option<TimestampMs>,
+    /// Previous extraction's values (kept only in co-design mode).
+    last_values: Option<(TimestampMs, Vec<FeatureValue>)>,
+}
+
+impl Engine {
+    /// Compile + instantiate in one step.
+    pub fn new(
+        features: Vec<FeatureSpec>,
+        catalog: &Catalog,
+        cfg: EngineConfig,
+    ) -> Result<Engine> {
+        let compiled = compile(features, catalog, &cfg)?;
+        Ok(Self::from_compiled(compiled, cfg))
+    }
+
+    /// Instantiate from a pre-compiled plan (offline phase output).
+    pub fn from_compiled(compiled: CompiledEngine, cfg: EngineConfig) -> Engine {
+        Engine {
+            codec: cfg.codec.build(),
+            cache: CacheStore::new(cfg.cache_budget_bytes),
+            cfg,
+            compiled,
+            last_now: None,
+            last_values: None,
+        }
+    }
+
+    /// The compiled plan (inspection / reports).
+    pub fn compiled(&self) -> &CompiledEngine {
+        &self.compiled
+    }
+
+    /// Current cache usage in bytes (Fig. 17b metric).
+    pub fn cache_bytes(&self) -> usize {
+        self.cache.used_bytes()
+    }
+
+    /// Dynamically adjust the cache budget (OS memory pressure). Evicts
+    /// lowest-ratio types first if shrinking below current usage.
+    pub fn set_cache_budget(&mut self, budget_bytes: usize, interval_ms: i64) {
+        let compiled = &self.compiled;
+        let prio = |t: EventTypeId| {
+            let window = compiled.type_windows.get(&t).copied().unwrap_or(0);
+            let overlap = if window <= 0 {
+                0.0
+            } else {
+                ((window - interval_ms) as f64 / window as f64).max(0.0)
+            };
+            if compiled.profile.contains(t) {
+                overlap * compiled.profile.stat(t).ratio()
+            } else {
+                0.0
+            }
+        };
+        self.cache.set_budget(budget_bytes, prio);
+    }
+
+    /// The interval estimate used for valuation.
+    fn interval_ms(&self, now: TimestampMs) -> i64 {
+        match self.last_now {
+            Some(last) if now > last => now - last,
+            _ => self.cfg.expected_interval_ms,
+        }
+    }
+
+    /// Build the available-row set for a behavior type: cache fetch (❶)
+    /// plus retrieve+decode of the missing interval (❷).
+    fn build_type_rows(
+        &mut self,
+        store: &AppLogStore,
+        t: EventTypeId,
+        now: TimestampMs,
+        bd: &mut OpBreakdown,
+    ) -> Result<TypeRows> {
+        let window_ms = self.compiled.type_windows[&t];
+        let window_start = now - window_ms;
+
+        // ❶ Cache fetch: take ownership of the lane (re-inserted by the
+        // update step) and drop rows that fell out of the window.
+        //
+        // Contract (mobile logging is causal): rows are appended with
+        // timestamps >= the previous extraction's trigger time, so
+        // everything below the watermark is already cached. The debug
+        // check below verifies it against the store's index.
+        let t0 = Instant::now();
+        let mut cached = match self.cache.evict(t) {
+            Some(mut lane) => {
+                lane.prune_before(window_start);
+                lane
+            }
+            None => CachedLane::new(t, window_start),
+        };
+        // Never re-retrieve what the cache already covers.
+        let missing_from = cached.watermark.max(window_start);
+        debug_assert_eq!(
+            cached.len(),
+            query::count(
+                store,
+                t,
+                TimeWindow {
+                    start_ms: window_start,
+                    end_ms: missing_from
+                }
+            ),
+            "late-arriving rows below the cache watermark (type {t}): \
+             the log/extraction time contract was violated"
+        );
+        bd.cache_ns += t0.elapsed().as_nanos() as u64;
+        bd.rows_from_cache += cached.len() as u64;
+
+        // ❷ Retrieve + Decode only the missing interval.
+        let t0 = Instant::now();
+        let rows = query::retrieve(
+            store,
+            &[t],
+            TimeWindow {
+                start_ms: missing_from,
+                end_ms: now,
+            },
+        );
+        bd.retrieve_ns += t0.elapsed().as_nanos() as u64;
+        bd.rows_retrieved += rows.len() as u64;
+
+        // Decode straight into the attr-union projection (§Perf: fused
+        // Decode+Filter never materializes unneeded attribute values),
+        // producing the rows both the filter and the cache share.
+        let t0 = Instant::now();
+        let union = &self.compiled.attr_unions[&t];
+        let mut fresh: Vec<CachedRow> = Vec::with_capacity(rows.len());
+        for r in &rows {
+            fresh.push(CachedRow {
+                ts: r.timestamp_ms,
+                seq: r.seq_no,
+                attrs: self.codec.decode_project(&r.payload, union)?,
+            });
+        }
+        bd.decode_ns += t0.elapsed().as_nanos() as u64;
+        bd.rows_decoded += rows.len() as u64;
+        cached.watermark = now;
+
+        Ok(TypeRows { cached, fresh })
+    }
+
+    /// Run one lane's filter over an available row set.
+    #[allow(clippy::too_many_arguments)]
+    fn feed_lane(
+        &self,
+        lane_idx: usize,
+        rows: &TypeRows,
+        now: TimestampMs,
+        sinks: &mut [FeatureAcc],
+        bd: &mut OpBreakdown,
+        boundary_cmps: &mut u64,
+    ) {
+        let lane = &self.compiled.plan.lanes[lane_idx];
+        let t0 = Instant::now();
+        if self.cfg.hierarchical_filter {
+            let mut w = LaneWalker::new(lane, now);
+            for r in rows.cached.rows.iter().chain(rows.fresh.iter()) {
+                w.push_row(
+                    lane,
+                    RowView {
+                        ts: r.ts,
+                        seq: r.seq,
+                        attrs: &r.attrs,
+                    },
+                    sinks,
+                );
+            }
+            *boundary_cmps += w.boundary_cmps;
+        } else {
+            let mut w = DirectWalker::new();
+            for r in rows.cached.rows.iter().chain(rows.fresh.iter()) {
+                w.push_row(
+                    lane,
+                    now,
+                    RowView {
+                        ts: r.ts,
+                        seq: r.seq,
+                        attrs: &r.attrs,
+                    },
+                    sinks,
+                );
+            }
+            *boundary_cmps += w.boundary_cmps;
+        }
+        bd.filter_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    /// No-cache lane execution: own Retrieve/Decode per lane (the
+    /// unoptimized cross-execution path).
+    fn run_lane_uncached(
+        &self,
+        lane_idx: usize,
+        store: &AppLogStore,
+        now: TimestampMs,
+        sinks: &mut [FeatureAcc],
+        bd: &mut OpBreakdown,
+        boundary_cmps: &mut u64,
+    ) -> Result<()> {
+        let lane = &self.compiled.plan.lanes[lane_idx];
+        let t0 = Instant::now();
+        let rows = query::retrieve(store, &[lane.event_type], lane.max_window.window_at(now));
+        bd.retrieve_ns += t0.elapsed().as_nanos() as u64;
+        bd.rows_retrieved += rows.len() as u64;
+
+        let t0 = Instant::now();
+        let mut decoded = Vec::with_capacity(rows.len());
+        for r in &rows {
+            // §Perf: fused lanes only read their attr union.
+            decoded.push(self.codec.decode_project(&r.payload, &lane.attr_union)?);
+        }
+        bd.decode_ns += t0.elapsed().as_nanos() as u64;
+        bd.rows_decoded += rows.len() as u64;
+
+        let t0 = Instant::now();
+        if self.cfg.hierarchical_filter {
+            let mut w = LaneWalker::new(lane, now);
+            for (r, attrs) in rows.iter().zip(&decoded) {
+                w.push_row(
+                    lane,
+                    RowView {
+                        ts: r.timestamp_ms,
+                        seq: r.seq_no,
+                        attrs,
+                    },
+                    sinks,
+                );
+            }
+            *boundary_cmps += w.boundary_cmps;
+        } else {
+            let mut w = DirectWalker::new();
+            for (r, attrs) in rows.iter().zip(&decoded) {
+                w.push_row(
+                    lane,
+                    now,
+                    RowView {
+                        ts: r.timestamp_ms,
+                        seq: r.seq_no,
+                        attrs,
+                    },
+                    sinks,
+                );
+            }
+            *boundary_cmps += w.boundary_cmps;
+        }
+        bd.filter_ns += t0.elapsed().as_nanos() as u64;
+        Ok(())
+    }
+
+    /// ❹ Cache update: valuate candidates, select under budget, rebuild.
+    fn update_cache(
+        &mut self,
+        avail: HashMap<EventTypeId, TypeRows>,
+        now: TimestampMs,
+        bd: &mut OpBreakdown,
+    ) {
+        let t0 = Instant::now();
+        let interval = self.interval_ms(now);
+        let mut entries: Vec<(EventTypeId, CachedLane)> = Vec::with_capacity(avail.len());
+        let mut candidates: Vec<Candidate> = Vec::with_capacity(avail.len());
+        for (t, rows) in avail {
+            let mut lane = rows.cached;
+            for r in rows.fresh {
+                lane.push(r);
+            }
+            lane.watermark = now;
+            let window_ms = self.compiled.type_windows[&t];
+            candidates.push(evaluate(
+                t,
+                lane.len(),
+                lane.bytes(),
+                window_ms,
+                interval,
+                self.compiled.profile.stat(t),
+            ));
+            entries.push((t, lane));
+        }
+        let selection = select(self.cfg.policy, &candidates, self.cache.budget());
+        self.cache.clear();
+        for (keep, (_, lane)) in selection.into_iter().zip(entries) {
+            if keep && !lane.is_empty() {
+                // Selection cost == lane bytes, so insertion cannot fail.
+                let _ = self.cache.insert(lane);
+            }
+        }
+        bd.cache_ns += t0.elapsed().as_nanos() as u64;
+    }
+}
+
+impl Extractor for Engine {
+    fn extract(&mut self, store: &AppLogStore, now: TimestampMs) -> Result<ExtractionResult> {
+        if let Some(last) = self.last_now {
+            ensure!(now >= last, "extraction times must be monotonic");
+        }
+        // §5 co-design fast path: serve bounded-staleness values.
+        if self.cfg.staleness_ttl_ms > 0 {
+            if let Some((t, values)) = &self.last_values {
+                if now - *t <= self.cfg.staleness_ttl_ms {
+                    let wall = Instant::now();
+                    let values = values.clone();
+                    return Ok(ExtractionResult {
+                        values,
+                        breakdown: OpBreakdown::default(),
+                        wall_ns: wall.elapsed().as_nanos() as u64,
+                        cache_bytes: self.cache.used_bytes(),
+                        cached_types: self.cache.num_types(),
+                        boundary_cmps: 0,
+                        served_stale: true,
+                        extra_storage_bytes: 0,
+                    });
+                }
+            }
+        }
+        let wall = Instant::now();
+        let mut bd = OpBreakdown::default();
+        let mut boundary_cmps = 0u64;
+        let mut sinks: Vec<FeatureAcc> = self
+            .compiled
+            .plan
+            .features
+            .iter()
+            .map(|f| FeatureAcc::new(f, now))
+            .collect();
+
+        if self.cfg.enable_cache {
+            // Build per-type row sets once (❶❷), shared across all lanes
+            // of the type, then feed every lane (❸).
+            let mut avail: HashMap<EventTypeId, TypeRows> = HashMap::new();
+            for lane_idx in 0..self.compiled.plan.lanes.len() {
+                let t = self.compiled.plan.lanes[lane_idx].event_type;
+                if !avail.contains_key(&t) {
+                    let rows = self.build_type_rows(store, t, now, &mut bd)?;
+                    avail.insert(t, rows);
+                }
+                let rows = &avail[&t];
+                self.feed_lane(lane_idx, rows, now, &mut sinks, &mut bd, &mut boundary_cmps);
+            }
+            self.update_cache(avail, now, &mut bd);
+        } else {
+            for lane_idx in 0..self.compiled.plan.lanes.len() {
+                self.run_lane_uncached(
+                    lane_idx,
+                    store,
+                    now,
+                    &mut sinks,
+                    &mut bd,
+                    &mut boundary_cmps,
+                )?;
+            }
+        }
+
+        // Assemble (❸ tail): finish accumulators in feature order.
+        let t0 = Instant::now();
+        let values: Vec<FeatureValue> = sinks.into_iter().map(|s| s.finish()).collect();
+        bd.compute_ns += t0.elapsed().as_nanos() as u64;
+
+        self.last_now = Some(now);
+        if self.cfg.staleness_ttl_ms > 0 {
+            self.last_values = Some((now, values.clone()));
+        }
+        Ok(ExtractionResult {
+            values,
+            breakdown: bd,
+            wall_ns: wall.elapsed().as_nanos() as u64,
+            cache_bytes: self.cache.used_bytes(),
+            cached_types: self.cache.num_types(),
+            boundary_cmps,
+            served_stale: false,
+            extra_storage_bytes: 0,
+        })
+    }
+
+    fn label(&self) -> &'static str {
+        match (self.cfg.enable_fusion, self.cfg.enable_cache) {
+            (true, true) => "AutoFeature",
+            (true, false) => "w/ Fusion",
+            (false, true) => "w/ Cache",
+            (false, false) => "engine-naive",
+        }
+    }
+
+    fn reset(&mut self) {
+        self.cache.clear();
+        self.last_now = None;
+        self.last_values = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::codec::JsonishCodec;
+    use crate::applog::schema::{Catalog, CatalogConfig};
+    use crate::applog::store::StoreConfig;
+    use crate::baseline::naive::NaiveExtractor;
+    use crate::features::catalog::{generate_feature_set, FeatureSetConfig};
+    use crate::features::spec::TimeRange;
+    use crate::workload::traces::{log_events, TraceConfig, TraceGenerator};
+
+    fn setup() -> (Catalog, Vec<FeatureSpec>, AppLogStore) {
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        let specs = generate_feature_set(
+            &cat,
+            &FeatureSetConfig {
+                num_features: 30,
+                num_types: 8,
+                identical_share: 0.7,
+                windows: vec![
+                    TimeRange::mins(5),
+                    TimeRange::mins(30),
+                    TimeRange::hours(1),
+                ],
+                multi_type_prob: 0.3,
+                seed: 77,
+            },
+        );
+        let gen = TraceGenerator::new(&cat);
+        let events = gen.generate(&TraceConfig {
+            duration_ms: 45 * 60_000,
+            seed: 9,
+            ..TraceConfig::default()
+        });
+        let mut store = AppLogStore::new(StoreConfig::default());
+        log_events(&mut store, &JsonishCodec, &events).unwrap();
+        (cat, specs, store)
+    }
+
+    fn extract_with(cfg: EngineConfig, specs: &[FeatureSpec], cat: &Catalog, store: &AppLogStore, nows: &[i64]) -> Vec<Vec<FeatureValue>> {
+        let mut eng = Engine::new(specs.to_vec(), cat, cfg).unwrap();
+        nows.iter()
+            .map(|&now| eng.extract(store, now).unwrap().values)
+            .collect()
+    }
+
+    #[test]
+    fn all_configs_agree_with_naive_baseline() {
+        let (cat, specs, store) = setup();
+        let nows = [10 * 60_000i64, 20 * 60_000, 21 * 60_000, 40 * 60_000];
+        let mut naive = NaiveExtractor::new(specs.clone(), CodecKindForTest());
+        let expected: Vec<Vec<FeatureValue>> = nows
+            .iter()
+            .map(|&now| naive.extract(&store, now).unwrap().values)
+            .collect();
+        for cfg in [
+            EngineConfig::autofeature(),
+            EngineConfig::fusion_only(),
+            EngineConfig::cache_only(),
+            EngineConfig::naive(),
+            EngineConfig {
+                hierarchical_filter: false,
+                ..EngineConfig::autofeature()
+            },
+        ] {
+            let got = extract_with(cfg, &specs, &cat, &store, &nows);
+            for (step, (g, e)) in got.iter().zip(&expected).enumerate() {
+                for (i, (a, b)) in g.iter().zip(e).enumerate() {
+                    assert!(
+                        a.approx_eq(b, 1e-9),
+                        "cfg fusion={} cache={} step {step} feature {i}: {a:?} vs {b:?}",
+                        cfg.enable_fusion,
+                        cfg.enable_cache,
+                    );
+                }
+            }
+        }
+    }
+
+    // Helper shim: NaiveExtractor takes a CodecKind.
+    #[allow(non_snake_case)]
+    fn CodecKindForTest() -> crate::applog::codec::CodecKind {
+        crate::applog::codec::CodecKind::Jsonish
+    }
+
+    #[test]
+    fn cache_reduces_decoded_rows_on_second_extraction() {
+        let (cat, specs, store) = setup();
+        let mut eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
+        let r1 = eng.extract(&store, 30 * 60_000).unwrap();
+        let r2 = eng.extract(&store, 31 * 60_000).unwrap();
+        assert!(r2.rows_cached_exceed(&r1), "r1={r1:?} r2={r2:?}");
+    }
+
+    impl ExtractionResult {
+        fn rows_cached_exceed(&self, first: &ExtractionResult) -> bool {
+            self.breakdown.rows_from_cache > 0
+                && self.breakdown.rows_decoded < first.breakdown.rows_decoded
+        }
+    }
+
+    #[test]
+    fn cache_stays_under_budget() {
+        let (cat, specs, store) = setup();
+        let cfg = EngineConfig {
+            cache_budget_bytes: 8 * 1024, // tight
+            ..EngineConfig::autofeature()
+        };
+        let mut eng = Engine::new(specs, &cat, cfg).unwrap();
+        for i in 1..=10 {
+            let r = eng.extract(&store, i * 3 * 60_000).unwrap();
+            assert!(r.cache_bytes <= 8 * 1024, "step {i}: {}", r.cache_bytes);
+        }
+    }
+
+    #[test]
+    fn reset_clears_warm_state() {
+        let (cat, specs, store) = setup();
+        let mut eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
+        eng.extract(&store, 30 * 60_000).unwrap();
+        assert!(eng.cache_bytes() > 0);
+        eng.reset();
+        assert_eq!(eng.cache_bytes(), 0);
+        let r = eng.extract(&store, 31 * 60_000).unwrap();
+        assert_eq!(r.breakdown.rows_from_cache, 0);
+    }
+
+    #[test]
+    fn shrinking_budget_evicts() {
+        let (cat, specs, store) = setup();
+        let mut eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
+        eng.extract(&store, 30 * 60_000).unwrap();
+        let before = eng.cache_bytes();
+        assert!(before > 0);
+        eng.set_cache_budget(before / 2, 60_000);
+        assert!(eng.cache_bytes() <= before / 2);
+    }
+
+    #[test]
+    fn staleness_mode_serves_bounded_stale_values() {
+        let (cat, specs, store) = setup();
+        let mut eng =
+            Engine::new(specs, &cat, EngineConfig::stale_tolerant(60_000)).unwrap();
+        let r1 = eng.extract(&store, 30 * 60_000).unwrap();
+        assert!(!r1.served_stale);
+        // Within the TTL: same values, no work.
+        let r2 = eng.extract(&store, 30 * 60_000 + 30_000).unwrap();
+        assert!(r2.served_stale);
+        assert_eq!(r2.values, r1.values);
+        assert_eq!(r2.breakdown.rows_decoded, 0);
+        // Beyond the TTL: fresh extraction again.
+        let r3 = eng.extract(&store, 32 * 60_000).unwrap();
+        assert!(!r3.served_stale);
+    }
+
+    #[test]
+    fn staleness_disabled_by_default() {
+        let (cat, specs, store) = setup();
+        let mut eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
+        eng.extract(&store, 30 * 60_000).unwrap();
+        let r = eng.extract(&store, 30 * 60_000 + 1).unwrap();
+        assert!(!r.served_stale);
+    }
+
+    #[test]
+    fn fusion_label_mapping() {
+        let (cat, specs, _) = setup();
+        let eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
+        assert_eq!(eng.label(), "AutoFeature");
+    }
+}

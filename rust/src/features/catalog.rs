@@ -1,0 +1,305 @@
+//! Feature-set generators.
+//!
+//! Two families:
+//! * [`generate_feature_set`] — service-shaped sets matching the paper's
+//!   Fig. 12a statistics: feature count, number of distinct behavior
+//!   types, and the share of features with *identical* `<event_names,
+//!   time_range>` conditions (the quantity §4.2 correlates with fusion
+//!   effectiveness: CP 80.2%, KP 85%, SR 59%, PR 80.6%, VR 71%).
+//! * [`generate_synthetic_redundant`] — Fig. 21's controlled-redundancy
+//!   sets: all features on the same behavior types, a `redundancy`
+//!   fraction sharing overlapping time ranges.
+
+use crate::util::rng::SimRng;
+
+use crate::applog::event::{AttrId, EventTypeId};
+use crate::applog::schema::Catalog;
+
+use super::compute::CompFunc;
+use super::spec::{FeatureId, FeatureSpec, TimeRange};
+
+/// The "meaningful, periodic time ranges" of §3.3 (past 5 min … 1 week).
+pub const MEANINGFUL_WINDOWS: [TimeRange; 7] = [
+    TimeRange::mins(5),
+    TimeRange::mins(30),
+    TimeRange::hours(1),
+    TimeRange::hours(6),
+    TimeRange::days(1),
+    TimeRange::days(3),
+    TimeRange::days(7),
+];
+
+/// Parameters for a service-shaped feature set.
+#[derive(Debug, Clone)]
+pub struct FeatureSetConfig {
+    /// Number of user features (Fig. 12a bar count).
+    pub num_features: usize,
+    /// Number of distinct behavior types used by the set.
+    pub num_types: usize,
+    /// Fraction of features whose `<event_names, time_range>` conditions
+    /// are *identical* to at least one other feature's.
+    pub identical_share: f64,
+    /// Windows to draw `time_range` conditions from.
+    pub windows: Vec<TimeRange>,
+    /// Probability that a condition group spans 2–3 behavior types
+    /// instead of 1.
+    pub multi_type_prob: f64,
+    /// RNG seed (feature sets are deterministic per service).
+    pub seed: u64,
+}
+
+fn comp_funcs() -> Vec<CompFunc> {
+    vec![
+        CompFunc::Count,
+        CompFunc::Sum,
+        CompFunc::Mean,
+        CompFunc::Min,
+        CompFunc::Max,
+        CompFunc::Latest,
+        CompFunc::DistinctCount,
+        CompFunc::Concat { max_len: 5 },
+        CompFunc::DecayedSum {
+            half_life_ms: 30 * 60 * 1000,
+        },
+    ]
+}
+
+/// Generate a service-shaped feature set over `catalog`'s behavior types.
+///
+/// The construction groups features into *condition groups* sharing the
+/// same `<event_names, time_range>`; `identical_share` of the features
+/// land in groups of size ≥ 2 (those exhibit Full redundancy, §3.2), the
+/// rest get unique conditions. All `num_types` behavior types are
+/// guaranteed to be used by at least one feature.
+pub fn generate_feature_set(catalog: &Catalog, cfg: &FeatureSetConfig) -> Vec<FeatureSpec> {
+    assert!(
+        cfg.num_types <= catalog.len(),
+        "feature set needs {} types but catalog has {}",
+        cfg.num_types,
+        catalog.len()
+    );
+    let mut rng = SimRng::seed_from_u64(cfg.seed);
+
+    // The type pool for this service.
+    let mut all_types: Vec<EventTypeId> = (0..catalog.len() as EventTypeId).collect();
+    rng.shuffle(&mut all_types);
+    let pool: Vec<EventTypeId> = all_types[..cfg.num_types].to_vec();
+
+    // How many features sit in shared (size >= 2) condition groups.
+    let shared = ((cfg.num_features as f64) * cfg.identical_share).round() as usize;
+    let unique = cfg.num_features - shared;
+
+    // Build shared groups (size >= 2, <= 5), choosing the group count so
+    // that (shared groups + unique singletons) covers every pool type via
+    // the round-robin below whenever that is feasible.
+    let mut group_sizes = Vec::new();
+    let mut unique = unique;
+    if shared >= 2 {
+        let min_groups = shared.div_ceil(5); // size <= 5
+        let max_groups = shared / 2; // size >= 2
+        let g = cfg
+            .num_types
+            .saturating_sub(unique)
+            .clamp(min_groups.min(max_groups), max_groups)
+            .max(1);
+        let base = shared / g;
+        let rem = shared % g;
+        for i in 0..g {
+            group_sizes.push(base + usize::from(i < rem));
+        }
+    } else {
+        unique += shared;
+    }
+    group_sizes.extend(std::iter::repeat(1).take(unique));
+
+    // Assign conditions per group; round-robin the type pool so every
+    // type is used (Fig. 6a: many features, few distinct types).
+    let mut specs = Vec::with_capacity(cfg.num_features);
+    let funcs = comp_funcs();
+    let mut fid = 0u32;
+    for (gi, &size) in group_sizes.iter().enumerate() {
+        let primary = pool[gi % pool.len()];
+        let mut types = vec![primary];
+        if rng.bool_p(cfg.multi_type_prob) {
+            let extra = rng.range_u(1, 3);
+            for _ in 0..extra {
+                types.push(pool[rng.range_u(0, pool.len())]);
+            }
+        }
+        types.sort_unstable();
+        types.dedup();
+        let window = cfg.windows[rng.range_u(0, cfg.windows.len())];
+
+        for _ in 0..size {
+            // Attrs must be valid in every member type's schema.
+            let min_attrs = types
+                .iter()
+                .map(|&t| catalog.schema(t).attrs.len())
+                .min()
+                .unwrap_or(1)
+                .max(1);
+            let n_attrs = rng.range_u(1, 3usize.min(min_attrs) + 1);
+            let mut attrs: Vec<AttrId> = (0..min_attrs as AttrId).collect();
+            rng.shuffle(&mut attrs);
+            attrs.truncate(n_attrs);
+            let comp = funcs[rng.range_u(0, funcs.len())];
+            specs.push(
+                FeatureSpec {
+                    id: FeatureId(fid),
+                    name: format!("feat_{fid}"),
+                    event_types: types.clone(),
+                    window,
+                    attrs,
+                    comp,
+                }
+                .normalized(),
+            );
+            fid += 1;
+        }
+    }
+    specs
+}
+
+/// Fig. 21's synthetic sets: `redundancy` ∈ [0, 1] is the proportion of
+/// features whose time ranges overlap with other features on the same
+/// behavior types.
+///
+/// `redundancy = 0` → every feature gets a distinct behavior type (no
+/// shared raw data at all); `redundancy = r` → an `r` fraction of
+/// features share one behavior-type group and one window, the rest are
+/// disjoint.
+pub fn generate_synthetic_redundant(
+    catalog: &Catalog,
+    num_features: usize,
+    redundancy: f64,
+    seed: u64,
+) -> Vec<FeatureSpec> {
+    let mut rng = SimRng::seed_from_u64(seed);
+    let n_overlap = ((num_features as f64) * redundancy).round() as usize;
+    let funcs = comp_funcs();
+    let shared_window = TimeRange::hours(1);
+    let shared_type: EventTypeId = 0;
+
+    (0..num_features)
+        .map(|i| {
+            let (types, window) = if i < n_overlap {
+                // Overlapping cohort: same type, same window.
+                (vec![shared_type], shared_window)
+            } else {
+                // Disjoint cohort: own type (cycled), own window slot.
+                let t = (1 + (i - n_overlap) % (catalog.len() - 1)) as EventTypeId;
+                let w = MEANINGFUL_WINDOWS[i % MEANINGFUL_WINDOWS.len()];
+                (vec![t], w)
+            };
+            let n_schema = catalog.schema(types[0]).attrs.len().max(1);
+            let attr = rng.range_u(0, n_schema) as AttrId;
+            FeatureSpec {
+                id: FeatureId(i as u32),
+                name: format!("syn_{i}"),
+                event_types: types,
+                window,
+                attrs: vec![attr],
+                comp: funcs[rng.range_u(0, funcs.len())],
+            }
+            .normalized()
+        })
+        .collect()
+}
+
+/// Measured identical-condition share of a feature set (the statistic the
+/// paper reports in §4.2: the % of features sharing identical
+/// `<event_names, time_range>` with at least one other feature).
+pub fn identical_condition_share(specs: &[FeatureSpec]) -> f64 {
+    use std::collections::HashMap;
+    let mut groups: HashMap<(Vec<EventTypeId>, i64), usize> = HashMap::new();
+    for s in specs {
+        *groups
+            .entry((s.event_types.clone(), s.window.duration_ms))
+            .or_default() += 1;
+    }
+    let in_shared: usize = groups.values().filter(|&&n| n >= 2).sum();
+    in_shared as f64 / specs.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::schema::CatalogConfig;
+
+    fn catalog() -> Catalog {
+        Catalog::generate(&CatalogConfig::paper(), 42)
+    }
+
+    fn cfg(nf: usize, nt: usize, share: f64) -> FeatureSetConfig {
+        FeatureSetConfig {
+            num_features: nf,
+            num_types: nt,
+            identical_share: share,
+            windows: MEANINGFUL_WINDOWS.to_vec(),
+            multi_type_prob: 0.3,
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn generates_requested_count() {
+        let specs = generate_feature_set(&catalog(), &cfg(86, 27, 0.8));
+        assert_eq!(specs.len(), 86);
+    }
+
+    #[test]
+    fn identical_share_close_to_target() {
+        for (nf, nt, share) in [(86, 27, 0.802), (53, 22, 0.85), (40, 10, 0.59)] {
+            let specs = generate_feature_set(&catalog(), &cfg(nf, nt, share));
+            let got = identical_condition_share(&specs);
+            assert!(
+                (got - share).abs() < 0.15,
+                "target {share} got {got} for nf={nf}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_feature_set(&catalog(), &cfg(40, 10, 0.6));
+        let b = generate_feature_set(&catalog(), &cfg(40, 10, 0.6));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.event_types, y.event_types);
+            assert_eq!(x.window, y.window);
+            assert_eq!(x.attrs, y.attrs);
+        }
+    }
+
+    #[test]
+    fn attrs_valid_in_all_member_schemas() {
+        let cat = catalog();
+        let specs = generate_feature_set(&cat, &cfg(103, 21, 0.8));
+        for s in &specs {
+            for &t in &s.event_types {
+                let n = cat.schema(t).attrs.len() as AttrId;
+                for &a in &s.attrs {
+                    assert!(a < n, "attr {a} invalid for type {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_redundancy_extremes() {
+        let cat = catalog();
+        let zero = generate_synthetic_redundant(&cat, 30, 0.0, 1);
+        let full = generate_synthetic_redundant(&cat, 30, 1.0, 1);
+        assert!(identical_condition_share(&zero) < 0.35);
+        assert!(identical_condition_share(&full) > 0.99);
+    }
+
+    #[test]
+    fn all_pool_types_used() {
+        let specs = generate_feature_set(&catalog(), &cfg(86, 27, 0.8));
+        let mut used: Vec<EventTypeId> =
+            specs.iter().flat_map(|s| s.event_types.clone()).collect();
+        used.sort_unstable();
+        used.dedup();
+        assert!(used.len() >= 27, "only {} types used", used.len());
+    }
+}

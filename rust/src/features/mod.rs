@@ -1,0 +1,19 @@
+//! Feature definitions: the paper's four-condition tuple (§3.2).
+//!
+//! Any user feature is defined by `<event_names, time_range, attr_names,
+//! comp_func>`: which behavior types it needs, over which historical
+//! window, which behavior-specific attributes, and how they are
+//! summarized.
+//!
+//! * [`spec`] — [`spec::FeatureSpec`] condition tuples,
+//! * [`compute`] — the `Compute` operation's functions as streaming
+//!   accumulators (so fused execution never materializes per-feature row
+//!   sets),
+//! * [`value`] — extracted feature values,
+//! * [`catalog`] — feature-set generators: per-service sets matching
+//!   Fig. 12a and synthetic sets with controlled redundancy (Fig. 21).
+
+pub mod catalog;
+pub mod compute;
+pub mod spec;
+pub mod value;

@@ -1,0 +1,166 @@
+//! Feature condition tuples (paper §3.2).
+
+use crate::applog::event::{AttrId, EventTypeId, TimestampMs};
+use crate::applog::query::TimeWindow;
+
+use super::compute::CompFunc;
+
+/// Identifier of a feature within one model's feature set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FeatureId(pub u32);
+
+/// A relative historical time window (`time_range` condition): the
+/// feature considers events in `[now - duration, now)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TimeRange {
+    /// Window length in milliseconds.
+    pub duration_ms: i64,
+}
+
+impl TimeRange {
+    /// Construct from seconds.
+    pub const fn secs(s: i64) -> Self {
+        TimeRange {
+            duration_ms: s * 1000,
+        }
+    }
+
+    /// Construct from minutes.
+    pub const fn mins(m: i64) -> Self {
+        Self::secs(m * 60)
+    }
+
+    /// Construct from hours.
+    pub const fn hours(h: i64) -> Self {
+        Self::mins(h * 60)
+    }
+
+    /// Construct from days.
+    pub const fn days(d: i64) -> Self {
+        Self::hours(d * 24)
+    }
+
+    /// Resolve to an absolute window at extraction time `now`.
+    pub fn window_at(&self, now: TimestampMs) -> TimeWindow {
+        TimeWindow::last(now, self.duration_ms)
+    }
+}
+
+/// One user feature: the paper's `<event_names, time_range, attr_names,
+/// comp_func>` tuple.
+#[derive(Debug, Clone)]
+pub struct FeatureSpec {
+    /// Feature id (dense, 0-based within a model's feature set).
+    pub id: FeatureId,
+    /// Human-readable name.
+    pub name: String,
+    /// `event_names` condition: behavior types, sorted ascending.
+    pub event_types: Vec<EventTypeId>,
+    /// `time_range` condition.
+    pub window: TimeRange,
+    /// `attr_names` condition: needed attributes, sorted ascending.
+    pub attrs: Vec<AttrId>,
+    /// `comp_func` condition.
+    pub comp: CompFunc,
+}
+
+impl FeatureSpec {
+    /// Normalize invariants (sorted + deduped conditions). All
+    /// constructors in this crate call this; external specs should too.
+    pub fn normalized(mut self) -> Self {
+        self.event_types.sort_unstable();
+        self.event_types.dedup();
+        self.attrs.sort_unstable();
+        self.attrs.dedup();
+        self
+    }
+
+    /// Condition-overlap classification against another feature
+    /// (paper §3.2 "Redundancy Identification").
+    pub fn redundancy_with(&self, other: &FeatureSpec) -> RedundancyLevel {
+        let shares_type = self
+            .event_types
+            .iter()
+            .any(|t| other.event_types.binary_search(t).is_ok());
+        if !shares_type {
+            return RedundancyLevel::None;
+        }
+        if self.event_types == other.event_types && self.window == other.window {
+            RedundancyLevel::Full
+        } else {
+            RedundancyLevel::Partial
+        }
+    }
+}
+
+/// Inter-feature redundancy levels (paper §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RedundancyLevel {
+    /// Disjoint `<event_names, time_range>`: no shared raw data.
+    None,
+    /// Intersecting conditions: shared `Retrieve`/`Decode` work.
+    Partial,
+    /// Identical `<event_names, time_range>`: fully duplicated
+    /// `Retrieve`/`Decode` cost.
+    Full,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(id: u32, types: Vec<u16>, mins: i64) -> FeatureSpec {
+        FeatureSpec {
+            id: FeatureId(id),
+            name: format!("f{id}"),
+            event_types: types,
+            window: TimeRange::mins(mins),
+            attrs: vec![0],
+            comp: CompFunc::Count,
+        }
+        .normalized()
+    }
+
+    #[test]
+    fn time_range_constructors() {
+        assert_eq!(TimeRange::secs(60), TimeRange::mins(1));
+        assert_eq!(TimeRange::mins(60), TimeRange::hours(1));
+        assert_eq!(TimeRange::hours(24), TimeRange::days(1));
+    }
+
+    #[test]
+    fn window_at_resolves_relative() {
+        let w = TimeRange::mins(5).window_at(1_000_000);
+        assert_eq!(w.start_ms, 1_000_000 - 300_000);
+        assert_eq!(w.end_ms, 1_000_000);
+    }
+
+    #[test]
+    fn normalized_sorts_and_dedups() {
+        let s = FeatureSpec {
+            id: FeatureId(0),
+            name: "x".into(),
+            event_types: vec![3, 1, 3],
+            window: TimeRange::mins(1),
+            attrs: vec![5, 2, 5],
+            comp: CompFunc::Count,
+        }
+        .normalized();
+        assert_eq!(s.event_types, vec![1, 3]);
+        assert_eq!(s.attrs, vec![2, 5]);
+    }
+
+    #[test]
+    fn redundancy_classification() {
+        let a = spec(0, vec![1, 2], 60);
+        let b = spec(1, vec![1, 2], 60); // identical conditions
+        let c = spec(2, vec![2, 3], 30); // intersecting types
+        let d = spec(3, vec![4], 60); // disjoint
+        assert_eq!(a.redundancy_with(&b), RedundancyLevel::Full);
+        assert_eq!(a.redundancy_with(&c), RedundancyLevel::Partial);
+        assert_eq!(a.redundancy_with(&d), RedundancyLevel::None);
+        // Same types, different window -> partial.
+        let e = spec(4, vec![1, 2], 30);
+        assert_eq!(a.redundancy_with(&e), RedundancyLevel::Partial);
+    }
+}

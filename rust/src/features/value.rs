@@ -1,0 +1,74 @@
+//! Extracted feature values.
+
+/// The value of one extracted feature.
+///
+/// Scalar for summarizing functions (`count`, `average`, ...); vector for
+/// list-producing functions (`concatenation` of the genre list of the
+/// last N watched videos, etc.).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FeatureValue {
+    /// Single summarized value.
+    Scalar(f64),
+    /// Ordered list value (e.g. `Concat` output, newest last).
+    Vector(Vec<f64>),
+}
+
+impl FeatureValue {
+    /// Scalar view; vectors yield their last element (most recent), empty
+    /// vectors yield 0. Used when packing model inputs.
+    pub fn as_scalar(&self) -> f64 {
+        match self {
+            FeatureValue::Scalar(x) => *x,
+            FeatureValue::Vector(v) => v.last().copied().unwrap_or(0.0),
+        }
+    }
+
+    /// Approximate equality for float-tolerant tests: NaNs compare equal
+    /// to NaNs (extraction order can legally differ between engines).
+    pub fn approx_eq(&self, other: &FeatureValue, tol: f64) -> bool {
+        fn eq(a: f64, b: f64, tol: f64) -> bool {
+            (a.is_nan() && b.is_nan()) || (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+        }
+        match (self, other) {
+            (FeatureValue::Scalar(a), FeatureValue::Scalar(b)) => eq(*a, *b, tol),
+            (FeatureValue::Vector(a), FeatureValue::Vector(b)) => {
+                a.len() == b.len() && a.iter().zip(b).all(|(x, y)| eq(*x, *y, tol))
+            }
+            _ => false,
+        }
+    }
+
+    /// Approximate in-memory size (bytes).
+    pub fn approx_size(&self) -> usize {
+        match self {
+            FeatureValue::Scalar(_) => 8,
+            FeatureValue::Vector(v) => 24 + 8 * v.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_view() {
+        assert_eq!(FeatureValue::Scalar(2.5).as_scalar(), 2.5);
+        assert_eq!(FeatureValue::Vector(vec![1.0, 2.0]).as_scalar(), 2.0);
+        assert_eq!(FeatureValue::Vector(vec![]).as_scalar(), 0.0);
+    }
+
+    #[test]
+    fn approx_eq_handles_nan_and_tolerance() {
+        let a = FeatureValue::Scalar(f64::NAN);
+        let b = FeatureValue::Scalar(f64::NAN);
+        assert!(a.approx_eq(&b, 1e-9));
+        assert!(FeatureValue::Scalar(1.0).approx_eq(&FeatureValue::Scalar(1.0 + 1e-12), 1e-9));
+        assert!(!FeatureValue::Scalar(1.0).approx_eq(&FeatureValue::Scalar(1.1), 1e-9));
+    }
+
+    #[test]
+    fn approx_eq_distinguishes_kinds() {
+        assert!(!FeatureValue::Scalar(1.0).approx_eq(&FeatureValue::Vector(vec![1.0]), 1e-9));
+    }
+}

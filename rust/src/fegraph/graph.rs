@@ -1,0 +1,107 @@
+//! FE-graph construction (paper §3.2 "Graph Formulation").
+
+use crate::features::spec::FeatureSpec;
+
+use super::node::OpNode;
+
+/// The operation chain of one feature: source (app log) → `Retrieve` →
+/// `Decode` → `Filter` → `Compute` → target (feature value).
+#[derive(Debug, Clone)]
+pub struct FeatureChain {
+    /// Index of the feature in the owning graph's spec list.
+    pub feature_idx: usize,
+    /// The four atomic operation nodes, in pipeline order.
+    pub nodes: Vec<OpNode>,
+}
+
+/// The FE-graph of one ML model: all features' chains hanging off the
+/// single app-log source node.
+#[derive(Debug, Clone)]
+pub struct FeGraph {
+    /// The model's feature conditions.
+    pub features: Vec<FeatureSpec>,
+    /// One chain per feature.
+    pub chains: Vec<FeatureChain>,
+}
+
+impl FeGraph {
+    /// Build the unoptimized FE-graph: one four-node chain per feature
+    /// (the "graph generator" component, Fig. 7 ①).
+    pub fn from_specs(features: Vec<FeatureSpec>) -> Self {
+        let chains = features
+            .iter()
+            .enumerate()
+            .map(|(i, f)| FeatureChain {
+                feature_idx: i,
+                nodes: vec![
+                    OpNode::Retrieve {
+                        event_types: f.event_types.clone(),
+                        window: f.window,
+                    },
+                    OpNode::Decode,
+                    OpNode::Filter {
+                        attrs: f.attrs.clone(),
+                    },
+                    OpNode::Compute { comp: f.comp },
+                ],
+            })
+            .collect();
+        FeGraph { features, chains }
+    }
+
+    /// Total operation nodes in the graph.
+    pub fn node_count(&self) -> usize {
+        self.chains.iter().map(|c| c.nodes.len()).sum()
+    }
+
+    /// Number of features (target nodes).
+    pub fn feature_count(&self) -> usize {
+        self.features.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::compute::CompFunc;
+    use crate::features::spec::{FeatureId, TimeRange};
+    use crate::fegraph::node::OpKind;
+
+    fn spec(id: u32) -> FeatureSpec {
+        FeatureSpec {
+            id: FeatureId(id),
+            name: format!("f{id}"),
+            event_types: vec![id as u16 % 3],
+            window: TimeRange::mins(5),
+            attrs: vec![0, 1],
+            comp: CompFunc::Mean,
+        }
+        .normalized()
+    }
+
+    #[test]
+    fn builds_four_node_chains() {
+        let g = FeGraph::from_specs((0..4).map(spec).collect());
+        assert_eq!(g.feature_count(), 4);
+        assert_eq!(g.node_count(), 16);
+        for chain in &g.chains {
+            let kinds: Vec<_> = chain.nodes.iter().map(|n| n.kind()).collect();
+            assert_eq!(
+                kinds,
+                vec![OpKind::Retrieve, OpKind::Decode, OpKind::Filter, OpKind::Compute]
+            );
+        }
+    }
+
+    #[test]
+    fn chain_conditions_mirror_spec() {
+        let g = FeGraph::from_specs(vec![spec(7)]);
+        match &g.chains[0].nodes[0] {
+            OpNode::Retrieve { event_types, window } => {
+                assert_eq!(event_types, &g.features[0].event_types);
+                assert_eq!(*window, g.features[0].window);
+            }
+            n => panic!("expected retrieve, got {n:?}"),
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! The FE-graph abstraction (paper §3.2).
+//!
+//! Feature extraction is characterized as *information filtering*: each
+//! feature's workflow is a chain of four atomic operation nodes —
+//! `Retrieve(event_names, time_range)` → `Decode()` →
+//! `Filter(attr_names)` → `Compute(comp_func)` — and the workflows of all
+//! of a model's features form one directed acyclic graph whose source is
+//! the raw app log and whose sinks are the feature values.
+//!
+//! * [`node`] — operation node types,
+//! * [`graph`] — FE-graph construction from feature specs,
+//! * [`exec`] — direct (unoptimized) graph execution with per-operation
+//!   timing; this is also the *w/o AutoFeature* industry baseline,
+//! * [`stats`] — redundancy identification via condition intersections.
+
+pub mod exec;
+pub mod graph;
+pub mod node;
+pub mod stats;

@@ -1,0 +1,181 @@
+//! FE-graph operation nodes (paper §3.2, Fig. 8).
+
+use crate::applog::event::{AttrId, EventTypeId};
+use crate::features::compute::CompFunc;
+use crate::features::spec::{FeatureId, TimeRange};
+
+/// One operation node in the FE-graph.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpNode {
+    /// Query relevant event rows from the app log into memory
+    /// (`SELECT * WHERE event_name IN .. AND timestamp > ..`).
+    Retrieve {
+        /// `event_names` condition (sorted).
+        event_types: Vec<EventTypeId>,
+        /// `time_range` condition.
+        window: TimeRange,
+    },
+    /// Decompress the behavior-specific attribute column of each
+    /// retrieved row.
+    Decode,
+    /// Project the decoded attributes onto the needed `attr_names` and
+    /// convert to a computable format.
+    Filter {
+        /// `attr_names` condition (sorted).
+        attrs: Vec<AttrId>,
+    },
+    /// Summarize filtered values into the final feature value.
+    Compute {
+        /// `comp_func` condition.
+        comp: CompFunc,
+    },
+    /// Separate a fused node's outputs per feature (inserted by the
+    /// optimizer; the hierarchical filter integrates it into `Filter`).
+    Branch {
+        /// Features whose outputs this branch separates.
+        features: Vec<FeatureId>,
+    },
+}
+
+impl OpNode {
+    /// Operation kind label (reports and breakdowns).
+    pub fn kind(&self) -> OpKind {
+        match self {
+            OpNode::Retrieve { .. } => OpKind::Retrieve,
+            OpNode::Decode => OpKind::Decode,
+            OpNode::Filter { .. } => OpKind::Filter,
+            OpNode::Compute { .. } => OpKind::Compute,
+            OpNode::Branch { .. } => OpKind::Branch,
+        }
+    }
+}
+
+/// Operation kinds, used for latency breakdowns (Fig. 10 / Fig. 19a).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// See [`OpNode::Retrieve`].
+    Retrieve,
+    /// See [`OpNode::Decode`].
+    Decode,
+    /// See [`OpNode::Filter`].
+    Filter,
+    /// See [`OpNode::Compute`].
+    Compute,
+    /// See [`OpNode::Branch`].
+    Branch,
+}
+
+impl OpKind {
+    /// All kinds in pipeline order.
+    pub const ALL: [OpKind; 5] = [
+        OpKind::Retrieve,
+        OpKind::Decode,
+        OpKind::Filter,
+        OpKind::Compute,
+        OpKind::Branch,
+    ];
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpKind::Retrieve => "retrieve",
+            OpKind::Decode => "decode",
+            OpKind::Filter => "filter",
+            OpKind::Compute => "compute",
+            OpKind::Branch => "branch",
+        }
+    }
+}
+
+/// Per-operation wall-clock breakdown of one extraction, in nanoseconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpBreakdown {
+    /// Time in `Retrieve` nodes.
+    pub retrieve_ns: u64,
+    /// Time in `Decode` nodes.
+    pub decode_ns: u64,
+    /// Time in `Filter` nodes (incl. integrated branching).
+    pub filter_ns: u64,
+    /// Time in `Compute` nodes.
+    pub compute_ns: u64,
+    /// Time assembling outputs / explicit `Branch` nodes.
+    pub branch_ns: u64,
+    /// Time spent in cache lookup/update (AutoFeature online phase).
+    pub cache_ns: u64,
+    /// Rows returned by `Retrieve` nodes (after dedup across fusion).
+    pub rows_retrieved: u64,
+    /// Rows decoded (cache hits skip decoding).
+    pub rows_decoded: u64,
+    /// Rows served from the cross-execution cache.
+    pub rows_from_cache: u64,
+}
+
+impl OpBreakdown {
+    /// Total extraction time (ns).
+    pub fn total_ns(&self) -> u64 {
+        self.retrieve_ns
+            + self.decode_ns
+            + self.filter_ns
+            + self.compute_ns
+            + self.branch_ns
+            + self.cache_ns
+    }
+
+    /// Accumulate another breakdown into this one.
+    pub fn merge(&mut self, o: &OpBreakdown) {
+        self.retrieve_ns += o.retrieve_ns;
+        self.decode_ns += o.decode_ns;
+        self.filter_ns += o.filter_ns;
+        self.compute_ns += o.compute_ns;
+        self.branch_ns += o.branch_ns;
+        self.cache_ns += o.cache_ns;
+        self.rows_retrieved += o.rows_retrieved;
+        self.rows_decoded += o.rows_decoded;
+        self.rows_from_cache += o.rows_from_cache;
+    }
+
+    /// Time attributed to one op kind.
+    pub fn by_kind(&self, kind: OpKind) -> u64 {
+        match kind {
+            OpKind::Retrieve => self.retrieve_ns,
+            OpKind::Decode => self.decode_ns,
+            OpKind::Filter => self.filter_ns,
+            OpKind::Compute => self.compute_ns,
+            OpKind::Branch => self.branch_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_totals_and_merge() {
+        let mut a = OpBreakdown {
+            retrieve_ns: 10,
+            decode_ns: 20,
+            filter_ns: 3,
+            compute_ns: 1,
+            branch_ns: 2,
+            cache_ns: 4,
+            rows_retrieved: 5,
+            rows_decoded: 5,
+            rows_from_cache: 0,
+        };
+        assert_eq!(a.total_ns(), 40);
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.total_ns(), 80);
+        assert_eq!(a.rows_retrieved, 10);
+    }
+
+    #[test]
+    fn node_kinds() {
+        assert_eq!(OpNode::Decode.kind(), OpKind::Decode);
+        assert_eq!(
+            OpNode::Filter { attrs: vec![] }.kind().label(),
+            "filter"
+        );
+    }
+}

@@ -1,0 +1,892 @@
+//! Per-figure experiment drivers (DESIGN.md §3 experiment index).
+//!
+//! Every public function regenerates one table/figure of the paper's
+//! evaluation and returns machine-readable rows (also pretty-printed),
+//! so `cargo bench` output can be compared side-by-side with the paper.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::applog::codec::{CodecKind, JsonishCodec};
+use crate::applog::codec::AttrCodec;
+use crate::applog::schema::{AttrKind, AttrSchema, BehaviorSchema};
+use crate::applog::store::{AppLogStore, StoreConfig};
+use crate::engine::config::EngineConfig;
+use crate::engine::offline::compile;
+use crate::engine::online::Engine;
+use crate::engine::Extractor;
+use crate::features::catalog::generate_synthetic_redundant;
+use crate::features::compute::CompFunc;
+use crate::features::spec::{FeatureId, FeatureSpec, TimeRange};
+use crate::fegraph::exec::extract_feature;
+use crate::runtime::ModelRuntime;
+use crate::workload::behavior::{ActivityLevel, Period};
+use crate::workload::driver::SimConfig;
+use crate::workload::services::{ServiceKind, ServiceSpec};
+
+use super::{eval_catalog, make_extractor, print_table, run_cell, Method};
+
+/// Experiment scale: `Quick` for tests/smoke, `Full` for benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Short traces, fewer users — seconds per experiment.
+    Quick,
+    /// Paper-shaped traces — minutes per experiment.
+    Full,
+}
+
+impl Scale {
+    fn sim(&self, period: Period, interval_ms: i64, seed: u64) -> SimConfig {
+        let (warmup, duration) = match self {
+            Scale::Quick => (20 * 60_000, 4 * 60_000),
+            Scale::Full => (2 * 60 * 60_000, 15 * 60_000),
+        };
+        SimConfig {
+            period,
+            activity: ActivityLevel::P70,
+            warmup_ms: warmup,
+            duration_ms: duration.max(2 * interval_ms),
+            inference_interval_ms: interval_ms,
+            seed,
+            codec: CodecKind::Jsonish,
+        }
+    }
+
+    fn users(&self) -> u64 {
+        match self {
+            Scale::Quick => 1,
+            Scale::Full => 3,
+        }
+    }
+}
+
+/// One output row: label + named numeric columns.
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// Row label (service, method, parameter value, ...).
+    pub label: String,
+    /// `(column name, value)` pairs.
+    pub cols: Vec<(String, f64)>,
+}
+
+impl Row {
+    fn new(label: impl Into<String>) -> Self {
+        Row {
+            label: label.into(),
+            cols: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, name: &str, v: f64) {
+        self.cols.push((name.to_string(), v));
+    }
+
+    /// Column value by name.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.cols.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
+fn print_rows(title: &str, rows: &[Row]) {
+    if rows.is_empty() {
+        return;
+    }
+    let mut headers: Vec<&str> = vec!["case"];
+    headers.extend(rows[0].cols.iter().map(|(n, _)| n.as_str()));
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut cells = vec![r.label.clone()];
+            cells.extend(r.cols.iter().map(|(_, v)| format!("{v:.3}")));
+            cells
+        })
+        .collect();
+    print_table(title, &headers, &table);
+}
+
+// ---------------------------------------------------------------------
+// Fig. 4 — time breakdown of on-device model execution (the bottleneck).
+// ---------------------------------------------------------------------
+
+/// Per service: naive feature-extraction latency vs model-inference
+/// latency, and the extraction share (paper: 61–86%).
+pub fn fig04_breakdown(
+    scale: Scale,
+    models: &dyn Fn(ServiceKind) -> Option<ModelRuntime>,
+) -> Result<Vec<Row>> {
+    let catalog = eval_catalog();
+    let mut rows = Vec::new();
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        let model = models(kind);
+        let sim = scale.sim(Period::Evening, kind.inference_interval_ms(), 7);
+        let out = run_cell(&catalog, &svc, Method::Naive, model.as_ref(), &sim)?;
+        let ext = out.mean_extraction_ms();
+        let inf = out.mean_inference_ms();
+        let mut row = Row::new(kind.id().to_uppercase());
+        row.push("extract_ms", ext);
+        row.push("infer_ms", inf);
+        row.push("extract_share", if ext + inf > 0.0 { ext / (ext + inf) } else { 0.0 });
+        rows.push(row);
+    }
+    print_rows("Fig. 4 — execution time breakdown (naive pipeline)", &rows);
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 10 — per-operation latency vs attribute count.
+// ---------------------------------------------------------------------
+
+/// Retrieve/Decode/Filter/Compute cost when extracting one feature from
+/// behavior events with 25 / 55 / 85 / 115 attributes.
+pub fn fig10_op_latency(scale: Scale) -> Result<Vec<Row>> {
+    let n_events = match scale {
+        Scale::Quick => 500usize,
+        Scale::Full => 5_000,
+    };
+    let codec = JsonishCodec;
+    let mut rows = Vec::new();
+    for n_attrs in [25usize, 55, 85, 115] {
+        // One synthetic behavior type with exactly n_attrs attributes.
+        let schema = BehaviorSchema {
+            event_type: 0,
+            name: format!("synthetic_{n_attrs}"),
+            attrs: (0..n_attrs)
+                .map(|i| AttrSchema {
+                    id: i as u16,
+                    name: format!("attr_{i}"),
+                    kind: match i % 3 {
+                        0 => AttrKind::Int,
+                        1 => AttrKind::Float,
+                        _ => AttrKind::Str,
+                    },
+                })
+                .collect(),
+        };
+        let mut rng = crate::util::rng::SimRng::seed_from_u64(5);
+        let mut store = AppLogStore::new(StoreConfig::default());
+        for i in 0..n_events {
+            let attrs = schema.sample_attrs(&mut rng);
+            store
+                .append(0, i as i64 * 100, codec.encode(&attrs))
+                .unwrap();
+        }
+        let spec = FeatureSpec {
+            id: FeatureId(0),
+            name: "probe".into(),
+            event_types: vec![0],
+            window: TimeRange::hours(24),
+            attrs: vec![0, 1],
+            comp: CompFunc::Mean,
+        }
+        .normalized();
+        let now = n_events as i64 * 100 + 1;
+        // Repeat to stabilize timings.
+        let reps = 5;
+        let mut bd = crate::fegraph::node::OpBreakdown::default();
+        for _ in 0..reps {
+            let (_, b) = extract_feature(&store, &codec, &spec, now)?;
+            bd.merge(&b);
+        }
+        let per = |ns: u64| ns as f64 / reps as f64 / 1e6;
+        let mut row = Row::new(format!("{n_attrs} attrs"));
+        row.push("retrieve_ms", per(bd.retrieve_ns));
+        row.push("decode_ms", per(bd.decode_ns));
+        row.push("filter_ms", per(bd.filter_ns));
+        row.push("compute_ms", per(bd.compute_ns));
+        row.push(
+            "rd_over_filter",
+            (bd.retrieve_ns + bd.decode_ns) as f64 / bd.filter_ns.max(1) as f64,
+        );
+        row.push(
+            "rd_over_compute",
+            (bd.retrieve_ns + bd.decode_ns) as f64 / bd.compute_ns.max(1) as f64,
+        );
+        rows.push(row);
+    }
+    print_rows("Fig. 10 — per-op latency vs attribute count", &rows);
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 11 — hierarchical filtering vs direct fused filter.
+// ---------------------------------------------------------------------
+
+/// Filter-stage wall time and boundary comparisons, direct vs
+/// hierarchical, sweeping the number of fused features.
+pub fn fig11_hier_filter(scale: Scale) -> Result<Vec<Row>> {
+    let catalog = eval_catalog();
+    let n_rows_target = match scale {
+        Scale::Quick => 2_000usize,
+        Scale::Full => 20_000,
+    };
+    let mut rows = Vec::new();
+    for n_features in [8usize, 32, 64, 128] {
+        // All features on one behavior type, mixed meaningful windows.
+        let specs: Vec<FeatureSpec> = (0..n_features)
+            .map(|i| {
+                FeatureSpec {
+                    id: FeatureId(i as u32),
+                    name: format!("f{i}"),
+                    event_types: vec![0],
+                    window: [
+                        TimeRange::mins(5),
+                        TimeRange::mins(30),
+                        TimeRange::hours(1),
+                        TimeRange::hours(6),
+                        TimeRange::days(1),
+                    ][i % 5],
+                    attrs: vec![(i % 4) as u16],
+                    comp: CompFunc::Sum,
+                }
+                .normalized()
+            })
+            .collect();
+        let codec = JsonishCodec;
+        let schema = catalog.schema(0);
+        let mut rng = crate::util::rng::SimRng::seed_from_u64(9);
+        let mut store = AppLogStore::new(StoreConfig::default());
+        let day = 24 * 3600 * 1000i64;
+        for i in 0..n_rows_target {
+            let ts = i as i64 * day / n_rows_target as i64;
+            store
+                .append(0, ts, codec.encode(&schema.sample_attrs(&mut rng)))
+                .unwrap();
+        }
+        let now = day + 1;
+
+        let run = |hier: bool| -> Result<(f64, u64)> {
+            let mut eng = Engine::new(
+                specs.clone(),
+                &catalog,
+                EngineConfig {
+                    hierarchical_filter: hier,
+                    enable_cache: false,
+                    ..EngineConfig::autofeature()
+                },
+            )?;
+            let r = eng.extract(&store, now)?;
+            Ok((r.breakdown.filter_ns as f64 / 1e6, r.boundary_cmps))
+        };
+        let (direct_ms, direct_cmps) = run(false)?;
+        let (hier_ms, hier_cmps) = run(true)?;
+        let mut row = Row::new(format!("{n_features} features"));
+        row.push("direct_filter_ms", direct_ms);
+        row.push("hier_filter_ms", hier_ms);
+        row.push("direct_cmps", direct_cmps as f64);
+        row.push("hier_cmps", hier_cmps as f64);
+        row.push("cmp_reduction", direct_cmps as f64 / hier_cmps.max(1) as f64);
+        rows.push(row);
+    }
+    print_rows("Fig. 11 — hierarchical vs direct fused filter", &rows);
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 16 — overall performance across services, methods, periods.
+// ---------------------------------------------------------------------
+
+/// End-to-end latency per (service × method × period) and AutoFeature's
+/// speedup over the naive baseline.
+pub fn fig16_overall(
+    scale: Scale,
+    models: &dyn Fn(ServiceKind) -> Option<ModelRuntime>,
+) -> Result<Vec<Row>> {
+    let catalog = eval_catalog();
+    let mut rows = Vec::new();
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        let model = models(kind);
+        for period in Period::ALL {
+            let mut lat = Vec::new();
+            for method in Method::FIG16 {
+                let mut total = 0.0;
+                for user in 0..scale.users() {
+                    let sim = scale.sim(period, kind.inference_interval_ms(), 100 + user);
+                    let out = run_cell(&catalog, &svc, method, model.as_ref(), &sim)?;
+                    total += out.mean_ms();
+                }
+                lat.push(total / scale.users() as f64);
+            }
+            let mut row = Row::new(format!("{}/{}", kind.id().to_uppercase(), period.label()));
+            row.push("naive_ms", lat[0]);
+            row.push("fusion_ms", lat[1]);
+            row.push("cache_ms", lat[2]);
+            row.push("autofeature_ms", lat[3]);
+            row.push("speedup", lat[0] / lat[3].max(1e-9));
+            rows.push(row);
+        }
+    }
+    print_rows(
+        "Fig. 16 — end-to-end model execution latency and speedups",
+        &rows,
+    );
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 17 — system overheads.
+// ---------------------------------------------------------------------
+
+/// (a) offline optimization cost per service, (b) online cache memory.
+pub fn fig17_overheads(scale: Scale) -> Result<Vec<Row>> {
+    let catalog = eval_catalog();
+    let mut rows = Vec::new();
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        // Offline phase (Fig. 17a).
+        let t0 = Instant::now();
+        let compiled = compile(svc.features.clone(), &catalog, &EngineConfig::autofeature())?;
+        let offline_wall_ms = t0.elapsed().as_nanos() as f64 / 1e6;
+
+        // Online phase cache footprint (Fig. 17b): run AutoFeature over a
+        // night trace and take the peak cache bytes.
+        let sim = scale.sim(Period::Night, kind.inference_interval_ms(), 11);
+        let mut eng = Engine::new(svc.features.clone(), &catalog, EngineConfig::autofeature())?;
+        let out = crate::workload::driver::run_simulation(&catalog, &mut eng, None, &sim)?;
+        let peak_kb = out
+            .records
+            .iter()
+            .map(|r| r.extraction.cache_bytes)
+            .max()
+            .unwrap_or(0) as f64
+            / 1024.0;
+
+        let mut row = Row::new(kind.id().to_uppercase());
+        row.push("graph_ms", compiled.stats.graph_build_ns as f64 / 1e6);
+        row.push("optimize_ms", compiled.stats.optimize_ns as f64 / 1e6);
+        row.push("profile_ms", compiled.stats.profile_ns as f64 / 1e6);
+        row.push("offline_total_ms", offline_wall_ms);
+        row.push("peak_cache_kb", peak_kb);
+        rows.push(row);
+    }
+    print_rows("Fig. 17 — offline cost and online cache footprint", &rows);
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 18 / Table 1 — cloud-side baselines.
+// ---------------------------------------------------------------------
+
+/// Latency vs the cloud baselines and the storage inflation they
+/// introduce (Decoded Log ~2.6×, Feature Store ~2.8× in the paper).
+pub fn fig18_cloud(
+    scale: Scale,
+    models: &dyn Fn(ServiceKind) -> Option<ModelRuntime>,
+) -> Result<Vec<Row>> {
+    let catalog = eval_catalog();
+    let mut rows = Vec::new();
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        let model = models(kind);
+        let sim = scale.sim(Period::Evening, kind.inference_interval_ms(), 21);
+        let mut row = Row::new(kind.id().to_uppercase());
+        let mut raw_bytes = 0usize;
+        for method in [
+            Method::Naive,
+            Method::AutoFeature,
+            Method::DecodedLog,
+            Method::FeatureStore,
+        ] {
+            let out = run_cell(&catalog, &svc, method, model.as_ref(), &sim)?;
+            raw_bytes = out.raw_storage_bytes;
+            let key = match method {
+                Method::Naive => "naive_ms",
+                Method::AutoFeature => "autofeature_ms",
+                Method::DecodedLog => "decodedlog_ms",
+                _ => "featurestore_ms",
+            };
+            row.push(key, out.mean_ms());
+            match method {
+                Method::DecodedLog => row.push(
+                    "decodedlog_storage_x",
+                    (raw_bytes + out.extra_storage_bytes) as f64 / raw_bytes.max(1) as f64,
+                ),
+                Method::FeatureStore => row.push(
+                    "featurestore_storage_x",
+                    (raw_bytes + out.extra_storage_bytes) as f64 / raw_bytes.max(1) as f64,
+                ),
+                _ => {}
+            }
+        }
+        row.push("raw_log_kb", raw_bytes as f64 / 1024.0);
+        rows.push(row);
+    }
+    print_rows("Fig. 18 — cloud-side baselines: latency and storage", &rows);
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 19(a) — op latency before/after fusion (VR service).
+// ---------------------------------------------------------------------
+
+/// Per-op mean latency of the VR service's extraction, naive vs fused.
+pub fn fig19a_component(scale: Scale) -> Result<Vec<Row>> {
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let sim = scale.sim(Period::Night, svc.inference_interval_ms, 31);
+    let mut rows = Vec::new();
+    for method in [Method::Naive, Method::FusionOnly] {
+        let out = run_cell(&catalog, &svc, method, None, &sim)?;
+        let n = out.records.len().max(1) as f64;
+        let sum = |f: &dyn Fn(&crate::fegraph::node::OpBreakdown) -> u64| {
+            out.records
+                .iter()
+                .map(|r| f(&r.extraction.breakdown) as f64)
+                .sum::<f64>()
+                / n
+                / 1e6
+        };
+        let mut row = Row::new(method.label());
+        row.push("retrieve_ms", sum(&|b| b.retrieve_ns));
+        row.push("decode_ms", sum(&|b| b.decode_ns));
+        row.push("filter_ms", sum(&|b| b.filter_ns));
+        row.push("compute_ms", sum(&|b| b.compute_ns));
+        rows.push(row);
+    }
+    print_rows("Fig. 19a — op latency before/after fusion (VR)", &rows);
+    Ok(rows)
+}
+
+/// Fig. 19(b): share of redundant Retrieve/Decode work eliminated vs
+/// fraction of intermediate results cached, greedy vs random, via a
+/// cache-budget sweep on VR. ("Work" is retrieve+decode time — the
+/// quantity the greedy valuation actually optimizes, matching the
+/// paper's "redundant feature extraction operations".)
+pub fn fig19b_cache_policy(scale: Scale) -> Result<Vec<Row>> {
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let sim = scale.sim(Period::Night, svc.inference_interval_ms, 41);
+
+    let rd_work = |out: &crate::workload::driver::SimOutcome| -> f64 {
+        out.records
+            .iter()
+            .skip(1)
+            .map(|r| (r.extraction.breakdown.retrieve_ns + r.extraction.breakdown.decode_ns) as f64)
+            .sum()
+    };
+
+    // Cache-less reference: the full redundant work per request.
+    let base = run_cell(&catalog, &svc, Method::FusionOnly, None, &sim)?;
+    let base_work = rd_work(&base).max(1.0);
+    // Full-cache reference for the budget axis.
+    let full = run_cell(&catalog, &svc, Method::AutoFeature, None, &sim)?;
+    let full_bytes = full
+        .records
+        .iter()
+        .map(|r| r.extraction.cache_bytes)
+        .max()
+        .unwrap_or(1)
+        .max(1);
+
+    let mut rows = Vec::new();
+    for frac in [0.1, 0.23, 0.4, 0.6, 0.8, 1.0] {
+        let budget = (full_bytes as f64 * frac) as usize;
+        let mut row = Row::new(format!("{:.0}% budget", frac * 100.0));
+        for (name, method) in [("greedy", Method::AutoFeature), ("random", Method::RandomCache)] {
+            let mut extractor =
+                make_extractor(method, svc.features.clone(), &catalog, budget)?;
+            let out = crate::workload::driver::run_simulation(
+                &catalog,
+                extractor.as_mut(),
+                None,
+                &sim,
+            )?;
+            row.push(
+                &format!("{name}_redundancy_eliminated"),
+                (1.0 - rd_work(&out) / base_work).max(0.0),
+            );
+            let cached_frac = out
+                .records
+                .iter()
+                .map(|r| r.extraction.cache_bytes)
+                .max()
+                .unwrap_or(0) as f64
+                / full_bytes as f64;
+            row.push(&format!("{name}_cached_frac"), cached_frac);
+        }
+        rows.push(row);
+    }
+    print_rows("Fig. 19b — greedy vs random cache policy (VR)", &rows);
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 20 — impact of inference interval.
+// ---------------------------------------------------------------------
+
+/// AutoFeature speedup over naive as the inference interval grows
+/// (10 s … 30 min), night traces.
+pub fn fig20_interval(scale: Scale) -> Result<Vec<Row>> {
+    let catalog = eval_catalog();
+    let intervals: &[(i64, &str)] = match scale {
+        Scale::Quick => &[(10_000, "10s"), (60_000, "1m"), (10 * 60_000, "10m")],
+        Scale::Full => &[
+            (10_000, "10s"),
+            (30_000, "30s"),
+            (60_000, "1m"),
+            (5 * 60_000, "5m"),
+            (10 * 60_000, "10m"),
+            (30 * 60_000, "30m"),
+        ],
+    };
+    let mut rows = Vec::new();
+    for &(interval, label) in intervals {
+        let mut row = Row::new(label);
+        for kind in ServiceKind::ALL {
+            let svc = ServiceSpec::build(kind, &catalog);
+            let mut sim = scale.sim(Period::Night, interval, 51);
+            // Long intervals need a longer horizon to get >= 3 requests.
+            sim.duration_ms = sim.duration_ms.max(4 * interval);
+            let naive = run_cell(&catalog, &svc, Method::Naive, None, &sim)?;
+            let auto = run_cell(&catalog, &svc, Method::AutoFeature, None, &sim)?;
+            row.push(
+                &format!("{}_speedup", kind.id()),
+                naive.mean_ms() / auto.mean_ms().max(1e-9),
+            );
+        }
+        rows.push(row);
+    }
+    print_rows("Fig. 20 — speedup vs inference interval (night)", &rows);
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 21 — impact of inter-feature redundancy (synthetic sets).
+// ---------------------------------------------------------------------
+
+/// Feature-extraction speedup vs controlled redundancy level, at
+/// high-frequency and low-frequency inference intervals.
+pub fn fig21_redundancy(scale: Scale) -> Result<Vec<Row>> {
+    let catalog = eval_catalog();
+    let num_features = 60;
+    let redundancies: &[f64] = match scale {
+        Scale::Quick => &[0.0, 0.5, 0.9],
+        Scale::Full => &[0.0, 0.2, 0.5, 0.8, 0.9],
+    };
+    let intervals: &[(i64, &str)] = match scale {
+        Scale::Quick => &[(10_000, "10s"), (60 * 60_000, "1h")],
+        Scale::Full => &[(10_000, "10s"), (5 * 60_000, "5m"), (60 * 60_000, "1h")],
+    };
+    let mut rows = Vec::new();
+    for &r in redundancies {
+        let specs = generate_synthetic_redundant(&catalog, num_features, r, 61);
+        let mut row = Row::new(format!("{:.0}% redundancy", r * 100.0));
+        for &(interval, label) in intervals {
+            let mut sim = scale.sim(Period::Night, interval, 71);
+            sim.duration_ms = sim.duration_ms.max(4 * interval);
+            if interval >= 60 * 60_000 {
+                sim.warmup_ms = sim.warmup_ms.max(90 * 60_000);
+            }
+            let mut naive = make_extractor(Method::Naive, specs.clone(), &catalog, 1 << 20)?;
+            let mut auto = make_extractor(Method::AutoFeature, specs.clone(), &catalog, 1 << 20)?;
+            let n = crate::workload::driver::run_simulation(&catalog, naive.as_mut(), None, &sim)?;
+            let a = crate::workload::driver::run_simulation(&catalog, auto.as_mut(), None, &sim)?;
+            // Extraction-only speedup (the paper isolates extraction in
+            // this synthetic study).
+            row.push(
+                &format!("speedup_{label}"),
+                n.mean_extraction_ms() / a.mean_extraction_ms().max(1e-9),
+            );
+        }
+        rows.push(row);
+    }
+    print_rows("Fig. 21 — speedup vs inter-feature redundancy", &rows);
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// Extension (paper §5): staleness-tolerant model-engine co-design.
+// ---------------------------------------------------------------------
+
+/// §5 sketches a co-design the production split forbids: "reusing stale
+/// feature values rather than recomputing the fresh ones". This
+/// extension study measures that trade on the VR service: latency win
+/// vs. feature drift (mean relative error of served vs. fresh values)
+/// as the staleness TTL grows.
+pub fn ext_staleness(scale: Scale) -> Result<Vec<Row>> {
+    use crate::workload::driver::run_simulation;
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let sim = scale.sim(Period::Night, svc.inference_interval_ms, 81);
+
+    // Fresh reference values per request.
+    let mut fresh = make_extractor(Method::AutoFeature, svc.features.clone(), &catalog, 256 * 1024)?;
+    let reference = run_simulation(&catalog, fresh.as_mut(), None, &sim)?;
+
+    let mut rows = Vec::new();
+    for ttl_s in [0i64, 5, 15, 60, 300] {
+        let mut eng = Engine::new(
+            svc.features.clone(),
+            &catalog,
+            EngineConfig::stale_tolerant(ttl_s * 1000),
+        )?;
+        let out = run_simulation(&catalog, &mut eng, None, &sim)?;
+        let stale_share = out
+            .records
+            .iter()
+            .filter(|r| r.extraction.served_stale)
+            .count() as f64
+            / out.records.len().max(1) as f64;
+        // Mean relative error of served values vs fresh reference.
+        let (mut err, mut n) = (0.0f64, 0u64);
+        for (a, b) in out.records.iter().zip(&reference.records) {
+            for (x, y) in a.extraction.values.iter().zip(&b.extraction.values) {
+                let (x, y) = (x.as_scalar(), y.as_scalar());
+                if y.abs() > 1e-12 {
+                    err += ((x - y) / y).abs().min(1.0);
+                    n += 1;
+                }
+            }
+        }
+        let mut row = Row::new(format!("ttl {ttl_s}s"));
+        row.push("mean_extraction_ms", out.mean_extraction_ms());
+        row.push("stale_share", stale_share);
+        row.push("mean_rel_err", if n == 0 { 0.0 } else { err / n as f64 });
+        rows.push(row);
+    }
+    print_rows(
+        "Extension — staleness-tolerant co-design (§5): latency vs drift",
+        &rows,
+    );
+    Ok(rows)
+}
+
+/// Ablation: how much of the extraction bottleneck is the app log's
+/// text codec itself? Re-runs the VR headline cell with the compact
+/// binary codec in place of the paper's JSON-style column.
+pub fn ext_codec_ablation(scale: Scale) -> Result<Vec<Row>> {
+    use crate::workload::driver::run_simulation;
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let mut rows = Vec::new();
+    for (name, codec) in [("jsonish", CodecKind::Jsonish), ("binary", CodecKind::Binary)] {
+        let mut sim = scale.sim(Period::Night, svc.inference_interval_ms, 91);
+        sim.codec = codec;
+        let mut row = Row::new(name);
+        for (label, method) in [("naive_ms", Method::Naive), ("autofeature_ms", Method::AutoFeature)]
+        {
+            // The extractor must decode the same codec the log was
+            // written with, so build it directly instead of via the
+            // default-codec factory.
+            let mut extractor: Box<dyn crate::engine::Extractor> = match method {
+                Method::Naive => Box::new(crate::baseline::naive::NaiveExtractor::new(
+                    svc.features.clone(),
+                    codec,
+                )),
+                _ => Box::new(Engine::new(
+                    svc.features.clone(),
+                    &catalog,
+                    EngineConfig {
+                        codec,
+                        ..EngineConfig::autofeature()
+                    },
+                )?),
+            };
+            let out = run_simulation(&catalog, extractor.as_mut(), None, &sim)?;
+            row.push(label, out.mean_extraction_ms());
+        }
+        rows.push(row);
+    }
+    print_rows(
+        "Ablation — app-log codec (jsonish vs binary), VR extraction",
+        &rows,
+    );
+    Ok(rows)
+}
+
+/// Deployment study: all five services running against ONE shared
+/// device log (the real multi-team phone), each with its own engine.
+/// Reports per-service latency and the aggregate device-wide cache
+/// footprint.
+pub fn ext_multimodel(scale: Scale) -> Result<Vec<Row>> {
+    use crate::applog::store::{AppLogStore, StoreConfig};
+    use crate::workload::traces::{log_events, TraceConfig, TraceGenerator};
+    let catalog = eval_catalog();
+    let sim = scale.sim(Period::Night, 5_000, 77);
+
+    // One shared trace/log for the whole device.
+    let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+        period: sim.period,
+        activity: sim.activity,
+        start_ms: 0,
+        duration_ms: sim.warmup_ms + sim.duration_ms,
+        seed: sim.seed,
+    });
+    let codec = sim.codec.build();
+    let mut store = AppLogStore::new(StoreConfig::default());
+    let warm = trace.partition_point(|e| e.timestamp_ms < sim.warmup_ms);
+    log_events(&mut store, codec.as_ref(), &trace[..warm])?;
+
+    // One engine per service, each with its own (paper-style) budget.
+    let mut engines: Vec<(ServiceKind, Engine, i64)> = ServiceKind::ALL
+        .iter()
+        .map(|&k| {
+            let svc = ServiceSpec::build(k, &catalog);
+            Ok((
+                k,
+                Engine::new(svc.features, &catalog, EngineConfig::autofeature())?,
+                svc.inference_interval_ms,
+            ))
+        })
+        .collect::<Result<_>>()?;
+
+    let mut next_event = warm;
+    let mut lat: std::collections::HashMap<ServiceKind, Vec<u64>> = Default::default();
+    let mut peak_cache = 0usize;
+    let horizon = sim.warmup_ms + sim.duration_ms;
+    let mut t = sim.warmup_ms;
+    while t <= horizon {
+        t += 1_000; // 1 s device tick
+        let upto = trace.partition_point(|e| e.timestamp_ms < t);
+        if upto > next_event {
+            log_events(&mut store, codec.as_ref(), &trace[next_event..upto])?;
+            next_event = upto;
+        }
+        let mut total_cache = 0usize;
+        for (k, eng, interval) in engines.iter_mut() {
+            if (t - sim.warmup_ms) % *interval == 0 {
+                let r = eng.extract(&store, t)?;
+                lat.entry(*k).or_default().push(r.wall_ns);
+                total_cache += r.cache_bytes;
+            } else {
+                total_cache += eng.cache_bytes();
+            }
+        }
+        peak_cache = peak_cache.max(total_cache);
+    }
+
+    let mut rows = Vec::new();
+    for kind in ServiceKind::ALL {
+        let v = &lat[&kind];
+        let mean = v.iter().sum::<u64>() as f64 / v.len().max(1) as f64 / 1e6;
+        let mut row = Row::new(kind.id().to_uppercase());
+        row.push("mean_extraction_ms", mean);
+        row.push("requests", v.len() as f64);
+        rows.push(row);
+    }
+    print_rows(
+        "Deployment — five services sharing one device log",
+        &rows,
+    );
+    println!(
+        "device-wide: peak cache {:.1} KB across 5 engines, {} events logged",
+        peak_cache as f64 / 1024.0,
+        store.len()
+    );
+    let mut agg = Row::new("device total");
+    agg.push("peak_cache_kb", peak_cache as f64 / 1024.0);
+    agg.push("events_logged", store.len() as f64);
+    rows.push(agg);
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// Motivation stats (Figs. 3/5/6/12) — `autofeature inspect`.
+// ---------------------------------------------------------------------
+
+/// Redundancy statistics per service (Fig. 6 / Fig. 12a analogues).
+pub fn motivation_stats() -> Vec<Row> {
+    let catalog = eval_catalog();
+    let mut rows = Vec::new();
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        let rep = crate::fegraph::stats::analyze(&svc.features);
+        let mut row = Row::new(kind.id().to_uppercase());
+        row.push("features", rep.num_features as f64);
+        row.push("types", rep.num_types as f64);
+        row.push("identical_share", rep.identical_share);
+        row.push("condition_groups", rep.condition_groups as f64);
+        row.push(
+            "xinf_overlap@interval",
+            crate::fegraph::stats::cross_inference_overlap(
+                &svc.features,
+                kind.inference_interval_ms(),
+            ),
+        );
+        rows.push(row);
+    }
+    print_rows("Motivation — per-service redundancy statistics", &rows);
+    rows
+}
+
+/// Quick smoke used by integration tests: one tiny end-to-end cell.
+pub fn smoke(models: &dyn Fn(ServiceKind) -> Option<ModelRuntime>) -> Result<f64> {
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::SR, &catalog);
+    let sim = Scale::Quick.sim(Period::Noon, svc.inference_interval_ms, 3);
+    let out = run_cell(&catalog, &svc, Method::AutoFeature, models(ServiceKind::SR).as_ref(), &sim)?;
+    Ok(out.mean_ms())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_shape_retrieve_decode_dominate() {
+        let rows = fig10_op_latency(Scale::Quick).unwrap();
+        for row in &rows {
+            assert!(row.get("rd_over_filter").unwrap() > 2.0, "{row:?}");
+            assert!(row.get("rd_over_compute").unwrap() > 5.0, "{row:?}");
+        }
+        // Decode cost grows with attribute count.
+        let first = rows.first().unwrap().get("decode_ms").unwrap();
+        let last = rows.last().unwrap().get("decode_ms").unwrap();
+        assert!(last > first);
+    }
+
+    #[test]
+    fn fig11_hierarchical_beats_direct_at_scale() {
+        let rows = fig11_hier_filter(Scale::Quick).unwrap();
+        let last = rows.last().unwrap(); // 128 features
+        assert!(last.get("cmp_reduction").unwrap() > 8.0, "{last:?}");
+    }
+
+    #[test]
+    fn staleness_extension_trades_latency_for_drift() {
+        let rows = ext_staleness(Scale::Quick).unwrap();
+        let ttl0 = &rows[0];
+        let ttl300 = rows.last().unwrap();
+        // TTL 0 serves nothing stale and has zero drift.
+        assert_eq!(ttl0.get("stale_share").unwrap(), 0.0);
+        assert_eq!(ttl0.get("mean_rel_err").unwrap(), 0.0);
+        // A long TTL serves mostly stale values, faster, with drift > 0.
+        assert!(ttl300.get("stale_share").unwrap() > 0.5);
+        assert!(
+            ttl300.get("mean_extraction_ms").unwrap()
+                < ttl0.get("mean_extraction_ms").unwrap()
+        );
+    }
+
+    #[test]
+    fn codec_ablation_binary_is_faster() {
+        let rows = ext_codec_ablation(Scale::Quick).unwrap();
+        let json = rows.iter().find(|r| r.label == "jsonish").unwrap();
+        let bin = rows.iter().find(|r| r.label == "binary").unwrap();
+        // Binary decode removes part (not all) of the naive bottleneck.
+        assert!(bin.get("naive_ms").unwrap() < json.get("naive_ms").unwrap());
+    }
+
+    #[test]
+    fn multimodel_serves_all_services_under_shared_log() {
+        let rows = ext_multimodel(Scale::Quick).unwrap();
+        assert_eq!(rows.len(), 6);
+        for row in &rows[..5] {
+            assert!(row.get("requests").unwrap() >= 2.0, "{row:?}");
+            assert!(row.get("mean_extraction_ms").unwrap() > 0.0);
+        }
+        // Device-wide cache stays phone-plausible (< 1 MB).
+        assert!(rows[5].get("peak_cache_kb").unwrap() < 1024.0);
+    }
+
+    #[test]
+    fn motivation_matches_service_stats() {
+        let rows = motivation_stats();
+        assert_eq!(rows.len(), 5);
+        for row in &rows {
+            assert!(row.get("identical_share").unwrap() > 0.4);
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Experiment harness: shared machinery regenerating every table and
+//! figure of the paper's evaluation (§4). Used by `rust/benches/*` and
+//! `examples/*`; see DESIGN.md §3 for the experiment index.
+
+pub mod experiments;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::applog::codec::CodecKind;
+use crate::applog::schema::{Catalog, CatalogConfig};
+use crate::baseline::decoded_log::DecodedLogExtractor;
+use crate::baseline::feature_store::FeatureStoreExtractor;
+use crate::baseline::naive::NaiveExtractor;
+use crate::baseline::storage::global_column_count;
+use crate::cache::policy::PolicyKind;
+use crate::engine::config::EngineConfig;
+use crate::engine::online::Engine;
+use crate::engine::Extractor;
+use crate::features::spec::FeatureSpec;
+use crate::runtime::ModelRuntime;
+use crate::workload::driver::{run_simulation, SimConfig, SimOutcome};
+use crate::workload::services::{ServiceKind, ServiceSpec};
+
+/// Catalog seed shared by every experiment (deterministic workloads).
+pub const CATALOG_SEED: u64 = 42;
+
+/// Build the evaluation catalog (Fig. 3-shaped, 40 behavior types).
+pub fn eval_catalog() -> Catalog {
+    Catalog::generate(&CatalogConfig::paper(), CATALOG_SEED)
+}
+
+/// Every extraction method compared in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Industry-standard independent per-feature extraction.
+    Naive,
+    /// Graph optimizer only (*w/ Fusion*).
+    FusionOnly,
+    /// Cache policy only (*w/ Cache*).
+    CacheOnly,
+    /// Full AutoFeature.
+    AutoFeature,
+    /// AutoFeature with the random cache policy (*w/ Random*, Fig. 19b).
+    RandomCache,
+    /// Cloud baseline 1 (Table 1).
+    DecodedLog,
+    /// Cloud baseline 2 (Table 1).
+    FeatureStore,
+}
+
+impl Method {
+    /// The four methods of the headline comparison (Fig. 16).
+    pub const FIG16: [Method; 4] = [
+        Method::Naive,
+        Method::FusionOnly,
+        Method::CacheOnly,
+        Method::AutoFeature,
+    ];
+
+    /// Display label (matches the paper's legends).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Naive => "w/o AutoFeature",
+            Method::FusionOnly => "w/ Fusion",
+            Method::CacheOnly => "w/ Cache",
+            Method::AutoFeature => "AutoFeature",
+            Method::RandomCache => "w/ Random",
+            Method::DecodedLog => "Decoded Log",
+            Method::FeatureStore => "Feature Store",
+        }
+    }
+}
+
+/// Instantiate an extractor for a method over a feature set.
+pub fn make_extractor(
+    method: Method,
+    features: Vec<FeatureSpec>,
+    catalog: &Catalog,
+    cache_budget: usize,
+) -> Result<Box<dyn Extractor>> {
+    let engine_cfg = |mut cfg: EngineConfig| {
+        cfg.cache_budget_bytes = cache_budget;
+        cfg
+    };
+    Ok(match method {
+        Method::Naive => Box::new(NaiveExtractor::new(features, CodecKind::Jsonish)),
+        Method::FusionOnly => Box::new(Engine::new(
+            features,
+            catalog,
+            engine_cfg(EngineConfig::fusion_only()),
+        )?),
+        Method::CacheOnly => Box::new(Engine::new(
+            features,
+            catalog,
+            engine_cfg(EngineConfig::cache_only()),
+        )?),
+        Method::AutoFeature => Box::new(Engine::new(
+            features,
+            catalog,
+            engine_cfg(EngineConfig::autofeature()),
+        )?),
+        Method::RandomCache => Box::new(Engine::new(
+            features,
+            catalog,
+            engine_cfg(EngineConfig {
+                policy: PolicyKind::Random(0xBAD5EED),
+                ..EngineConfig::autofeature()
+            }),
+        )?),
+        Method::DecodedLog => Box::new(DecodedLogExtractor::new(
+            features,
+            CodecKind::Jsonish,
+            global_column_count(catalog),
+        )),
+        Method::FeatureStore => Box::new(FeatureStoreExtractor::new(
+            features,
+            CodecKind::Jsonish,
+            global_column_count(catalog),
+        )),
+    })
+}
+
+/// Run one (service, method, sim) cell, optionally with model inference.
+pub fn run_cell(
+    catalog: &Catalog,
+    service: &ServiceSpec,
+    method: Method,
+    model: Option<&ModelRuntime>,
+    sim: &SimConfig,
+) -> Result<SimOutcome> {
+    let mut extractor = make_extractor(method, service.features.clone(), catalog, 256 * 1024)?;
+    run_simulation(catalog, extractor.as_mut(), model, sim)
+}
+
+/// Load a service's model runtime if its artifact exists.
+pub fn try_load_model(artifact_dir: &Path, service: ServiceKind) -> Option<ModelRuntime> {
+    if artifact_dir
+        .join(format!("model_{}.hlo.txt", service.id()))
+        .exists()
+    {
+        ModelRuntime::load(artifact_dir, service).ok()
+    } else {
+        None
+    }
+}
+
+/// Default artifact directory (workspace `artifacts/`).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Pretty-print a table with aligned columns.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:width$}", c, width = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extractor_factory_covers_all_methods() {
+        let cat = eval_catalog();
+        let svc = ServiceSpec::build(ServiceKind::SR, &cat);
+        for m in [
+            Method::Naive,
+            Method::FusionOnly,
+            Method::CacheOnly,
+            Method::AutoFeature,
+            Method::RandomCache,
+            Method::DecodedLog,
+            Method::FeatureStore,
+        ] {
+            let e = make_extractor(m, svc.features.clone(), &cat, 64 * 1024).unwrap();
+            assert!(!e.label().is_empty());
+        }
+    }
+
+    #[test]
+    fn labels_match_paper_legends() {
+        assert_eq!(Method::Naive.label(), "w/o AutoFeature");
+        assert_eq!(Method::AutoFeature.label(), "AutoFeature");
+    }
+}

@@ -1,0 +1,84 @@
+//! # AutoFeature
+//!
+//! A reproduction of *"Optimizing Feature Extraction for On-device Model
+//! Inference with User Behavior Sequences"* (SenSys '26): an on-device
+//! feature-extraction engine that accelerates end-to-end ML model
+//! execution by eliminating redundant `Retrieve`/`Decode`/`Filter`/
+//! `Compute` operations across different input features (FE-graph fusion,
+//! §3.3) and across consecutive model executions (knapsack-style caching
+//! of decoded attributes, §3.4).
+//!
+//! ## Layer map
+//!
+//! * [`applog`] — the on-device app-log substrate (SQLite-analogue):
+//!   chronological behavior-event rows with a compressed
+//!   behavior-specific-attribute column.
+//! * [`features`] — feature condition tuples `<event_names, time_range,
+//!   attr_names, comp_func>` and computation functions.
+//! * [`fegraph`] — the FE-graph abstraction and direct (unoptimized)
+//!   execution; redundancy identification.
+//! * [`optimizer`] — intra-feature chain partition, inter-feature fusion
+//!   with branch postposition, hierarchical filtering.
+//! * [`cache`] — event evaluator: utility/cost valuation, greedy knapsack
+//!   policy (plus DP/random baselines), memory-budgeted cache store.
+//! * [`engine`] — offline optimization + online execution phases.
+//! * [`baseline`] — industry-standard naive extraction and the two
+//!   cloud-side systems (*Decoded Log*, *Feature Store*) of Table 1.
+//! * [`workload`] — behavior catalog, seeded user-trace generator and the
+//!   five evaluated services (CP/KP/SR/PR/VR).
+//! * [`runtime`] — PJRT CPU client loading the AOT-compiled JAX models.
+//! * [`coordinator`] — async service loop wiring traces → extraction →
+//!   model inference.
+//! * [`harness`] — experiment drivers regenerating every paper table and
+//!   figure (used by `benches/` and `examples/`).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use autofeature::prelude::*;
+//!
+//! // Build a small behavior catalog and log some events.
+//! let catalog = Catalog::generate(&CatalogConfig::small(), 1);
+//! let mut store = AppLogStore::new(StoreConfig::default());
+//! // ... append events, define features, run the engine (see examples/).
+//! ```
+#![warn(missing_docs)]
+
+pub mod applog;
+pub mod baseline;
+pub mod cache;
+pub mod coordinator;
+pub mod engine;
+pub mod features;
+pub mod fegraph;
+pub mod harness;
+pub mod optimizer;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+/// Convenient re-exports of the most common public types.
+pub mod prelude {
+    pub use crate::applog::{
+        codec::{AttrCodec, BinaryCodec, CodecKind, JsonishCodec},
+        event::{AttrId, AttrValue, BehaviorEvent, EventTypeId, TimestampMs},
+        schema::{AttrKind, AttrSchema, BehaviorSchema, Catalog, CatalogConfig},
+        store::{AppLogStore, StoreConfig},
+    };
+    pub use crate::baseline::naive::NaiveExtractor;
+    pub use crate::cache::policy::PolicyKind;
+    pub use crate::engine::{
+        config::EngineConfig,
+        online::{Engine, ExtractionResult},
+    };
+    pub use crate::features::{
+        compute::CompFunc,
+        spec::{FeatureId, FeatureSpec, TimeRange},
+        value::FeatureValue,
+    };
+    pub use crate::fegraph::graph::FeGraph;
+    pub use crate::workload::{
+        services::{ServiceKind, ServiceSpec},
+        traces::{Period, TraceConfig, TraceGenerator},
+    };
+}

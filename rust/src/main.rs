@@ -1,0 +1,256 @@
+//! AutoFeature CLI: simulate services, inspect redundancy statistics,
+//! and regenerate the paper's experiments.
+//!
+//! (Hand-rolled argument parsing: the build image vendors no CLI crate —
+//! see DESIGN.md §Substitutions.)
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use autofeature::harness::{self, experiments};
+use autofeature::workload::driver::SimConfig;
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+use autofeature::workload::traces::{ActivityLevel, Period};
+
+const USAGE: &str = "\
+autofeature — on-device feature extraction engine (SenSys '26 reproduction)
+
+USAGE:
+  autofeature simulate [--service cp|kp|sr|pr|vr] [--method naive|fusion|cache|autofeature|decodedlog|featurestore]
+                       [--period noon|evening|night] [--minutes N] [--artifacts DIR] [--no-model] [--seed N]
+  autofeature coordinator [--service ID] [--minutes N] [--artifacts DIR]
+  autofeature inspect
+  autofeature experiment [fig4|fig10|fig11|fig16|fig17|fig18|fig19a|fig19b|fig20|fig21|
+                          ext-staleness|ext-codec|ext-multimodel|all]
+                         [--full] [--artifacts DIR]
+  autofeature help
+";
+
+/// Minimal flag parser: `--key value` pairs plus positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let value = argv
+                    .get(i + 1)
+                    .filter(|v| !v.starts_with("--"))
+                    .cloned();
+                if value.is_some() {
+                    i += 1;
+                }
+                flags.push((key.to_string(), value));
+            } else {
+                positional.push(argv[i].clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+}
+
+fn parse_method(s: &str) -> Result<harness::Method> {
+    Ok(match s {
+        "naive" => harness::Method::Naive,
+        "fusion" => harness::Method::FusionOnly,
+        "cache" => harness::Method::CacheOnly,
+        "autofeature" => harness::Method::AutoFeature,
+        "decodedlog" => harness::Method::DecodedLog,
+        "featurestore" => harness::Method::FeatureStore,
+        other => bail!("unknown method {other}"),
+    })
+}
+
+fn parse_period(s: &str) -> Result<Period> {
+    Ok(match s {
+        "noon" => Period::Noon,
+        "evening" => Period::Evening,
+        "night" => Period::Night,
+        other => bail!("unknown period {other}"),
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+
+    match cmd.as_str() {
+        "simulate" | "coordinator" => {
+            let service = args.get("service").unwrap_or("vr");
+            let kind = ServiceKind::from_id(service)
+                .ok_or_else(|| anyhow::anyhow!("unknown service {service}"))?;
+            let catalog = harness::eval_catalog();
+            let svc = ServiceSpec::build(kind, &catalog);
+            let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+            let no_model = args.has("no-model");
+            let model = if no_model {
+                None
+            } else {
+                harness::try_load_model(&artifacts, kind)
+            };
+            if model.is_none() && !no_model {
+                eprintln!(
+                    "note: no artifact for {} in {} — run `make artifacts`; continuing extraction-only",
+                    kind.id(),
+                    artifacts.display()
+                );
+            }
+            let minutes: i64 = args.get("minutes").unwrap_or("10").parse()?;
+            let sim = SimConfig {
+                period: parse_period(args.get("period").unwrap_or("night"))?,
+                activity: ActivityLevel::P70,
+                warmup_ms: 60 * 60_000,
+                duration_ms: minutes * 60_000,
+                inference_interval_ms: svc.inference_interval_ms,
+                seed: args.get("seed").unwrap_or("0").parse()?,
+                codec: Default::default(),
+            };
+
+            if cmd == "coordinator" {
+                // Concurrent pipeline (threaded producer + inference loop).
+                let mut extractor = harness::make_extractor(
+                    harness::Method::AutoFeature,
+                    svc.features.clone(),
+                    &catalog,
+                    256 * 1024,
+                )?;
+                let report = autofeature::coordinator::run_service(
+                    &catalog,
+                    extractor.as_mut(),
+                    model.as_ref(),
+                    &sim,
+                )?;
+                println!(
+                    "{}: {} requests, {} events logged",
+                    kind.name(),
+                    report.requests,
+                    report.events_logged
+                );
+                println!(
+                    "  end-to-end mean {:.3} ms  p50 {:.3}  p90 {:.3}  extraction share {:.1}%",
+                    report.metrics.mean_ms(),
+                    report.metrics.percentile_ms(0.5),
+                    report.metrics.percentile_ms(0.9),
+                    report.metrics.extraction_share() * 100.0
+                );
+                if !report.last_prediction.is_nan() {
+                    println!("  last prediction {:.5}", report.last_prediction);
+                }
+                return Ok(());
+            }
+
+            let m = parse_method(args.get("method").unwrap_or("autofeature"))?;
+            let out = harness::run_cell(&catalog, &svc, m, model.as_ref(), &sim)?;
+            println!(
+                "{} / {} / {}: {} requests over {} simulated minutes",
+                kind.name(),
+                m.label(),
+                args.get("period").unwrap_or("night"),
+                out.records.len(),
+                minutes
+            );
+            println!(
+                "  end-to-end mean {:.3} ms  p50 {:.3} ms  p90 {:.3} ms",
+                out.mean_ms(),
+                out.percentile_ms(0.5),
+                out.percentile_ms(0.9)
+            );
+            println!(
+                "  extraction {:.3} ms  inference {:.3} ms  events {}  log {:.1} KB",
+                out.mean_extraction_ms(),
+                out.mean_inference_ms(),
+                out.events_logged,
+                out.raw_storage_bytes as f64 / 1024.0
+            );
+        }
+        "inspect" => {
+            experiments::motivation_stats();
+        }
+        "experiment" => {
+            let which = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all")
+                .to_string();
+            let scale = if args.has("full") {
+                experiments::Scale::Full
+            } else {
+                experiments::Scale::Quick
+            };
+            let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+            let models = move |kind: ServiceKind| harness::try_load_model(&artifacts, kind);
+            let all = which == "all";
+            if all || which == "fig4" {
+                experiments::fig04_breakdown(scale, &models)?;
+            }
+            if all || which == "fig10" {
+                experiments::fig10_op_latency(scale)?;
+            }
+            if all || which == "fig11" {
+                experiments::fig11_hier_filter(scale)?;
+            }
+            if all || which == "fig16" {
+                experiments::fig16_overall(scale, &models)?;
+            }
+            if all || which == "fig17" {
+                experiments::fig17_overheads(scale)?;
+            }
+            if all || which == "fig18" {
+                experiments::fig18_cloud(scale, &models)?;
+            }
+            if all || which == "fig19a" {
+                experiments::fig19a_component(scale)?;
+            }
+            if all || which == "fig19b" {
+                experiments::fig19b_cache_policy(scale)?;
+            }
+            if all || which == "fig20" {
+                experiments::fig20_interval(scale)?;
+            }
+            if all || which == "fig21" {
+                experiments::fig21_redundancy(scale)?;
+            }
+            if all || which == "ext-staleness" {
+                experiments::ext_staleness(scale)?;
+            }
+            if all || which == "ext-codec" {
+                experiments::ext_codec_ablation(scale)?;
+            }
+            if all || which == "ext-multimodel" {
+                experiments::ext_multimodel(scale)?;
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprint!("unknown command {other}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

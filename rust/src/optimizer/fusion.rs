@@ -1,0 +1,195 @@
+//! Inter-feature chain fusion (paper §3.3).
+//!
+//! Sub-chains are grouped by their (single) `event_name` condition into
+//! fused lanes; within a lane, members are grouped by `time_range`
+//! (ascending) to form the hierarchical filter's precomputed reverse
+//! mapping. With fusion disabled the same plan structure degenerates to
+//! one single-member lane per sub-chain, which is how the *w/o Fusion*
+//! ablations execute.
+
+use std::collections::BTreeMap;
+
+use crate::features::spec::{FeatureSpec, TimeRange};
+
+use super::partition::{partition, SubChain};
+use super::plan::{FusedLane, MemberFeature, OptimizedPlan, WindowGroup};
+
+/// Build the optimized plan for a feature set.
+///
+/// `enable_fusion = false` yields the unfused plan (one lane per
+/// sub-chain, in feature order) used by the *w/o AutoFeature* and
+/// *w/ Cache*-only configurations.
+pub fn fuse(features: &[FeatureSpec], enable_fusion: bool) -> OptimizedPlan {
+    let subs = partition(features);
+    let lanes = if enable_fusion {
+        fuse_subchains(&subs)
+    } else {
+        subs.iter().map(lane_for_subchain).collect()
+    };
+    OptimizedPlan {
+        features: features.to_vec(),
+        lanes,
+    }
+}
+
+fn lane_for_subchain(s: &SubChain) -> FusedLane {
+    FusedLane {
+        event_type: s.event_type,
+        max_window: s.window,
+        groups: vec![WindowGroup {
+            window: s.window,
+            members: vec![MemberFeature {
+                feature_idx: s.feature_idx,
+                attrs: s.attrs.clone(),
+                attr_slots: (0..s.attrs.len() as u16).collect(),
+            }],
+        }],
+        attr_union: s.attrs.clone(),
+    }
+}
+
+fn fuse_subchains(subs: &[SubChain]) -> Vec<FusedLane> {
+    // event_type -> window_ms -> members
+    let mut by_type: BTreeMap<u16, BTreeMap<i64, Vec<MemberFeature>>> = BTreeMap::new();
+    for s in subs {
+        by_type
+            .entry(s.event_type)
+            .or_default()
+            .entry(s.window.duration_ms)
+            .or_default()
+            .push(MemberFeature {
+                feature_idx: s.feature_idx,
+                attrs: s.attrs.clone(),
+                attr_slots: Vec::new(), // filled once the union is known
+            });
+    }
+    by_type
+        .into_iter()
+        .map(|(event_type, by_window)| {
+            let max_window = TimeRange {
+                duration_ms: *by_window.keys().last().expect("non-empty lane"),
+            };
+            let mut attr_union: Vec<u16> = by_window
+                .values()
+                .flatten()
+                .flat_map(|m| m.attrs.iter().copied())
+                .collect();
+            attr_union.sort_unstable();
+            attr_union.dedup();
+            let groups = by_window
+                .into_iter()
+                .map(|(window_ms, mut members)| {
+                    for m in &mut members {
+                        m.attr_slots = m
+                            .attrs
+                            .iter()
+                            .map(|a| {
+                                attr_union.binary_search(a).expect("attr in union") as u16
+                            })
+                            .collect();
+                    }
+                    WindowGroup {
+                        window: TimeRange {
+                            duration_ms: window_ms,
+                        },
+                        members,
+                    }
+                })
+                .collect();
+            FusedLane {
+                event_type,
+                max_window,
+                groups,
+                attr_union,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::compute::CompFunc;
+    use crate::features::spec::FeatureId;
+
+    fn spec(id: u32, types: Vec<u16>, mins: i64, attrs: Vec<u16>) -> FeatureSpec {
+        FeatureSpec {
+            id: FeatureId(id),
+            name: format!("f{id}"),
+            event_types: types,
+            window: TimeRange::mins(mins),
+            attrs,
+            comp: CompFunc::Count,
+        }
+        .normalized()
+    }
+
+    #[test]
+    fn fuses_same_type_subchains_into_one_lane() {
+        let specs = vec![
+            spec(0, vec![1], 5, vec![0]),
+            spec(1, vec![1], 60, vec![1]),
+            spec(2, vec![2], 5, vec![0]),
+        ];
+        let plan = fuse(&specs, true);
+        assert_eq!(plan.num_retrieves(), 2); // types {1, 2}
+        let lane1 = plan.lanes.iter().find(|l| l.event_type == 1).unwrap();
+        assert_eq!(lane1.max_window, TimeRange::mins(60));
+        assert_eq!(lane1.groups.len(), 2);
+        // Groups ascend by window.
+        assert!(lane1.groups[0].window < lane1.groups[1].window);
+        assert_eq!(lane1.attr_union, vec![0, 1]);
+    }
+
+    #[test]
+    fn unfused_plan_has_one_lane_per_subchain() {
+        let specs = vec![
+            spec(0, vec![1, 2], 5, vec![0]),
+            spec(1, vec![1], 60, vec![1]),
+        ];
+        let plan = fuse(&specs, false);
+        assert_eq!(plan.num_retrieves(), 3);
+        for lane in &plan.lanes {
+            assert_eq!(lane.groups.len(), 1);
+            assert_eq!(lane.groups[0].members.len(), 1);
+        }
+    }
+
+    #[test]
+    fn identical_windows_share_one_group() {
+        let specs = vec![
+            spec(0, vec![3], 5, vec![0]),
+            spec(1, vec![3], 5, vec![2]),
+            spec(2, vec![3], 5, vec![0, 2]),
+        ];
+        let plan = fuse(&specs, true);
+        assert_eq!(plan.lanes.len(), 1);
+        assert_eq!(plan.lanes[0].groups.len(), 1);
+        assert_eq!(plan.lanes[0].groups[0].members.len(), 3);
+        assert_eq!(plan.lanes[0].attr_union, vec![0, 2]);
+    }
+
+    #[test]
+    fn fusion_reduces_retrieves_proportionally_to_redundancy() {
+        // 20 features all on type 0 -> 1 retrieve fused vs 20 unfused.
+        let specs: Vec<_> = (0..20)
+            .map(|i| spec(i, vec![0], 5 * (1 + (i as i64) % 3), vec![0]))
+            .collect();
+        assert_eq!(fuse(&specs, true).num_retrieves(), 1);
+        assert_eq!(fuse(&specs, false).num_retrieves(), 20);
+    }
+
+    #[test]
+    fn type_window_ms_reports_max() {
+        let specs = vec![
+            spec(0, vec![1], 5, vec![0]),
+            spec(1, vec![1], 60, vec![1]),
+        ];
+        let plan = fuse(&specs, true);
+        assert_eq!(plan.type_window_ms(1), Some(3_600_000));
+        assert_eq!(plan.type_window_ms(9), None);
+        // Unfused: max across that type's lanes.
+        let plan = fuse(&specs, false);
+        assert_eq!(plan.type_window_ms(1), Some(3_600_000));
+    }
+}

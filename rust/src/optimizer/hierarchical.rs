@@ -1,0 +1,306 @@
+//! Hierarchical filtering (paper §3.3, Fig. 11).
+//!
+//! The fused `Filter` node must separate outputs per member feature
+//! (the integrated `Branch`). Doing it directly costs
+//! `O(len(inputs) × num(features))`: every row is checked against every
+//! member's window. The hierarchical algorithm exploits two properties:
+//! (i) rows arrive chronologically, (ii) `time_range` conditions are
+//! grouped (few distinct windows). With the lane's members pre-grouped by
+//! window ascending (the offline reverse mapping), a single monotone
+//! boundary pointer per lane walk yields
+//! `O(len(inputs) + num(distinct windows))` boundary comparisons.
+
+use crate::applog::event::{AttrId, AttrValue, TimestampMs};
+
+use super::plan::{FeatureAcc, FusedLane};
+
+/// A borrowed view of one (decoded or cached) row fed to the filter.
+#[derive(Debug, Clone, Copy)]
+pub struct RowView<'a> {
+    /// Event timestamp.
+    pub ts: TimestampMs,
+    /// Log row id (timestamp tie-break).
+    pub seq: u64,
+    /// Decoded attributes, sorted by id. For cached rows this is the
+    /// lane's attr-union projection; for fresh rows the full attr set.
+    pub attrs: &'a [(AttrId, AttrValue)],
+}
+
+#[inline]
+fn lookup<'a>(attrs: &'a [(AttrId, AttrValue)], id: AttrId) -> Option<&'a AttrValue> {
+    attrs
+        .binary_search_by_key(&id, |(a, _)| *a)
+        .ok()
+        .map(|i| &attrs[i].1)
+}
+
+/// Stateful hierarchical walk over one lane's chronological row stream.
+///
+/// The walker may be fed in segments (cached rows, then freshly decoded
+/// rows) as long as the concatenated stream stays chronological — the
+/// boundary pointer persists across segments.
+///
+/// §Perf: instead of binary-searching every (member, attr) pair per row
+/// (`O(members × log attrs)`), the walker merge-joins the row's sorted
+/// attributes against the lane's sorted `attr_union` once
+/// (`O(attrs + union)`) into a dense slot table; member pushes then
+/// index it in O(1) via the offline-precomputed `attr_slots`.
+#[derive(Debug)]
+pub struct LaneWalker {
+    now: TimestampMs,
+    /// Index of the first window group qualifying for the current row's
+    /// age. Monotonically non-increasing as rows get newer.
+    g_idx: usize,
+    /// Per-row slot table: `slots[u]` = index of `attr_union[u]` within
+    /// the current row's attrs, or `u32::MAX` when absent.
+    slots: Vec<u32>,
+    /// Boundary comparisons performed (complexity instrumentation for
+    /// the Fig. 11 reproduction).
+    pub boundary_cmps: u64,
+    /// Rows processed.
+    pub rows: u64,
+}
+
+const ABSENT: u32 = u32::MAX;
+
+impl LaneWalker {
+    /// Start a walk for an extraction triggered at `now`.
+    pub fn new(lane: &FusedLane, now: TimestampMs) -> Self {
+        LaneWalker {
+            now,
+            g_idx: lane.groups.len(),
+            slots: vec![ABSENT; lane.attr_union.len()],
+            boundary_cmps: 0,
+            rows: 0,
+        }
+    }
+
+    /// Process one row: advance the boundary pointer, project the row
+    /// onto the union slot table, then push the row's needed attributes
+    /// into every qualifying member's accumulator.
+    #[inline]
+    pub fn push_row(&mut self, lane: &FusedLane, row: RowView<'_>, sinks: &mut [FeatureAcc]) {
+        debug_assert!(row.ts < self.now, "rows must precede the trigger time");
+        let age = self.now - row.ts;
+        // Monotone pointer: qualifying groups form a suffix; as rows get
+        // newer the suffix grows. Amortized O(1) per row.
+        while self.g_idx > 0 {
+            self.boundary_cmps += 1;
+            if lane.groups[self.g_idx - 1].window.duration_ms >= age {
+                self.g_idx -= 1;
+            } else {
+                break;
+            }
+        }
+        self.rows += 1;
+        if self.g_idx >= lane.groups.len() {
+            return; // row older than every member window
+        }
+
+        // Merge-join row attrs (sorted) x attr_union (sorted).
+        self.slots.fill(ABSENT);
+        let union = &lane.attr_union;
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < row.attrs.len() && j < union.len() {
+            match row.attrs[i].0.cmp(&union[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    self.slots[j] = i as u32;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+
+        for group in &lane.groups[self.g_idx..] {
+            for m in &group.members {
+                for &slot in &m.attr_slots {
+                    let idx = self.slots[slot as usize];
+                    if idx != ABSENT {
+                        let v = &row.attrs[idx as usize].1;
+                        sinks[m.feature_idx].push(row.ts, row.seq, v);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The direct (non-hierarchical) fused filter: every row is tested
+/// against every member's window. `O(rows × members)` — the Fig. 11
+/// baseline ("original design").
+#[derive(Debug, Default)]
+pub struct DirectWalker {
+    /// Window-condition checks performed.
+    pub boundary_cmps: u64,
+    /// Rows processed.
+    pub rows: u64,
+}
+
+impl DirectWalker {
+    /// Create a direct walker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Process one row against all members of all groups.
+    #[inline]
+    pub fn push_row(
+        &mut self,
+        lane: &FusedLane,
+        now: TimestampMs,
+        row: RowView<'_>,
+        sinks: &mut [FeatureAcc],
+    ) {
+        self.rows += 1;
+        let age = now - row.ts;
+        for group in &lane.groups {
+            for m in &group.members {
+                self.boundary_cmps += 1;
+                if group.window.duration_ms >= age {
+                    for &a in &m.attrs {
+                        if let Some(v) = lookup(row.attrs, a) {
+                            sinks[m.feature_idx].push(row.ts, row.seq, v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::compute::CompFunc;
+    use crate::features::spec::{FeatureId, FeatureSpec, TimeRange};
+    use crate::features::value::FeatureValue;
+    use crate::optimizer::fusion::fuse;
+
+    /// Build a fused single-type lane with n features over mixed windows.
+    fn lane_specs(n: usize) -> Vec<FeatureSpec> {
+        (0..n)
+            .map(|i| {
+                FeatureSpec {
+                    id: FeatureId(i as u32),
+                    name: format!("f{i}"),
+                    event_types: vec![0],
+                    window: TimeRange::mins([5, 30, 60, 360][i % 4]),
+                    attrs: vec![(i % 3) as u16],
+                    comp: CompFunc::Count,
+                }
+                .normalized()
+            })
+            .collect()
+    }
+
+    fn rows(n: usize, now: i64, span_ms: i64) -> Vec<(i64, u64, Vec<(u16, AttrValue)>)> {
+        (0..n)
+            .map(|i| {
+                let ts = now - span_ms + (i as i64 * span_ms / n as i64);
+                (
+                    ts,
+                    i as u64,
+                    vec![
+                        (0u16, AttrValue::Int(i as i64)),
+                        (1u16, AttrValue::Float(i as f64)),
+                        (2u16, AttrValue::Int(-(i as i64))),
+                    ],
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn hierarchical_equals_direct() {
+        let specs = lane_specs(13);
+        let plan = fuse(&specs, true);
+        let lane = &plan.lanes[0];
+        let now = 100_000_000;
+        let data = rows(500, now, lane.max_window.duration_ms);
+
+        let mut sinks_h: Vec<_> = specs.iter().map(|s| FeatureAcc::new(s, now)).collect();
+        let mut sinks_d: Vec<_> = specs.iter().map(|s| FeatureAcc::new(s, now)).collect();
+        let mut hw = LaneWalker::new(lane, now);
+        let mut dw = DirectWalker::new();
+        for (ts, seq, attrs) in &data {
+            let rv = RowView { ts: *ts, seq: *seq, attrs };
+            hw.push_row(lane, rv, &mut sinks_h);
+            dw.push_row(lane, now, rv, &mut sinks_d);
+        }
+        let vh: Vec<FeatureValue> = sinks_h.into_iter().map(|s| s.finish()).collect();
+        let vd: Vec<FeatureValue> = sinks_d.into_iter().map(|s| s.finish()).collect();
+        assert_eq!(vh, vd);
+    }
+
+    #[test]
+    fn hierarchical_boundary_cost_is_linear_not_quadratic() {
+        let specs = lane_specs(64);
+        let plan = fuse(&specs, true);
+        let lane = &plan.lanes[0];
+        let now = 100_000_000;
+        let n_rows = 1000;
+        let data = rows(n_rows, now, lane.max_window.duration_ms);
+
+        let mut sinks: Vec<_> = specs.iter().map(|s| FeatureAcc::new(s, now)).collect();
+        let mut hw = LaneWalker::new(lane, now);
+        let mut dw = DirectWalker::new();
+        let mut sinks_d: Vec<_> = specs.iter().map(|s| FeatureAcc::new(s, now)).collect();
+        for (ts, seq, attrs) in &data {
+            let rv = RowView { ts: *ts, seq: *seq, attrs };
+            hw.push_row(lane, rv, &mut sinks);
+            dw.push_row(lane, now, rv, &mut sinks_d);
+        }
+        // O(rows + windows) vs O(rows x members).
+        assert!(
+            hw.boundary_cmps <= (n_rows as u64) + lane.groups.len() as u64,
+            "hierarchical cmps {} too high",
+            hw.boundary_cmps
+        );
+        assert_eq!(dw.boundary_cmps, (n_rows * 64) as u64);
+    }
+
+    #[test]
+    fn only_in_window_rows_reach_members() {
+        // One 5-min feature, one 60-min feature; rows older than 5 min
+        // must only reach the 60-min member.
+        let specs = lane_specs(2); // windows 5 and 30 mins
+        let plan = fuse(&specs, true);
+        let lane = &plan.lanes[0];
+        let now = 10_000_000;
+        let old_ts = now - 20 * 60_000; // 20 min old
+        let new_ts = now - 60_000; // 1 min old
+        let attrs = vec![(0u16, AttrValue::Int(1)), (1u16, AttrValue::Int(2))];
+        let mut sinks: Vec<_> = specs.iter().map(|s| FeatureAcc::new(s, now)).collect();
+        let mut w = LaneWalker::new(lane, now);
+        w.push_row(lane, RowView { ts: old_ts, seq: 0, attrs: &attrs }, &mut sinks);
+        w.push_row(lane, RowView { ts: new_ts, seq: 1, attrs: &attrs }, &mut sinks);
+        let vals: Vec<_> = sinks.into_iter().map(|s| s.finish()).collect();
+        // Feature 0 (5 min window): only the 1-min-old row.
+        assert_eq!(vals[0], FeatureValue::Scalar(1.0));
+        // Feature 1 (30 min window): both rows.
+        assert_eq!(vals[1], FeatureValue::Scalar(2.0));
+    }
+
+    #[test]
+    fn missing_attr_is_skipped() {
+        let specs = vec![FeatureSpec {
+            id: FeatureId(0),
+            name: "f".into(),
+            event_types: vec![0],
+            window: TimeRange::mins(5),
+            attrs: vec![9], // not present in rows
+            comp: CompFunc::Count,
+        }
+        .normalized()];
+        let plan = fuse(&specs, true);
+        let lane = &plan.lanes[0];
+        let now = 1_000_000;
+        let attrs = vec![(0u16, AttrValue::Int(1))];
+        let mut sinks: Vec<_> = specs.iter().map(|s| FeatureAcc::new(s, now)).collect();
+        let mut w = LaneWalker::new(lane, now);
+        w.push_row(lane, RowView { ts: now - 10, seq: 0, attrs: &attrs }, &mut sinks);
+        assert_eq!(sinks.remove(0).finish(), FeatureValue::Scalar(0.0));
+    }
+}

@@ -1,0 +1,26 @@
+//! FE-graph optimization (paper §3.3).
+//!
+//! Two steps eliminate inter-feature redundancy while avoiding the two
+//! fusion pitfalls of Fig. 9 (overgeneralized conditions, bad
+//! termination points):
+//!
+//! 1. **Intra-feature chain partition** ([`partition`]): each feature's
+//!    `Retrieve` node is split into per-`event_name` sub-nodes, so only
+//!    sub-chains with *identical* `event_name` fuse and no irrelevant
+//!    event type ever enters a fused pipeline.
+//! 2. **Inter-feature chain fusion** ([`fusion`]): sub-chains sharing an
+//!    `event_name` fuse into one *lane* whose `Retrieve` window is the
+//!    max over members ("branch postposition" keeps the expensive
+//!    `Retrieve`/`Decode` fully fused until just before `Compute`), and
+//!    the per-feature output separation is integrated into the fused
+//!    `Filter` via the **hierarchical filtering** algorithm
+//!    ([`hierarchical`]) with `O(len(inputs) + #distinct time ranges)`
+//!    termination cost instead of `O(len(inputs) × #features)`.
+//!
+//! The result is an [`plan::OptimizedPlan`] executed by
+//! [`crate::engine::online::Engine`].
+
+pub mod fusion;
+pub mod hierarchical;
+pub mod partition;
+pub mod plan;

@@ -1,0 +1,85 @@
+//! Intra-feature chain partition (paper §3.3).
+//!
+//! The root cause of overgeneralized fused conditions is the
+//! orthogonality of the `Retrieve` node's two conditions
+//! (`event_names` × `time_range`): fusing `Retrieve(A∪B, max(w1,w2))`
+//! pulls rows neither feature wants. Splitting every feature chain into
+//! one sub-chain per `event_name` (each keeping the original
+//! `time_range`) exposes finer-grained fusion that never widens the
+//! event-type scope.
+
+use crate::applog::event::{AttrId, EventTypeId};
+use crate::features::compute::CompFunc;
+use crate::features::spec::{FeatureSpec, TimeRange};
+
+/// One per-event-type sub-chain of a feature's operation chain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubChain {
+    /// Index of the owning feature in the model's spec list.
+    pub feature_idx: usize,
+    /// The single `event_name` condition of this sub-chain.
+    pub event_type: EventTypeId,
+    /// The original `time_range` condition (not widened).
+    pub window: TimeRange,
+    /// The feature's `attr_names` condition.
+    pub attrs: Vec<AttrId>,
+    /// The feature's `comp_func` condition.
+    pub comp: CompFunc,
+}
+
+/// Partition every feature chain into per-event-type sub-chains.
+pub fn partition(features: &[FeatureSpec]) -> Vec<SubChain> {
+    let mut out = Vec::new();
+    for (idx, f) in features.iter().enumerate() {
+        for &t in &f.event_types {
+            out.push(SubChain {
+                feature_idx: idx,
+                event_type: t,
+                window: f.window,
+                attrs: f.attrs.clone(),
+                comp: f.comp,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::spec::FeatureId;
+
+    fn spec(id: u32, types: Vec<u16>) -> FeatureSpec {
+        FeatureSpec {
+            id: FeatureId(id),
+            name: format!("f{id}"),
+            event_types: types,
+            window: TimeRange::mins(id as i64 + 1),
+            attrs: vec![0, 2],
+            comp: CompFunc::Sum,
+        }
+        .normalized()
+    }
+
+    #[test]
+    fn one_subchain_per_event_type() {
+        let specs = vec![spec(0, vec![1, 4, 7]), spec(1, vec![4])];
+        let subs = partition(&specs);
+        assert_eq!(subs.len(), 4);
+        assert_eq!(
+            subs.iter().filter(|s| s.event_type == 4).count(),
+            2,
+            "both features contribute a type-4 sub-chain"
+        );
+    }
+
+    #[test]
+    fn subchains_keep_original_window_and_attrs() {
+        let specs = vec![spec(2, vec![3, 5])];
+        for s in partition(&specs) {
+            assert_eq!(s.window, TimeRange::mins(3));
+            assert_eq!(s.attrs, vec![0, 2]);
+            assert_eq!(s.feature_idx, 0);
+        }
+    }
+}

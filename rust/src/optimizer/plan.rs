@@ -1,0 +1,184 @@
+//! The optimized execution plan produced by chain fusion.
+
+use crate::applog::event::{AttrId, AttrValue, EventTypeId, TimestampMs};
+use crate::features::compute::{CompFunc, ComputeState};
+use crate::features::spec::{FeatureSpec, TimeRange};
+use crate::features::value::FeatureValue;
+
+/// A feature's membership in a fused lane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemberFeature {
+    /// Index of the feature in the plan's spec list.
+    pub feature_idx: usize,
+    /// Attributes this feature projects from the lane's rows.
+    pub attrs: Vec<AttrId>,
+    /// Positions of `attrs` within the lane's `attr_union` (precomputed
+    /// offline; lets the hierarchical walk index a per-row dense slot
+    /// table instead of binary-searching each attribute — §Perf).
+    pub attr_slots: Vec<u16>,
+}
+
+/// All lane members sharing one `time_range` condition. §3.3's key
+/// observation (ii): windows are drawn from a small set of meaningful
+/// periodic ranges, so members group naturally.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowGroup {
+    /// The shared `time_range`.
+    pub window: TimeRange,
+    /// Features with exactly this window in this lane.
+    pub members: Vec<MemberFeature>,
+}
+
+/// One fused execution lane: all sub-chains on one behavior type.
+///
+/// `Retrieve` runs once per lane over `max_window`; `Decode` runs once
+/// per row; the hierarchical filter separates outputs per member without
+/// a trailing `Branch` node (branch postposition, §3.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusedLane {
+    /// The lane's single `event_name` condition.
+    pub event_type: EventTypeId,
+    /// Max window over members: the lane's fused `Retrieve` range.
+    pub max_window: TimeRange,
+    /// Members grouped by window, ascending by duration (the reverse
+    /// mapping of the hierarchical filtering algorithm, precomputed
+    /// offline).
+    pub groups: Vec<WindowGroup>,
+    /// Union of all members' attrs: the projection cached per row by the
+    /// event evaluator (§3.4 caches at behavior level).
+    pub attr_union: Vec<AttrId>,
+}
+
+/// The optimized plan for one model's feature set.
+#[derive(Debug, Clone)]
+pub struct OptimizedPlan {
+    /// The model's feature conditions (index space for `feature_idx`).
+    pub features: Vec<FeatureSpec>,
+    /// Fused lanes, sorted by event type.
+    pub lanes: Vec<FusedLane>,
+}
+
+impl OptimizedPlan {
+    /// Number of `Retrieve` executions per extraction (= #lanes), the
+    /// quantity fusion minimizes: without fusion this is
+    /// Σ_features |event_types(f)|.
+    pub fn num_retrieves(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Max `Retrieve` window for a behavior type (cache retention
+    /// horizon), if the plan touches it.
+    pub fn type_window_ms(&self, t: EventTypeId) -> Option<i64> {
+        self.lanes
+            .iter()
+            .filter(|l| l.event_type == t)
+            .map(|l| l.max_window.duration_ms)
+            .max()
+    }
+}
+
+/// Per-feature output accumulator used during plan execution.
+///
+/// Streaming for order-insensitive computations; buffered (sort on
+/// finish) for order-sensitive ones (`Concat`) whose feature spans
+/// multiple lanes and therefore receives rows out of global order.
+#[derive(Debug)]
+pub enum FeatureAcc {
+    /// Streaming accumulator (the common, allocation-free case).
+    Stream(ComputeState),
+    /// Buffer + sort-on-finish for order-sensitive multi-lane features.
+    Buffered {
+        /// Collected `(ts, seq, value)` observations.
+        pairs: Vec<(TimestampMs, u64, AttrValue)>,
+        /// The feature's computation.
+        comp: CompFunc,
+        /// Extraction trigger time.
+        now: TimestampMs,
+    },
+}
+
+impl FeatureAcc {
+    /// Create the right accumulator for a feature.
+    pub fn new(spec: &FeatureSpec, now: TimestampMs) -> FeatureAcc {
+        let order_sensitive = matches!(spec.comp, CompFunc::Concat { .. });
+        if order_sensitive && spec.event_types.len() > 1 {
+            FeatureAcc::Buffered {
+                pairs: Vec::new(),
+                comp: spec.comp,
+                now,
+            }
+        } else {
+            FeatureAcc::Stream(spec.comp.accumulator(now))
+        }
+    }
+
+    /// Feed one observation.
+    #[inline]
+    pub fn push(&mut self, ts: TimestampMs, seq: u64, value: &AttrValue) {
+        match self {
+            FeatureAcc::Stream(st) => st.push(ts, seq, value),
+            FeatureAcc::Buffered { pairs, .. } => pairs.push((ts, seq, value.clone())),
+        }
+    }
+
+    /// Produce the feature value.
+    pub fn finish(self) -> FeatureValue {
+        match self {
+            FeatureAcc::Stream(st) => st.finish(),
+            FeatureAcc::Buffered { mut pairs, comp, now } => {
+                pairs.sort_by_key(|(ts, seq, _)| (*ts, *seq));
+                let mut st = comp.accumulator(now);
+                for (ts, seq, v) in &pairs {
+                    st.push(*ts, *seq, v);
+                }
+                st.finish()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::spec::FeatureId;
+
+    fn spec(types: Vec<u16>, comp: CompFunc) -> FeatureSpec {
+        FeatureSpec {
+            id: FeatureId(0),
+            name: "t".into(),
+            event_types: types,
+            window: TimeRange::mins(5),
+            attrs: vec![0],
+            comp,
+        }
+        .normalized()
+    }
+
+    #[test]
+    fn multi_lane_concat_is_buffered_and_sorts() {
+        let s = spec(vec![0, 1], CompFunc::Concat { max_len: 3 });
+        let mut acc = FeatureAcc::new(&s, 100);
+        assert!(matches!(acc, FeatureAcc::Buffered { .. }));
+        // Push out of order (lane 1 after lane 0).
+        acc.push(30, 3, &AttrValue::Int(30));
+        acc.push(10, 1, &AttrValue::Int(10));
+        acc.push(20, 2, &AttrValue::Int(20));
+        assert_eq!(
+            acc.finish(),
+            FeatureValue::Vector(vec![10.0, 20.0, 30.0])
+        );
+    }
+
+    #[test]
+    fn single_lane_concat_streams() {
+        let s = spec(vec![0], CompFunc::Concat { max_len: 3 });
+        assert!(matches!(FeatureAcc::new(&s, 0), FeatureAcc::Stream(_)));
+    }
+
+    #[test]
+    fn multi_lane_sum_streams() {
+        // Order-insensitive comps never need buffering.
+        let s = spec(vec![0, 1, 2], CompFunc::Sum);
+        assert!(matches!(FeatureAcc::new(&s, 0), FeatureAcc::Stream(_)));
+    }
+}

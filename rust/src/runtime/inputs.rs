@@ -1,0 +1,206 @@
+//! Packing extracted feature values into the model's input literals.
+//!
+//! Model signature (see `python/compile/model.py`): `(stat [n_stat],
+//! seq [L, seq_dim], seq_mask [L], cloud [n_cloud])`, all `f32`. The
+//! coordinator fills `stat` from the extracted user features plus device
+//! features, `seq` from the most recent behavior observations, and
+//! `cloud` from the (pre-fetched) cloud embeddings.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::features::value::FeatureValue;
+
+/// Input signature parsed from `model_<service>.meta.txt`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelMeta {
+    /// User features the model expects.
+    pub n_user: usize,
+    /// Device features appended after the user features.
+    pub n_device: usize,
+    /// Total statistical input width (`n_user + n_device`).
+    pub n_stat: usize,
+    /// Behavior-sequence length.
+    pub seq_len: usize,
+    /// Per-step sequence feature width.
+    pub seq_dim: usize,
+    /// Cloud embedding width.
+    pub n_cloud: usize,
+}
+
+impl ModelMeta {
+    /// Parse the `key value` lines of a meta artifact.
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let get = |key: &str| -> Result<usize> {
+            text.lines()
+                .find_map(|l| l.strip_prefix(key).and_then(|r| r.trim().parse().ok()))
+                .with_context(|| format!("meta missing key {key}"))
+        };
+        Ok(ModelMeta {
+            n_user: get("n_user ")?,
+            n_device: get("n_device ")?,
+            n_stat: get("n_stat ")?,
+            seq_len: get("seq_len ")?,
+            seq_dim: get("seq_dim ")?,
+            n_cloud: get("n_cloud ")?,
+        })
+    }
+
+    /// Parse from a file.
+    pub fn parse_file(path: &Path) -> Result<ModelMeta> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+}
+
+/// Concrete inputs for one inference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInputs {
+    /// `[n_stat]` statistical features (user + device).
+    pub stat: Vec<f32>,
+    /// `[seq_len * seq_dim]` row-major behavior sequence.
+    pub seq: Vec<f32>,
+    /// `[seq_len]` validity mask.
+    pub seq_mask: Vec<f32>,
+    /// `[n_cloud]` cloud embedding.
+    pub cloud: Vec<f32>,
+}
+
+impl ModelInputs {
+    /// Convert to PJRT literals in the artifact's parameter order.
+    pub fn to_literals(&self, meta: &ModelMeta) -> Result<Vec<xla::Literal>> {
+        if self.stat.len() != meta.n_stat
+            || self.seq.len() != meta.seq_len * meta.seq_dim
+            || self.seq_mask.len() != meta.seq_len
+            || self.cloud.len() != meta.n_cloud
+        {
+            bail!(
+                "input shape mismatch: stat {} seq {} mask {} cloud {} vs meta {meta:?}",
+                self.stat.len(),
+                self.seq.len(),
+                self.seq_mask.len(),
+                self.cloud.len()
+            );
+        }
+        Ok(vec![
+            xla::Literal::vec1(&self.stat),
+            xla::Literal::vec1(&self.seq)
+                .reshape(&[meta.seq_len as i64, meta.seq_dim as i64])?,
+            xla::Literal::vec1(&self.seq_mask),
+            xla::Literal::vec1(&self.cloud),
+        ])
+    }
+}
+
+/// Pack extracted feature values into model inputs.
+///
+/// * `features` — the engine's extracted values, clamped/padded to
+///   `n_user` scalars (vector features contribute their most recent
+///   element; production models consume vectors via the sequence input),
+/// * `recent` — the `seq_len` most recent behavior observations, each a
+///   `seq_dim`-wide row (newest last; shorter histories are masked),
+/// * `cloud` — service-provided embedding (pre-fetched, §2.1).
+pub fn pack_inputs(
+    meta: &ModelMeta,
+    features: &[FeatureValue],
+    device: &[f32],
+    recent: &[Vec<f32>],
+    cloud: &[f32],
+) -> ModelInputs {
+    let mut stat = Vec::with_capacity(meta.n_stat);
+    for i in 0..meta.n_user {
+        let v = features.get(i).map(|f| f.as_scalar()).unwrap_or(0.0);
+        // Squash to a bounded range: raw counts/sums can be huge and the
+        // FM layer is quadratic in its inputs (0.25 keeps the sigmoid
+        // head out of saturation for paper-scale feature counts).
+        stat.push(0.25 * (v.abs() + 1.0).ln() as f32 * v.signum() as f32);
+    }
+    for i in 0..meta.n_device {
+        stat.push(device.get(i).copied().unwrap_or(0.0));
+    }
+
+    let mut seq = vec![0.0f32; meta.seq_len * meta.seq_dim];
+    let mut seq_mask = vec![0.0f32; meta.seq_len];
+    let take = recent.len().min(meta.seq_len);
+    // Newest observations occupy the trailing rows.
+    for (slot, obs) in (meta.seq_len - take..meta.seq_len).zip(&recent[recent.len() - take..]) {
+        for d in 0..meta.seq_dim {
+            seq[slot * meta.seq_dim + d] = obs.get(d).copied().unwrap_or(0.0);
+        }
+        seq_mask[slot] = 1.0;
+    }
+
+    let mut cloud_v = vec![0.0f32; meta.n_cloud];
+    for (i, c) in cloud.iter().take(meta.n_cloud).enumerate() {
+        cloud_v[i] = *c;
+    }
+
+    ModelInputs {
+        stat,
+        seq,
+        seq_mask,
+        cloud: cloud_v,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            n_user: 4,
+            n_device: 2,
+            n_stat: 6,
+            seq_len: 3,
+            seq_dim: 2,
+            n_cloud: 2,
+        }
+    }
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let text = "service x\nn_user 4\nn_device 2\nn_stat 6\nseq_len 3\nseq_dim 2\nn_cloud 2\n";
+        assert_eq!(ModelMeta::parse(text).unwrap(), meta());
+    }
+
+    #[test]
+    fn meta_parse_missing_key_errors() {
+        assert!(ModelMeta::parse("n_user 4\n").is_err());
+    }
+
+    #[test]
+    fn pack_pads_and_masks() {
+        let m = meta();
+        let feats = vec![FeatureValue::Scalar(1.0), FeatureValue::Vector(vec![2.0, 3.0])];
+        let inputs = pack_inputs(&m, &feats, &[0.5, 0.6], &[vec![9.0, 8.0]], &[0.1]);
+        assert_eq!(inputs.stat.len(), 6);
+        // Missing user features pad with 0; device features appended.
+        assert_eq!(inputs.stat[2], 0.0);
+        assert_eq!(inputs.stat[4], 0.5);
+        // One observation -> only the last seq slot valid.
+        assert_eq!(inputs.seq_mask, vec![0.0, 0.0, 1.0]);
+        assert_eq!(&inputs.seq[4..6], &[9.0, 8.0]);
+        assert_eq!(inputs.cloud, vec![0.1, 0.0]);
+    }
+
+    #[test]
+    fn pack_squashes_large_values() {
+        let m = meta();
+        let feats = vec![FeatureValue::Scalar(1e9)];
+        let inputs = pack_inputs(&m, &feats, &[], &[], &[]);
+        assert!(inputs.stat[0] < 8.0);
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let m = meta();
+        let bad = ModelInputs {
+            stat: vec![0.0; 5], // wrong
+            seq: vec![0.0; 6],
+            seq_mask: vec![0.0; 3],
+            cloud: vec![0.0; 2],
+        };
+        assert!(bad.to_literals(&m).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Small in-tree utilities.
+//!
+//! The build image vendors only the `xla` crate closure, so the
+//! deterministic PRNG every workload generator needs lives here instead
+//! of `rand` (see DESIGN.md §Substitutions).
+
+pub mod rng;

@@ -1,0 +1,302 @@
+//! Simulation driver: replay a user trace against the app log and fire
+//! inference requests at the service's frequency, measuring the
+//! end-to-end pipeline (extraction via any [`Extractor`], then model
+//! inference via the PJRT runtime when provided).
+
+use anyhow::Result;
+
+use crate::applog::codec::CodecKind;
+use crate::applog::schema::Catalog;
+use crate::applog::store::{AppLogStore, StoreConfig};
+use crate::engine::online::ExtractionResult;
+use crate::engine::Extractor;
+use crate::runtime::{pack_inputs, ModelRuntime};
+use crate::workload::traces::{log_events, TraceConfig, TraceGenerator};
+
+pub use crate::workload::behavior::{ActivityLevel, Period};
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Time-of-day period (trace shape).
+    pub period: Period,
+    /// User activity level.
+    pub activity: ActivityLevel,
+    /// History replayed before the first measured request (fills the
+    /// feature windows, as a real device's log would be).
+    pub warmup_ms: i64,
+    /// Measured simulation span.
+    pub duration_ms: i64,
+    /// Inference trigger interval.
+    pub inference_interval_ms: i64,
+    /// Trace seed (one per simulated user).
+    pub seed: u64,
+    /// App-log payload codec.
+    pub codec: CodecKind,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            period: Period::Night,
+            activity: ActivityLevel::P70,
+            warmup_ms: 2 * 60 * 60_000, // 2h of history
+            duration_ms: 20 * 60_000,
+            inference_interval_ms: 5_000,
+            seed: 0,
+            codec: CodecKind::Jsonish,
+        }
+    }
+}
+
+/// One measured inference request.
+#[derive(Debug, Clone)]
+pub struct SimRecord {
+    /// Trigger time.
+    pub now: i64,
+    /// Extraction result (values + breakdown + cache stats).
+    pub extraction: ExtractionResult,
+    /// Model inference time, ns (0 when no runtime attached).
+    pub inference_ns: u64,
+    /// Model prediction (NaN when no runtime attached).
+    pub prediction: f32,
+}
+
+impl SimRecord {
+    /// End-to-end model execution latency (extraction + inference).
+    pub fn end_to_end_ns(&self) -> u64 {
+        self.extraction.wall_ns + self.inference_ns
+    }
+}
+
+/// Aggregated outcome of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Per-request records, in trigger order.
+    pub records: Vec<SimRecord>,
+    /// Raw app-log bytes at the end of the run.
+    pub raw_storage_bytes: usize,
+    /// Method-introduced extra storage at the end of the run.
+    pub extra_storage_bytes: usize,
+    /// Events replayed.
+    pub events_logged: usize,
+}
+
+impl SimOutcome {
+    /// Mean end-to-end latency (ms).
+    pub fn mean_ms(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records
+            .iter()
+            .map(|r| r.end_to_end_ns() as f64)
+            .sum::<f64>()
+            / self.records.len() as f64
+            / 1e6
+    }
+
+    /// Mean extraction-only latency (ms).
+    pub fn mean_extraction_ms(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records
+            .iter()
+            .map(|r| r.extraction.wall_ns as f64)
+            .sum::<f64>()
+            / self.records.len() as f64
+            / 1e6
+    }
+
+    /// Mean inference-only latency (ms).
+    pub fn mean_inference_ms(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records
+            .iter()
+            .map(|r| r.inference_ns as f64)
+            .sum::<f64>()
+            / self.records.len() as f64
+            / 1e6
+    }
+
+    /// Latency percentile over end-to-end times (e.g. `0.5`, `0.9`).
+    pub fn percentile_ms(&self, q: f64) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let mut v: Vec<u64> = self.records.iter().map(|r| r.end_to_end_ns()).collect();
+        v.sort_unstable();
+        let idx = ((v.len() - 1) as f64 * q).round() as usize;
+        v[idx] as f64 / 1e6
+    }
+}
+
+/// Derive the model's recent-behavior sequence rows from the log tail
+/// (type id, recency and payload-size summaries per event).
+pub fn recent_observations(store: &AppLogStore, now: i64, seq_len: usize, seq_dim: usize) -> Vec<Vec<f32>> {
+    let rows = store.rows();
+    let end = rows.partition_point(|r| r.timestamp_ms < now);
+    let start = end.saturating_sub(seq_len);
+    rows[start..end]
+        .iter()
+        .map(|r| {
+            let mut obs = vec![0.0f32; seq_dim];
+            obs[0] = r.event_type as f32 / 64.0;
+            if seq_dim > 1 {
+                obs[1] = (((now - r.timestamp_ms) as f32 / 1000.0) + 1.0).ln();
+            }
+            if seq_dim > 2 {
+                obs[2] = (r.payload.len() as f32 / 256.0).min(4.0);
+            }
+            obs
+        })
+        .collect()
+}
+
+/// Run one simulation: replay the trace, trigger extraction (+ optional
+/// model inference) every `inference_interval_ms`.
+pub fn run_simulation(
+    catalog: &Catalog,
+    extractor: &mut dyn Extractor,
+    model: Option<&ModelRuntime>,
+    cfg: &SimConfig,
+) -> Result<SimOutcome> {
+    let generator = TraceGenerator::new(catalog);
+    let trace = generator.generate(&TraceConfig {
+        period: cfg.period,
+        activity: cfg.activity,
+        start_ms: 0,
+        duration_ms: cfg.warmup_ms + cfg.duration_ms,
+        seed: cfg.seed,
+    });
+    let codec = cfg.codec.build();
+    let mut store = AppLogStore::new(StoreConfig::default());
+    let mut next_event = 0usize;
+
+    // Warmup history.
+    let warm_end = trace.partition_point(|e| e.timestamp_ms < cfg.warmup_ms);
+    log_events(&mut store, codec.as_ref(), &trace[..warm_end])?;
+    next_event = next_event.max(warm_end);
+
+    let device_feats = [0.6f32, 0.8, 0.3, 0.5, 0.2, 0.9, 0.1, 0.7];
+    let cloud: Vec<f32> = (0..64).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 - 0.5).collect();
+
+    let mut records = Vec::new();
+    let mut now = cfg.warmup_ms + cfg.inference_interval_ms;
+    let horizon = cfg.warmup_ms + cfg.duration_ms;
+    while now <= horizon {
+        // Replay newly logged behaviors strictly before the trigger.
+        let upto = trace.partition_point(|e| e.timestamp_ms < now);
+        if upto > next_event {
+            log_events(&mut store, codec.as_ref(), &trace[next_event..upto])?;
+            next_event = upto;
+        }
+
+        let extraction = extractor.extract(&store, now)?;
+        let (inference_ns, prediction) = match model {
+            Some(rt) => {
+                let meta = rt.meta();
+                let recent = recent_observations(&store, now, meta.seq_len, meta.seq_dim);
+                let inputs = pack_inputs(meta, &extraction.values, &device_feats, &recent, &cloud);
+                let t0 = std::time::Instant::now();
+                let p = rt.infer(&inputs)?;
+                (t0.elapsed().as_nanos() as u64, p)
+            }
+            None => (0, f32::NAN),
+        };
+        records.push(SimRecord {
+            now,
+            extraction,
+            inference_ns,
+            prediction,
+        });
+        now += cfg.inference_interval_ms;
+    }
+
+    let extra = records
+        .last()
+        .map(|r| r.extraction.extra_storage_bytes)
+        .unwrap_or(0);
+    Ok(SimOutcome {
+        records,
+        raw_storage_bytes: store.storage_bytes(),
+        extra_storage_bytes: extra,
+        events_logged: store.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::schema::CatalogConfig;
+    use crate::baseline::naive::NaiveExtractor;
+    use crate::engine::config::EngineConfig;
+    use crate::engine::online::Engine;
+    use crate::features::catalog::{generate_feature_set, FeatureSetConfig, MEANINGFUL_WINDOWS};
+
+    fn quick_cfg() -> SimConfig {
+        SimConfig {
+            warmup_ms: 10 * 60_000,
+            duration_ms: 4 * 60_000,
+            inference_interval_ms: 30_000,
+            ..SimConfig::default()
+        }
+    }
+
+    fn specs(cat: &Catalog) -> Vec<crate::features::spec::FeatureSpec> {
+        generate_feature_set(
+            cat,
+            &FeatureSetConfig {
+                num_features: 20,
+                num_types: 6,
+                identical_share: 0.7,
+                windows: MEANINGFUL_WINDOWS[..4].to_vec(),
+                multi_type_prob: 0.2,
+                seed: 3,
+            },
+        )
+    }
+
+    #[test]
+    fn simulation_produces_expected_request_count() {
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        let mut naive = NaiveExtractor::new(specs(&cat), CodecKind::Jsonish);
+        let out = run_simulation(&cat, &mut naive, None, &quick_cfg()).unwrap();
+        assert_eq!(out.records.len(), 8); // 4 min / 30 s
+        assert!(out.events_logged > 0);
+        assert!(out.mean_ms() > 0.0);
+    }
+
+    #[test]
+    fn engine_and_naive_agree_throughout_simulation() {
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        let fs = specs(&cat);
+        let cfg = quick_cfg();
+        let mut naive = NaiveExtractor::new(fs.clone(), CodecKind::Jsonish);
+        let mut engine = Engine::new(fs, &cat, EngineConfig::autofeature()).unwrap();
+        let a = run_simulation(&cat, &mut naive, None, &cfg).unwrap();
+        let b = run_simulation(&cat, &mut engine, None, &cfg).unwrap();
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.now, y.now);
+            for (va, vb) in x.extraction.values.iter().zip(&y.extraction.values) {
+                assert!(va.approx_eq(vb, 1e-9), "{va:?} vs {vb:?} @ {}", x.now);
+            }
+        }
+    }
+
+    #[test]
+    fn recent_observations_shape() {
+        let cat = Catalog::generate(&CatalogConfig::small(), 1);
+        let gen = TraceGenerator::new(&cat);
+        let events = gen.generate(&TraceConfig::default());
+        let codec = CodecKind::Jsonish.build();
+        let mut store = AppLogStore::new(StoreConfig::default());
+        log_events(&mut store, codec.as_ref(), &events).unwrap();
+        let obs = recent_observations(&store, 30 * 60_000, 16, 4);
+        assert!(obs.len() <= 16);
+        assert!(obs.iter().all(|o| o.len() == 4));
+    }
+}

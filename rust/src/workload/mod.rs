@@ -1,0 +1,15 @@
+//! Workload substrate: behavior catalogs, synthetic user traces and the
+//! five evaluated mobile services.
+//!
+//! The paper evaluates on 10 real users' traces across noon / evening /
+//! night periods (§4.1, Appendix A). We reproduce the *published
+//! statistics* of those traces — per-type frequencies per 10-minute
+//! segment, activity percentiles (P30 < 5 behaviors/10 min, P90 > 45),
+//! and the longer uninterrupted night sessions §4.2 uses to explain the
+//! higher night-time speedups — with a seeded generator
+//! ([`traces::TraceGenerator`]). See DESIGN.md §Substitutions.
+
+pub mod behavior;
+pub mod driver;
+pub mod services;
+pub mod traces;

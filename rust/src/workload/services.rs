@@ -1,0 +1,194 @@
+//! The five evaluated mobile services (paper §4.1, Fig. 12).
+//!
+//! | id | service                | features | types | identical-condition share |
+//! |----|------------------------|----------|-------|---------------------------|
+//! | CP | Content Preloading     | 86       | 27    | 80.2% |
+//! | KP | Keyword Prediction     | 53       | 22    | 85%   |
+//! | SR | Search Ranking         | 40       | 10    | 59%   |
+//! | PR | Product Recommendation | 103      | 21    | 80.6% |
+//! | VR | Video Recommendation   | 134      | 24    | 71%   |
+//!
+//! Inference frequency varies widely across services (Fig. 12b); the
+//! intervals below put CP/VR at the high-frequency end (triggered per
+//! video swipe) and SR at the low end (per search).
+
+use crate::applog::schema::Catalog;
+use crate::features::catalog::{generate_feature_set, FeatureSetConfig, MEANINGFUL_WINDOWS};
+use crate::features::spec::FeatureSpec;
+
+/// The five services of §4.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ServiceKind {
+    /// Content Preloading (video apps).
+    CP,
+    /// Keyword Prediction (search engines).
+    KP,
+    /// Search Ranking.
+    SR,
+    /// Product Recommendation (e-commerce).
+    PR,
+    /// Video Recommendation.
+    VR,
+}
+
+impl ServiceKind {
+    /// All five services, in paper order.
+    pub const ALL: [ServiceKind; 5] = [
+        ServiceKind::CP,
+        ServiceKind::KP,
+        ServiceKind::SR,
+        ServiceKind::PR,
+        ServiceKind::VR,
+    ];
+
+    /// Lower-case id used in artifact file names (`model_<id>.hlo.txt`).
+    pub fn id(&self) -> &'static str {
+        match self {
+            ServiceKind::CP => "cp",
+            ServiceKind::KP => "kp",
+            ServiceKind::SR => "sr",
+            ServiceKind::PR => "pr",
+            ServiceKind::VR => "vr",
+        }
+    }
+
+    /// Human-readable name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServiceKind::CP => "Content Preloading",
+            ServiceKind::KP => "Keyword Prediction",
+            ServiceKind::SR => "Search Ranking",
+            ServiceKind::PR => "Product Recommendation",
+            ServiceKind::VR => "Video Recommendation",
+        }
+    }
+
+    /// Parse from the lower-case id.
+    pub fn from_id(s: &str) -> Option<ServiceKind> {
+        ServiceKind::ALL.iter().copied().find(|k| k.id() == s)
+    }
+
+    /// Fig. 12a statistics: (num user features, num behavior types,
+    /// identical `<event_names, time_range>` condition share §4.2).
+    pub fn stats(&self) -> (usize, usize, f64) {
+        match self {
+            ServiceKind::CP => (86, 27, 0.802),
+            ServiceKind::KP => (53, 22, 0.85),
+            ServiceKind::SR => (40, 10, 0.59),
+            ServiceKind::PR => (103, 21, 0.806),
+            ServiceKind::VR => (134, 24, 0.71),
+        }
+    }
+
+    /// Online inference interval (Fig. 12b's frequency spread).
+    pub fn inference_interval_ms(&self) -> i64 {
+        match self {
+            ServiceKind::CP => 2_000,  // per video swipe / preload tick
+            ServiceKind::KP => 3_000,  // per keystroke burst
+            ServiceKind::SR => 20_000, // per search
+            ServiceKind::PR => 8_000,  // per browse page
+            ServiceKind::VR => 5_000,  // per watch completion
+        }
+    }
+
+    /// Deterministic per-service seed for feature-set generation.
+    fn seed(&self) -> u64 {
+        match self {
+            ServiceKind::CP => 0xC0,
+            ServiceKind::KP => 0xC1,
+            ServiceKind::SR => 0xC2,
+            ServiceKind::PR => 0xC3,
+            ServiceKind::VR => 0xC4,
+        }
+    }
+}
+
+/// A fully-specified service: its feature set over a concrete catalog.
+#[derive(Debug, Clone)]
+pub struct ServiceSpec {
+    /// Which service.
+    pub kind: ServiceKind,
+    /// The model's user-feature conditions.
+    pub features: Vec<FeatureSpec>,
+    /// Online inference interval.
+    pub inference_interval_ms: i64,
+}
+
+impl ServiceSpec {
+    /// Instantiate a service's feature set over `catalog` (deterministic).
+    pub fn build(kind: ServiceKind, catalog: &Catalog) -> ServiceSpec {
+        let (num_features, num_types, identical_share) = kind.stats();
+        let cfg = FeatureSetConfig {
+            num_features,
+            num_types,
+            identical_share,
+            windows: MEANINGFUL_WINDOWS.to_vec(),
+            multi_type_prob: 0.25,
+            seed: kind.seed(),
+        };
+        ServiceSpec {
+            kind,
+            features: generate_feature_set(catalog, &cfg),
+            inference_interval_ms: kind.inference_interval_ms(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::schema::{Catalog, CatalogConfig};
+    use crate::features::catalog::identical_condition_share;
+
+    #[test]
+    fn feature_counts_match_fig12a() {
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        for kind in ServiceKind::ALL {
+            let spec = ServiceSpec::build(kind, &cat);
+            assert_eq!(spec.features.len(), kind.stats().0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn identical_share_tracks_paper() {
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        for kind in ServiceKind::ALL {
+            let spec = ServiceSpec::build(kind, &cat);
+            let got = identical_condition_share(&spec.features);
+            let want = kind.stats().2;
+            assert!(
+                (got - want).abs() < 0.12,
+                "{kind:?}: want {want} got {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn distinct_type_counts_close_to_fig12a() {
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        for kind in ServiceKind::ALL {
+            let spec = ServiceSpec::build(kind, &cat);
+            let mut used: Vec<_> = spec
+                .features
+                .iter()
+                .flat_map(|f| f.event_types.clone())
+                .collect();
+            used.sort_unstable();
+            used.dedup();
+            let want = kind.stats().1;
+            assert!(
+                used.len() >= want * 9 / 10 && used.len() <= want + 3,
+                "{kind:?}: want ~{want} got {}",
+                used.len()
+            );
+        }
+    }
+
+    #[test]
+    fn id_roundtrip() {
+        for kind in ServiceKind::ALL {
+            assert_eq!(ServiceKind::from_id(kind.id()), Some(kind));
+        }
+        assert_eq!(ServiceKind::from_id("nope"), None);
+    }
+}

@@ -1,0 +1,360 @@
+//! Property-based invariant tests (hand-rolled generator sweep; the
+//! build image vendors no proptest — see DESIGN.md §Substitutions).
+//!
+//! Each property runs against many seeded random instances: random
+//! catalogs, random feature sets (random condition tuples, windows,
+//! attrs, comp funcs), random event logs and random inference schedules.
+
+use autofeature::applog::codec::{AttrCodec, BinaryCodec, CodecKind, JsonishCodec};
+use autofeature::applog::event::AttrValue;
+use autofeature::applog::query::{count, retrieve, retrieve_scan, TimeWindow};
+use autofeature::applog::schema::{Catalog, CatalogConfig};
+use autofeature::applog::store::{AppLogStore, StoreConfig};
+use autofeature::baseline::naive::NaiveExtractor;
+use autofeature::cache::policy::{select, selection_cost, selection_utility, PolicyKind};
+use autofeature::cache::valuation::Candidate;
+use autofeature::engine::config::EngineConfig;
+use autofeature::engine::online::Engine;
+use autofeature::engine::Extractor;
+use autofeature::features::compute::CompFunc;
+use autofeature::features::spec::{FeatureId, FeatureSpec, TimeRange};
+use autofeature::util::rng::SimRng;
+
+const CASES: u64 = 30;
+
+/// Random feature spec over a catalog.
+fn random_spec(rng: &mut SimRng, catalog: &Catalog, id: u32) -> FeatureSpec {
+    let n_types = rng.range_u(1, 4);
+    let event_types: Vec<u16> = (0..n_types)
+        .map(|_| rng.range_u(0, catalog.len()) as u16)
+        .collect();
+    let windows = [
+        TimeRange::secs(30),
+        TimeRange::mins(2),
+        TimeRange::mins(5),
+        TimeRange::mins(17), // deliberately non-"meaningful"
+        TimeRange::mins(30),
+        TimeRange::hours(1),
+    ];
+    let min_attrs = event_types
+        .iter()
+        .map(|&t| catalog.schema(t).attrs.len())
+        .min()
+        .unwrap()
+        .max(1);
+    let n_attrs = rng.range_u(1, min_attrs.min(4) + 1);
+    let attrs: Vec<u16> = (0..n_attrs)
+        .map(|_| rng.range_u(0, min_attrs) as u16)
+        .collect();
+    let comps = [
+        CompFunc::Count,
+        CompFunc::Sum,
+        CompFunc::Mean,
+        CompFunc::Min,
+        CompFunc::Max,
+        CompFunc::Latest,
+        CompFunc::Earliest,
+        CompFunc::DistinctCount,
+        CompFunc::Concat { max_len: 4 },
+        CompFunc::DecayedSum {
+            half_life_ms: 60_000,
+        },
+    ];
+    FeatureSpec {
+        id: FeatureId(id),
+        name: format!("rf{id}"),
+        event_types,
+        window: windows[rng.range_u(0, windows.len())],
+        attrs,
+        comp: comps[rng.range_u(0, comps.len())],
+    }
+    .normalized()
+}
+
+/// Random log: bursty arrivals incl. equal-timestamp runs (tie-break
+/// coverage).
+fn random_store(rng: &mut SimRng, catalog: &Catalog, codec: &dyn AttrCodec, n: usize) -> AppLogStore {
+    let mut store = AppLogStore::new(StoreConfig::default());
+    let mut ts = 0i64;
+    for _ in 0..n {
+        // 20% of events share the previous timestamp exactly.
+        if !rng.bool_p(0.2) {
+            ts += rng.range_i(1, 5_000);
+        }
+        let t = rng.range_u(0, catalog.len()) as u16;
+        let attrs = catalog.schema(t).sample_attrs(rng);
+        store.append(t, ts, codec.encode(&attrs)).unwrap();
+    }
+    store
+}
+
+/// PROPERTY: every engine configuration extracts exactly the same
+/// values as independent naive extraction, for random feature sets over
+/// random logs at random trigger times.
+#[test]
+fn prop_optimized_extraction_equals_naive() {
+    for case in 0..CASES {
+        let mut rng = SimRng::seed_from_u64(1000 + case);
+        let catalog = Catalog::generate(&CatalogConfig::small(), case);
+        let codec = JsonishCodec;
+        let store = random_store(&mut rng, &catalog, &codec, 400);
+        let n_feats = rng.range_u(1, 25);
+        let specs: Vec<FeatureSpec> = (0..n_feats)
+            .map(|i| random_spec(&mut rng, &catalog, i as u32))
+            .collect();
+        let now = store.latest_timestamp().unwrap() + rng.range_i(1, 60_000);
+
+        let mut naive = NaiveExtractor::new(specs.clone(), CodecKind::Jsonish);
+        let want = naive.extract(&store, now).unwrap().values;
+        for cfg in [
+            EngineConfig::autofeature(),
+            EngineConfig::fusion_only(),
+            EngineConfig::cache_only(),
+            EngineConfig::naive(),
+            EngineConfig {
+                hierarchical_filter: false,
+                ..EngineConfig::autofeature()
+            },
+        ] {
+            let mut engine = Engine::new(specs.clone(), &catalog, cfg).unwrap();
+            let got = engine.extract(&store, now).unwrap().values;
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    a.approx_eq(b, 1e-9),
+                    "case {case} cfg fusion={} cache={} feature {i} ({:?}): {a:?} vs {b:?}",
+                    cfg.enable_fusion,
+                    cfg.enable_cache,
+                    specs[i]
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY: cached cross-execution extraction equals fresh extraction
+/// at every step of a random inference schedule, for every policy and
+/// random (possibly tiny) budgets — the cache is transparent.
+#[test]
+fn prop_cache_is_transparent_across_schedules() {
+    for case in 0..CASES {
+        let mut rng = SimRng::seed_from_u64(2000 + case);
+        let catalog = Catalog::generate(&CatalogConfig::small(), case * 7 + 1);
+        let codec = JsonishCodec;
+        let n_feats = rng.range_u(1, 15);
+        let specs: Vec<FeatureSpec> = (0..n_feats)
+            .map(|i| random_spec(&mut rng, &catalog, i as u32))
+            .collect();
+        let policy = match rng.range_u(0, 4) {
+            0 => PolicyKind::Greedy,
+            1 => PolicyKind::DpKnapsack,
+            2 => PolicyKind::Random(case),
+            _ => PolicyKind::All,
+        };
+        let budget = rng.range_u(256, 128 * 1024);
+        let mut engine = Engine::new(
+            specs.clone(),
+            &catalog,
+            EngineConfig {
+                policy,
+                cache_budget_bytes: budget,
+                ..EngineConfig::autofeature()
+            },
+        )
+        .unwrap();
+        let mut naive = NaiveExtractor::new(specs.clone(), CodecKind::Jsonish);
+
+        // Random incremental log + random trigger schedule. Logging is
+        // causal: events appended after an extraction carry timestamps
+        // at/after that trigger (mobile behavior logging records the
+        // current time), which is the engine's watermark contract.
+        let mut store = AppLogStore::new(StoreConfig::default());
+        let mut ts = 0i64;
+        let mut now = 0i64;
+        for step in 0..8 {
+            ts = ts.max(now);
+            let burst = rng.range_u(5, 80);
+            for _ in 0..burst {
+                if !rng.bool_p(0.15) {
+                    ts += rng.range_i(1, 4_000);
+                }
+                let t = rng.range_u(0, catalog.len()) as u16;
+                let attrs = catalog.schema(t).sample_attrs(&mut rng);
+                store.append(t, ts, codec.encode(&attrs)).unwrap();
+            }
+            now = (ts + rng.range_i(1, 30_000)).max(now + 1);
+            let got = engine.extract(&store, now).unwrap();
+            let want = naive.extract(&store, now).unwrap();
+            assert!(
+                got.cache_bytes <= budget,
+                "case {case} step {step}: budget exceeded {} > {budget}",
+                got.cache_bytes
+            );
+            for (i, (a, b)) in got.values.iter().zip(&want.values).enumerate() {
+                assert!(
+                    a.approx_eq(b, 1e-9),
+                    "case {case} step {step} policy {policy:?} feature {i}: {a:?} vs {b:?}"
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY: both codecs round-trip arbitrary attribute vectors exactly.
+#[test]
+fn prop_codec_roundtrip() {
+    for case in 0..200u64 {
+        let mut rng = SimRng::seed_from_u64(3000 + case);
+        let n = rng.range_u(0, 40);
+        let mut attrs = Vec::new();
+        for i in 0..n {
+            let v = match rng.range_u(0, 3) {
+                0 => AttrValue::Int(rng.range_i(i64::MIN / 2, i64::MAX / 2)),
+                1 => AttrValue::Float(f64::from_bits(rng.next_u64() >> 12)), // finite
+                _ => {
+                    let len = rng.range_u(0, 24);
+                    let s: String = (0..len)
+                        .map(|_| {
+                            // Include the escapes the codec must handle.
+                            let c = rng.range_u(0, 40) as u8;
+                            match c {
+                                0 => '"',
+                                1 => '\\',
+                                c => (b' ' + c) as char,
+                            }
+                        })
+                        .collect();
+                    AttrValue::Str(s)
+                }
+            };
+            attrs.push((i as u16 * 2, v));
+        }
+        for codec in [&JsonishCodec as &dyn AttrCodec, &BinaryCodec] {
+            let decoded = codec.decode(&codec.encode(&attrs)).unwrap();
+            assert_eq!(decoded.len(), attrs.len(), "case {case} {}", codec.name());
+            for ((ia, va), (ib, vb)) in attrs.iter().zip(&decoded) {
+                assert_eq!(ia, ib);
+                match (va, vb) {
+                    (AttrValue::Float(a), AttrValue::Float(b)) => {
+                        assert!(
+                            (a - b).abs() <= 1e-12 * a.abs().max(1.0),
+                            "case {case}: {a} vs {b}"
+                        )
+                    }
+                    _ => assert_eq!(va, vb, "case {case}"),
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: the indexed retrieve equals the linear-scan oracle for
+/// random queries, and `count` agrees.
+#[test]
+fn prop_indexed_retrieve_equals_scan() {
+    for case in 0..CASES {
+        let mut rng = SimRng::seed_from_u64(4000 + case);
+        let catalog = Catalog::generate(&CatalogConfig::small(), case);
+        let store = random_store(&mut rng, &catalog, &BinaryCodec, 300);
+        let latest = store.latest_timestamp().unwrap();
+        for _ in 0..20 {
+            let n_types = rng.range_u(1, 5);
+            let types: Vec<u16> = (0..n_types).map(|_| rng.range_u(0, 8) as u16).collect();
+            let a = rng.range_i(-1000, latest + 1000);
+            let b = rng.range_i(-1000, latest + 1000);
+            let w = TimeWindow {
+                start_ms: a.min(b),
+                end_ms: a.max(b),
+            };
+            let fast = retrieve(&store, &types, w);
+            let slow = retrieve_scan(&store, &types, w);
+            assert_eq!(fast.len(), slow.len(), "case {case} {types:?} {w:?}");
+            for (x, y) in fast.iter().zip(&slow) {
+                assert_eq!(x.seq_no, y.seq_no);
+            }
+            for &t in &types {
+                assert_eq!(count(&store, t, w), retrieve(&store, &[t], w).len());
+            }
+        }
+    }
+}
+
+/// PROPERTY: greedy knapsack with the single-item guard achieves at
+/// least half the DP optimum and never exceeds the budget.
+#[test]
+fn prop_greedy_two_approximation() {
+    for case in 0..200u64 {
+        let mut rng = SimRng::seed_from_u64(5000 + case);
+        let n = rng.range_u(1, 20);
+        let cands: Vec<Candidate> = (0..n)
+            .map(|i| {
+                let cost = rng.range_u(64, 32_768);
+                let utility = rng.range_f(0.0, 5_000.0);
+                Candidate {
+                    event_type: i as u16,
+                    utility,
+                    cost_bytes: cost,
+                    ratio: utility / cost as f64,
+                }
+            })
+            .collect();
+        let budget = rng.range_u(256, 96 * 1024);
+        let g = select(PolicyKind::Greedy, &cands, budget);
+        let d = select(PolicyKind::DpKnapsack, &cands, budget);
+        assert!(selection_cost(&cands, &g) <= budget, "case {case}");
+        assert!(selection_cost(&cands, &d) <= budget, "case {case}");
+        let gu = selection_utility(&cands, &g);
+        let du = selection_utility(&cands, &d);
+        assert!(
+            gu >= 0.5 * du - 1e-6,
+            "case {case}: greedy {gu} < half of dp {du}"
+        );
+    }
+}
+
+/// PROPERTY: random feature sets never make the optimizer lose or
+/// duplicate a feature (plan covers each feature's (type, attrs) exactly
+/// once per type).
+#[test]
+fn prop_plan_covers_features_exactly() {
+    use autofeature::optimizer::fusion::fuse;
+    for case in 0..CASES {
+        let mut rng = SimRng::seed_from_u64(6000 + case);
+        let catalog = Catalog::generate(&CatalogConfig::small(), case);
+        let n = rng.range_u(1, 30);
+        let specs: Vec<FeatureSpec> = (0..n)
+            .map(|i| random_spec(&mut rng, &catalog, i as u32))
+            .collect();
+        for fusion in [true, false] {
+            let plan = fuse(&specs, fusion);
+            // (feature_idx, event_type) pairs must match the spec set
+            // exactly.
+            let mut got: Vec<(usize, u16)> = plan
+                .lanes
+                .iter()
+                .flat_map(|l| {
+                    l.groups.iter().flat_map(move |g| {
+                        g.members.iter().map(move |m| (m.feature_idx, l.event_type))
+                    })
+                })
+                .collect();
+            got.sort_unstable();
+            let mut want: Vec<(usize, u16)> = specs
+                .iter()
+                .enumerate()
+                .flat_map(|(i, s)| s.event_types.iter().map(move |&t| (i, t)))
+                .collect();
+            want.sort_unstable();
+            assert_eq!(got, want, "case {case} fusion={fusion}");
+            // Lane max window is the max over its members.
+            for lane in &plan.lanes {
+                let max = lane
+                    .groups
+                    .iter()
+                    .map(|g| g.window.duration_ms)
+                    .max()
+                    .unwrap();
+                assert_eq!(lane.max_window.duration_ms, max);
+            }
+        }
+    }
+}

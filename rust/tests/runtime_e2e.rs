@@ -1,0 +1,106 @@
+//! Runtime end-to-end numerics: load every AOT artifact on the PJRT CPU
+//! client and verify the Rust-side execution reproduces the output the
+//! JAX/Pallas model computed at `make artifacts` time.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` has not
+//! been built — run `make artifacts` first.
+
+use std::path::PathBuf;
+
+use autofeature::runtime::{ModelInputs, ModelRuntime};
+use autofeature::workload::services::ServiceKind;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifact_dir().join("model_sr.hlo.txt").exists()
+}
+
+/// Parse the `expected.txt` dump written by `python/compile/aot.py`.
+fn parse_expected(service: ServiceKind) -> (ModelInputs, f32) {
+    let path = artifact_dir().join(format!("model_{}.expected.txt", service.id()));
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut fields = std::collections::HashMap::new();
+    for line in text.lines() {
+        let (name, rest) = line.split_once(' ').unwrap();
+        let vals: Vec<f32> = rest.split_whitespace().map(|v| v.parse().unwrap()).collect();
+        fields.insert(name.to_string(), vals);
+    }
+    let inputs = ModelInputs {
+        stat: fields["stat"].clone(),
+        seq: fields["seq"].clone(),
+        seq_mask: fields["seq_mask"].clone(),
+        cloud: fields["cloud"].clone(),
+    };
+    (inputs, fields["output"][0])
+}
+
+#[test]
+fn artifacts_execute_and_match_python_numerics() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    for service in ServiceKind::ALL {
+        let rt = ModelRuntime::load(&artifact_dir(), service).unwrap();
+        let (inputs, expected) = parse_expected(service);
+        let got = rt.infer(&inputs).unwrap();
+        assert!(
+            (got - expected).abs() < 1e-5,
+            "{service:?}: rust PJRT {got} vs python {expected}"
+        );
+        // Predictions are probabilities.
+        assert!(got > 0.0 && got < 1.0);
+    }
+}
+
+#[test]
+fn meta_matches_service_feature_counts() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    for service in ServiceKind::ALL {
+        let rt = ModelRuntime::load(&artifact_dir(), service).unwrap();
+        let meta = rt.meta();
+        assert_eq!(meta.n_user, service.stats().0, "{service:?}");
+        assert_eq!(meta.n_stat, meta.n_user + meta.n_device);
+        assert_eq!(rt.service(), service);
+        assert_eq!(rt.platform(), "cpu");
+    }
+}
+
+#[test]
+fn inference_is_deterministic_and_input_sensitive() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let rt = ModelRuntime::load(&artifact_dir(), ServiceKind::SR).unwrap();
+    let (inputs, _) = parse_expected(ServiceKind::SR);
+    let a = rt.infer(&inputs).unwrap();
+    let b = rt.infer(&inputs).unwrap();
+    assert_eq!(a, b);
+    let mut perturbed = inputs.clone();
+    perturbed.stat[0] += 1.0;
+    let c = rt.infer(&perturbed).unwrap();
+    assert_ne!(a, c, "model ignores its stat inputs");
+}
+
+#[test]
+fn wrong_shapes_are_rejected() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let rt = ModelRuntime::load(&artifact_dir(), ServiceKind::KP).unwrap();
+    let bad = ModelInputs {
+        stat: vec![0.0; 3],
+        seq: vec![0.0; 4],
+        seq_mask: vec![0.0; 2],
+        cloud: vec![0.0; 1],
+    };
+    assert!(rt.infer(&bad).is_err());
+}
