@@ -1,0 +1,133 @@
+//! FLEET VALIDATION DRIVER: the multi-user session pool end to end.
+//!
+//! Serves 64 concurrent user sessions of one service from a single
+//! process the way a production host would: the extraction plan is
+//! compiled **once** offline and shared (`Arc<CompiledEngine>`) across
+//! every session; per-user mutable state (cache, watermarks) lives in
+//! lightweight sessions partitioned across worker-thread shards; a
+//! global cache-budget arbiter keeps the *sum* of all session caches
+//! under one host-wide cap, redistributing shares as sessions finish;
+//! and per-user latencies are pooled into fleet p50/p95/p99.
+//!
+//! Model inference runs through the deterministic pure-Rust surrogate
+//! backend (no XLA toolchain needed); swap in real artifacts via the
+//! `pjrt` feature and `harness::try_load_model`.
+//!
+//! Run with: `cargo run --release --example fleet_simulation [--quick]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use autofeature::coordinator::pool::{PoolConfig, SessionConfig, SessionPool};
+use autofeature::engine::offline::compile;
+use autofeature::harness;
+use autofeature::runtime::{InferenceBackend, SurrogateModel};
+use autofeature::workload::behavior::{ActivityLevel, Period};
+use autofeature::workload::driver::SimConfig;
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+
+const NUM_USERS: usize = 64;
+const CACHE_CAP_BYTES: usize = 2 * 1024 * 1024; // 2 MiB across the host
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let catalog = harness::eval_catalog();
+    let kind = ServiceKind::VR;
+    let svc = ServiceSpec::build(kind, &catalog);
+    let (warmup_min, duration_min) = if quick { (10, 2) } else { (30, 5) };
+
+    println!("AutoFeature multi-user fleet simulation");
+    println!(
+        "  service {} | {} users | {} min measured each | {} KiB global cache cap",
+        kind.name(),
+        NUM_USERS,
+        duration_min,
+        CACHE_CAP_BYTES / 1024
+    );
+
+    // Offline phase: compile the service's extraction plan exactly once.
+    let t0 = Instant::now();
+    let cfg = PoolConfig {
+        num_shards: 8,
+        global_cache_cap_bytes: CACHE_CAP_BYTES,
+        ..PoolConfig::default()
+    };
+    let compiled = Arc::new(compile(svc.features.clone(), &catalog, &cfg.engine)?);
+    println!(
+        "  compiled once in {:.2} ms: {} lanes for {} features (shared by all sessions)\n",
+        t0.elapsed().as_secs_f64() * 1e3,
+        compiled.plan.num_retrieves(),
+        compiled.plan.features.len()
+    );
+    let pool = SessionPool::from_shared(Arc::clone(&compiled), cfg);
+
+    // Per-user seeded trace fan-out.
+    let base = SimConfig {
+        period: Period::Evening,
+        activity: ActivityLevel::P70,
+        warmup_ms: warmup_min * 60_000,
+        duration_ms: duration_min * 60_000,
+        inference_interval_ms: svc.inference_interval_ms,
+        seed: 2024,
+        codec: Default::default(),
+    };
+    let users = SessionConfig::fleet(&base, NUM_USERS);
+
+    // Online phase: every session through its own producer/consumer
+    // loop, sharded over worker threads, with surrogate model inference.
+    let surrogate = SurrogateModel::for_service(kind);
+    let model: Option<&(dyn InferenceBackend + Sync)> = Some(&surrogate);
+    let t0 = Instant::now();
+    let report = pool.run(&catalog, &users, model)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    assert_eq!(report.sessions.len(), NUM_USERS);
+    assert!(
+        report.peak_total_cache_bytes <= report.global_cache_cap_bytes,
+        "arbiter cap violated: {} > {}",
+        report.peak_total_cache_bytes,
+        report.global_cache_cap_bytes
+    );
+
+    let busiest = report
+        .sessions
+        .iter()
+        .max_by_key(|s| s.events_logged)
+        .expect("non-empty fleet");
+    println!(
+        "fleet: {} requests, {} events across {} sessions in {:.2} s wall ({:.0} req/s)",
+        report.total_requests(),
+        report.total_events_logged(),
+        report.sessions.len(),
+        wall_s,
+        report.total_requests() as f64 / wall_s.max(1e-9),
+    );
+    println!(
+        "  latency p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  (mean {:.3} ms, extraction share {:.0}%)",
+        report.fleet.p50_ms,
+        report.fleet.p95_ms,
+        report.fleet.p99_ms,
+        report.fleet.mean_ms,
+        report.fleet.extraction_share * 100.0,
+    );
+    println!(
+        "  cache: peak total {:.1} KiB <= cap {:.0} KiB (busiest user logged {} events, pred {:.4})",
+        report.peak_total_cache_bytes as f64 / 1024.0,
+        report.global_cache_cap_bytes as f64 / 1024.0,
+        busiest.events_logged,
+        busiest.last_prediction,
+    );
+    println!("\nper-user spread (first 8 sessions):");
+    for s in report.sessions.iter().take(8) {
+        println!(
+            "  user {:2}: {:3} reqs | p50 {:7.3} ms | peak cache {:6.1} KiB | pred {:.4}",
+            s.user_id,
+            s.requests,
+            s.metrics.percentile_ms(0.5),
+            s.peak_cache_bytes as f64 / 1024.0,
+            s.last_prediction,
+        );
+    }
+    Ok(())
+}

@@ -1,4 +1,4 @@
-//! END-TO-END VALIDATION DRIVER (see DESIGN.md / EXPERIMENTS.md).
+//! END-TO-END VALIDATION DRIVER (see DESIGN.md §3).
 //!
 //! Exercises the full three-layer stack on a realistic workload: for each
 //! of the paper's five mobile services (CP/KP/SR/PR/VR), replays a

@@ -1,0 +1,14 @@
+//! Bench: multi-user session-pool scaling — fleet latency percentiles
+//! and wall-clock throughput as the shard count grows, one shared
+//! compiled plan across all sessions (ROADMAP scaling direction).
+//! `BENCH_QUICK=1` shrinks the fleet for smoke runs.
+
+mod common;
+
+use autofeature::harness::experiments;
+
+fn main() {
+    common::run("fleet_scaling", || {
+        experiments::ext_fleet(common::scale()).map(|_| ())
+    });
+}

@@ -3,7 +3,7 @@
 //! Reports ns/op for: codec decode (jsonish vs binary), indexed
 //! retrieve, hierarchical filter walk vs direct walk, cache-row
 //! projection, and a full AutoFeature extraction on the VR service.
-//! Before/after numbers from this bench drive EXPERIMENTS.md §Perf.
+//! Before/after numbers from this bench drive DESIGN.md §Perf.
 
 mod common;
 

@@ -28,9 +28,14 @@ impl TimeWindow {
     /// The paper's `timestamp > now - time_range` window, i.e.
     /// `[now - range, now)` with `end` exclusive (events logged at the
     /// trigger instant belong to the *next* execution).
+    ///
+    /// The start is clamped to the log epoch (t = 0): at session start a
+    /// feature window can exceed the whole log history, and a negative
+    /// `start_ms` would leak into downstream state such as cache
+    /// watermarks ([`crate::cache::entry::CachedLane`]).
     pub fn last(now: TimestampMs, range_ms: i64) -> Self {
         TimeWindow {
-            start_ms: now - range_ms,
+            start_ms: (now - range_ms).max(0),
             end_ms: now,
         }
     }
@@ -193,6 +198,19 @@ mod tests {
     fn unknown_type_is_empty() {
         let s = store();
         assert!(retrieve(&s, &[42], TimeWindow::last(100_000, 100_000)).is_empty());
+    }
+
+    #[test]
+    fn last_clamps_to_epoch_when_window_exceeds_history() {
+        // Regression: `now < range_ms` used to produce a negative start.
+        let w = TimeWindow::last(5_000, 60_000);
+        assert_eq!(w.start_ms, 0);
+        assert_eq!(w.end_ms, 5_000);
+        let s = store();
+        let out = retrieve(&s, &[0, 1, 2, 3], w);
+        assert_eq!(out.len(), 5); // events at 0..5s
+        // Unaffected when the window fits the history.
+        assert_eq!(TimeWindow::last(60_000, 5_000).start_ms, 55_000);
     }
 
     #[test]

@@ -1,0 +1,158 @@
+//! Global cache-budget arbiter for multi-session deployments.
+//!
+//! One host process serving many user sessions (the
+//! [`crate::coordinator::pool::SessionPool`]) must keep the *sum* of all
+//! per-session cache footprints under a device- or host-wide cap. The
+//! arbiter divides the cap evenly across live sessions and redistributes
+//! it on session churn: when a session completes, the survivors pick up
+//! the freed share at their next extraction via the engine's existing
+//! dynamic-budget hook ([`crate::engine::online::Engine::set_cache_budget`],
+//! which evicts lowest-priority lanes when shrinking).
+//!
+//! Invariant: every live session's applied budget is `cap / live` as of
+//! some instant at which `live` was no larger than it is now (live only
+//! shrinks), so the sum of applied budgets — and therefore the total
+//! cached bytes — never exceeds `cap`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Divides a global cache cap across live sessions and tracks the
+/// fleet-wide cache footprint. All methods are `&self`: one arbiter is
+/// shared by every pool worker thread.
+#[derive(Debug)]
+pub struct CacheArbiter {
+    cap_bytes: usize,
+    live: AtomicUsize,
+    /// Last reported cache bytes per session slot (each slot is written
+    /// only by the worker thread that owns the session).
+    usage: Vec<AtomicUsize>,
+    /// Running sum of all slots, maintained by delta so reporting stays
+    /// O(1) per extraction regardless of fleet size.
+    total: AtomicUsize,
+    /// Peak of `total` ever observed.
+    peak_total: AtomicUsize,
+}
+
+impl CacheArbiter {
+    /// Create an arbiter for `num_sessions` initially-live sessions
+    /// under a global `cap_bytes`. Session slots are `0..num_sessions`.
+    pub fn new(cap_bytes: usize, num_sessions: usize) -> CacheArbiter {
+        CacheArbiter {
+            cap_bytes,
+            live: AtomicUsize::new(num_sessions),
+            usage: (0..num_sessions).map(|_| AtomicUsize::new(0)).collect(),
+            total: AtomicUsize::new(0),
+            peak_total: AtomicUsize::new(0),
+        }
+    }
+
+    /// The global cap.
+    pub fn cap_bytes(&self) -> usize {
+        self.cap_bytes
+    }
+
+    /// Sessions still running.
+    pub fn live_sessions(&self) -> usize {
+        self.live.load(Ordering::Acquire)
+    }
+
+    /// The per-session budget at this instant: an even split of the cap
+    /// across live sessions. Applied by each session right before its
+    /// next extraction, so budget growth after churn takes effect
+    /// lazily (and safely: stale budgets are only ever smaller).
+    pub fn session_budget(&self) -> usize {
+        self.cap_bytes / self.live_sessions().max(1)
+    }
+
+    /// Record one session's cache footprint after an extraction and
+    /// update the fleet-wide peak. O(1): only the delta against the
+    /// slot's previous report touches the shared total.
+    pub fn report_usage(&self, slot: usize, cache_bytes: usize) {
+        let prev = self.usage[slot].swap(cache_bytes, Ordering::AcqRel);
+        let total = if cache_bytes >= prev {
+            let d = cache_bytes - prev;
+            self.total.fetch_add(d, Ordering::AcqRel) + d
+        } else {
+            let d = prev - cache_bytes;
+            self.total.fetch_sub(d, Ordering::AcqRel) - d
+        };
+        self.peak_total.fetch_max(total, Ordering::AcqRel);
+    }
+
+    /// Mark a session finished: its cache is dropped with its engine and
+    /// its share of the cap is redistributed to the survivors.
+    pub fn complete(&self, slot: usize) {
+        let prev = self.usage[slot].swap(0, Ordering::AcqRel);
+        self.total.fetch_sub(prev, Ordering::AcqRel);
+        self.live.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Current summed cache bytes across live sessions.
+    pub fn total_bytes(&self) -> usize {
+        self.total.load(Ordering::Acquire)
+    }
+
+    /// Peak summed cache bytes observed over the run.
+    pub fn peak_total_bytes(&self) -> usize {
+        self.peak_total.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_is_even_split_of_cap() {
+        let a = CacheArbiter::new(64 * 1024, 8);
+        assert_eq!(a.session_budget(), 8 * 1024);
+        assert_eq!(a.live_sessions(), 8);
+    }
+
+    #[test]
+    fn churn_redistributes_budget() {
+        let a = CacheArbiter::new(60_000, 3);
+        assert_eq!(a.session_budget(), 20_000);
+        a.complete(0);
+        assert_eq!(a.live_sessions(), 2);
+        assert_eq!(a.session_budget(), 30_000);
+        a.complete(1);
+        a.complete(2);
+        // Guard: never divide by zero once everything finished.
+        assert_eq!(a.session_budget(), 60_000);
+    }
+
+    #[test]
+    fn usage_tracking_and_peak() {
+        let a = CacheArbiter::new(100, 2);
+        a.report_usage(0, 30);
+        a.report_usage(1, 50);
+        assert_eq!(a.total_bytes(), 80);
+        a.report_usage(1, 10);
+        assert_eq!(a.total_bytes(), 40);
+        assert_eq!(a.peak_total_bytes(), 80);
+        a.complete(0);
+        assert_eq!(a.total_bytes(), 10);
+    }
+
+    #[test]
+    fn budgets_never_oversubscribe_cap() {
+        // Simulated churn: sessions always apply the *current* split;
+        // the sum of applied budgets stays under the cap throughout.
+        let cap = 90_000;
+        let a = CacheArbiter::new(cap, 5);
+        let mut applied = vec![0usize; 5];
+        for finished in 0..5usize {
+            for (slot, b) in applied.iter_mut().enumerate().skip(finished) {
+                *b = a.session_budget();
+                a.report_usage(slot, *b); // worst case: budget fully used
+            }
+            assert!(
+                applied[finished..].iter().sum::<usize>() <= cap,
+                "oversubscribed after {finished} completions"
+            );
+            a.complete(finished);
+        }
+        assert!(a.peak_total_bytes() <= cap);
+    }
+}

@@ -14,8 +14,11 @@
 //! * [`entry`] — cached decoded rows per behavior type with watermarks,
 //! * [`valuation`] — utility/cost metrics and term decomposition,
 //! * [`policy`] — greedy / DP-knapsack / random / all-or-nothing,
-//! * [`store`] — the memory-budgeted cache store.
+//! * [`store`] — the memory-budgeted cache store,
+//! * [`arbiter`] — the host-wide budget arbiter dividing one cap across
+//!   the live sessions of a [`crate::coordinator::pool::SessionPool`].
 
+pub mod arbiter;
 pub mod entry;
 pub mod policy;
 pub mod store;

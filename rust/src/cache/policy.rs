@@ -96,19 +96,24 @@ fn greedy(candidates: &[Candidate], budget: usize) -> Vec<bool> {
     sel
 }
 
-/// Exact 0/1 knapsack. Weights are quantized to 256-byte units to bound
-/// the DP table (utility loss from quantization is conservative: weights
-/// round *up*).
+/// Exact 0/1 knapsack. Weights are quantized to bound the DP table:
+/// the unit starts at 256 bytes and scales with the budget so the
+/// `keep` table never exceeds `n × MAX_UNITS` entries — a fixed 64 MiB
+/// budget over 100 types used to allocate a ~26M-entry table. The
+/// quantization stays conservative: weights round *up*, so a selection
+/// can never exceed the byte budget.
 fn dp_knapsack(candidates: &[Candidate], budget: usize) -> Vec<bool> {
-    const UNIT: usize = 256;
-    let cap = budget / UNIT;
+    const BASE_UNIT: usize = 256;
+    const MAX_UNITS: usize = 4096;
+    let unit = BASE_UNIT.max(budget.div_ceil(MAX_UNITS));
+    let cap = budget / unit;
     let n = candidates.len();
     if cap == 0 || n == 0 {
         return vec![false; n];
     }
     let w: Vec<usize> = candidates
         .iter()
-        .map(|c| c.cost_bytes.div_ceil(UNIT))
+        .map(|c| c.cost_bytes.div_ceil(unit))
         .collect();
     // dp[j] = best utility at weight j; keep[i][j] for reconstruction.
     let mut dp = vec![0.0f64; cap + 1];
@@ -247,6 +252,40 @@ mod tests {
             let d = selection_utility(&cands, &select(PolicyKind::DpKnapsack, &cands, budget));
             assert!(g >= 0.5 * d - 1e-9, "seed {seed}: greedy {g} < dp/2 {d}");
         }
+    }
+
+    #[test]
+    fn dp_table_bounded_at_large_budgets() {
+        // Regression: a 64 MiB budget over 100 types used to build an
+        // n × (budget/256) ≈ 26M-entry keep table. The scaled unit keeps
+        // the table ≤ n × 4096 while still respecting the budget and
+        // preferring high-utility sets.
+        let budget = 64 * 1024 * 1024;
+        let cands: Vec<_> = (0..100)
+            .map(|i| {
+                cand(
+                    i,
+                    (i as f64 + 1.0) * 7.0,
+                    (i as usize + 1) * 300 * 1024, // 300 KB .. ~30 MB
+                )
+            })
+            .collect();
+        let sel = select(PolicyKind::DpKnapsack, &cands, budget);
+        assert!(selection_cost(&cands, &sel) <= budget);
+        assert!(selection_utility(&cands, &sel) > 0.0);
+        // Greedy's 2-approximation bound must still hold vs the scaled DP.
+        let g = selection_utility(&cands, &select(PolicyKind::Greedy, &cands, budget));
+        let d = selection_utility(&cands, &sel);
+        assert!(g >= 0.5 * d - 1e-6, "greedy {g} < dp/2 {d}");
+    }
+
+    #[test]
+    fn dp_small_budgets_keep_fine_quantization() {
+        // Budgets below BASE_UNIT × MAX_UNITS keep the original 256-byte
+        // unit (no behavior change for on-device-scale caches).
+        let cands = vec![cand(0, 10.0, 256), cand(1, 11.0, 512)];
+        let sel = select(PolicyKind::DpKnapsack, &cands, 768);
+        assert_eq!(sel, vec![true, true]);
     }
 
     #[test]

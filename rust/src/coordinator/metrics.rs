@@ -79,6 +79,57 @@ impl LatencyRecorder {
     pub fn breakdown(&self) -> &OpBreakdown {
         &self.breakdown
     }
+
+    /// Absorb another recorder's samples (fleet aggregation).
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.extraction_ns.extend_from_slice(&other.extraction_ns);
+        self.inference_ns.extend_from_slice(&other.inference_ns);
+        self.breakdown.merge(&other.breakdown);
+    }
+}
+
+/// Fleet-level latency summary: per-request end-to-end latencies of many
+/// users' sessions pooled into one distribution (the multi-user serving
+/// metric the [`crate::coordinator::pool::SessionPool`] reports).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FleetSummary {
+    /// Total requests across all sessions.
+    pub requests: usize,
+    /// Mean end-to-end latency (ms).
+    pub mean_ms: f64,
+    /// Median end-to-end latency (ms).
+    pub p50_ms: f64,
+    /// 95th-percentile end-to-end latency (ms).
+    pub p95_ms: f64,
+    /// 99th-percentile end-to-end latency (ms).
+    pub p99_ms: f64,
+    /// Share of total time spent in feature extraction.
+    pub extraction_share: f64,
+}
+
+impl FleetSummary {
+    /// Aggregate per-user recorders into one fleet distribution (fold
+    /// into a single merged recorder, then reuse its statistics so the
+    /// fleet and per-user latency math can never drift apart).
+    pub fn from_recorders<'a>(
+        recorders: impl IntoIterator<Item = &'a LatencyRecorder>,
+    ) -> FleetSummary {
+        let mut all = LatencyRecorder::new();
+        for rec in recorders {
+            all.merge(rec);
+        }
+        if all.is_empty() {
+            return FleetSummary::default();
+        }
+        FleetSummary {
+            requests: all.len(),
+            mean_ms: all.mean_ms(),
+            p50_ms: all.percentile_ms(0.5),
+            p95_ms: all.percentile_ms(0.95),
+            p99_ms: all.percentile_ms(0.99),
+            extraction_share: all.extraction_share(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -103,5 +154,41 @@ mod tests {
         assert_eq!(rec.mean_ms(), 0.0);
         assert_eq!(rec.percentile_ms(0.9), 0.0);
         assert_eq!(rec.extraction_share(), 0.0);
+    }
+
+    #[test]
+    fn merge_concatenates_samples() {
+        let mut a = LatencyRecorder::new();
+        a.record(1_000_000, 0, &OpBreakdown::default());
+        let mut b = LatencyRecorder::new();
+        b.record(3_000_000, 0, &OpBreakdown::default());
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        assert!((a.mean_ms() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_summary_pools_users() {
+        // Two users: 100 requests at 1 ms and 100 at 3 ms; one slow
+        // 100 ms outlier lands in the tail percentiles only.
+        let mut a = LatencyRecorder::new();
+        let mut b = LatencyRecorder::new();
+        for _ in 0..100 {
+            a.record(1_000_000, 0, &OpBreakdown::default());
+            b.record(3_000_000, 0, &OpBreakdown::default());
+        }
+        b.record(100_000_000, 0, &OpBreakdown::default());
+        let fleet = FleetSummary::from_recorders([&a, &b]);
+        assert_eq!(fleet.requests, 201);
+        assert!((fleet.p50_ms - 1.0).abs() < 1e-9 || (fleet.p50_ms - 3.0).abs() < 1e-9);
+        assert!((fleet.p95_ms - 3.0).abs() < 1e-9);
+        assert!(fleet.p99_ms <= 100.0 + 1e-9);
+        assert!(fleet.p50_ms <= fleet.p95_ms && fleet.p95_ms <= fleet.p99_ms);
+        assert_eq!(fleet.extraction_share, 1.0);
+    }
+
+    #[test]
+    fn fleet_summary_empty_is_default() {
+        assert_eq!(FleetSummary::from_recorders([]), FleetSummary::default());
     }
 }

@@ -4,7 +4,7 @@
 //! behavior-logging thread streams trace events into the shared app log
 //! through a bounded channel (backpressure) while the inference loop
 //! fires model executions at the service's frequency — each execution
-//! running AutoFeature extraction followed by PJRT model inference.
+//! running AutoFeature extraction followed by model inference.
 //! Simulated time is compressed (no wall-clock sleeps per simulated
 //! second) but event/trigger interleaving follows the trace exactly.
 //!
@@ -12,8 +12,13 @@
 //! no async runtime — see DESIGN.md §Substitutions; the architecture is
 //! identical to the tokio variant: producer task, bounded queue,
 //! consumer loop).
+//!
+//! [`run_service`] drives one user; [`pool::SessionPool`] shards many
+//! user sessions over worker threads, each running this same
+//! producer/consumer loop per user against one shared compiled plan.
 
 pub mod metrics;
+pub mod pool;
 
 use std::sync::mpsc::{sync_channel, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -22,7 +27,7 @@ use anyhow::Result;
 
 use crate::applog::store::{AppLogStore, StoreConfig};
 use crate::engine::Extractor;
-use crate::runtime::{pack_inputs, ModelRuntime};
+use crate::runtime::{pack_inputs, InferenceBackend};
 use crate::workload::driver::{recent_observations, SimConfig};
 use crate::workload::traces::{log_events, TraceConfig, TraceEvent, TraceGenerator};
 
@@ -47,7 +52,21 @@ pub struct CoordinatorReport {
 pub fn run_service(
     catalog: &crate::applog::schema::Catalog,
     extractor: &mut dyn Extractor,
-    model: Option<&ModelRuntime>,
+    model: Option<&dyn InferenceBackend>,
+    cfg: &SimConfig,
+) -> Result<CoordinatorReport> {
+    let store = Arc::new(Mutex::new(AppLogStore::new(StoreConfig::default())));
+    run_service_on(store, catalog, extractor, model, cfg)
+}
+
+/// The coordinator loop over a caller-provided app-log store. Split out
+/// so tests (and embedders that share one log across components) can
+/// observe the store while the loop runs.
+fn run_service_on(
+    store: Arc<Mutex<AppLogStore>>,
+    catalog: &crate::applog::schema::Catalog,
+    extractor: &mut dyn Extractor,
+    model: Option<&dyn InferenceBackend>,
     cfg: &SimConfig,
 ) -> Result<CoordinatorReport> {
     let trace = TraceGenerator::new(catalog).generate(&TraceConfig {
@@ -58,7 +77,6 @@ pub fn run_service(
         seed: cfg.seed,
     });
     let codec = cfg.codec.build();
-    let store = Arc::new(Mutex::new(AppLogStore::new(StoreConfig::default())));
 
     // Warmup history, synchronously.
     let warm_end = trace.partition_point(|e| e.timestamp_ms < cfg.warmup_ms);
@@ -136,20 +154,29 @@ pub fn run_service(
             }
         }
 
-        // Serve the inference request.
-        let s = store.lock().unwrap();
-        let extraction = extractor.extract(&s, now)?;
-        let inference_ns = if let Some(rt) = model {
-            let meta = rt.meta();
-            let recent = recent_observations(&s, now, meta.seq_len, meta.seq_dim);
-            let inputs = pack_inputs(meta, &extraction.values, &device_feats, &recent, &cloud);
-            let t0 = std::time::Instant::now();
-            last_prediction = rt.infer(&inputs)?;
-            t0.elapsed().as_nanos() as u64
-        } else {
-            0
+        // Serve the inference request. Only extraction and input packing
+        // read the app log, so the lock guard is dropped before model
+        // inference — behavior logging proceeds while the model runs
+        // (holding it across `infer` used to stall the producer side for
+        // the whole inference).
+        let (extraction, inputs) = {
+            let s = store.lock().unwrap();
+            let extraction = extractor.extract(&s, now)?;
+            let inputs = model.map(|rt| {
+                let meta = rt.meta();
+                let recent = recent_observations(&s, now, meta.seq_len, meta.seq_dim);
+                pack_inputs(meta, &extraction.values, &device_feats, &recent, &cloud)
+            });
+            (extraction, inputs)
         };
-        drop(s);
+        let inference_ns = match (model, inputs) {
+            (Some(rt), Some(inputs)) => {
+                let t0 = std::time::Instant::now();
+                last_prediction = rt.infer(&inputs)?;
+                t0.elapsed().as_nanos() as u64
+            }
+            _ => 0,
+        };
 
         recorder.record(extraction.wall_ns, inference_ns, &extraction.breakdown);
         requests += 1;
@@ -174,6 +201,7 @@ mod tests {
     use crate::applog::schema::{Catalog, CatalogConfig};
     use crate::baseline::naive::NaiveExtractor;
     use crate::features::catalog::{generate_feature_set, FeatureSetConfig, MEANINGFUL_WINDOWS};
+    use crate::runtime::{ModelInputs, ModelMeta};
 
     #[test]
     fn coordinator_serves_requests() {
@@ -230,5 +258,84 @@ mod tests {
         let conc = run_service(&cat, &mut b, None, &cfg).unwrap();
         assert_eq!(seq.records.len(), conc.requests);
         assert_eq!(seq.events_logged, conc.events_logged);
+    }
+
+    /// Backend that probes whether the app log is lockable (i.e. logging
+    /// could proceed) while model inference runs.
+    struct LockProbeBackend {
+        store: Arc<Mutex<AppLogStore>>,
+        meta: ModelMeta,
+        lockable_during_infer: std::sync::atomic::AtomicBool,
+        infers: std::sync::atomic::AtomicUsize,
+    }
+
+    impl InferenceBackend for LockProbeBackend {
+        fn meta(&self) -> &ModelMeta {
+            &self.meta
+        }
+
+        fn infer(&self, inputs: &ModelInputs) -> Result<f32> {
+            inputs.validate(&self.meta)?;
+            if self.store.try_lock().is_err() {
+                self.lockable_during_infer
+                    .store(false, std::sync::atomic::Ordering::SeqCst);
+            }
+            self.infers
+                .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            Ok(0.5)
+        }
+    }
+
+    #[test]
+    fn app_log_lock_released_during_inference() {
+        // Regression for the lock-scope bug: the coordinator used to
+        // hold the app-log mutex across `rt.infer(...)`, stalling the
+        // behavior-logging side for the whole model inference.
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        let specs = generate_feature_set(
+            &cat,
+            &FeatureSetConfig {
+                num_features: 6,
+                num_types: 3,
+                identical_share: 0.5,
+                windows: MEANINGFUL_WINDOWS[..2].to_vec(),
+                multi_type_prob: 0.0,
+                seed: 3,
+            },
+        );
+        let store = Arc::new(Mutex::new(AppLogStore::new(StoreConfig::default())));
+        let backend = LockProbeBackend {
+            store: Arc::clone(&store),
+            meta: ModelMeta {
+                n_user: 6,
+                n_device: 4,
+                n_stat: 10,
+                seq_len: 4,
+                seq_dim: 3,
+                n_cloud: 8,
+            },
+            lockable_during_infer: std::sync::atomic::AtomicBool::new(true),
+            infers: std::sync::atomic::AtomicUsize::new(0),
+        };
+        let mut naive = NaiveExtractor::new(specs, CodecKind::Jsonish);
+        let cfg = SimConfig {
+            warmup_ms: 5 * 60_000,
+            duration_ms: 2 * 60_000,
+            inference_interval_ms: 30_000,
+            ..SimConfig::default()
+        };
+        let model: Option<&dyn InferenceBackend> = Some(&backend);
+        let report = run_service_on(store, &cat, &mut naive, model, &cfg).unwrap();
+        assert_eq!(
+            backend.infers.load(std::sync::atomic::Ordering::SeqCst),
+            report.requests
+        );
+        assert!(
+            backend
+                .lockable_during_infer
+                .load(std::sync::atomic::Ordering::SeqCst),
+            "app-log mutex was held across model inference"
+        );
+        assert_eq!(report.last_prediction, 0.5);
     }
 }

@@ -1,0 +1,498 @@
+//! Multi-user session pool: one host process, many concurrent user
+//! sessions, one shared compiled plan.
+//!
+//! The paper evaluates AutoFeature per device, but a production
+//! deployment of the same engine serves millions of users from shared
+//! infrastructure. The pool realizes that shape:
+//!
+//! * the extraction plan is compiled **once** offline per deployed model
+//!   and shared read-only across every session
+//!   (`Arc<CompiledEngine>` — the plan/state split of
+//!   [`crate::engine::online::Engine`]);
+//! * each user keeps a lightweight [`Session`]-private engine holding
+//!   only mutable state (cache, watermarks, staleness fast path);
+//! * sessions are partitioned across `num_shards` worker threads, each
+//!   running the coordinator's trace-driven producer/consumer loop per
+//!   user ([`super::run_service`]);
+//! * a global [`CacheArbiter`] divides one host-wide cache cap across
+//!   live sessions and redistributes it on session churn through the
+//!   engine's dynamic-budget hook;
+//! * per-user latency is aggregated into fleet p50/p95/p99
+//!   ([`FleetSummary`]).
+//!
+//! Sharding never changes results: each user's trace, log and engine are
+//! private, so per-user extraction values are identical to running that
+//! session standalone, for any shard count (tested below).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::applog::schema::Catalog;
+use crate::applog::store::AppLogStore;
+use crate::cache::arbiter::CacheArbiter;
+use crate::engine::config::EngineConfig;
+use crate::engine::offline::{compile, CompiledEngine};
+use crate::engine::online::{Engine, ExtractionResult};
+use crate::engine::Extractor;
+use crate::features::spec::FeatureSpec;
+use crate::features::value::FeatureValue;
+use crate::runtime::InferenceBackend;
+use crate::workload::driver::{fan_out, SimConfig};
+
+use super::metrics::{FleetSummary, LatencyRecorder};
+use super::run_service;
+
+/// Pool-level configuration.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Worker threads the sessions are partitioned across.
+    pub num_shards: usize,
+    /// Host-wide cache cap divided across live sessions by the arbiter.
+    pub global_cache_cap_bytes: usize,
+    /// Per-session engine configuration (its `cache_budget_bytes` is
+    /// superseded by the arbiter's per-session split).
+    pub engine: EngineConfig,
+    /// Keep every extraction's feature values in the session reports
+    /// (determinism tests; off for large fleets).
+    pub record_values: bool,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            num_shards: 4,
+            global_cache_cap_bytes: 4 * 1024 * 1024,
+            engine: EngineConfig::autofeature(),
+            record_values: false,
+        }
+    }
+}
+
+/// One pooled user session's identity and workload.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Stable user id (reporting).
+    pub user_id: u64,
+    /// The user's trace/trigger schedule (per-user seed).
+    pub sim: SimConfig,
+}
+
+impl SessionConfig {
+    /// Fan a base workload out to `num_users` sessions with decorrelated
+    /// per-user trace seeds (see [`crate::workload::driver::fan_out`]).
+    pub fn fleet(base: &SimConfig, num_users: usize) -> Vec<SessionConfig> {
+        fan_out(base, num_users)
+            .into_iter()
+            .enumerate()
+            .map(|(u, sim)| SessionConfig {
+                user_id: u as u64,
+                sim,
+            })
+            .collect()
+    }
+}
+
+/// Per-session outcome.
+#[derive(Debug)]
+pub struct SessionReport {
+    /// The session's user id.
+    pub user_id: u64,
+    /// Inference requests served.
+    pub requests: usize,
+    /// Behavior events logged for this user.
+    pub events_logged: usize,
+    /// Per-request latency samples.
+    pub metrics: LatencyRecorder,
+    /// Peak cache footprint of this session.
+    pub peak_cache_bytes: usize,
+    /// Last model prediction (NaN without a model).
+    pub last_prediction: f32,
+    /// Per-request feature values (only with
+    /// [`PoolConfig::record_values`]).
+    pub values: Vec<Vec<FeatureValue>>,
+}
+
+/// Fleet-level outcome of one pool run.
+#[derive(Debug)]
+pub struct PoolReport {
+    /// Per-session reports, in user order.
+    pub sessions: Vec<SessionReport>,
+    /// Latency distribution pooled across all sessions.
+    pub fleet: FleetSummary,
+    /// Peak of the summed per-session cache bytes over the run.
+    pub peak_total_cache_bytes: usize,
+    /// The arbiter's global cap the peak is bounded by.
+    pub global_cache_cap_bytes: usize,
+    /// Shard count the run used.
+    pub num_shards: usize,
+}
+
+impl PoolReport {
+    /// Total requests served across the fleet.
+    pub fn total_requests(&self) -> usize {
+        self.sessions.iter().map(|s| s.requests).sum()
+    }
+
+    /// Total behavior events logged across the fleet.
+    pub fn total_events_logged(&self) -> usize {
+        self.sessions.iter().map(|s| s.events_logged).sum()
+    }
+}
+
+/// One live user session: a per-user engine over the shared plan, wired
+/// to the global cache arbiter. Implements [`Extractor`] so the
+/// coordinator loop drives it like any single-user engine.
+pub struct Session<'a> {
+    engine: Engine,
+    arbiter: &'a CacheArbiter,
+    slot: usize,
+    interval_ms: i64,
+    record_values: bool,
+    values: Vec<Vec<FeatureValue>>,
+    peak_cache_bytes: usize,
+}
+
+impl<'a> Session<'a> {
+    fn new(
+        compiled: Arc<CompiledEngine>,
+        cfg: EngineConfig,
+        arbiter: &'a CacheArbiter,
+        slot: usize,
+        interval_ms: i64,
+        record_values: bool,
+    ) -> Session<'a> {
+        let engine_cfg = EngineConfig {
+            cache_budget_bytes: arbiter.session_budget(),
+            ..cfg
+        };
+        Session {
+            engine: Engine::from_shared(compiled, engine_cfg),
+            arbiter,
+            slot,
+            interval_ms,
+            record_values,
+            values: Vec::new(),
+            peak_cache_bytes: 0,
+        }
+    }
+}
+
+impl Extractor for Session<'_> {
+    fn extract(&mut self, store: &AppLogStore, now: i64) -> Result<ExtractionResult> {
+        // Pick up the arbiter's current split (grows on session churn;
+        // a shrink evicts lowest-priority lanes inside the engine).
+        self.engine
+            .set_cache_budget(self.arbiter.session_budget(), self.interval_ms);
+        let r = self.engine.extract(store, now)?;
+        self.peak_cache_bytes = self.peak_cache_bytes.max(r.cache_bytes);
+        self.arbiter.report_usage(self.slot, r.cache_bytes);
+        if self.record_values {
+            self.values.push(r.values.clone());
+        }
+        Ok(r)
+    }
+
+    fn label(&self) -> &'static str {
+        "AutoFeature/pooled"
+    }
+
+    fn reset(&mut self) {
+        self.engine.reset();
+    }
+}
+
+/// The sharded multi-user session pool for one deployed model.
+pub struct SessionPool {
+    compiled: Arc<CompiledEngine>,
+    cfg: PoolConfig,
+}
+
+impl SessionPool {
+    /// Compile the model's extraction plan once and build a pool.
+    pub fn new(
+        features: Vec<FeatureSpec>,
+        catalog: &Catalog,
+        cfg: PoolConfig,
+    ) -> Result<SessionPool> {
+        let compiled = Arc::new(compile(features, catalog, &cfg.engine)?);
+        Ok(Self::from_shared(compiled, cfg))
+    }
+
+    /// Build a pool over an existing shared plan (e.g. one produced by a
+    /// separate offline deployment step).
+    pub fn from_shared(compiled: Arc<CompiledEngine>, cfg: PoolConfig) -> SessionPool {
+        SessionPool { compiled, cfg }
+    }
+
+    /// The shared compiled plan.
+    pub fn shared_plan(&self) -> Arc<CompiledEngine> {
+        Arc::clone(&self.compiled)
+    }
+
+    /// Run every user session to completion, partitioned across
+    /// `num_shards` worker threads, and aggregate the fleet report.
+    /// The model backend is shared by all workers, hence `+ Sync`.
+    pub fn run(
+        &self,
+        catalog: &Catalog,
+        users: &[SessionConfig],
+        model: Option<&(dyn InferenceBackend + Sync)>,
+    ) -> Result<PoolReport> {
+        let num_shards = self.cfg.num_shards.max(1).min(users.len().max(1));
+        let arbiter = CacheArbiter::new(self.cfg.global_cache_cap_bytes, users.len());
+        let results: Mutex<Vec<Option<Result<SessionReport>>>> =
+            Mutex::new((0..users.len()).map(|_| None).collect());
+
+        std::thread::scope(|scope| {
+            for shard in 0..num_shards {
+                let compiled = Arc::clone(&self.compiled);
+                let arbiter = &arbiter;
+                let results = &results;
+                let cfg = &self.cfg;
+                scope.spawn(move || {
+                    // Static user partition: shard s owns users s,
+                    // s + num_shards, s + 2·num_shards, ...
+                    for (slot, user) in users
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| i % num_shards == shard)
+                    {
+                        let outcome = run_pooled_session(
+                            Arc::clone(&compiled),
+                            cfg,
+                            catalog,
+                            arbiter,
+                            slot,
+                            user,
+                            model,
+                        );
+                        arbiter.complete(slot);
+                        results.lock().unwrap()[slot] = Some(outcome);
+                    }
+                });
+            }
+        });
+
+        let mut sessions = Vec::with_capacity(users.len());
+        for (i, outcome) in results.into_inner().unwrap().into_iter().enumerate() {
+            let report = outcome
+                .ok_or_else(|| anyhow!("session {i} never ran"))?
+                .with_context(|| format!("session for user {}", users[i].user_id))?;
+            sessions.push(report);
+        }
+        let fleet = FleetSummary::from_recorders(sessions.iter().map(|s| &s.metrics));
+        Ok(PoolReport {
+            sessions,
+            fleet,
+            peak_total_cache_bytes: arbiter.peak_total_bytes(),
+            global_cache_cap_bytes: self.cfg.global_cache_cap_bytes,
+            num_shards,
+        })
+    }
+}
+
+/// Drive one user's producer/consumer loop inside the pool.
+fn run_pooled_session(
+    compiled: Arc<CompiledEngine>,
+    cfg: &PoolConfig,
+    catalog: &Catalog,
+    arbiter: &CacheArbiter,
+    slot: usize,
+    user: &SessionConfig,
+    model: Option<&(dyn InferenceBackend + Sync)>,
+) -> Result<SessionReport> {
+    let mut session = Session::new(
+        compiled,
+        cfg.engine,
+        arbiter,
+        slot,
+        user.sim.inference_interval_ms,
+        cfg.record_values,
+    );
+    let backend = model.map(|m| m as &dyn InferenceBackend);
+    let report = run_service(catalog, &mut session, backend, &user.sim)?;
+    Ok(SessionReport {
+        user_id: user.user_id,
+        requests: report.requests,
+        events_logged: report.events_logged,
+        metrics: report.metrics,
+        peak_cache_bytes: session.peak_cache_bytes,
+        last_prediction: report.last_prediction,
+        values: session.values,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::schema::CatalogConfig;
+    use crate::features::catalog::{generate_feature_set, FeatureSetConfig, MEANINGFUL_WINDOWS};
+    use crate::runtime::SurrogateModel;
+    use crate::workload::driver::run_simulation;
+    use crate::workload::services::ServiceKind;
+
+    fn catalog() -> Catalog {
+        Catalog::generate(&CatalogConfig::paper(), 42)
+    }
+
+    fn specs(cat: &Catalog) -> Vec<FeatureSpec> {
+        generate_feature_set(
+            cat,
+            &FeatureSetConfig {
+                num_features: 12,
+                num_types: 4,
+                identical_share: 0.6,
+                windows: MEANINGFUL_WINDOWS[..3].to_vec(),
+                multi_type_prob: 0.2,
+                seed: 7,
+            },
+        )
+    }
+
+    fn base_sim() -> SimConfig {
+        SimConfig {
+            warmup_ms: 6 * 60_000,
+            duration_ms: 2 * 60_000,
+            inference_interval_ms: 30_000,
+            seed: 11,
+            ..SimConfig::default()
+        }
+    }
+
+    fn pool_cfg(shards: usize) -> PoolConfig {
+        PoolConfig {
+            num_shards: shards,
+            global_cache_cap_bytes: 96 * 1024,
+            record_values: true,
+            ..PoolConfig::default()
+        }
+    }
+
+    #[test]
+    fn pooled_sessions_match_standalone_and_shard_count() {
+        let cat = catalog();
+        let fs = specs(&cat);
+        let users = SessionConfig::fleet(&base_sim(), 6);
+
+        let sharded1 = SessionPool::new(fs.clone(), &cat, pool_cfg(1))
+            .unwrap()
+            .run(&cat, &users, None)
+            .unwrap();
+        let sharded3 = SessionPool::new(fs.clone(), &cat, pool_cfg(3))
+            .unwrap()
+            .run(&cat, &users, None)
+            .unwrap();
+
+        for (user, (a, b)) in users
+            .iter()
+            .zip(sharded1.sessions.iter().zip(&sharded3.sessions))
+        {
+            // Shard-count independence.
+            assert_eq!(a.user_id, user.user_id);
+            assert_eq!(a.requests, b.requests);
+            assert_eq!(a.events_logged, b.events_logged);
+            assert_eq!(a.values, b.values, "user {}", user.user_id);
+
+            // Standalone reference: a fresh engine with its own private
+            // compile, driven by the sequential driver over the same
+            // per-user workload.
+            let mut standalone = Engine::new(
+                fs.clone(),
+                &cat,
+                EngineConfig::autofeature(),
+            )
+            .unwrap();
+            let seq = run_simulation(&cat, &mut standalone, None, &user.sim).unwrap();
+            assert_eq!(seq.records.len(), a.requests);
+            assert_eq!(seq.events_logged, a.events_logged);
+            for (step, (got, rec)) in a.values.iter().zip(&seq.records).enumerate() {
+                for (x, y) in got.iter().zip(&rec.extraction.values) {
+                    assert!(
+                        x.approx_eq(y, 1e-9),
+                        "user {} step {step}: {x:?} vs {y:?}",
+                        user.user_id
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arbiter_cap_bounds_total_cache() {
+        let cat = catalog();
+        let fs = specs(&cat);
+        let users = SessionConfig::fleet(&base_sim(), 5);
+        for cap in [20 * 1024usize, 1024 * 1024] {
+            let pool = SessionPool::new(
+                fs.clone(),
+                &cat,
+                PoolConfig {
+                    num_shards: 2,
+                    global_cache_cap_bytes: cap,
+                    record_values: false,
+                    ..PoolConfig::default()
+                },
+            )
+            .unwrap();
+            let report = pool.run(&cat, &users, None).unwrap();
+            assert!(
+                report.peak_total_cache_bytes <= cap,
+                "peak {} exceeds cap {cap}",
+                report.peak_total_cache_bytes
+            );
+            for s in &report.sessions {
+                assert!(s.peak_cache_bytes <= cap);
+            }
+            if cap >= 1024 * 1024 {
+                // With a generous cap the sessions must actually cache.
+                assert!(report.peak_total_cache_bytes > 0, "cache never used");
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_metrics_pool_all_sessions() {
+        let cat = catalog();
+        let fs = specs(&cat);
+        let users = SessionConfig::fleet(&base_sim(), 4);
+        let report = SessionPool::new(fs, &cat, pool_cfg(2))
+            .unwrap()
+            .run(&cat, &users, None)
+            .unwrap();
+        assert_eq!(report.fleet.requests, report.total_requests());
+        assert!(report.fleet.requests >= 4 * 4); // 4 users x 4 triggers
+        assert!(report.fleet.p50_ms > 0.0);
+        assert!(report.fleet.p50_ms <= report.fleet.p95_ms);
+        assert!(report.fleet.p95_ms <= report.fleet.p99_ms);
+        assert_eq!(report.num_shards, 2);
+    }
+
+    #[test]
+    fn pool_runs_inference_via_surrogate() {
+        let cat = catalog();
+        let fs = specs(&cat);
+        let users = SessionConfig::fleet(&base_sim(), 3);
+        let surrogate = SurrogateModel::for_service(ServiceKind::SR);
+        let model: Option<&(dyn InferenceBackend + Sync)> = Some(&surrogate);
+        let report = SessionPool::new(fs, &cat, pool_cfg(3))
+            .unwrap()
+            .run(&cat, &users, model)
+            .unwrap();
+        for s in &report.sessions {
+            let p = s.last_prediction;
+            assert!(p > 0.0 && p < 1.0, "user {}: prediction {p}", s.user_id);
+        }
+        assert!(report.fleet.extraction_share > 0.0);
+    }
+
+    #[test]
+    fn fleet_fan_out_decorrelates_seeds() {
+        let users = SessionConfig::fleet(&base_sim(), 16);
+        let mut seeds: Vec<u64> = users.iter().map(|u| u.sim.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 16, "duplicate per-user seeds");
+        assert_eq!(users[3].user_id, 3);
+    }
+}

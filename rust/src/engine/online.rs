@@ -11,6 +11,7 @@
 //!   valuation policy.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
@@ -64,9 +65,17 @@ struct TypeRows {
 }
 
 /// The AutoFeature online engine.
+///
+/// Ownership is split for multi-session serving: the immutable
+/// offline-compiled plan lives in a shared [`Arc<CompiledEngine>`]
+/// (compile once per deployed model, share across every user session of
+/// the service — see [`crate::coordinator::pool::SessionPool`]), while
+/// all per-session mutable state (the [`CacheStore`], extraction
+/// watermarks, the staleness fast path) stays inside this lightweight
+/// per-user value.
 pub struct Engine {
     cfg: EngineConfig,
-    compiled: CompiledEngine,
+    compiled: Arc<CompiledEngine>,
     codec: Box<dyn AttrCodec>,
     cache: CacheStore,
     last_now: Option<TimestampMs>,
@@ -87,6 +96,13 @@ impl Engine {
 
     /// Instantiate from a pre-compiled plan (offline phase output).
     pub fn from_compiled(compiled: CompiledEngine, cfg: EngineConfig) -> Engine {
+        Self::from_shared(Arc::new(compiled), cfg)
+    }
+
+    /// Instantiate a per-session engine over a *shared* compiled plan.
+    /// `cfg` must be the configuration the plan was compiled with
+    /// (fusion and codec choices are baked into the plan).
+    pub fn from_shared(compiled: Arc<CompiledEngine>, cfg: EngineConfig) -> Engine {
         Engine {
             codec: cfg.codec.build(),
             cache: CacheStore::new(cfg.cache_budget_bytes),
@@ -100,6 +116,11 @@ impl Engine {
     /// The compiled plan (inspection / reports).
     pub fn compiled(&self) -> &CompiledEngine {
         &self.compiled
+    }
+
+    /// A shareable handle to the compiled plan (spawn sibling sessions).
+    pub fn shared_plan(&self) -> Arc<CompiledEngine> {
+        Arc::clone(&self.compiled)
     }
 
     /// Current cache usage in bytes (Fig. 17b metric).
@@ -145,7 +166,11 @@ impl Engine {
         bd: &mut OpBreakdown,
     ) -> Result<TypeRows> {
         let window_ms = self.compiled.type_windows[&t];
-        let window_start = now - window_ms;
+        // Clamped to the log epoch: at session start a retention window
+        // can exceed the whole log history, and a negative start would
+        // leak into the lane watermark (and from there into the
+        // missing-interval computation of every later extraction).
+        let window_start = (now - window_ms).max(0);
 
         // ❶ Cache fetch: take ownership of the lane (re-inserted by the
         // update step) and drop rows that fell out of the window.
@@ -628,5 +653,68 @@ mod tests {
         let (cat, specs, _) = setup();
         let eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
         assert_eq!(eng.label(), "AutoFeature");
+    }
+
+    #[test]
+    fn sessions_share_one_compiled_plan() {
+        // The plan/state split: one offline compile, many independent
+        // per-session engines over the same Arc'd plan, each with its
+        // own cache and watermarks, all extracting identical values.
+        let (cat, specs, store) = setup();
+        let cfg = EngineConfig::autofeature();
+        let compiled = std::sync::Arc::new(
+            crate::engine::offline::compile(specs.clone(), &cat, &cfg).unwrap(),
+        );
+        let mut a = Engine::from_shared(std::sync::Arc::clone(&compiled), cfg);
+        let mut b = Engine::from_shared(std::sync::Arc::clone(&compiled), cfg);
+        assert!(std::sync::Arc::ptr_eq(&a.shared_plan(), &b.shared_plan()));
+
+        let mut naive = NaiveExtractor::new(specs, CodecKindForTest());
+        for now in [20 * 60_000i64, 22 * 60_000, 40 * 60_000] {
+            let want = naive.extract(&store, now).unwrap().values;
+            for eng in [&mut a, &mut b] {
+                let got = eng.extract(&store, now).unwrap().values;
+                for (x, y) in got.iter().zip(&want) {
+                    assert!(x.approx_eq(y, 1e-9), "{x:?} vs {y:?} @ {now}");
+                }
+            }
+        }
+        // Per-session state stays independent: resetting one session
+        // must not touch its sibling's cache.
+        assert!(a.cache_bytes() > 0 && b.cache_bytes() > 0);
+        a.reset();
+        assert_eq!(a.cache_bytes(), 0);
+        assert!(b.cache_bytes() > 0);
+    }
+
+    #[test]
+    fn early_trigger_with_window_exceeding_history() {
+        // Regression: a trigger before `now >= window` used to push a
+        // negative window start into the lane watermark
+        // (`CachedLane::new(t, now - window_ms)`), corrupting the
+        // missing-interval bookkeeping of every later extraction.
+        let (cat, specs, _) = setup();
+        let gen = TraceGenerator::new(&cat);
+        let events = gen.generate(&TraceConfig {
+            duration_ms: 4 * 60_000, // far shorter than the 1 h windows
+            seed: 13,
+            ..TraceConfig::default()
+        });
+        let mut store = AppLogStore::new(crate::applog::store::StoreConfig::default());
+        log_events(&mut store, &JsonishCodec, &events).unwrap();
+
+        let mut eng = Engine::new(specs.clone(), &cat, EngineConfig::autofeature()).unwrap();
+        let mut naive = NaiveExtractor::new(specs, CodecKindForTest());
+        // now (2 min) << the feature windows (up to 1 h): start clamps.
+        for now in [2 * 60_000i64, 3 * 60_000, 5 * 60_000] {
+            let got = eng.extract(&store, now).unwrap();
+            let want = naive.extract(&store, now).unwrap();
+            for (x, y) in got.values.iter().zip(&want.values) {
+                assert!(x.approx_eq(y, 1e-9), "{x:?} vs {y:?} @ {now}");
+            }
+        }
+        // Second extraction must hit the cache (sane watermarks).
+        let r = eng.extract(&store, 6 * 60_000).unwrap();
+        assert!(r.breakdown.rows_from_cache > 0);
     }
 }

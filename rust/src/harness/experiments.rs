@@ -25,7 +25,7 @@ use crate::workload::behavior::{ActivityLevel, Period};
 use crate::workload::driver::SimConfig;
 use crate::workload::services::{ServiceKind, ServiceSpec};
 
-use super::{eval_catalog, make_extractor, print_table, run_cell, Method};
+use super::{eval_catalog, make_extractor, print_table, run_cell, run_fleet, Method};
 
 /// Experiment scale: `Quick` for tests/smoke, `Full` for benches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -782,6 +782,51 @@ pub fn ext_multimodel(scale: Scale) -> Result<Vec<Row>> {
     Ok(rows)
 }
 
+/// Scaling study (ROADMAP north star): the multi-user
+/// [`crate::coordinator::pool::SessionPool`] serving a fleet of VR users
+/// from ONE shared compiled plan, sweeping the shard count. Reports the
+/// fleet latency distribution (p50/p95/p99 across all users' requests),
+/// the arbiter-capped aggregate cache footprint and the wall-clock time
+/// of the whole fleet replay (throughput scaling with shards).
+pub fn ext_fleet(scale: Scale) -> Result<Vec<Row>> {
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let num_users = match scale {
+        Scale::Quick => 8usize,
+        Scale::Full => 64,
+    };
+    let shard_counts: &[usize] = match scale {
+        Scale::Quick => &[1, 4],
+        Scale::Full => &[1, 2, 4, 8, 16],
+    };
+    let base = scale.sim(Period::Evening, svc.inference_interval_ms, 2024);
+    let cap = 2 * 1024 * 1024;
+    let mut rows = Vec::new();
+    for &shards in shard_counts {
+        let t0 = Instant::now();
+        let report = run_fleet(&catalog, &svc, &base, num_users, shards, cap, None)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut row = Row::new(format!("{shards} shards"));
+        row.push("users", num_users as f64);
+        row.push("requests", report.total_requests() as f64);
+        row.push("fleet_p50_ms", report.fleet.p50_ms);
+        row.push("fleet_p95_ms", report.fleet.p95_ms);
+        row.push("fleet_p99_ms", report.fleet.p99_ms);
+        row.push(
+            "peak_cache_kb",
+            report.peak_total_cache_bytes as f64 / 1024.0,
+        );
+        row.push("cap_kb", cap as f64 / 1024.0);
+        row.push("wall_s", wall_s);
+        rows.push(row);
+    }
+    print_rows(
+        "Extension — multi-user session pool: shard sweep (VR fleet)",
+        &rows,
+    );
+    Ok(rows)
+}
+
 // ---------------------------------------------------------------------
 // Motivation stats (Figs. 3/5/6/12) — `autofeature inspect`.
 // ---------------------------------------------------------------------
@@ -879,6 +924,30 @@ mod tests {
         }
         // Device-wide cache stays phone-plausible (< 1 MB).
         assert!(rows[5].get("peak_cache_kb").unwrap() < 1024.0);
+    }
+
+    #[test]
+    fn fleet_experiment_reports_bounded_percentiles() {
+        let rows = ext_fleet(Scale::Quick).unwrap();
+        assert_eq!(rows.len(), 2); // shard counts 1 and 4
+        for row in &rows {
+            assert_eq!(row.get("users").unwrap(), 8.0);
+            let (p50, p95, p99) = (
+                row.get("fleet_p50_ms").unwrap(),
+                row.get("fleet_p95_ms").unwrap(),
+                row.get("fleet_p99_ms").unwrap(),
+            );
+            assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "{row:?}");
+            assert!(
+                row.get("peak_cache_kb").unwrap() <= row.get("cap_kb").unwrap(),
+                "{row:?}"
+            );
+        }
+        // Shard count must not change the amount of work performed.
+        assert_eq!(
+            rows[0].get("requests").unwrap(),
+            rows[1].get("requests").unwrap()
+        );
     }
 
     #[test]

@@ -131,7 +131,35 @@ pub fn run_cell(
     sim: &SimConfig,
 ) -> Result<SimOutcome> {
     let mut extractor = make_extractor(method, service.features.clone(), catalog, 256 * 1024)?;
-    run_simulation(catalog, extractor.as_mut(), model, sim)
+    let backend = model.map(|m| m as &dyn crate::runtime::InferenceBackend);
+    run_simulation(catalog, extractor.as_mut(), backend, sim)
+}
+
+/// Run a multi-user fleet of one service through a [`SessionPool`]:
+/// compile the plan once, fan the base workload out to `num_users`
+/// seeded sessions and shard them across `num_shards` workers under a
+/// host-wide cache cap.
+pub fn run_fleet(
+    catalog: &Catalog,
+    service: &ServiceSpec,
+    base_sim: &SimConfig,
+    num_users: usize,
+    num_shards: usize,
+    global_cache_cap_bytes: usize,
+    model: Option<&(dyn crate::runtime::InferenceBackend + Sync)>,
+) -> Result<crate::coordinator::pool::PoolReport> {
+    use crate::coordinator::pool::{PoolConfig, SessionConfig, SessionPool};
+    let pool = SessionPool::new(
+        service.features.clone(),
+        catalog,
+        PoolConfig {
+            num_shards,
+            global_cache_cap_bytes,
+            ..PoolConfig::default()
+        },
+    )?;
+    let users = SessionConfig::fleet(base_sim, num_users);
+    pool.run(catalog, &users, model)
 }
 
 /// Load a service's model runtime if its artifact exists.
@@ -140,7 +168,19 @@ pub fn try_load_model(artifact_dir: &Path, service: ServiceKind) -> Option<Model
         .join(format!("model_{}.hlo.txt", service.id()))
         .exists()
     {
-        ModelRuntime::load(artifact_dir, service).ok()
+        match ModelRuntime::load(artifact_dir, service) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                // Distinguish "artifact present but unloadable" (e.g. a
+                // default build without the `pjrt` feature) from the
+                // plain missing-artifact case callers report themselves.
+                eprintln!(
+                    "note: artifact for {} exists but could not be loaded: {e:#}",
+                    service.id()
+                );
+                None
+            }
+        }
     } else {
         None
     }

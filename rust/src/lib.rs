@@ -26,9 +26,12 @@
 //!   cloud-side systems (*Decoded Log*, *Feature Store*) of Table 1.
 //! * [`workload`] — behavior catalog, seeded user-trace generator and the
 //!   five evaluated services (CP/KP/SR/PR/VR).
-//! * [`runtime`] — PJRT CPU client loading the AOT-compiled JAX models.
-//! * [`coordinator`] — async service loop wiring traces → extraction →
-//!   model inference.
+//! * [`runtime`] — model inference backends: the PJRT CPU client over
+//!   AOT-compiled JAX models (`pjrt` feature) and a pure-Rust surrogate.
+//! * [`coordinator`] — the service loop wiring traces → extraction →
+//!   model inference, plus the sharded multi-user
+//!   [`coordinator::pool::SessionPool`] serving many sessions from one
+//!   shared compiled plan under a global cache-budget arbiter.
 //! * [`harness`] — experiment drivers regenerating every paper table and
 //!   figure (used by `benches/` and `examples/`).
 //!
@@ -66,7 +69,9 @@ pub mod prelude {
         store::{AppLogStore, StoreConfig},
     };
     pub use crate::baseline::naive::NaiveExtractor;
+    pub use crate::cache::arbiter::CacheArbiter;
     pub use crate::cache::policy::PolicyKind;
+    pub use crate::coordinator::pool::{PoolConfig, PoolReport, SessionConfig, SessionPool};
     pub use crate::engine::{
         config::EngineConfig,
         online::{Engine, ExtractionResult},

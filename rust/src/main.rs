@@ -20,9 +20,10 @@ USAGE:
   autofeature simulate [--service cp|kp|sr|pr|vr] [--method naive|fusion|cache|autofeature|decodedlog|featurestore]
                        [--period noon|evening|night] [--minutes N] [--artifacts DIR] [--no-model] [--seed N]
   autofeature coordinator [--service ID] [--minutes N] [--artifacts DIR]
+  autofeature fleet [--service ID] [--users N] [--shards N] [--minutes N] [--cache-kb N] [--surrogate] [--seed N]
   autofeature inspect
   autofeature experiment [fig4|fig10|fig11|fig16|fig17|fig18|fig19a|fig19b|fig20|fig21|
-                          ext-staleness|ext-codec|ext-multimodel|all]
+                          ext-staleness|ext-codec|ext-multimodel|ext-fleet|all]
                          [--full] [--artifacts DIR]
   autofeature help
 ";
@@ -139,10 +140,13 @@ fn main() -> Result<()> {
                     &catalog,
                     256 * 1024,
                 )?;
+                let backend = model
+                    .as_ref()
+                    .map(|m| m as &dyn autofeature::runtime::InferenceBackend);
                 let report = autofeature::coordinator::run_service(
                     &catalog,
                     extractor.as_mut(),
-                    model.as_ref(),
+                    backend,
                     &sim,
                 )?;
                 println!(
@@ -186,6 +190,55 @@ fn main() -> Result<()> {
                 out.mean_inference_ms(),
                 out.events_logged,
                 out.raw_storage_bytes as f64 / 1024.0
+            );
+        }
+        "fleet" => {
+            // Multi-user session pool: N seeded user sessions sharing one
+            // compiled plan, sharded across worker threads.
+            let service = args.get("service").unwrap_or("vr");
+            let kind = ServiceKind::from_id(service)
+                .ok_or_else(|| anyhow::anyhow!("unknown service {service}"))?;
+            let catalog = harness::eval_catalog();
+            let svc = ServiceSpec::build(kind, &catalog);
+            let users: usize = args.get("users").unwrap_or("64").parse()?;
+            let shards: usize = args.get("shards").unwrap_or("8").parse()?;
+            let minutes: i64 = args.get("minutes").unwrap_or("5").parse()?;
+            let cache_kb: usize = args.get("cache-kb").unwrap_or("2048").parse()?;
+            let sim = SimConfig {
+                period: parse_period(args.get("period").unwrap_or("evening"))?,
+                activity: ActivityLevel::P70,
+                warmup_ms: 30 * 60_000,
+                duration_ms: minutes * 60_000,
+                inference_interval_ms: svc.inference_interval_ms,
+                seed: args.get("seed").unwrap_or("2024").parse()?,
+                codec: Default::default(),
+            };
+            let surrogate = args
+                .has("surrogate")
+                .then(|| autofeature::runtime::SurrogateModel::for_service(kind));
+            let model = surrogate
+                .as_ref()
+                .map(|m| m as &(dyn autofeature::runtime::InferenceBackend + Sync));
+            let t0 = std::time::Instant::now();
+            let report =
+                harness::run_fleet(&catalog, &svc, &sim, users, shards, cache_kb * 1024, model)?;
+            println!(
+                "{}: {} users / {} shards, {} requests, {} events in {:.2} s wall",
+                kind.name(),
+                users,
+                report.num_shards,
+                report.total_requests(),
+                report.total_events_logged(),
+                t0.elapsed().as_secs_f64(),
+            );
+            println!(
+                "  fleet latency p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  (mean {:.3} ms)",
+                report.fleet.p50_ms, report.fleet.p95_ms, report.fleet.p99_ms, report.fleet.mean_ms
+            );
+            println!(
+                "  cache: peak total {:.1} KB under the {:.0} KB arbiter cap",
+                report.peak_total_cache_bytes as f64 / 1024.0,
+                report.global_cache_cap_bytes as f64 / 1024.0
             );
         }
         "inspect" => {
@@ -244,6 +297,9 @@ fn main() -> Result<()> {
             }
             if all || which == "ext-multimodel" {
                 experiments::ext_multimodel(scale)?;
+            }
+            if all || which == "ext-fleet" {
+                experiments::ext_fleet(scale)?;
             }
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),

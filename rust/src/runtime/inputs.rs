@@ -67,8 +67,9 @@ pub struct ModelInputs {
 }
 
 impl ModelInputs {
-    /// Convert to PJRT literals in the artifact's parameter order.
-    pub fn to_literals(&self, meta: &ModelMeta) -> Result<Vec<xla::Literal>> {
+    /// Check the inputs against a signature (every backend rejects
+    /// mis-shaped inputs the same way).
+    pub fn validate(&self, meta: &ModelMeta) -> Result<()> {
         if self.stat.len() != meta.n_stat
             || self.seq.len() != meta.seq_len * meta.seq_dim
             || self.seq_mask.len() != meta.seq_len
@@ -82,6 +83,13 @@ impl ModelInputs {
                 self.cloud.len()
             );
         }
+        Ok(())
+    }
+
+    /// Convert to PJRT literals in the artifact's parameter order.
+    #[cfg(feature = "pjrt")]
+    pub fn to_literals(&self, meta: &ModelMeta) -> Result<Vec<xla::Literal>> {
+        self.validate(meta)?;
         Ok(vec![
             xla::Literal::vec1(&self.stat),
             xla::Literal::vec1(&self.seq)
@@ -201,6 +209,13 @@ mod tests {
             seq_mask: vec![0.0; 3],
             cloud: vec![0.0; 2],
         };
-        assert!(bad.to_literals(&m).is_err());
+        assert!(bad.validate(&m).is_err());
+        let good = ModelInputs {
+            stat: vec![0.0; 6],
+            seq: vec![0.0; 6],
+            seq_mask: vec![0.0; 3],
+            cloud: vec![0.0; 2],
+        };
+        assert!(good.validate(&m).is_ok());
     }
 }

@@ -4,96 +4,63 @@
 //! Fig. 13 structure) are lowered once by `make artifacts` to HLO *text*
 //! (`artifacts/model_<service>.hlo.txt` — text, not serialized proto:
 //! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
-//! rejects). This module loads an artifact, compiles it on the PJRT CPU
-//! client and executes it from the Layer-3 request path. Python never
-//! runs at inference time.
+//! rejects). With the `pjrt` cargo feature enabled, [`ModelRuntime`]
+//! loads an artifact, compiles it on the PJRT CPU client and executes it
+//! from the Layer-3 request path; Python never runs at inference time.
+//!
+//! Without the feature (the default — a clean checkout has no XLA
+//! toolchain, see DESIGN.md §Substitutions), [`ModelRuntime::load`]
+//! returns an error and callers fall back to extraction-only runs or to
+//! the deterministic pure-Rust [`SurrogateModel`], which exercises the
+//! same extract → pack → infer path without native dependencies.
 
 pub mod inputs;
+pub mod surrogate;
 
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
-use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+pub use pjrt::ModelRuntime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::ModelRuntime;
 
-use crate::workload::services::ServiceKind;
+use anyhow::Result;
 
 pub use inputs::{pack_inputs, ModelInputs, ModelMeta};
+pub use surrogate::SurrogateModel;
 
-/// A loaded, compiled on-device model for one service.
-pub struct ModelRuntime {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    meta: ModelMeta,
-    service: ServiceKind,
+/// Anything that can serve one model inference from packed inputs.
+///
+/// Implemented by the PJRT-backed [`ModelRuntime`] and by the pure-Rust
+/// [`SurrogateModel`], so the coordinator, the session pool and the
+/// harness treat real and surrogate models uniformly. Deliberately NOT
+/// `Send + Sync` supertraits: the PJRT client wraps C++ handles that may
+/// not be thread-safe. Multi-threaded consumers (the session pool) ask
+/// for `dyn InferenceBackend + Sync` explicitly.
+pub trait InferenceBackend {
+    /// The model's input signature.
+    fn meta(&self) -> &ModelMeta;
+
+    /// Run one inference, returning the model's scalar prediction.
+    fn infer(&self, inputs: &ModelInputs) -> Result<f32>;
 }
 
-impl ModelRuntime {
-    /// Load `model_<service>.hlo.txt` + its meta from `artifact_dir` and
-    /// compile it on the PJRT CPU client.
-    pub fn load(artifact_dir: &Path, service: ServiceKind) -> Result<ModelRuntime> {
-        let hlo_path = artifact_dir.join(format!("model_{}.hlo.txt", service.id()));
-        let meta_path = artifact_dir.join(format!("model_{}.meta.txt", service.id()));
-        let meta = ModelMeta::parse_file(&meta_path)
-            .with_context(|| format!("reading {}", meta_path.display()))?;
-
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path
-                .to_str()
-                .context("artifact path is not valid utf-8")?,
-        )
-        .with_context(|| format!("parsing {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compiling HLO")?;
-        let rt = ModelRuntime {
-            client,
-            exe,
-            meta,
-            service,
-        };
-        // Warm-up inference: the first PJRT execution pays one-time
-        // allocation/dispatch setup that would otherwise pollute the
-        // latency statistics of the first real request.
-        let meta = rt.meta().clone();
-        let zeros = ModelInputs {
-            stat: vec![0.0; meta.n_stat],
-            seq: vec![0.0; meta.seq_len * meta.seq_dim],
-            seq_mask: vec![0.0; meta.seq_len],
-            cloud: vec![0.0; meta.n_cloud],
-        };
-        rt.infer(&zeros).context("warm-up inference")?;
-        Ok(rt)
+impl InferenceBackend for ModelRuntime {
+    fn meta(&self) -> &ModelMeta {
+        ModelRuntime::meta(self)
     }
 
-    /// The model's input signature.
-    pub fn meta(&self) -> &ModelMeta {
-        &self.meta
-    }
-
-    /// The service this model serves.
-    pub fn service(&self) -> ServiceKind {
-        self.service
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Run one inference: returns the model's scalar prediction.
-    ///
-    /// The artifact was lowered with `return_tuple=True`, so the output
-    /// is a 1-tuple around an `f32` scalar.
-    pub fn infer(&self, inputs: &ModelInputs) -> Result<f32> {
-        let literals = inputs.to_literals(&self.meta)?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?[0])
+    fn infer(&self, inputs: &ModelInputs) -> Result<f32> {
+        ModelRuntime::infer(self, inputs)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // Runtime tests need built artifacts; they live in
+    // PJRT runtime tests need built artifacts; they live in
     // rust/tests/runtime_e2e.rs (integration) so `cargo test --lib`
-    // stays artifact-free.
+    // stays artifact-free. Surrogate tests live in `surrogate`.
 }

@@ -1,0 +1,83 @@
+//! The PJRT-backed model runtime (compiled only with the `pjrt` cargo
+//! feature; requires the build image's vendored `xla` crate closure).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::workload::services::ServiceKind;
+
+use super::inputs::{ModelInputs, ModelMeta};
+
+/// A loaded, compiled on-device model for one service.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    meta: ModelMeta,
+    service: ServiceKind,
+}
+
+impl ModelRuntime {
+    /// Load `model_<service>.hlo.txt` + its meta from `artifact_dir` and
+    /// compile it on the PJRT CPU client.
+    pub fn load(artifact_dir: &Path, service: ServiceKind) -> Result<ModelRuntime> {
+        let hlo_path = artifact_dir.join(format!("model_{}.hlo.txt", service.id()));
+        let meta_path = artifact_dir.join(format!("model_{}.meta.txt", service.id()));
+        let meta = ModelMeta::parse_file(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .context("artifact path is not valid utf-8")?,
+        )
+        .with_context(|| format!("parsing {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO")?;
+        let rt = ModelRuntime {
+            client,
+            exe,
+            meta,
+            service,
+        };
+        // Warm-up inference: the first PJRT execution pays one-time
+        // allocation/dispatch setup that would otherwise pollute the
+        // latency statistics of the first real request.
+        let meta = rt.meta().clone();
+        let zeros = ModelInputs {
+            stat: vec![0.0; meta.n_stat],
+            seq: vec![0.0; meta.seq_len * meta.seq_dim],
+            seq_mask: vec![0.0; meta.seq_len],
+            cloud: vec![0.0; meta.n_cloud],
+        };
+        rt.infer(&zeros).context("warm-up inference")?;
+        Ok(rt)
+    }
+
+    /// The model's input signature.
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// The service this model serves.
+    pub fn service(&self) -> ServiceKind {
+        self.service
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run one inference: returns the model's scalar prediction.
+    ///
+    /// The artifact was lowered with `return_tuple=True`, so the output
+    /// is a 1-tuple around an `f32` scalar.
+    pub fn infer(&self, inputs: &ModelInputs) -> Result<f32> {
+        let literals = inputs.to_literals(&self.meta)?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?[0])
+    }
+}

@@ -1,0 +1,67 @@
+//! Stub model runtime used when the `pjrt` cargo feature is off.
+//!
+//! Keeps the [`ModelRuntime`] API surface identical so every caller
+//! compiles unchanged; [`ModelRuntime::load`] reports that PJRT support
+//! is not built in. Artifact-gated tests and the harness's
+//! `try_load_model` treat the error as "no model" and run
+//! extraction-only (or plug in the [`super::SurrogateModel`]).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::workload::services::ServiceKind;
+
+use super::inputs::{ModelInputs, ModelMeta};
+
+/// Placeholder for the PJRT-backed model runtime. Never constructible
+/// without the `pjrt` feature — [`ModelRuntime::load`] always errors.
+pub struct ModelRuntime {
+    meta: ModelMeta,
+    service: ServiceKind,
+}
+
+impl ModelRuntime {
+    /// Always fails: this build has no PJRT/XLA support.
+    pub fn load(_artifact_dir: &Path, service: ServiceKind) -> Result<ModelRuntime> {
+        bail!(
+            "cannot load model for {}: built without the `pjrt` cargo feature \
+             (no XLA toolchain); run extraction-only or use SurrogateModel",
+            service.id()
+        )
+    }
+
+    /// The model's input signature.
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// The service this model serves.
+    pub fn service(&self) -> ServiceKind {
+        self.service
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Unreachable in practice ([`ModelRuntime::load`] never succeeds).
+    pub fn infer(&self, inputs: &ModelInputs) -> Result<f32> {
+        inputs.validate(&self.meta)?;
+        bail!("built without the `pjrt` cargo feature")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = ModelRuntime::load(Path::new("/nonexistent"), ServiceKind::SR)
+            .err()
+            .expect("stub load must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

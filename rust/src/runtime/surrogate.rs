@@ -1,0 +1,125 @@
+//! A deterministic pure-Rust stand-in for the PJRT model.
+//!
+//! Computes `sigmoid(w · concat(stat, seq ⊙ mask, cloud) / scale)` with
+//! weights seeded per service, so multi-user fleet simulations, the
+//! coordinator and tests can exercise the full extract → pack → infer
+//! path — including realistic per-request inference latency accounting —
+//! on machines without the XLA toolchain (DESIGN.md §Substitutions).
+//! Numerics intentionally do NOT match the AOT-compiled JAX models; the
+//! artifact-gated tests in `rust/tests/runtime_e2e.rs` cover those.
+
+use anyhow::Result;
+
+use crate::util::rng::SimRng;
+use crate::workload::services::ServiceKind;
+
+use super::inputs::{ModelInputs, ModelMeta};
+use super::InferenceBackend;
+
+/// Deterministic seeded linear-sigmoid model over the packed inputs.
+pub struct SurrogateModel {
+    meta: ModelMeta,
+    weights: Vec<f32>,
+}
+
+impl SurrogateModel {
+    /// Build a surrogate for an explicit input signature.
+    pub fn new(meta: ModelMeta, seed: u64) -> SurrogateModel {
+        let n = meta.n_stat + meta.seq_len * meta.seq_dim + meta.n_cloud;
+        let mut rng = SimRng::seed_from_u64(seed);
+        let weights = (0..n).map(|_| rng.range_f(-1.0, 1.0) as f32).collect();
+        SurrogateModel { meta, weights }
+    }
+
+    /// Build a surrogate shaped like a service's deployed model
+    /// (`n_user` from the Fig. 12a feature count, paper-scale sequence
+    /// and cloud-embedding widths).
+    pub fn for_service(kind: ServiceKind) -> SurrogateModel {
+        let n_user = kind.stats().0;
+        let meta = ModelMeta {
+            n_user,
+            n_device: 8,
+            n_stat: n_user + 8,
+            seq_len: 16,
+            seq_dim: 4,
+            n_cloud: 64,
+        };
+        SurrogateModel::new(meta, 0x5a_0000u64 + kind.id().as_bytes()[0] as u64)
+    }
+}
+
+impl InferenceBackend for SurrogateModel {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn infer(&self, inputs: &ModelInputs) -> Result<f32> {
+        inputs.validate(&self.meta)?;
+        let mut dot = 0.0f32;
+        let mut w = self.weights.iter();
+        for x in &inputs.stat {
+            dot += x * w.next().expect("weight per stat input");
+        }
+        for (i, x) in inputs.seq.iter().enumerate() {
+            let masked = x * inputs.seq_mask[i / self.meta.seq_dim.max(1)];
+            dot += masked * w.next().expect("weight per seq input");
+        }
+        for x in &inputs.cloud {
+            dot += x * w.next().expect("weight per cloud input");
+        }
+        let scale = (self.weights.len() as f32).sqrt().max(1.0);
+        Ok(1.0 / (1.0 + (-dot / scale).exp()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(meta: &ModelMeta, fill: f32) -> ModelInputs {
+        ModelInputs {
+            stat: vec![fill; meta.n_stat],
+            seq: vec![fill; meta.seq_len * meta.seq_dim],
+            seq_mask: vec![1.0; meta.seq_len],
+            cloud: vec![fill; meta.n_cloud],
+        }
+    }
+
+    #[test]
+    fn deterministic_and_input_sensitive() {
+        let m = SurrogateModel::for_service(ServiceKind::SR);
+        let a = m.infer(&inputs(m.meta(), 0.5)).unwrap();
+        let b = m.infer(&inputs(m.meta(), 0.5)).unwrap();
+        assert_eq!(a, b);
+        let c = m.infer(&inputs(m.meta(), -0.5)).unwrap();
+        assert_ne!(a, c, "surrogate ignores its inputs");
+    }
+
+    #[test]
+    fn predictions_are_probabilities() {
+        for kind in ServiceKind::ALL {
+            let m = SurrogateModel::for_service(kind);
+            for fill in [-4.0f32, 0.0, 0.3, 4.0] {
+                let p = m.infer(&inputs(m.meta(), fill)).unwrap();
+                assert!(p > 0.0 && p < 1.0, "{kind:?}: {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let m = SurrogateModel::for_service(ServiceKind::KP);
+        let mut bad = inputs(m.meta(), 0.1);
+        bad.stat.pop();
+        assert!(m.infer(&bad).is_err());
+    }
+
+    #[test]
+    fn meta_matches_service_stats() {
+        for kind in ServiceKind::ALL {
+            let m = SurrogateModel::for_service(kind);
+            assert_eq!(m.meta().n_user, kind.stats().0);
+            assert_eq!(m.meta().n_stat, m.meta().n_user + m.meta().n_device);
+        }
+    }
+}

@@ -10,7 +10,7 @@ use crate::applog::schema::Catalog;
 use crate::applog::store::{AppLogStore, StoreConfig};
 use crate::engine::online::ExtractionResult;
 use crate::engine::Extractor;
-use crate::runtime::{pack_inputs, ModelRuntime};
+use crate::runtime::{pack_inputs, InferenceBackend};
 use crate::workload::traces::{log_events, TraceConfig, TraceGenerator};
 
 pub use crate::workload::behavior::{ActivityLevel, Period};
@@ -156,12 +156,35 @@ pub fn recent_observations(store: &AppLogStore, now: i64, seq_len: usize, seq_di
         .collect()
 }
 
+/// Stable per-user trace seed: SplitMix64-style mix of a base seed and
+/// the user id, so fleet members' traces decorrelate while every user's
+/// workload stays reproducible in isolation.
+pub fn user_seed(base_seed: u64, user_id: u64) -> u64 {
+    let mut z = base_seed ^ user_id.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Per-user seeded trace fan-out: derive `num_users` simulation configs
+/// from one base workload shape, one decorrelated trace seed per user
+/// (user ids are the vector indices). The session pool feeds these to
+/// its per-user producer/consumer loops.
+pub fn fan_out(base: &SimConfig, num_users: usize) -> Vec<SimConfig> {
+    (0..num_users as u64)
+        .map(|u| SimConfig {
+            seed: user_seed(base.seed, u),
+            ..base.clone()
+        })
+        .collect()
+}
+
 /// Run one simulation: replay the trace, trigger extraction (+ optional
 /// model inference) every `inference_interval_ms`.
 pub fn run_simulation(
     catalog: &Catalog,
     extractor: &mut dyn Extractor,
-    model: Option<&ModelRuntime>,
+    model: Option<&dyn InferenceBackend>,
     cfg: &SimConfig,
 ) -> Result<SimOutcome> {
     let generator = TraceGenerator::new(catalog);
@@ -285,6 +308,46 @@ mod tests {
                 assert!(va.approx_eq(vb, 1e-9), "{va:?} vs {vb:?} @ {}", x.now);
             }
         }
+    }
+
+    #[test]
+    fn fan_out_gives_unique_reproducible_seeds() {
+        let base = quick_cfg();
+        let a = fan_out(&base, 32);
+        let b = fan_out(&base, 32);
+        assert_eq!(a.len(), 32);
+        let mut seeds: Vec<u64> = a.iter().map(|c| c.seed).collect();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.seed, y.seed, "fan-out must be deterministic");
+        }
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 32, "per-user seeds must be distinct");
+        // Shape fields are inherited from the base.
+        assert_eq!(a[7].warmup_ms, base.warmup_ms);
+        assert_eq!(a[7].inference_interval_ms, base.inference_interval_ms);
+    }
+
+    #[test]
+    fn fanned_out_users_produce_distinct_traces() {
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        let gen = TraceGenerator::new(&cat);
+        let cfgs = fan_out(&quick_cfg(), 2);
+        let trace = |c: &SimConfig| {
+            gen.generate(&TraceConfig {
+                period: c.period,
+                activity: c.activity,
+                start_ms: 0,
+                duration_ms: c.warmup_ms + c.duration_ms,
+                seed: c.seed,
+            })
+        };
+        let (a, b) = (trace(&cfgs[0]), trace(&cfgs[1]));
+        let differs = a.len() != b.len()
+            || a.iter()
+                .zip(&b)
+                .any(|(x, y)| x.timestamp_ms != y.timestamp_ms);
+        assert!(differs, "users share one trace");
     }
 
     #[test]

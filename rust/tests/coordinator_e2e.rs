@@ -44,7 +44,8 @@ fn coordinator_with_real_model_inference() {
     let mut extractor =
         harness::make_extractor(Method::AutoFeature, svc.features.clone(), &catalog, 256 * 1024)
             .unwrap();
-    let report = run_service(&catalog, extractor.as_mut(), Some(&model), &sim(20_000)).unwrap();
+    let backend: Option<&dyn autofeature::runtime::InferenceBackend> = Some(&model);
+    let report = run_service(&catalog, extractor.as_mut(), backend, &sim(20_000)).unwrap();
     assert_eq!(report.requests, 9);
     let p = report.last_prediction;
     assert!(p > 0.0 && p < 1.0, "prediction {p} not a probability");
