@@ -70,7 +70,7 @@ fn main() -> Result<()> {
         duration_ms: duration_min * 60_000,
         inference_interval_ms: svc.inference_interval_ms,
         seed: 2024,
-        codec: Default::default(),
+        ..SimConfig::default()
     };
     let users = SessionConfig::fleet(&base, NUM_USERS);
 

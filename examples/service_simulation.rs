@@ -48,7 +48,7 @@ fn main() -> Result<()> {
                 duration_ms: duration_min * 60_000,
                 inference_interval_ms: svc.inference_interval_ms,
                 seed: 2024,
-                codec: Default::default(),
+                ..SimConfig::default()
             };
             let naive = harness::run_cell(&catalog, &svc, Method::Naive, model.as_ref(), &sim)?;
             let auto =

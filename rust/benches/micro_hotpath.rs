@@ -1,9 +1,12 @@
 //! Micro-benchmarks of the engine's hot paths (the §Perf instrument).
 //!
 //! Reports ns/op for: codec decode (jsonish vs binary), indexed
-//! retrieve, hierarchical filter walk vs direct walk, cache-row
-//! projection, and a full AutoFeature extraction on the VR service.
-//! Before/after numbers from this bench drive DESIGN.md §Perf.
+//! retrieve over the segmented columnar store vs the flat row layout,
+//! the fused Retrieve+Decode projection (zone-map pruning + payload
+//! dictionary), hierarchical filter walk vs direct walk, and a full
+//! AutoFeature extraction on the VR service. Before/after numbers from
+//! this bench drive DESIGN.md §Perf. `BENCH_QUICK=1` shrinks iteration
+//! counts for CI smoke runs.
 
 mod common;
 
@@ -11,7 +14,7 @@ use std::hint::black_box;
 use std::time::Instant;
 
 use autofeature::applog::codec::{AttrCodec, BinaryCodec, JsonishCodec};
-use autofeature::applog::query::{retrieve, TimeWindow};
+use autofeature::applog::query::{retrieve, retrieve_project, TimeWindow};
 use autofeature::applog::store::{AppLogStore, StoreConfig};
 use autofeature::engine::config::EngineConfig;
 use autofeature::engine::online::Engine;
@@ -23,6 +26,18 @@ use autofeature::util::rng::SimRng;
 use autofeature::workload::driver::{run_simulation, SimConfig};
 use autofeature::workload::services::{ServiceKind, ServiceSpec};
 
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok()
+}
+
+fn iters(full: u64) -> u64 {
+    if quick() {
+        (full / 20).max(10)
+    } else {
+        full
+    }
+}
+
 fn time_per_op(label: &str, iters: u64, mut f: impl FnMut()) -> f64 {
     // Warmup.
     for _ in 0..iters / 10 + 1 {
@@ -33,7 +48,7 @@ fn time_per_op(label: &str, iters: u64, mut f: impl FnMut()) -> f64 {
         f();
     }
     let per = t0.elapsed().as_nanos() as f64 / iters as f64;
-    println!("{label:44} {per:12.1} ns/op  ({iters} iters)");
+    println!("{label:52} {per:12.1} ns/op  ({iters} iters)");
     per
 }
 
@@ -53,28 +68,71 @@ fn main() {
         json.len(),
         bin.len()
     );
-    time_per_op("decode jsonish", 20_000, || {
+    time_per_op("decode jsonish", iters(20_000), || {
         black_box(JsonishCodec.decode(black_box(&json)).unwrap());
     });
-    time_per_op("decode binary", 20_000, || {
+    time_per_op("decode binary", iters(20_000), || {
         black_box(BinaryCodec.decode(black_box(&bin)).unwrap());
     });
 
-    // --- retrieve ---------------------------------------------------------
-    let mut store = AppLogStore::new(StoreConfig::default());
-    for i in 0..20_000i64 {
+    // --- retrieve: segmented columnar store vs flat row layout ------------
+    // App-log payloads repeat heavily in practice (same button, same
+    // page); draw each row from a small payload pool so the segment
+    // payload dictionary has duplicates to de-duplicate.
+    let pool: Vec<Vec<u8>> = (0..48)
+        .map(|_| JsonishCodec.encode(&schema.sample_attrs(&mut rng)))
+        .collect();
+    let n_rows = 20_000i64;
+    let mut seg_store = AppLogStore::new(StoreConfig::default());
+    let mut flat_store = AppLogStore::new(StoreConfig::flat());
+    let mut pick = SimRng::seed_from_u64(2);
+    for i in 0..n_rows {
         let t = (i % 8) as u16;
-        store
-            .append(t, i * 50, JsonishCodec.encode(&attrs))
-            .unwrap();
+        let p = &pool[pick.range_u(0, pool.len())];
+        seg_store.append(t, i * 50, p.clone()).unwrap();
+        flat_store.append(t, i * 50, p.clone()).unwrap();
     }
-    let w = TimeWindow::last(1_000_000, 500_000);
-    time_per_op("retrieve 1 type (~1.2k rows)", 2_000, || {
-        black_box(retrieve(black_box(&store), &[0], w));
+    // Window over the most recent 20% of the log: touches <50% of the
+    // sealed segments, so zone maps prune the rest before any row work.
+    let w = TimeWindow::last(n_rows * 50, n_rows * 10);
+    let union: Vec<u16> = vec![0, 1];
+    let (probe, stats) = retrieve_project(&seg_store, 0, w, &JsonishCodec, &union).unwrap();
+    println!(
+        "segmented store: {} segments, window survivors {} rows, zone maps pruned {}/{} segments",
+        seg_store.num_segments(),
+        probe.len(),
+        stats.segments_pruned,
+        stats.segments_pruned + stats.segments_scanned,
+    );
+
+    time_per_op("retrieve 1 type, flat rows (~500 rows)", iters(2_000), || {
+        black_box(retrieve(black_box(&flat_store), &[0], w));
     });
-    time_per_op("retrieve 4 types (k-way merge)", 1_000, || {
-        black_box(retrieve(black_box(&store), &[0, 1, 2, 3], w));
+    time_per_op("retrieve 1 type, segmented (~500 rows)", iters(2_000), || {
+        black_box(retrieve(black_box(&seg_store), &[0], w));
     });
+    time_per_op("retrieve 4 types (k-way merge, segmented)", iters(1_000), || {
+        black_box(retrieve(black_box(&seg_store), &[0, 1, 2, 3], w));
+    });
+
+    // --- fused Retrieve+Decode: the engine's actual hot path --------------
+    // Flat path = clone each surviving row, then decode_project it (what
+    // the engine did before the columnar substrate).
+    let flat_rd = time_per_op("retrieve+decode_project, flat rows", iters(500), || {
+        let rows = retrieve(black_box(&flat_store), &[0], w);
+        let mut out = Vec::with_capacity(rows.len());
+        for r in &rows {
+            out.push(JsonishCodec.decode_project(&r.payload, &union).unwrap());
+        }
+        black_box(out);
+    });
+    let seg_rd = time_per_op("retrieve+decode fused, segmented", iters(500), || {
+        black_box(retrieve_project(black_box(&seg_store), 0, w, &JsonishCodec, &union).unwrap());
+    });
+    println!(
+        "Retrieve+Decode, window touching <50% of segments: segmented fused is {:.2}x flat",
+        flat_rd / seg_rd
+    );
 
     // --- hierarchical vs direct filter walk -------------------------------
     let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
@@ -96,7 +154,7 @@ fn main() {
         })
         .collect();
     println!("lane: {} members, {} window groups, 2000 rows", members, lane.groups.len());
-    time_per_op("hierarchical walk (per 2k-row lane)", 200, || {
+    time_per_op("hierarchical walk (per 2k-row lane)", iters(200), || {
         let mut sinks: Vec<FeatureAcc> = svc
             .features
             .iter()
@@ -108,7 +166,7 @@ fn main() {
         }
         black_box(sinks);
     });
-    time_per_op("direct walk (per 2k-row lane)", 200, || {
+    time_per_op("direct walk (per 2k-row lane)", iters(200), || {
         let mut sinks: Vec<FeatureAcc> = svc
             .features
             .iter()
@@ -147,7 +205,7 @@ fn main() {
     }
 
     // Engine construction cost (offline phase).
-    time_per_op("engine offline compile (VR)", 20, || {
+    time_per_op("engine offline compile (VR)", iters(20), || {
         black_box(
             Engine::new(
                 svc.features.clone(),

@@ -1,0 +1,73 @@
+//! Tail compaction: sealing the mutable append tail into immutable
+//! columnar [`Segment`]s.
+//!
+//! The store appends into a small row-format tail; once the tail reaches
+//! `StoreConfig::segment_rows` it is sealed. Sealing is purely a storage
+//! re-layout — row content, order and seq_nos are untouched, which the
+//! differential test sweep (`rust/tests/applog_differential.rs`) pins
+//! bit-for-bit across compaction thresholds.
+
+use super::event::BehaviorEvent;
+use super::segment::{Segment, MAX_DICT_TYPES};
+
+/// Seal `rows` (chronological, seq-increasing) into one or more
+/// segments. Normally produces a single segment; splits early only when
+/// a segment would exceed the one-byte type-dictionary capacity.
+pub fn seal(rows: &[BehaviorEvent]) -> Vec<Segment> {
+    let mut segments = Vec::new();
+    let mut start = 0usize;
+    while start < rows.len() {
+        let mut distinct: Vec<u16> = Vec::new();
+        let mut end = start;
+        while end < rows.len() {
+            let t = rows[end].event_type;
+            if !distinct.contains(&t) {
+                if distinct.len() == MAX_DICT_TYPES {
+                    break;
+                }
+                distinct.push(t);
+            }
+            end += 1;
+        }
+        segments.push(Segment::build(&rows[start..end]));
+        start = end;
+    }
+    segments
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(seq: u64, event_type: u16, ts: i64) -> BehaviorEvent {
+        BehaviorEvent {
+            seq_no: seq,
+            event_type,
+            timestamp_ms: ts,
+            payload: vec![event_type as u8],
+        }
+    }
+
+    #[test]
+    fn seal_produces_one_segment_normally() {
+        let rows: Vec<_> = (0..100).map(|i| row(i, (i % 5) as u16, i as i64)).collect();
+        let segs = seal(&rows);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].len(), 100);
+    }
+
+    #[test]
+    fn seal_splits_when_type_dictionary_would_overflow() {
+        // 300 distinct types cannot share one segment's u8 code space.
+        let rows: Vec<_> = (0..300).map(|i| row(i, i as u16, i as i64)).collect();
+        let segs = seal(&rows);
+        assert!(segs.len() >= 2);
+        assert_eq!(segs.iter().map(|s| s.len()).sum::<usize>(), 300);
+        assert_eq!(segs[0].len(), MAX_DICT_TYPES);
+    }
+
+    #[test]
+    fn seal_empty_is_empty() {
+        assert!(seal(&[]).is_empty());
+    }
+}

@@ -14,14 +14,23 @@
 //! * [`codec`] — the compressed-attribute codecs (a JSON-like text codec
 //!   matching the paper's "lightweight data transformation tools like
 //!   JSON parsing", plus a binary codec for ablations),
-//! * [`store`] — the chronological log store,
-//! * [`persist`] — snapshot save/load (the log's on-disk role),
+//! * [`store`] — the segmented log store: a mutable row-format tail plus
+//!   immutable columnar segments,
+//! * [`segment`] — the columnar segment format (dictionary-encoded
+//!   types, delta/varint timestamps and seq_nos, de-duplicated payload
+//!   arena, zone maps),
+//! * [`compact`] — sealing the tail into segments,
+//! * [`persist`] — snapshot save/load (v2 segmented columnar with CRC,
+//!   plus the legacy v1 flat-row loader),
 //! * [`query`] — the `Retrieve` query path
-//!   (`SELECT * WHERE event_name IN (..) AND timestamp > t`).
+//!   (`SELECT * WHERE event_name IN (..) AND timestamp > t`) with
+//!   zone-map segment pruning and the fused Retrieve+Decode projection.
 
 pub mod codec;
+pub mod compact;
 pub mod event;
 pub mod persist;
 pub mod query;
 pub mod schema;
+pub mod segment;
 pub mod store;

@@ -1,82 +1,261 @@
 //! App-log persistence (the SQLite-analogue's on-disk role).
 //!
-//! Mobile app logs survive process restarts; this module gives
-//! [`AppLogStore`] a compact binary snapshot format:
+//! Mobile app logs survive process restarts. Two snapshot formats exist:
+//!
+//! **v1** (legacy, flat rows — still loadable):
 //!
 //! ```text
-//! magic "AFLG" | version u16 | row_count u64 |
+//! magic "AFLG" | version=1 u16 | row_count u64 |
 //!   ( seq u64 | event_type u16 | ts i64 | payload_len u32 | payload )*
 //! ```
 //!
-//! Snapshots round-trip exactly (rows, order, payload bytes) and load
-//! validates magic/version/lengths, so a corrupted file never produces a
-//! silently wrong log.
+//! **v2** (current, segmented columnar — what [`to_bytes`] writes):
+//!
+//! ```text
+//! magic "AFLG" | version=2 u16 | blob_len u32 |
+//! next_seq u64 | total_appended u64 |
+//! segment_count u32 | ( block_len u32 | segment block )* |
+//! tail_count u32 | ( seq u64 | event_type u16 | ts i64 | len u32 | payload )* |
+//! crc32 u32   (IEEE, over everything before it)
+//! ```
+//!
+//! Snapshots round-trip exactly (rows, order, seq_nos, payload bytes).
+//! v2 loads verify the declared blob length and the trailing CRC-32
+//! before parsing, so **any** single-byte truncation or corruption is
+//! rejected with an error — a damaged file never produces a silently
+//! wrong log (CRC-32 detects every burst error of up to 32 bits). The
+//! property sweep in `rust/tests/prop_invariants.rs` pins this
+//! byte-by-byte.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use super::event::BehaviorEvent;
+use super::segment::Segment;
 use super::store::{AppLogStore, StoreConfig};
 
 const MAGIC: &[u8; 4] = b"AFLG";
-const VERSION: u16 = 1;
+const VERSION_V1: u16 = 1;
+const VERSION_V2: u16 = 2;
 
-/// Serialize the live log to a snapshot blob.
+/// CRC-32 (IEEE 802.3, reflected). Table built per call — snapshots are
+/// loaded rarely and the build is 2k shifts.
+fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, slot) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *slot = c;
+    }
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+/// Serialize the live log to a v2 (segmented columnar) snapshot blob.
 pub fn to_bytes(store: &AppLogStore) -> Vec<u8> {
-    let rows = store.rows();
-    let mut out = Vec::with_capacity(14 + rows.iter().map(|r| 22 + r.payload.len()).sum::<usize>());
+    let mut out = Vec::new();
     out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
-    out.extend_from_slice(&(rows.len() as u64).to_le_bytes());
-    for r in rows {
+    out.extend_from_slice(&VERSION_V2.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes()); // blob_len, patched below
+    out.extend_from_slice(&store.next_seq().to_le_bytes());
+    out.extend_from_slice(&store.total_appended().to_le_bytes());
+    let segments = store.segments();
+    out.extend_from_slice(&(segments.len() as u32).to_le_bytes());
+    for seg in segments {
+        let block = seg.encode();
+        out.extend_from_slice(&(block.len() as u32).to_le_bytes());
+        out.extend_from_slice(&block);
+    }
+    let tail = store.tail();
+    out.extend_from_slice(&(tail.len() as u32).to_le_bytes());
+    for r in tail {
         out.extend_from_slice(&r.seq_no.to_le_bytes());
         out.extend_from_slice(&r.event_type.to_le_bytes());
         out.extend_from_slice(&r.timestamp_ms.to_le_bytes());
         out.extend_from_slice(&(r.payload.len() as u32).to_le_bytes());
         out.extend_from_slice(&r.payload);
     }
+    let blob_len = (out.len() + 4) as u32;
+    out[6..10].copy_from_slice(&blob_len.to_le_bytes());
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
     out
 }
 
-/// Load a snapshot blob into a fresh store.
+/// Serialize in the legacy v1 (flat row) format. Kept so the
+/// v1-compatibility path stays testable against freshly written blobs.
+pub fn to_bytes_v1(store: &AppLogStore) -> Vec<u8> {
+    let n = store.len();
+    let mut out = Vec::with_capacity(14 + n * 26);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION_V1.to_le_bytes());
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    for r in store.iter() {
+        out.extend_from_slice(&r.seq_no.to_le_bytes());
+        out.extend_from_slice(&r.event_type.to_le_bytes());
+        out.extend_from_slice(&r.timestamp_ms.to_le_bytes());
+        out.extend_from_slice(&(r.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(r.payload);
+    }
+    out
+}
+
+/// Load a snapshot blob (v1 or v2) into a fresh store.
 pub fn from_bytes(data: &[u8], cfg: StoreConfig) -> Result<AppLogStore> {
+    ensure!(data.len() >= 6, "snapshot too short");
+    ensure!(&data[..4] == MAGIC, "bad snapshot magic");
+    let version = u16::from_le_bytes(data[4..6].try_into().unwrap());
+    match version {
+        VERSION_V1 => from_bytes_v1(data, cfg),
+        VERSION_V2 => from_bytes_v2(data, cfg),
+        v => bail!("unsupported snapshot version {v}"),
+    }
+}
+
+/// Legacy flat-row loader. Row content, order and stored seq_nos are
+/// preserved exactly; rows land in the store's tail and adopt the
+/// segmented layout at the next compaction.
+fn from_bytes_v1(data: &[u8], cfg: StoreConfig) -> Result<AppLogStore> {
     let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
-        if *i + n > data.len() {
+        if n > data.len() - *i {
             bail!("truncated snapshot at offset {i}");
         }
         let s = &data[*i..*i + n];
         *i += n;
         Ok(s)
     };
-    let mut i = 0usize;
-    if take(&mut i, 4)? != MAGIC {
-        bail!("bad snapshot magic");
-    }
-    let version = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap());
-    if version != VERSION {
-        bail!("unsupported snapshot version {version}");
-    }
+    let mut i = 6usize; // magic + version already validated
     let count = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap()) as usize;
-    let mut store = AppLogStore::new(cfg);
-    let mut expected_seq: Option<u64> = None;
+    let mut rows: Vec<BehaviorEvent> = Vec::new();
+    let mut last_seq: Option<u64> = None;
+    let mut last_ts: Option<i64> = None;
     for _ in 0..count {
         let seq = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
         let event_type = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap());
         let ts = i64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
         let len = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
         let payload = take(&mut i, len)?.to_vec();
-        if let Some(e) = expected_seq {
+        if let Some(e) = last_seq {
             if seq <= e {
                 bail!("non-monotonic seq {seq} after {e}");
             }
         }
-        expected_seq = Some(seq);
-        store
-            .append(event_type, ts, payload)
-            .context("snapshot rows out of chronological order")?;
+        if let Some(t) = last_ts {
+            if ts < t {
+                bail!("snapshot rows out of chronological order");
+            }
+        }
+        last_seq = Some(seq);
+        last_ts = Some(ts);
+        rows.push(BehaviorEvent {
+            seq_no: seq,
+            event_type,
+            timestamp_ms: ts,
+            payload,
+        });
     }
     if i != data.len() {
         bail!("trailing garbage after snapshot ({} bytes)", data.len() - i);
     }
-    Ok(store)
+    let next_seq = last_seq.map_or(0, |s| s + 1);
+    let total = rows.len() as u64;
+    Ok(AppLogStore::from_parts(cfg, Vec::new(), rows, next_seq, total))
+}
+
+/// Segmented columnar loader: verify length + CRC first, then parse and
+/// re-validate every store invariant (global chronology, strictly
+/// increasing seq_nos across segment boundaries).
+fn from_bytes_v2(data: &[u8], cfg: StoreConfig) -> Result<AppLogStore> {
+    ensure!(data.len() >= 14, "truncated v2 snapshot header");
+    let declared = u32::from_le_bytes(data[6..10].try_into().unwrap()) as usize;
+    ensure!(
+        declared == data.len(),
+        "snapshot length mismatch: header says {declared}, blob is {}",
+        data.len()
+    );
+    let body = &data[..data.len() - 4];
+    let stored_crc = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+    let actual = crc32(body);
+    ensure!(
+        stored_crc == actual,
+        "snapshot checksum mismatch (stored {stored_crc:08x}, computed {actual:08x})"
+    );
+
+    let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+        if n > body.len() - *i {
+            bail!("truncated snapshot at offset {i}");
+        }
+        let s = &body[*i..*i + n];
+        *i += n;
+        Ok(s)
+    };
+    let mut i = 10usize;
+    let next_seq = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
+    let total_appended = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
+
+    let seg_count = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+    let mut segments = Vec::with_capacity(seg_count);
+    let mut last_ts: Option<i64> = None;
+    let mut last_seq: Option<u64> = None;
+    for _ in 0..seg_count {
+        let block_len = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+        let seg = Segment::decode(take(&mut i, block_len)?)?;
+        if let Some(t) = last_ts {
+            ensure!(seg.min_ts >= t, "segments out of chronological order");
+        }
+        if let Some(s) = last_seq {
+            ensure!(seg.seq[0] > s, "segment seq_nos overlap");
+        }
+        last_ts = Some(seg.max_ts);
+        last_seq = Some(*seg.seq.last().unwrap());
+        segments.push(seg);
+    }
+
+    let tail_count = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+    let mut tail = Vec::with_capacity(tail_count);
+    for _ in 0..tail_count {
+        let seq = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
+        let event_type = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap());
+        let ts = i64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
+        let len = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+        let payload = take(&mut i, len)?.to_vec();
+        if let Some(t) = last_ts {
+            ensure!(ts >= t, "tail rows out of chronological order");
+        }
+        if let Some(s) = last_seq {
+            ensure!(seq > s, "tail seq_nos out of order");
+        }
+        last_ts = Some(ts);
+        last_seq = Some(seq);
+        tail.push(BehaviorEvent {
+            seq_no: seq,
+            event_type,
+            timestamp_ms: ts,
+            payload,
+        });
+    }
+    if i != body.len() {
+        bail!("trailing garbage after snapshot ({} bytes)", body.len() - i);
+    }
+    let rows = segments.iter().map(|s| s.len()).sum::<usize>() + tail.len();
+    if let Some(s) = last_seq {
+        ensure!(next_seq > s, "next_seq {next_seq} not past last row seq {s}");
+    }
+    ensure!(
+        total_appended >= rows as u64,
+        "total_appended {total_appended} below live row count {rows}"
+    );
+    Ok(AppLogStore::from_parts(
+        cfg,
+        segments,
+        tail,
+        next_seq,
+        total_appended,
+    ))
 }
 
 /// Write a snapshot to a file.
@@ -99,10 +278,13 @@ mod tests {
     use crate::applog::schema::{Catalog, CatalogConfig};
     use crate::util::rng::SimRng;
 
-    fn populated() -> AppLogStore {
+    fn populated_with(segment_rows: usize) -> AppLogStore {
         let cat = Catalog::generate(&CatalogConfig::small(), 1);
         let mut rng = SimRng::seed_from_u64(2);
-        let mut s = AppLogStore::new(StoreConfig::default());
+        let mut s = AppLogStore::new(StoreConfig {
+            segment_rows,
+            ..StoreConfig::default()
+        });
         for i in 0..100i64 {
             let t = (i % 4) as u16;
             let attrs = cat.schema(t).sample_attrs(&mut rng);
@@ -111,17 +293,44 @@ mod tests {
         s
     }
 
-    #[test]
-    fn roundtrip_preserves_rows_exactly() {
-        let a = populated();
-        let b = from_bytes(&to_bytes(&a), StoreConfig::default()).unwrap();
+    fn populated() -> AppLogStore {
+        populated_with(32)
+    }
+
+    fn assert_rows_equal(a: &AppLogStore, b: &AppLogStore) {
         assert_eq!(a.len(), b.len());
-        for (x, y) in a.rows().iter().zip(b.rows()) {
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.seq_no, y.seq_no);
             assert_eq!(x.event_type, y.event_type);
             assert_eq!(x.timestamp_ms, y.timestamp_ms);
             assert_eq!(x.payload, y.payload);
         }
-        assert_eq!(a.storage_bytes(), b.storage_bytes());
+    }
+
+    #[test]
+    fn v2_roundtrip_preserves_rows_exactly() {
+        for segment_rows in [1usize, 32, usize::MAX] {
+            let a = populated_with(segment_rows);
+            let b = from_bytes(
+                &to_bytes(&a),
+                StoreConfig {
+                    segment_rows,
+                    ..StoreConfig::default()
+                },
+            )
+            .unwrap();
+            assert_rows_equal(&a, &b);
+            assert_eq!(a.storage_bytes(), b.storage_bytes());
+            assert_eq!(a.total_appended(), b.total_appended());
+            assert_eq!(a.num_segments(), b.num_segments());
+        }
+    }
+
+    #[test]
+    fn v1_blob_still_loads() {
+        let a = populated();
+        let b = from_bytes(&to_bytes_v1(&a), StoreConfig::default()).unwrap();
+        assert_rows_equal(&a, &b);
     }
 
     #[test]
@@ -140,6 +349,15 @@ mod tests {
     }
 
     #[test]
+    fn loaded_store_keeps_appending_with_fresh_seqs() {
+        let a = populated();
+        let mut b = from_bytes(&to_bytes(&a), StoreConfig::default()).unwrap();
+        let last = b.iter().last().unwrap().seq_no;
+        let seq = b.append(0, 99 * 777 + 1, vec![1]).unwrap();
+        assert_eq!(seq, last + 1);
+    }
+
+    #[test]
     fn rejects_corruption() {
         let bytes = to_bytes(&populated());
         // Bad magic.
@@ -153,9 +371,14 @@ mod tests {
         long.push(0);
         assert!(from_bytes(&long, StoreConfig::default()).is_err());
         // Bad version.
-        let mut v = bytes;
+        let mut v = bytes.clone();
         v[4] = 9;
         assert!(from_bytes(&v, StoreConfig::default()).is_err());
+        // Payload bit flip deep in a segment arena: caught by the CRC.
+        let mut flipped = bytes;
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x10;
+        assert!(from_bytes(&flipped, StoreConfig::default()).is_err());
     }
 
     #[test]
@@ -175,5 +398,11 @@ mod tests {
         let s = AppLogStore::new(StoreConfig::default());
         let b = from_bytes(&to_bytes(&s), StoreConfig::default()).unwrap();
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // IEEE CRC-32 of "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
     }
 }

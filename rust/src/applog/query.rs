@@ -4,15 +4,30 @@
 //! `SELECT * FROM applog WHERE event_name IN {event_names} AND
 //! timestamp > {current_time - time_range}`.
 //!
-//! Two strategies are provided:
-//! * [`retrieve`] — the indexed path: binary-search each requested type's
-//!   chronological position list for the window start, then merge the
-//!   per-type runs back into global timestamp order (k-way merge). This
-//!   is what both the naive baseline and AutoFeature lanes use.
+//! Three strategies are provided:
+//! * [`retrieve`] — the indexed path over the segmented store: each
+//!   sealed segment is tested against its **zone map** (min/max
+//!   timestamp, type-occupancy bitmap) and skipped wholesale when it
+//!   cannot contribute; surviving segments binary-search their per-type
+//!   position lists, and the tail is merged last. Output order is global
+//!   chronological (= position/seq order), exactly as the flat store
+//!   produced.
+//! * [`retrieve_project`] — `Retrieve` fused with a segment-granular
+//!   `Decode`: rows that survive pruning are decoded straight into the
+//!   requested attr projection from the de-duplicated payload arena
+//!   (duplicate payloads within a segment decode once), never
+//!   materializing an owned event row.
 //! * [`retrieve_scan`] — a full-table linear scan, the reference oracle
-//!   used by tests to validate the indexed path.
+//!   used by tests to validate the indexed paths.
 
-use super::event::{BehaviorEvent, EventTypeId, TimestampMs};
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::codec::AttrCodec;
+use super::event::{AttrId, AttrValue, BehaviorEvent, EventTypeId, TimestampMs};
+use super::segment::Segment;
 use super::store::AppLogStore;
 
 /// Inclusive-exclusive time window `[start, end)` over event timestamps.
@@ -47,12 +62,43 @@ impl TimeWindow {
     }
 }
 
+/// Matching row positions of one segment, per queried type, merged back
+/// into position (= chronological + seq) order. Returns the number of
+/// positions pushed. The zone map is consulted first: a segment whose
+/// `[min_ts, max_ts]` misses the window or whose bitmap holds none of
+/// the queried types contributes nothing and is never row-scanned.
+fn segment_positions(seg: &Segment, types: &[EventTypeId], window: TimeWindow, out: &mut Vec<u32>) {
+    if !seg.overlaps(window.start_ms, window.end_ms) || !seg.bitmap().intersects(types) {
+        return;
+    }
+    let before = out.len();
+    let mut runs = 0usize;
+    for &t in types {
+        if !seg.bitmap().contains(t) {
+            continue;
+        }
+        let pos = seg.positions_of(t);
+        let lo = pos.partition_point(|&p| seg.ts[p as usize] < window.start_ms);
+        let hi = pos.partition_point(|&p| seg.ts[p as usize] < window.end_ms);
+        if lo < hi {
+            out.extend_from_slice(&pos[lo..hi]);
+            runs += 1;
+        }
+    }
+    if runs > 1 {
+        // Per-type runs interleave within the segment; position order is
+        // append order, which is chronological with seq tie-breaking.
+        out[before..].sort_unstable();
+    }
+}
+
 /// Indexed retrieve: rows of any of `event_types` within `window`,
 /// returned as cloned rows in global chronological order.
 ///
-/// The clone is deliberate: in production this operation copies rows from
-/// storage (SQLite pages) into process memory, and that data movement is
-/// part of the `Retrieve` cost the paper measures.
+/// The clone is deliberate: in production this operation copies rows
+/// from storage (SQLite pages / the segment arena) into process memory,
+/// and that data movement is part of the `Retrieve` cost the paper
+/// measures. The fused engine lanes use [`retrieve_project`] instead.
 pub fn retrieve(
     store: &AppLogStore,
     event_types: &[EventTypeId],
@@ -62,46 +108,154 @@ pub fn retrieve(
     let mut types: Vec<EventTypeId> = event_types.to_vec();
     types.sort_unstable();
     types.dedup();
-    let mut runs: Vec<&[u32]> = Vec::with_capacity(types.len());
-    for &t in types.iter() {
-        let pos = store.type_positions(t);
-        // Binary search window start / end within this type's run.
-        let lo = pos.partition_point(|&p| store.row(p).timestamp_ms < window.start_ms);
-        let hi = pos.partition_point(|&p| store.row(p).timestamp_ms < window.end_ms);
+
+    let mut out = Vec::new();
+    let mut scratch: Vec<u32> = Vec::new();
+    for seg in store.segments() {
+        scratch.clear();
+        segment_positions(seg, &types, window, &mut scratch);
+        out.extend(scratch.iter().map(|&p| seg.materialize(p)));
+    }
+    scratch.clear();
+    tail_positions(store, &types, window, &mut scratch);
+    let tail = store.tail();
+    out.extend(scratch.iter().map(|&p| tail[p as usize].clone()));
+    out
+}
+
+/// Matching tail positions, merged into position order.
+fn tail_positions(
+    store: &AppLogStore,
+    types: &[EventTypeId],
+    window: TimeWindow,
+    out: &mut Vec<u32>,
+) {
+    let tail = store.tail();
+    let before = out.len();
+    let mut runs = 0usize;
+    for &t in types {
+        let pos = store.tail_type_positions(t);
+        let lo = pos.partition_point(|&p| tail[p as usize].timestamp_ms < window.start_ms);
+        let hi = pos.partition_point(|&p| tail[p as usize].timestamp_ms < window.end_ms);
         if lo < hi {
-            runs.push(&pos[lo..hi]);
+            out.extend_from_slice(&pos[lo..hi]);
+            runs += 1;
         }
     }
-    match runs.len() {
-        0 => Vec::new(),
-        1 => runs[0].iter().map(|&p| store.row(p).clone()).collect(),
-        _ => {
-            // K-way merge on row position (positions are append order,
-            // which is chronological).
-            let total: usize = runs.iter().map(|r| r.len()).sum();
-            let mut cursors = vec![0usize; runs.len()];
-            let mut out = Vec::with_capacity(total);
-            loop {
-                let mut best: Option<(usize, u32)> = None;
-                for (i, run) in runs.iter().enumerate() {
-                    if cursors[i] < run.len() {
-                        let p = run[cursors[i]];
-                        if best.map_or(true, |(_, bp)| p < bp) {
-                            best = Some((i, p));
-                        }
-                    }
-                }
-                match best {
-                    Some((i, p)) => {
-                        cursors[i] += 1;
-                        out.push(store.row(p).clone());
-                    }
-                    None => break,
-                }
-            }
-            out
-        }
+    if runs > 1 {
+        out[before..].sort_unstable();
     }
+}
+
+/// One row decoded straight into an attr projection (output of the
+/// fused Retrieve+Decode path).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodedRow {
+    /// Event timestamp.
+    pub ts: TimestampMs,
+    /// Log row id.
+    pub seq: u64,
+    /// `(attr id, value)` pairs of the requested projection, sorted.
+    pub attrs: Vec<(AttrId, AttrValue)>,
+}
+
+/// Instrumentation of one fused Retrieve+Decode call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RetrieveDecodeStats {
+    /// Rows that survived pruning (retrieved and decoded).
+    pub rows: u64,
+    /// Time spent locating surviving rows (the `Retrieve` share).
+    pub retrieve_ns: u64,
+    /// Time spent decoding payload projections (the `Decode` share).
+    pub decode_ns: u64,
+    /// Segments whose rows were actually visited.
+    pub segments_scanned: u64,
+    /// Segments discarded by the zone map alone.
+    pub segments_pruned: u64,
+}
+
+/// Fused `Retrieve` + projected `Decode` for one behavior type, pushed
+/// down to segment granularity: zone maps discard whole segments, the
+/// survivors' payloads are decoded from the arena without materializing
+/// owned rows, and duplicate payloads within a segment are decoded once
+/// (dictionary de-dup). Semantically identical to `retrieve` followed by
+/// `codec.decode_project` per row — pinned by the differential tests.
+pub fn retrieve_project(
+    store: &AppLogStore,
+    event_type: EventTypeId,
+    window: TimeWindow,
+    codec: &dyn AttrCodec,
+    wanted: &[AttrId],
+) -> Result<(Vec<DecodedRow>, RetrieveDecodeStats)> {
+    let mut out = Vec::new();
+    let mut stats = RetrieveDecodeStats::default();
+    let types = [event_type];
+    let mut scratch: Vec<u32> = Vec::new();
+    let mut memo: HashMap<u32, Vec<(AttrId, AttrValue)>> = HashMap::new();
+
+    for seg in store.segments() {
+        let t0 = Instant::now();
+        // Zone map first: a miss discards the segment without touching
+        // its rows ("pruned"); anything past this point is a visit.
+        if !seg.overlaps(window.start_ms, window.end_ms) || !seg.bitmap().contains(event_type) {
+            stats.segments_pruned += 1;
+            stats.retrieve_ns += t0.elapsed().as_nanos() as u64;
+            continue;
+        }
+        scratch.clear();
+        segment_positions(seg, &types, window, &mut scratch);
+        stats.retrieve_ns += t0.elapsed().as_nanos() as u64;
+        stats.segments_scanned += 1;
+        if scratch.is_empty() {
+            continue;
+        }
+        stats.rows += scratch.len() as u64;
+
+        let t0 = Instant::now();
+        let dedup = seg.unique_payloads() < seg.len();
+        memo.clear();
+        for &p in &scratch {
+            let attrs = if dedup {
+                let code = seg.payload_codes[p as usize];
+                match memo.get(&code) {
+                    Some(a) => a.clone(),
+                    None => {
+                        let a = codec.decode_project(seg.payload_at(p), wanted)?;
+                        memo.insert(code, a.clone());
+                        a
+                    }
+                }
+            } else {
+                codec.decode_project(seg.payload_at(p), wanted)?
+            };
+            out.push(DecodedRow {
+                ts: seg.ts[p as usize],
+                seq: seg.seq[p as usize],
+                attrs,
+            });
+        }
+        stats.decode_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    let t0 = Instant::now();
+    scratch.clear();
+    tail_positions(store, &types, window, &mut scratch);
+    stats.retrieve_ns += t0.elapsed().as_nanos() as u64;
+    if !scratch.is_empty() {
+        stats.rows += scratch.len() as u64;
+        let t0 = Instant::now();
+        let tail = store.tail();
+        for &p in &scratch {
+            let r = &tail[p as usize];
+            out.push(DecodedRow {
+                ts: r.timestamp_ms,
+                seq: r.seq_no,
+                attrs: codec.decode_project(&r.payload, wanted)?,
+            });
+        }
+        stats.decode_ns += t0.elapsed().as_nanos() as u64;
+    }
+    Ok((out, stats))
 }
 
 /// Reference retrieve: full-table scan. O(total rows); used by tests and
@@ -113,46 +267,69 @@ pub fn retrieve_scan(
     window: TimeWindow,
 ) -> Vec<BehaviorEvent> {
     store
-        .rows()
         .iter()
         .filter(|r| window.contains(r.timestamp_ms) && event_types.contains(&r.event_type))
-        .cloned()
+        .map(|r| r.to_event())
         .collect()
 }
 
 /// Count rows matching the query without materializing them (used by the
-/// event evaluator to estimate `Num(E_i)` cheaply).
+/// event evaluator to estimate `Num(E_i)` cheaply). Zone maps prune
+/// whole segments exactly as in [`retrieve`].
 pub fn count(store: &AppLogStore, event_type: EventTypeId, window: TimeWindow) -> usize {
-    let pos = store.type_positions(event_type);
-    let lo = pos.partition_point(|&p| store.row(p).timestamp_ms < window.start_ms);
-    let hi = pos.partition_point(|&p| store.row(p).timestamp_ms < window.end_ms);
-    hi - lo
+    let mut n = 0usize;
+    for seg in store.segments() {
+        if !seg.overlaps(window.start_ms, window.end_ms) || !seg.bitmap().contains(event_type) {
+            continue;
+        }
+        let pos = seg.positions_of(event_type);
+        let lo = pos.partition_point(|&p| seg.ts[p as usize] < window.start_ms);
+        let hi = pos.partition_point(|&p| seg.ts[p as usize] < window.end_ms);
+        n += hi - lo;
+    }
+    let tail = store.tail();
+    let pos = store.tail_type_positions(event_type);
+    let lo = pos.partition_point(|&p| tail[p as usize].timestamp_ms < window.start_ms);
+    let hi = pos.partition_point(|&p| tail[p as usize].timestamp_ms < window.end_ms);
+    n + (hi - lo)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::applog::codec::JsonishCodec;
     use crate::applog::store::StoreConfig;
 
-    fn store() -> AppLogStore {
-        let mut s = AppLogStore::new(StoreConfig::default());
+    fn store_seg(segment_rows: usize) -> AppLogStore {
+        let mut s = AppLogStore::new(StoreConfig {
+            segment_rows,
+            ..StoreConfig::default()
+        });
         // Interleave 4 types over 100 rows, 1s apart.
         for i in 0..100i64 {
-            s.append((i % 4) as EventTypeId, i * 1000, vec![i as u8]).unwrap();
+            s.append((i % 4) as EventTypeId, i * 1000, vec![i as u8])
+                .unwrap();
         }
         s
     }
 
+    fn store() -> AppLogStore {
+        store_seg(16)
+    }
+
     #[test]
-    fn indexed_matches_scan() {
-        let s = store();
-        let w = TimeWindow::last(80_000, 50_000);
-        for types in [vec![0u16], vec![1, 3], vec![0, 1, 2, 3], vec![9]] {
-            let a = retrieve(&s, &types, w);
-            let b = retrieve_scan(&s, &types, w);
-            assert_eq!(a.len(), b.len());
-            for (x, y) in a.iter().zip(&b) {
-                assert_eq!(x.seq_no, y.seq_no);
+    fn indexed_matches_scan_across_layouts() {
+        for segment_rows in [1usize, 7, 16, usize::MAX] {
+            let s = store_seg(segment_rows);
+            let w = TimeWindow::last(80_000, 50_000);
+            for types in [vec![0u16], vec![1, 3], vec![0, 1, 2, 3], vec![9]] {
+                let a = retrieve(&s, &types, w);
+                let b = retrieve_scan(&s, &types, w);
+                assert_eq!(a.len(), b.len(), "seg={segment_rows} {types:?}");
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.seq_no, y.seq_no);
+                    assert_eq!(x.payload, y.payload);
+                }
             }
         }
     }
@@ -164,6 +341,7 @@ mod tests {
         assert_eq!(out.len(), 100);
         for pair in out.windows(2) {
             assert!(pair[0].timestamp_ms <= pair[1].timestamp_ms);
+            assert!(pair[0].seq_no < pair[1].seq_no);
         }
     }
 
@@ -171,7 +349,14 @@ mod tests {
     fn window_end_is_exclusive() {
         let s = store();
         // Event at ts=50_000 must not be in [0, 50_000).
-        let out = retrieve(&s, &[0, 1, 2, 3], TimeWindow { start_ms: 0, end_ms: 50_000 });
+        let out = retrieve(
+            &s,
+            &[0, 1, 2, 3],
+            TimeWindow {
+                start_ms: 0,
+                end_ms: 50_000,
+            },
+        );
         assert!(out.iter().all(|r| r.timestamp_ms < 50_000));
         assert_eq!(out.len(), 50);
     }
@@ -179,7 +364,14 @@ mod tests {
     #[test]
     fn window_start_is_inclusive() {
         let s = store();
-        let out = retrieve(&s, &[0], TimeWindow { start_ms: 0, end_ms: 1 });
+        let out = retrieve(
+            &s,
+            &[0],
+            TimeWindow {
+                start_ms: 0,
+                end_ms: 1,
+            },
+        );
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].timestamp_ms, 0);
     }
@@ -188,10 +380,7 @@ mod tests {
     fn duplicate_types_match_rows_once() {
         let s = store();
         let w = TimeWindow::last(100_000, 100_000);
-        assert_eq!(
-            retrieve(&s, &[2, 2, 2], w).len(),
-            retrieve(&s, &[2], w).len()
-        );
+        assert_eq!(retrieve(&s, &[2, 2, 2], w).len(), retrieve(&s, &[2], w).len());
     }
 
     #[test]
@@ -215,10 +404,76 @@ mod tests {
 
     #[test]
     fn count_matches_retrieve() {
-        let s = store();
-        let w = TimeWindow::last(70_000, 30_000);
-        for t in 0..4u16 {
-            assert_eq!(count(&s, t, w), retrieve(&s, &[t], w).len());
+        for segment_rows in [1usize, 16, usize::MAX] {
+            let s = store_seg(segment_rows);
+            let w = TimeWindow::last(70_000, 30_000);
+            for t in 0..4u16 {
+                assert_eq!(count(&s, t, w), retrieve(&s, &[t], w).len());
+            }
+        }
+    }
+
+    #[test]
+    fn zone_maps_prune_segments_outside_the_window() {
+        let mut s = AppLogStore::new(StoreConfig {
+            segment_rows: 10,
+            ..StoreConfig::default()
+        });
+        let codec = JsonishCodec;
+        let payload = codec.encode(&[(0, AttrValue::Int(7))]);
+        for i in 0..100i64 {
+            s.append((i % 2) as u16, i * 1000, payload.clone()).unwrap();
+        }
+        assert_eq!(s.num_segments(), 10);
+        // A window over the last 25% of the log must prune >= 70% of
+        // segments via min/max timestamps alone.
+        let w = TimeWindow::last(100_000, 25_000);
+        let (rows, stats) = retrieve_project(&s, 0, w, &codec, &[0]).unwrap();
+        assert_eq!(rows.len() as u64, stats.rows);
+        assert!(
+            stats.segments_pruned >= 7,
+            "pruned {} of 10 segments",
+            stats.segments_pruned
+        );
+        assert!(stats.segments_scanned <= 3);
+        // A type absent from the log is pruned by the bitmap everywhere.
+        let (rows, stats) = retrieve_project(&s, 9, w, &codec, &[0]).unwrap();
+        assert!(rows.is_empty());
+        assert_eq!(stats.segments_scanned, 0);
+    }
+
+    #[test]
+    fn retrieve_project_equals_retrieve_then_decode_project() {
+        let codec = JsonishCodec;
+        for segment_rows in [1usize, 7, 64, usize::MAX] {
+            let mut s = AppLogStore::new(StoreConfig {
+                segment_rows,
+                ..StoreConfig::default()
+            });
+            for i in 0..80i64 {
+                // Only 5 distinct payloads: exercises the per-segment
+                // decode memoization.
+                let attrs = vec![
+                    (0u16, AttrValue::Int(i % 5)),
+                    (2u16, AttrValue::Str(format!("g{}", i % 5))),
+                ];
+                s.append((i % 3) as u16, i * 500, codec.encode(&attrs))
+                    .unwrap();
+            }
+            let w = TimeWindow::last(35_000, 20_000);
+            for wanted in [vec![], vec![0u16], vec![0, 2], vec![9]] {
+                let (got, stats) = retrieve_project(&s, 1, w, &codec, &wanted).unwrap();
+                let want: Vec<DecodedRow> = retrieve(&s, &[1], w)
+                    .iter()
+                    .map(|r| DecodedRow {
+                        ts: r.timestamp_ms,
+                        seq: r.seq_no,
+                        attrs: codec.decode_project(&r.payload, &wanted).unwrap(),
+                    })
+                    .collect();
+                assert_eq!(got, want, "seg={segment_rows} wanted={wanted:?}");
+                assert_eq!(stats.rows as usize, want.len());
+            }
         }
     }
 }

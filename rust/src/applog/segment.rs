@@ -1,0 +1,527 @@
+//! Immutable columnar log segments (the clog-style storage engine).
+//!
+//! The mutable tail of [`super::store::AppLogStore`] is periodically
+//! sealed into `Segment`s. A segment stores its rows column-wise —
+//! delta/varint-encoded timestamps and seq_nos, dictionary-encoded event
+//! types, a de-duplicated attr-payload arena — and carries a **zone map**
+//! (min/max timestamp + event-type occupancy bitmap) so the `Retrieve`
+//! path can discard whole segments before touching a row.
+//!
+//! In memory a segment keeps the decoded hot columns (`ts`, `seq`,
+//! per-type position lists) as acceleration structures; the durable
+//! columnar encoding ([`Segment::encode`]) is what persistence writes
+//! and what [`Segment::encoded_bytes`] accounts as storage footprint.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use super::event::{BehaviorEvent, EventTypeId, TimestampMs};
+
+/// Dictionary capacity: type codes are one byte, so a single segment can
+/// hold at most this many distinct behavior types (the compactor splits
+/// the tail when a seal would exceed it).
+pub const MAX_DICT_TYPES: usize = 255;
+
+/// Occupancy bitmap over behavior-type ids (zone-map component).
+#[derive(Debug, Clone, Default)]
+pub struct TypeBitmap {
+    words: Vec<u64>,
+}
+
+impl TypeBitmap {
+    /// Mark a type as present.
+    pub fn set(&mut self, t: EventTypeId) {
+        let w = t as usize / 64;
+        if self.words.len() <= w {
+            self.words.resize(w + 1, 0);
+        }
+        self.words[w] |= 1u64 << (t as usize % 64);
+    }
+
+    /// Whether a type is present.
+    #[inline]
+    pub fn contains(&self, t: EventTypeId) -> bool {
+        self.words
+            .get(t as usize / 64)
+            .is_some_and(|w| w & (1u64 << (t as usize % 64)) != 0)
+    }
+
+    /// Whether any of the queried types is present.
+    #[inline]
+    pub fn intersects(&self, types: &[EventTypeId]) -> bool {
+        types.iter().any(|&t| self.contains(t))
+    }
+}
+
+/// Append an LEB128 varint.
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            break;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Encoded byte length of an LEB128 varint (kept in lockstep with
+/// [`put_varint`]; `encode_decode_roundtrip_is_exact` pins the two).
+fn varint_len(v: u64) -> usize {
+    (((64 - v.leading_zeros()).max(1) as usize) + 6) / 7
+}
+
+/// Read an LEB128 varint.
+fn get_varint(data: &[u8], i: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        ensure!(*i < data.len(), "truncated varint at {i}");
+        ensure!(shift < 64, "varint overflow at {i}");
+        let byte = data[*i];
+        *i += 1;
+        v |= ((byte & 0x7f) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// One immutable columnar segment of the app log.
+#[derive(Debug)]
+pub struct Segment {
+    // Hot decoded columns (acceleration; rebuilt on load).
+    pub(crate) ts: Vec<TimestampMs>,
+    pub(crate) seq: Vec<u64>,
+    type_codes: Vec<u8>,
+    pub(crate) type_dict: Vec<EventTypeId>,
+    /// Per dictionary entry: positions (row offsets) of its rows.
+    type_positions: Vec<Vec<u32>>,
+    pub(crate) payload_codes: Vec<u32>,
+    /// Per unique payload: `(offset, len)` into the arena.
+    payload_dict: Vec<(u32, u32)>,
+    arena: Vec<u8>,
+    // Zone map.
+    pub(crate) min_ts: TimestampMs,
+    pub(crate) max_ts: TimestampMs,
+    bitmap: TypeBitmap,
+    /// Size of the durable columnar encoding (storage accounting).
+    encoded_bytes: usize,
+}
+
+impl Segment {
+    /// Seal chronological rows into a segment. The caller guarantees the
+    /// rows are non-empty, timestamp-ordered, seq-strictly-increasing and
+    /// span at most [`MAX_DICT_TYPES`] distinct behavior types.
+    pub fn build(rows: &[BehaviorEvent]) -> Segment {
+        assert!(!rows.is_empty(), "cannot seal an empty segment");
+        let n = rows.len();
+        let mut ts = Vec::with_capacity(n);
+        let mut seq = Vec::with_capacity(n);
+        let mut type_codes = Vec::with_capacity(n);
+        let mut type_dict: Vec<EventTypeId> = Vec::new();
+        let mut type_positions: Vec<Vec<u32>> = Vec::new();
+        let mut payload_codes = Vec::with_capacity(n);
+        let mut payload_dict: Vec<(u32, u32)> = Vec::new();
+        let mut arena: Vec<u8> = Vec::new();
+        let mut payload_lookup: HashMap<&[u8], u32> = HashMap::new();
+        let mut bitmap = TypeBitmap::default();
+
+        for (pos, r) in rows.iter().enumerate() {
+            ts.push(r.timestamp_ms);
+            seq.push(r.seq_no);
+            let code = match type_dict.iter().position(|&t| t == r.event_type) {
+                Some(c) => c,
+                None => {
+                    type_dict.push(r.event_type);
+                    type_positions.push(Vec::new());
+                    bitmap.set(r.event_type);
+                    type_dict.len() - 1
+                }
+            };
+            debug_assert!(code < MAX_DICT_TYPES + 1);
+            type_codes.push(code as u8);
+            type_positions[code].push(pos as u32);
+            let pcode = match payload_lookup.get(r.payload.as_slice()) {
+                Some(&c) => c,
+                None => {
+                    let off = arena.len() as u32;
+                    arena.extend_from_slice(&r.payload);
+                    payload_dict.push((off, r.payload.len() as u32));
+                    let c = (payload_dict.len() - 1) as u32;
+                    // Key the lookup by the source row's bytes (lives as
+                    // long as this loop) to avoid borrowing the arena.
+                    payload_lookup.insert(r.payload.as_slice(), c);
+                    c
+                }
+            };
+            payload_codes.push(pcode);
+        }
+
+        let mut seg = Segment {
+            min_ts: ts[0],
+            max_ts: ts[n - 1],
+            ts,
+            seq,
+            type_codes,
+            type_dict,
+            type_positions,
+            payload_codes,
+            payload_dict,
+            arena,
+            bitmap,
+            encoded_bytes: 0,
+        };
+        seg.encoded_bytes = seg.encoded_size();
+        seg
+    }
+
+    /// Arithmetic size of [`Segment::encode`]'s output, without
+    /// materializing it (sealing runs on the append path; persistence is
+    /// the only consumer of the actual bytes).
+    fn encoded_size(&self) -> usize {
+        let mut size = 4 + 8 + 8 + 8; // row_count, min_ts, max_ts, seq_first
+        let mut prev = self.min_ts;
+        for &t in &self.ts {
+            size += varint_len((t - prev) as u64);
+            prev = t;
+        }
+        let mut prev = self.seq[0];
+        for &s in &self.seq {
+            size += varint_len(s - prev);
+            prev = s;
+        }
+        size += 2 + 2 * self.type_dict.len() + self.type_codes.len();
+        size += 4;
+        for &(_, len) in &self.payload_dict {
+            size += varint_len(len as u64) + len as usize;
+        }
+        for &c in &self.payload_codes {
+            size += varint_len(c as u64);
+        }
+        size
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.ts.len()
+    }
+
+    /// Whether the segment holds no rows (never true for sealed segments).
+    pub fn is_empty(&self) -> bool {
+        self.ts.is_empty()
+    }
+
+    /// Zone map: does the window `[start, end)` overlap this segment?
+    #[inline]
+    pub fn overlaps(&self, start_ms: TimestampMs, end_ms: TimestampMs) -> bool {
+        self.min_ts < end_ms && self.max_ts >= start_ms
+    }
+
+    /// Zone map: type-occupancy bitmap.
+    pub fn bitmap(&self) -> &TypeBitmap {
+        &self.bitmap
+    }
+
+    /// Positions (row offsets) of one behavior type's rows.
+    pub(crate) fn positions_of(&self, t: EventTypeId) -> &[u32] {
+        match self.type_dict.iter().position(|&x| x == t) {
+            Some(code) => &self.type_positions[code],
+            None => &[],
+        }
+    }
+
+    /// Event type of the row at `pos`.
+    #[inline]
+    pub(crate) fn event_type_at(&self, pos: u32) -> EventTypeId {
+        self.type_dict[self.type_codes[pos as usize] as usize]
+    }
+
+    /// Payload bytes of the row at `pos` (borrowed from the arena).
+    #[inline]
+    pub(crate) fn payload_at(&self, pos: u32) -> &[u8] {
+        let (off, len) = self.payload_dict[self.payload_codes[pos as usize] as usize];
+        &self.arena[off as usize..(off + len) as usize]
+    }
+
+    /// Number of unique payloads (dictionary size).
+    pub fn unique_payloads(&self) -> usize {
+        self.payload_dict.len()
+    }
+
+    /// Materialize the row at `pos` as an owned event.
+    pub(crate) fn materialize(&self, pos: u32) -> BehaviorEvent {
+        BehaviorEvent {
+            seq_no: self.seq[pos as usize],
+            event_type: self.event_type_at(pos),
+            timestamp_ms: self.ts[pos as usize],
+            payload: self.payload_at(pos).to_vec(),
+        }
+    }
+
+    /// Durable columnar footprint in bytes (what persistence writes).
+    pub fn encoded_bytes(&self) -> usize {
+        self.encoded_bytes
+    }
+
+    /// Encode the durable columnar image:
+    ///
+    /// ```text
+    /// row_count u32 | first_ts i64 | max_ts i64 | seq_first u64 |
+    /// ts deltas varint* | seq deltas varint* |
+    /// type_dict u16 count + u16* | type codes u8* |
+    /// payload_dict u32 count + (varint len, bytes)* | payload codes varint*
+    /// ```
+    pub fn encode(&self) -> Vec<u8> {
+        let n = self.len();
+        let mut out = Vec::with_capacity(32 + self.arena.len() + n * 4);
+        out.extend_from_slice(&(n as u32).to_le_bytes());
+        out.extend_from_slice(&self.min_ts.to_le_bytes());
+        out.extend_from_slice(&self.max_ts.to_le_bytes());
+        out.extend_from_slice(&self.seq[0].to_le_bytes());
+        let mut prev = self.min_ts;
+        for &t in &self.ts {
+            put_varint(&mut out, (t - prev) as u64);
+            prev = t;
+        }
+        let mut prev = self.seq[0];
+        for &s in &self.seq {
+            put_varint(&mut out, s - prev);
+            prev = s;
+        }
+        out.extend_from_slice(&(self.type_dict.len() as u16).to_le_bytes());
+        for &t in &self.type_dict {
+            out.extend_from_slice(&t.to_le_bytes());
+        }
+        out.extend_from_slice(&self.type_codes);
+        out.extend_from_slice(&(self.payload_dict.len() as u32).to_le_bytes());
+        for &(off, len) in &self.payload_dict {
+            put_varint(&mut out, len as u64);
+            out.extend_from_slice(&self.arena[off as usize..(off + len) as usize]);
+        }
+        for &c in &self.payload_codes {
+            put_varint(&mut out, c as u64);
+        }
+        out
+    }
+
+    /// Decode a durable columnar image back into a segment, rebuilding
+    /// the acceleration structures and validating every invariant a
+    /// sealed segment guarantees (chronological timestamps, strictly
+    /// increasing seq_nos, in-range dictionary codes).
+    pub fn decode(block: &[u8]) -> Result<Segment> {
+        // NB: `n` can come from an attacker-controlled varint, so the
+        // bounds check must not compute `*i + n` (usize overflow).
+        let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+            ensure!(n <= block.len() - *i, "truncated segment at {i}");
+            let s = &block[*i..*i + n];
+            *i += n;
+            Ok(s)
+        };
+        let mut i = 0usize;
+        let n = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+        ensure!(n > 0, "empty segment block");
+        let min_ts = i64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
+        let max_ts = i64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
+        let seq_first = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
+
+        let mut ts = Vec::with_capacity(n);
+        let mut prev = min_ts;
+        for r in 0..n {
+            let d = get_varint(block, &mut i)?;
+            ensure!(d <= i64::MAX as u64, "timestamp delta overflow");
+            let t = prev
+                .checked_add(d as i64)
+                .ok_or_else(|| anyhow::anyhow!("timestamp overflow"))?;
+            ensure!(r > 0 || d == 0, "first row must sit at first_ts");
+            ts.push(t);
+            prev = t;
+        }
+        ensure!(*ts.last().unwrap() == max_ts, "zone-map max_ts mismatch");
+
+        let mut seq = Vec::with_capacity(n);
+        let mut prev = seq_first;
+        for r in 0..n {
+            let d = get_varint(block, &mut i)?;
+            if r == 0 {
+                ensure!(d == 0, "first row must sit at seq_first");
+            } else {
+                ensure!(d >= 1, "seq_nos must be strictly increasing");
+            }
+            let s = prev
+                .checked_add(d)
+                .ok_or_else(|| anyhow::anyhow!("seq overflow"))?;
+            seq.push(s);
+            prev = s;
+        }
+
+        let dict_len = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap()) as usize;
+        ensure!(
+            dict_len >= 1 && dict_len <= MAX_DICT_TYPES,
+            "bad type-dictionary size {dict_len}"
+        );
+        let mut type_dict = Vec::with_capacity(dict_len);
+        for _ in 0..dict_len {
+            let t = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap());
+            ensure!(!type_dict.contains(&t), "duplicate dictionary type {t}");
+            type_dict.push(t);
+        }
+        let type_codes = take(&mut i, n)?.to_vec();
+        let mut type_positions = vec![Vec::new(); dict_len];
+        let mut bitmap = TypeBitmap::default();
+        for (pos, &c) in type_codes.iter().enumerate() {
+            ensure!((c as usize) < dict_len, "type code {c} out of range");
+            type_positions[c as usize].push(pos as u32);
+            bitmap.set(type_dict[c as usize]);
+        }
+
+        let pdict_len = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+        ensure!(pdict_len <= n, "payload dictionary larger than row count");
+        let mut payload_dict = Vec::with_capacity(pdict_len);
+        let mut arena = Vec::new();
+        for _ in 0..pdict_len {
+            let len64 = get_varint(block, &mut i)?;
+            ensure!(len64 <= block.len() as u64, "payload length {len64} exceeds block");
+            let bytes = take(&mut i, len64 as usize)?;
+            payload_dict.push((arena.len() as u32, len64 as u32));
+            arena.extend_from_slice(bytes);
+        }
+        let mut payload_codes = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = get_varint(block, &mut i)?;
+            ensure!((c as usize) < pdict_len, "payload code {c} out of range");
+            payload_codes.push(c as u32);
+        }
+        ensure!(i == block.len(), "trailing bytes in segment block");
+
+        Ok(Segment {
+            ts,
+            seq,
+            type_codes,
+            type_dict,
+            type_positions,
+            payload_codes,
+            payload_dict,
+            arena,
+            min_ts,
+            max_ts,
+            bitmap,
+            encoded_bytes: block.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(n: usize) -> Vec<BehaviorEvent> {
+        (0..n)
+            .map(|i| BehaviorEvent {
+                seq_no: 10 + i as u64,
+                event_type: (i % 3) as u16,
+                timestamp_ms: 1_000 + (i as i64 / 2) * 500, // duplicate ts pairs
+                payload: if i % 4 == 0 { vec![1, 2, 3] } else { vec![9; 8] },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn build_preserves_rows_and_dedups_payloads() {
+        let src = rows(12);
+        let seg = Segment::build(&src);
+        assert_eq!(seg.len(), 12);
+        assert_eq!(seg.unique_payloads(), 2);
+        for (pos, r) in src.iter().enumerate() {
+            let m = seg.materialize(pos as u32);
+            assert_eq!(m.seq_no, r.seq_no);
+            assert_eq!(m.event_type, r.event_type);
+            assert_eq!(m.timestamp_ms, r.timestamp_ms);
+            assert_eq!(m.payload, r.payload);
+        }
+    }
+
+    #[test]
+    fn zone_map_bounds_and_bitmap() {
+        let seg = Segment::build(&rows(12));
+        assert_eq!(seg.min_ts, 1_000);
+        assert_eq!(seg.max_ts, 1_000 + 5 * 500);
+        assert!(seg.overlaps(0, 1_001));
+        assert!(!seg.overlaps(0, 1_000)); // end exclusive
+        assert!(!seg.overlaps(seg.max_ts + 1, seg.max_ts + 100));
+        assert!(seg.bitmap().contains(0));
+        assert!(seg.bitmap().contains(2));
+        assert!(!seg.bitmap().contains(3));
+        assert!(seg.bitmap().intersects(&[7, 2]));
+        assert!(!seg.bitmap().intersects(&[7, 9]));
+    }
+
+    #[test]
+    fn positions_are_chronological_per_type() {
+        let seg = Segment::build(&rows(12));
+        for t in 0..3u16 {
+            let pos = seg.positions_of(t);
+            assert_eq!(pos.len(), 4);
+            assert!(pos.windows(2).all(|w| w[0] < w[1]));
+            assert!(pos.iter().all(|&p| seg.event_type_at(p) == t));
+        }
+        assert!(seg.positions_of(9).is_empty());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_exact() {
+        let seg = Segment::build(&rows(12));
+        let block = seg.encode();
+        assert_eq!(block.len(), seg.encoded_bytes());
+        let back = Segment::decode(&block).unwrap();
+        assert_eq!(back.len(), seg.len());
+        for pos in 0..seg.len() as u32 {
+            assert_eq!(back.materialize(pos).payload, seg.materialize(pos).payload);
+            assert_eq!(back.seq[pos as usize], seg.seq[pos as usize]);
+            assert_eq!(back.ts[pos as usize], seg.ts[pos as usize]);
+            assert_eq!(back.event_type_at(pos), seg.event_type_at(pos));
+        }
+        assert_eq!(back.encoded_bytes(), block.len());
+    }
+
+    #[test]
+    fn decode_rejects_structural_damage() {
+        let block = Segment::build(&rows(8)).encode();
+        assert!(Segment::decode(&block[..block.len() - 1]).is_err());
+        let mut long = block.clone();
+        long.push(0);
+        assert!(Segment::decode(&long).is_err());
+        // Zone-map max_ts mismatch.
+        let mut bad = block.clone();
+        bad[12] ^= 0x01;
+        assert!(Segment::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut i = 0;
+            assert_eq!(get_varint(&buf, &mut i).unwrap(), v);
+            assert_eq!(i, buf.len());
+        }
+    }
+
+    #[test]
+    fn columnar_encoding_is_smaller_than_row_format() {
+        // 18-byte row headers collapse to ~3 varint bytes/row; duplicate
+        // payloads are stored once.
+        let src = rows(64);
+        let seg = Segment::build(&src);
+        let row_bytes: usize = src.iter().map(|r| r.storage_bytes()).sum();
+        assert!(
+            seg.encoded_bytes() < row_bytes / 2,
+            "encoded {} vs rows {row_bytes}",
+            seg.encoded_bytes()
+        );
+    }
+}

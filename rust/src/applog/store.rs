@@ -1,13 +1,24 @@
-//! The chronological app-log store (SQLite-analogue).
+//! The chronological app-log store (SQLite-analogue), now a **segmented
+//! columnar substrate**.
 //!
 //! Rows are appended in timestamp order (behavior logging is inherently
-//! chronological — paper §3.3 observation (i)), held in a contiguous
-//! vector, and indexed per behavior type. `Retrieve` is served by
-//! [`super::query`], which mirrors the SQL the paper shows in footnote 2.
+//! chronological — paper §3.3 observation (i)) into a small mutable
+//! row-format *tail*. Once the tail reaches `StoreConfig::segment_rows`
+//! it is sealed into an immutable columnar [`Segment`] with
+//! dictionary-encoded event types, delta/varint-encoded timestamps and
+//! seq_nos, a de-duplicated payload arena and a zone map (min/max
+//! timestamp + type-occupancy bitmap). `Retrieve` ([`super::query`])
+//! prunes whole segments against the zone maps before touching a row.
+//!
+//! `segment_rows == usize::MAX` disables compaction and reproduces the
+//! previous flat row store exactly — the differential tests use that arm
+//! as the reference oracle.
 
 use anyhow::{ensure, Result};
 
+use super::compact;
 use super::event::{BehaviorEvent, EventTypeId, TimestampMs};
+use super::segment::Segment;
 
 /// Store configuration.
 #[derive(Debug, Clone)]
@@ -15,29 +26,73 @@ pub struct StoreConfig {
     /// Retention horizon: rows older than `now - retention_ms` may be
     /// pruned. Mirrors mobile app-log rotation.
     pub retention_ms: i64,
+    /// Tail size that triggers sealing into a columnar segment.
+    /// `usize::MAX` keeps every row in the flat tail (the pre-segmented
+    /// layout; used as the differential-test oracle).
+    pub segment_rows: usize,
 }
 
 impl Default for StoreConfig {
     fn default() -> Self {
-        // One week: covers the longest feature window the paper mentions.
         StoreConfig {
+            // One week: covers the longest feature window the paper mentions.
             retention_ms: 7 * 24 * 3600 * 1000,
+            segment_rows: 256,
         }
     }
 }
 
-/// The on-device app log: chronological behavior-event rows plus a
-/// per-type secondary index.
+impl StoreConfig {
+    /// The unsegmented (flat row-vector) layout.
+    pub fn flat() -> Self {
+        StoreConfig {
+            segment_rows: usize::MAX,
+            ..StoreConfig::default()
+        }
+    }
+}
+
+/// A borrowed view of one log row. Segment rows borrow their payload
+/// from the de-duplicated arena; tail rows borrow from the row vector.
+#[derive(Debug, Clone, Copy)]
+pub struct RowRef<'a> {
+    /// Monotonically increasing row id (append order).
+    pub seq_no: u64,
+    /// Behavior type of this event.
+    pub event_type: EventTypeId,
+    /// Event time.
+    pub timestamp_ms: TimestampMs,
+    /// Compressed behavior-specific attributes.
+    pub payload: &'a [u8],
+}
+
+impl RowRef<'_> {
+    /// Materialize an owned event (clones the payload).
+    pub fn to_event(&self) -> BehaviorEvent {
+        BehaviorEvent {
+            seq_no: self.seq_no,
+            event_type: self.event_type,
+            timestamp_ms: self.timestamp_ms,
+            payload: self.payload.to_vec(),
+        }
+    }
+}
+
+/// The on-device app log: immutable columnar segments plus the mutable
+/// row-format tail, with per-type secondary indexes at both levels.
 #[derive(Debug)]
 pub struct AppLogStore {
     cfg: StoreConfig,
-    /// Rows in strictly non-decreasing timestamp order.
-    rows: Vec<BehaviorEvent>,
-    /// Secondary index: for each behavior type, the positions (into
-    /// `rows`) of its events, in chronological order.
-    type_index: Vec<Vec<u32>>,
-    /// Offset subtracted from positions after pruning (kept simple: we
-    /// compact eagerly, so this stays 0 between prunes).
+    /// Sealed columnar segments, chronological.
+    segments: Vec<Segment>,
+    /// Global row index at which each segment starts (prefix sums).
+    seg_starts: Vec<usize>,
+    /// Total rows held in `segments`.
+    seg_rows: usize,
+    /// Mutable tail in strictly non-decreasing timestamp order.
+    tail: Vec<BehaviorEvent>,
+    /// Tail secondary index: per behavior type, tail positions.
+    tail_type_index: Vec<Vec<u32>>,
     next_seq: u64,
     total_appended: u64,
 }
@@ -47,8 +102,11 @@ impl AppLogStore {
     pub fn new(cfg: StoreConfig) -> Self {
         AppLogStore {
             cfg,
-            rows: Vec::new(),
-            type_index: Vec::new(),
+            segments: Vec::new(),
+            seg_starts: Vec::new(),
+            seg_rows: 0,
+            tail: Vec::new(),
+            tail_type_index: Vec::new(),
             next_seq: 0,
             total_appended: 0,
         }
@@ -56,59 +114,75 @@ impl AppLogStore {
 
     /// Append one behavior event. Timestamps must be non-decreasing
     /// (behavior logging is chronological).
-    pub fn append(&mut self, event_type: EventTypeId, timestamp_ms: TimestampMs, payload: Vec<u8>) -> Result<u64> {
-        if let Some(last) = self.rows.last() {
+    pub fn append(
+        &mut self,
+        event_type: EventTypeId,
+        timestamp_ms: TimestampMs,
+        payload: Vec<u8>,
+    ) -> Result<u64> {
+        if let Some(last) = self.latest_timestamp() {
             ensure!(
-                timestamp_ms >= last.timestamp_ms,
-                "out-of-order append: {timestamp_ms} < {}",
-                last.timestamp_ms
+                timestamp_ms >= last,
+                "out-of-order append: {timestamp_ms} < {last}"
             );
         }
         let seq_no = self.next_seq;
         self.next_seq += 1;
         self.total_appended += 1;
-        let pos = self.rows.len() as u32;
-        self.rows.push(BehaviorEvent {
+        let pos = self.tail.len() as u32;
+        self.tail.push(BehaviorEvent {
             seq_no,
             event_type,
             timestamp_ms,
             payload,
         });
         let idx = event_type as usize;
-        if self.type_index.len() <= idx {
-            self.type_index.resize_with(idx + 1, Vec::new);
+        if self.tail_type_index.len() <= idx {
+            self.tail_type_index.resize_with(idx + 1, Vec::new);
         }
-        self.type_index[idx].push(pos);
+        self.tail_type_index[idx].push(pos);
+        if self.tail.len() >= self.cfg.segment_rows {
+            self.compact();
+        }
         Ok(seq_no)
     }
 
-    /// All rows, chronological. Used by linear-scan reference queries and
-    /// by the storage accounting of the cloud baselines.
-    pub fn rows(&self) -> &[BehaviorEvent] {
-        &self.rows
-    }
-
-    /// Positions of rows of one behavior type (chronological).
-    pub(crate) fn type_positions(&self, t: EventTypeId) -> &[u32] {
-        self.type_index
-            .get(t as usize)
-            .map(|v| v.as_slice())
-            .unwrap_or(&[])
-    }
-
-    /// Row by position.
-    pub(crate) fn row(&self, pos: u32) -> &BehaviorEvent {
-        &self.rows[pos as usize]
+    /// Seal the current tail into columnar segment(s) immediately. A
+    /// no-op on an empty tail. Pure storage re-layout: queries are
+    /// unaffected (pinned by the differential test sweep).
+    pub fn compact(&mut self) {
+        if self.tail.is_empty() {
+            return;
+        }
+        for seg in compact::seal(&self.tail) {
+            self.seg_starts.push(self.seg_rows);
+            self.seg_rows += seg.len();
+            self.segments.push(seg);
+        }
+        self.tail.clear();
+        for v in &mut self.tail_type_index {
+            v.clear();
+        }
     }
 
     /// Number of live rows.
     pub fn len(&self) -> usize {
-        self.rows.len()
+        self.seg_rows + self.tail.len()
     }
 
     /// Whether the log is empty.
     pub fn is_empty(&self) -> bool {
-        self.rows.is_empty()
+        self.len() == 0
+    }
+
+    /// Number of sealed segments.
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Rows currently in the mutable tail.
+    pub fn tail_len(&self) -> usize {
+        self.tail.len()
     }
 
     /// Total events ever appended (monotonic, unaffected by pruning).
@@ -116,38 +190,175 @@ impl AppLogStore {
         self.total_appended
     }
 
-    /// Storage footprint of the live log in bytes (header + payload per
-    /// row) — the quantity inflated by the cloud baselines (Fig. 18b).
+    /// Row by global index (segments first, then tail).
+    pub fn row_at(&self, idx: usize) -> RowRef<'_> {
+        if idx < self.seg_rows {
+            let si = self.seg_starts.partition_point(|&s| s <= idx) - 1;
+            let seg = &self.segments[si];
+            let pos = (idx - self.seg_starts[si]) as u32;
+            RowRef {
+                seq_no: seg.seq[pos as usize],
+                event_type: seg.event_type_at(pos),
+                timestamp_ms: seg.ts[pos as usize],
+                payload: seg.payload_at(pos),
+            }
+        } else {
+            let r = &self.tail[idx - self.seg_rows];
+            RowRef {
+                seq_no: r.seq_no,
+                event_type: r.event_type,
+                timestamp_ms: r.timestamp_ms,
+                payload: &r.payload,
+            }
+        }
+    }
+
+    /// Iterate all live rows chronologically.
+    pub fn iter(&self) -> impl Iterator<Item = RowRef<'_>> + '_ {
+        self.iter_from(0)
+    }
+
+    /// Iterate live rows starting at a global index (incremental-sync
+    /// hook for the cloud baselines' offline logging processes).
+    pub fn iter_from(&self, start: usize) -> impl Iterator<Item = RowRef<'_>> + '_ {
+        (start..self.len()).map(move |i| self.row_at(i))
+    }
+
+    /// Number of live rows with `timestamp < ts` (global partition
+    /// point; zone maps skip whole segments).
+    pub fn rows_before(&self, ts: TimestampMs) -> usize {
+        let mut n = 0usize;
+        for seg in &self.segments {
+            if seg.max_ts < ts {
+                n += seg.len();
+            } else if seg.min_ts >= ts {
+                return n;
+            } else {
+                return n + seg.ts.partition_point(|&t| t < ts);
+            }
+        }
+        n + self.tail.partition_point(|r| r.timestamp_ms < ts)
+    }
+
+    /// Sealed segments (query path).
+    pub(crate) fn segments(&self) -> &[Segment] {
+        &self.segments
+    }
+
+    /// Tail rows (query path).
+    pub(crate) fn tail(&self) -> &[BehaviorEvent] {
+        &self.tail
+    }
+
+    /// Next seq_no to assign (persistence header).
+    pub(crate) fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Tail positions of one behavior type (chronological).
+    pub(crate) fn tail_type_positions(&self, t: EventTypeId) -> &[u32] {
+        self.tail_type_index
+            .get(t as usize)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Storage footprint of the live log in bytes — encoded columnar
+    /// bytes for sealed segments, row format (header + payload) for the
+    /// tail. This is the quantity inflated by the cloud baselines
+    /// (Fig. 18b).
     pub fn storage_bytes(&self) -> usize {
-        self.rows.iter().map(|r| r.storage_bytes()).sum()
+        self.segments
+            .iter()
+            .map(|s| s.encoded_bytes())
+            .sum::<usize>()
+            + self.tail.iter().map(|r| r.storage_bytes()).sum::<usize>()
     }
 
     /// Drop rows older than the retention horizon relative to `now`.
+    /// Whole expired segments are dropped via their zone maps; a
+    /// partially expired segment is rebuilt from its surviving rows.
     /// Returns the number of rows pruned.
     pub fn prune(&mut self, now: TimestampMs) -> usize {
         let cutoff = now - self.cfg.retention_ms;
-        let keep_from = self.rows.partition_point(|r| r.timestamp_ms < cutoff);
-        if keep_from == 0 {
-            return 0;
-        }
-        self.rows.drain(..keep_from);
-        // Rebuild the per-type index (prune is rare: amortized cost ok).
-        for v in &mut self.type_index {
-            v.clear();
-        }
-        for (pos, r) in self.rows.iter().enumerate() {
-            let idx = r.event_type as usize;
-            if self.type_index.len() <= idx {
-                self.type_index.resize_with(idx + 1, Vec::new);
+        let mut dropped = 0usize;
+        let mut keep: Vec<Segment> = Vec::with_capacity(self.segments.len());
+        for seg in self.segments.drain(..) {
+            if seg.max_ts < cutoff {
+                dropped += seg.len();
+            } else if seg.min_ts >= cutoff {
+                keep.push(seg);
+            } else {
+                let first_kept = seg.ts.partition_point(|&t| t < cutoff);
+                dropped += first_kept;
+                let survivors: Vec<BehaviorEvent> = (first_kept..seg.len())
+                    .map(|p| seg.materialize(p as u32))
+                    .collect();
+                if !survivors.is_empty() {
+                    keep.push(Segment::build(&survivors));
+                }
             }
-            self.type_index[idx].push(pos as u32);
         }
-        keep_from
+        self.segments = keep;
+        self.seg_starts.clear();
+        self.seg_rows = 0;
+        for seg in &self.segments {
+            self.seg_starts.push(self.seg_rows);
+            self.seg_rows += seg.len();
+        }
+
+        let keep_from = self.tail.partition_point(|r| r.timestamp_ms < cutoff);
+        if keep_from > 0 {
+            dropped += keep_from;
+            self.tail.drain(..keep_from);
+            for v in &mut self.tail_type_index {
+                v.clear();
+            }
+            for (pos, r) in self.tail.iter().enumerate() {
+                let idx = r.event_type as usize;
+                if self.tail_type_index.len() <= idx {
+                    self.tail_type_index.resize_with(idx + 1, Vec::new);
+                }
+                self.tail_type_index[idx].push(pos as u32);
+            }
+        }
+        dropped
     }
 
     /// Timestamp of the newest row, if any.
     pub fn latest_timestamp(&self) -> Option<TimestampMs> {
-        self.rows.last().map(|r| r.timestamp_ms)
+        self.tail
+            .last()
+            .map(|r| r.timestamp_ms)
+            .or_else(|| self.segments.last().map(|s| s.max_ts))
+    }
+
+    /// Restore a store from pre-validated parts (persistence v2 loader).
+    pub(crate) fn from_parts(
+        cfg: StoreConfig,
+        segments: Vec<Segment>,
+        tail: Vec<BehaviorEvent>,
+        next_seq: u64,
+        total_appended: u64,
+    ) -> Self {
+        let mut store = AppLogStore::new(cfg);
+        for seg in segments {
+            store.seg_starts.push(store.seg_rows);
+            store.seg_rows += seg.len();
+            store.segments.push(seg);
+        }
+        for r in tail {
+            let pos = store.tail.len() as u32;
+            let idx = r.event_type as usize;
+            if store.tail_type_index.len() <= idx {
+                store.tail_type_index.resize_with(idx + 1, Vec::new);
+            }
+            store.tail_type_index[idx].push(pos);
+            store.tail.push(r);
+        }
+        store.next_seq = next_seq;
+        store.total_appended = total_appended;
+        store
     }
 }
 
@@ -155,8 +366,8 @@ impl AppLogStore {
 mod tests {
     use super::*;
 
-    fn store_with(n: usize) -> AppLogStore {
-        let mut s = AppLogStore::new(StoreConfig::default());
+    fn store_with_cfg(n: usize, cfg: StoreConfig) -> AppLogStore {
+        let mut s = AppLogStore::new(cfg);
         for i in 0..n {
             s.append((i % 3) as EventTypeId, (i as i64) * 1000, vec![b'x'; 10])
                 .unwrap();
@@ -164,10 +375,14 @@ mod tests {
         s
     }
 
+    fn store_with(n: usize) -> AppLogStore {
+        store_with_cfg(n, StoreConfig::default())
+    }
+
     #[test]
     fn append_assigns_monotonic_seq() {
         let s = store_with(5);
-        let seqs: Vec<_> = s.rows().iter().map(|r| r.seq_no).collect();
+        let seqs: Vec<_> = s.iter().map(|r| r.seq_no).collect();
         assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
     }
 
@@ -178,37 +393,131 @@ mod tests {
     }
 
     #[test]
-    fn type_index_positions_are_chronological() {
-        let s = store_with(9);
-        for t in 0..3u16 {
-            let pos = s.type_positions(t);
-            assert_eq!(pos.len(), 3);
-            let mut last = -1i64;
-            for &p in pos {
-                let ts = s.row(p).timestamp_ms;
-                assert!(ts > last);
-                last = ts;
+    fn rejects_out_of_order_append_after_compaction() {
+        let mut s = store_with_cfg(
+            6,
+            StoreConfig {
+                segment_rows: 2,
+                ..StoreConfig::default()
+            },
+        );
+        assert_eq!(s.tail_len(), 0);
+        assert!(s.append(0, 500, vec![]).is_err());
+    }
+
+    #[test]
+    fn compaction_threshold_seals_tail() {
+        let s = store_with_cfg(
+            10,
+            StoreConfig {
+                segment_rows: 4,
+                ..StoreConfig::default()
+            },
+        );
+        assert_eq!(s.num_segments(), 2);
+        assert_eq!(s.tail_len(), 2);
+        assert_eq!(s.len(), 10);
+        // Rows remain identical across the segment/tail boundary.
+        for (i, r) in s.iter().enumerate() {
+            assert_eq!(r.seq_no, i as u64);
+            assert_eq!(r.timestamp_ms, i as i64 * 1000);
+            assert_eq!(r.payload, &[b'x'; 10]);
+        }
+    }
+
+    #[test]
+    fn flat_config_never_compacts() {
+        let s = store_with_cfg(500, StoreConfig::flat());
+        assert_eq!(s.num_segments(), 0);
+        assert_eq!(s.tail_len(), 500);
+    }
+
+    #[test]
+    fn row_at_spans_segments_and_tail() {
+        let s = store_with_cfg(
+            9,
+            StoreConfig {
+                segment_rows: 3,
+                ..StoreConfig::default()
+            },
+        );
+        for i in 0..9 {
+            assert_eq!(s.row_at(i).seq_no, i as u64);
+            assert_eq!(s.row_at(i).event_type, (i % 3) as u16);
+        }
+    }
+
+    #[test]
+    fn rows_before_matches_linear_scan() {
+        for seg_rows in [2usize, 5, usize::MAX] {
+            let s = store_with_cfg(
+                20,
+                StoreConfig {
+                    segment_rows: seg_rows,
+                    ..StoreConfig::default()
+                },
+            );
+            for ts in [-5i64, 0, 999, 1000, 7500, 19_000, 100_000] {
+                let want = s.iter().filter(|r| r.timestamp_ms < ts).count();
+                assert_eq!(s.rows_before(ts), want, "seg_rows={seg_rows} ts={ts}");
             }
         }
     }
 
     #[test]
     fn prune_drops_old_rows_and_reindexes() {
-        let mut s = AppLogStore::new(StoreConfig { retention_ms: 5000 });
-        for i in 0..10 {
-            s.append(0, i * 1000, vec![]).unwrap();
+        for seg_rows in [3usize, usize::MAX] {
+            let mut s = AppLogStore::new(StoreConfig {
+                retention_ms: 5000,
+                segment_rows: seg_rows,
+            });
+            for i in 0..10 {
+                s.append(0, i * 1000, vec![]).unwrap();
+            }
+            let dropped = s.prune(10_000);
+            assert_eq!(dropped, 5); // rows with ts < 5000
+            assert_eq!(s.len(), 5);
+            let first = s.iter().next().unwrap();
+            assert_eq!(first.timestamp_ms, 5000);
+            assert_eq!(first.seq_no, 5);
+            assert_eq!(s.total_appended(), 10);
         }
-        let dropped = s.prune(10_000);
-        assert_eq!(dropped, 5); // rows with ts < 5000
-        assert_eq!(s.len(), 5);
-        assert_eq!(s.type_positions(0).len(), 5);
-        assert_eq!(s.row(s.type_positions(0)[0]).timestamp_ms, 5000);
-        assert_eq!(s.total_appended(), 10);
     }
 
     #[test]
-    fn storage_bytes_sums_rows() {
-        let s = store_with(4);
+    fn storage_bytes_sums_tail_rows() {
+        let s = store_with(4); // below the seal threshold -> all tail
         assert_eq!(s.storage_bytes(), 4 * (18 + 10));
+    }
+
+    #[test]
+    fn columnar_storage_is_smaller_than_flat() {
+        let seg = store_with_cfg(
+            512,
+            StoreConfig {
+                segment_rows: 128,
+                ..StoreConfig::default()
+            },
+        );
+        let flat = store_with_cfg(512, StoreConfig::flat());
+        assert!(
+            seg.storage_bytes() < flat.storage_bytes(),
+            "columnar {} vs flat {}",
+            seg.storage_bytes(),
+            flat.storage_bytes()
+        );
+    }
+
+    #[test]
+    fn iter_from_resumes_mid_log() {
+        let s = store_with_cfg(
+            10,
+            StoreConfig {
+                segment_rows: 4,
+                ..StoreConfig::default()
+            },
+        );
+        let seqs: Vec<u64> = s.iter_from(6).map(|r| r.seq_no).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
     }
 }

@@ -69,16 +69,15 @@ impl DecodedLogExtractor {
     /// process).
     pub fn sync(&mut self, store: &AppLogStore) -> Result<()> {
         let t0 = Instant::now();
-        let rows = store.rows();
         // The mirror indexes by live position; a prune would invalidate
         // it. Stores in benches never prune mid-run; rebuild if they do.
-        if self.synced_rows > rows.len() {
+        if self.synced_rows > store.len() {
             self.mirror.clear();
             self.mirror_bytes = 0;
             self.synced_rows = 0;
         }
-        for r in &rows[self.synced_rows..] {
-            let attrs = self.codec.decode(&r.payload)?;
+        for r in store.iter_from(self.synced_rows) {
+            let attrs = self.codec.decode(r.payload)?;
             self.mirror_bytes += wide_row_bytes(&attrs, self.global_columns);
             self.mirror.entry(r.event_type).or_default().push(DecodedRow {
                 ts: r.timestamp_ms,
@@ -86,7 +85,7 @@ impl DecodedLogExtractor {
                 attrs,
             });
         }
-        self.synced_rows = rows.len();
+        self.synced_rows = store.len();
         self.sync_ns += t0.elapsed().as_nanos() as u64;
         Ok(())
     }

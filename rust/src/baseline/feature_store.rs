@@ -61,16 +61,15 @@ impl FeatureStoreExtractor {
     /// every requiring feature's partition.
     pub fn sync(&mut self, store: &AppLogStore) -> Result<()> {
         let t0 = Instant::now();
-        let rows = store.rows();
-        if self.synced_rows > rows.len() {
+        if self.synced_rows > store.len() {
             for p in &mut self.partitions {
                 p.clear();
             }
             self.store_bytes = 0;
             self.synced_rows = 0;
         }
-        for r in &rows[self.synced_rows..] {
-            let decoded = self.codec.decode(&r.payload)?;
+        for r in store.iter_from(self.synced_rows) {
+            let decoded = self.codec.decode(r.payload)?;
             for (fi, f) in self.features.iter().enumerate() {
                 if f.event_types.binary_search(&r.event_type).is_err() {
                     continue;
@@ -93,7 +92,7 @@ impl FeatureStoreExtractor {
                 });
             }
         }
-        self.synced_rows = rows.len();
+        self.synced_rows = store.len();
         self.sync_ns += t0.elapsed().as_nanos() as u64;
         Ok(())
     }

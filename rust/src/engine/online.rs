@@ -205,34 +205,35 @@ impl Engine {
         bd.cache_ns += t0.elapsed().as_nanos() as u64;
         bd.rows_from_cache += cached.len() as u64;
 
-        // ❷ Retrieve + Decode only the missing interval.
-        let t0 = Instant::now();
-        let rows = query::retrieve(
+        // ❷ Retrieve + Decode only the missing interval, fused and
+        // pushed down to segment granularity: zone maps prune whole
+        // segments, survivors decode straight into the attr-union
+        // projection from the payload arena (§Perf: the fused path never
+        // materializes owned event rows or unneeded attribute values),
+        // producing the rows both the filter and the cache share.
+        let union = &self.compiled.attr_unions[&t];
+        let (rows, stats) = query::retrieve_project(
             store,
-            &[t],
+            t,
             TimeWindow {
                 start_ms: missing_from,
                 end_ms: now,
             },
-        );
-        bd.retrieve_ns += t0.elapsed().as_nanos() as u64;
-        bd.rows_retrieved += rows.len() as u64;
-
-        // Decode straight into the attr-union projection (§Perf: fused
-        // Decode+Filter never materializes unneeded attribute values),
-        // producing the rows both the filter and the cache share.
-        let t0 = Instant::now();
-        let union = &self.compiled.attr_unions[&t];
-        let mut fresh: Vec<CachedRow> = Vec::with_capacity(rows.len());
-        for r in &rows {
-            fresh.push(CachedRow {
-                ts: r.timestamp_ms,
-                seq: r.seq_no,
-                attrs: self.codec.decode_project(&r.payload, union)?,
-            });
-        }
-        bd.decode_ns += t0.elapsed().as_nanos() as u64;
-        bd.rows_decoded += rows.len() as u64;
+            self.codec.as_ref(),
+            union,
+        )?;
+        bd.retrieve_ns += stats.retrieve_ns;
+        bd.rows_retrieved += stats.rows;
+        bd.decode_ns += stats.decode_ns;
+        bd.rows_decoded += stats.rows;
+        let fresh: Vec<CachedRow> = rows
+            .into_iter()
+            .map(|r| CachedRow {
+                ts: r.ts,
+                seq: r.seq,
+                attrs: r.attrs,
+            })
+            .collect();
         cached.watermark = now;
 
         Ok(TypeRows { cached, fresh })
@@ -296,30 +297,30 @@ impl Engine {
         boundary_cmps: &mut u64,
     ) -> Result<()> {
         let lane = &self.compiled.plan.lanes[lane_idx];
-        let t0 = Instant::now();
-        let rows = query::retrieve(store, &[lane.event_type], lane.max_window.window_at(now));
-        bd.retrieve_ns += t0.elapsed().as_nanos() as u64;
-        bd.rows_retrieved += rows.len() as u64;
-
-        let t0 = Instant::now();
-        let mut decoded = Vec::with_capacity(rows.len());
-        for r in &rows {
-            // §Perf: fused lanes only read their attr union.
-            decoded.push(self.codec.decode_project(&r.payload, &lane.attr_union)?);
-        }
-        bd.decode_ns += t0.elapsed().as_nanos() as u64;
-        bd.rows_decoded += rows.len() as u64;
+        // §Perf: fused lanes only read their attr union, decoded at
+        // segment granularity behind the zone maps.
+        let (rows, stats) = query::retrieve_project(
+            store,
+            lane.event_type,
+            lane.max_window.window_at(now),
+            self.codec.as_ref(),
+            &lane.attr_union,
+        )?;
+        bd.retrieve_ns += stats.retrieve_ns;
+        bd.rows_retrieved += stats.rows;
+        bd.decode_ns += stats.decode_ns;
+        bd.rows_decoded += stats.rows;
 
         let t0 = Instant::now();
         if self.cfg.hierarchical_filter {
             let mut w = LaneWalker::new(lane, now);
-            for (r, attrs) in rows.iter().zip(&decoded) {
+            for r in &rows {
                 w.push_row(
                     lane,
                     RowView {
-                        ts: r.timestamp_ms,
-                        seq: r.seq_no,
-                        attrs,
+                        ts: r.ts,
+                        seq: r.seq,
+                        attrs: &r.attrs,
                     },
                     sinks,
                 );
@@ -327,14 +328,14 @@ impl Engine {
             *boundary_cmps += w.boundary_cmps;
         } else {
             let mut w = DirectWalker::new();
-            for (r, attrs) in rows.iter().zip(&decoded) {
+            for r in &rows {
                 w.push_row(
                     lane,
                     now,
                     RowView {
-                        ts: r.timestamp_ms,
-                        seq: r.seq_no,
-                        attrs,
+                        ts: r.ts,
+                        seq: r.seq,
+                        attrs: &r.attrs,
                     },
                     sinks,
                 );
@@ -716,5 +717,53 @@ mod tests {
         // Second extraction must hit the cache (sane watermarks).
         let r = eng.extract(&store, 6 * 60_000).unwrap();
         assert!(r.breakdown.rows_from_cache > 0);
+    }
+
+    #[test]
+    fn watermarks_respect_segment_boundaries() {
+        // The consecutive-inference cache tracks a per-type timestamp
+        // watermark. Compaction re-layouts rows into columnar segments
+        // *between* extractions; the missing-interval bookkeeping (and
+        // its debug_assert against `query::count`, which now spans
+        // segments + tail) must stay exact no matter where the segment
+        // boundaries fall relative to the watermark.
+        let (cat, specs, _) = setup();
+        let gen = TraceGenerator::new(&cat);
+        let events = gen.generate(&TraceConfig {
+            duration_ms: 40 * 60_000,
+            seed: 21,
+            ..TraceConfig::default()
+        });
+        for segment_rows in [1usize, 7, 64] {
+            let mut store = AppLogStore::new(crate::applog::store::StoreConfig {
+                segment_rows,
+                ..Default::default()
+            });
+            let mut eng =
+                Engine::new(specs.clone(), &cat, EngineConfig::autofeature()).unwrap();
+            let mut naive = NaiveExtractor::new(specs.clone(), CodecKindForTest());
+            let mut fed = 0usize;
+            let mut cache_hits = 0u64;
+            for step in 1..=8i64 {
+                let now = step * 5 * 60_000;
+                let upto = events.partition_point(|e| e.timestamp_ms < now);
+                log_events(&mut store, &JsonishCodec, &events[fed..upto]).unwrap();
+                fed = upto;
+                let got = eng.extract(&store, now).unwrap();
+                let want = naive.extract(&store, now).unwrap();
+                for (x, y) in got.values.iter().zip(&want.values) {
+                    assert!(
+                        x.approx_eq(y, 1e-9),
+                        "seg_rows {segment_rows} step {step}: {x:?} vs {y:?}"
+                    );
+                }
+                cache_hits += got.breakdown.rows_from_cache;
+            }
+            assert!(
+                store.num_segments() > 0 || store.len() < segment_rows,
+                "seg_rows {segment_rows}: tail grew past the threshold unsealed"
+            );
+            assert!(cache_hits > 0, "seg_rows {segment_rows}: cache never hit");
+        }
     }
 }

@@ -37,7 +37,9 @@ pub enum Scale {
 }
 
 impl Scale {
-    fn sim(&self, period: Period, interval_ms: i64, seed: u64) -> SimConfig {
+    /// The canonical simulation shape for one experiment cell (public so
+    /// the golden-regression tests can rebuild the exact same cells).
+    pub fn sim(&self, period: Period, interval_ms: i64, seed: u64) -> SimConfig {
         let (warmup, duration) = match self {
             Scale::Quick => (20 * 60_000, 4 * 60_000),
             Scale::Full => (2 * 60 * 60_000, 15 * 60_000),
@@ -50,6 +52,7 @@ impl Scale {
             inference_interval_ms: interval_ms,
             seed,
             codec: CodecKind::Jsonish,
+            ..SimConfig::default()
         }
     }
 
@@ -654,43 +657,54 @@ pub fn ext_staleness(scale: Scale) -> Result<Vec<Row>> {
 }
 
 /// Ablation: how much of the extraction bottleneck is the app log's
-/// text codec itself? Re-runs the VR headline cell with the compact
-/// binary codec in place of the paper's JSON-style column.
+/// text codec itself, and what does the segmented columnar substrate
+/// change on top? Re-runs the VR headline cell across
+/// {jsonish, binary} × {segmented, flat} app-log layouts.
 pub fn ext_codec_ablation(scale: Scale) -> Result<Vec<Row>> {
     use crate::workload::driver::run_simulation;
     let catalog = eval_catalog();
     let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
     let mut rows = Vec::new();
     for (name, codec) in [("jsonish", CodecKind::Jsonish), ("binary", CodecKind::Binary)] {
-        let mut sim = scale.sim(Period::Night, svc.inference_interval_ms, 91);
-        sim.codec = codec;
-        let mut row = Row::new(name);
-        for (label, method) in [("naive_ms", Method::Naive), ("autofeature_ms", Method::AutoFeature)]
-        {
-            // The extractor must decode the same codec the log was
-            // written with, so build it directly instead of via the
-            // default-codec factory.
-            let mut extractor: Box<dyn crate::engine::Extractor> = match method {
-                Method::Naive => Box::new(crate::baseline::naive::NaiveExtractor::new(
-                    svc.features.clone(),
-                    codec,
-                )),
-                _ => Box::new(Engine::new(
-                    svc.features.clone(),
-                    &catalog,
-                    EngineConfig {
+        for (layout, segment_rows) in [
+            ("", StoreConfig::default().segment_rows),
+            ("-flat", usize::MAX),
+        ] {
+            let mut sim = scale.sim(Period::Night, svc.inference_interval_ms, 91);
+            sim.codec = codec;
+            sim.segment_rows = segment_rows;
+            let mut row = Row::new(format!("{name}{layout}"));
+            let mut raw_kb = 0.0;
+            for (label, method) in
+                [("naive_ms", Method::Naive), ("autofeature_ms", Method::AutoFeature)]
+            {
+                // The extractor must decode the same codec the log was
+                // written with, so build it directly instead of via the
+                // default-codec factory.
+                let mut extractor: Box<dyn crate::engine::Extractor> = match method {
+                    Method::Naive => Box::new(crate::baseline::naive::NaiveExtractor::new(
+                        svc.features.clone(),
                         codec,
-                        ..EngineConfig::autofeature()
-                    },
-                )?),
-            };
-            let out = run_simulation(&catalog, extractor.as_mut(), None, &sim)?;
-            row.push(label, out.mean_extraction_ms());
+                    )),
+                    _ => Box::new(Engine::new(
+                        svc.features.clone(),
+                        &catalog,
+                        EngineConfig {
+                            codec,
+                            ..EngineConfig::autofeature()
+                        },
+                    )?),
+                };
+                let out = run_simulation(&catalog, extractor.as_mut(), None, &sim)?;
+                row.push(label, out.mean_extraction_ms());
+                raw_kb = out.raw_storage_bytes as f64 / 1024.0;
+            }
+            row.push("raw_log_kb", raw_kb);
+            rows.push(row);
         }
-        rows.push(row);
     }
     print_rows(
-        "Ablation — app-log codec (jsonish vs binary), VR extraction",
+        "Ablation — app-log codec × storage layout, VR extraction",
         &rows,
     );
     Ok(rows)
@@ -912,6 +926,18 @@ mod tests {
         let bin = rows.iter().find(|r| r.label == "binary").unwrap();
         // Binary decode removes part (not all) of the naive bottleneck.
         assert!(bin.get("naive_ms").unwrap() < json.get("naive_ms").unwrap());
+        // The segmented arm stores the same log in fewer bytes than the
+        // flat row layout it replaced.
+        for name in ["jsonish", "binary"] {
+            let seg = rows.iter().find(|r| r.label == name).unwrap();
+            let flat = rows.iter().find(|r| r.label == format!("{name}-flat")).unwrap();
+            assert!(
+                seg.get("raw_log_kb").unwrap() < flat.get("raw_log_kb").unwrap(),
+                "{name}: segmented {:?} vs flat {:?}",
+                seg.get("raw_log_kb"),
+                flat.get("raw_log_kb")
+            );
+        }
     }
 
     #[test]

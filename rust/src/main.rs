@@ -129,7 +129,7 @@ fn main() -> Result<()> {
                 duration_ms: minutes * 60_000,
                 inference_interval_ms: svc.inference_interval_ms,
                 seed: args.get("seed").unwrap_or("0").parse()?,
-                codec: Default::default(),
+                ..SimConfig::default()
             };
 
             if cmd == "coordinator" {
@@ -211,7 +211,7 @@ fn main() -> Result<()> {
                 duration_ms: minutes * 60_000,
                 inference_interval_ms: svc.inference_interval_ms,
                 seed: args.get("seed").unwrap_or("2024").parse()?,
-                codec: Default::default(),
+                ..SimConfig::default()
             };
             let surrogate = args
                 .has("surrogate")

@@ -33,6 +33,9 @@ pub struct SimConfig {
     pub seed: u64,
     /// App-log payload codec.
     pub codec: CodecKind,
+    /// App-log compaction threshold (`usize::MAX` keeps the flat
+    /// row-vector layout; see [`StoreConfig::segment_rows`]).
+    pub segment_rows: usize,
 }
 
 impl Default for SimConfig {
@@ -45,6 +48,7 @@ impl Default for SimConfig {
             inference_interval_ms: 5_000,
             seed: 0,
             codec: CodecKind::Jsonish,
+            segment_rows: StoreConfig::default().segment_rows,
         }
     }
 }
@@ -137,11 +141,11 @@ impl SimOutcome {
 /// Derive the model's recent-behavior sequence rows from the log tail
 /// (type id, recency and payload-size summaries per event).
 pub fn recent_observations(store: &AppLogStore, now: i64, seq_len: usize, seq_dim: usize) -> Vec<Vec<f32>> {
-    let rows = store.rows();
-    let end = rows.partition_point(|r| r.timestamp_ms < now);
+    let end = store.rows_before(now);
     let start = end.saturating_sub(seq_len);
-    rows[start..end]
-        .iter()
+    store
+        .iter_from(start)
+        .take(end - start)
         .map(|r| {
             let mut obs = vec![0.0f32; seq_dim];
             obs[0] = r.event_type as f32 / 64.0;
@@ -196,7 +200,10 @@ pub fn run_simulation(
         seed: cfg.seed,
     });
     let codec = cfg.codec.build();
-    let mut store = AppLogStore::new(StoreConfig::default());
+    let mut store = AppLogStore::new(StoreConfig {
+        segment_rows: cfg.segment_rows,
+        ..StoreConfig::default()
+    });
     let mut next_event = 0usize;
 
     // Warmup history.

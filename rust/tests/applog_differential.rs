@@ -1,0 +1,211 @@
+//! Differential tests: the segmented columnar store vs the flat row
+//! store (`segment_rows == usize::MAX`, the exact pre-refactor layout).
+//!
+//! Over seeded traces from all five services (CP/KP/SR/PR/VR), across
+//! compaction thresholds {1, 7, 64, ∞} and both payload codecs, every
+//! query result and every extracted feature value must be
+//! **bit-identical** — the storage engine swap beneath the `Retrieve`
+//! API is invisible to every consumer.
+
+use autofeature::applog::codec::{AttrCodec, CodecKind};
+use autofeature::applog::query::{count, retrieve, retrieve_project, retrieve_scan, TimeWindow};
+use autofeature::applog::store::{AppLogStore, StoreConfig};
+use autofeature::baseline::naive::NaiveExtractor;
+use autofeature::engine::config::EngineConfig;
+use autofeature::engine::online::Engine;
+use autofeature::engine::Extractor;
+use autofeature::harness::eval_catalog;
+use autofeature::util::rng::SimRng;
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+use autofeature::workload::traces::{log_events, TraceConfig, TraceGenerator};
+
+/// The sweep: per-row segments, tiny segments, small segments, and the
+/// flat reference layout.
+const THRESHOLDS: [usize; 4] = [1, 7, 64, usize::MAX];
+
+/// Deterministic per-service trace seed.
+fn service_seed(kind: ServiceKind) -> u64 {
+    0xD1F0 + kind.id().as_bytes()[0] as u64
+}
+
+/// Build one store per compaction threshold over the same service trace.
+/// The last store (threshold ∞) is the flat reference.
+fn stores_for(kind: ServiceKind, codec: CodecKind) -> Vec<AppLogStore> {
+    let catalog = eval_catalog();
+    let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+        duration_ms: 30 * 60_000,
+        seed: service_seed(kind),
+        ..TraceConfig::default()
+    });
+    assert!(!trace.is_empty());
+    let codec = codec.build();
+    THRESHOLDS
+        .iter()
+        .map(|&segment_rows| {
+            let mut store = AppLogStore::new(StoreConfig {
+                segment_rows,
+                ..StoreConfig::default()
+            });
+            log_events(&mut store, codec.as_ref(), &trace).unwrap();
+            store
+        })
+        .collect()
+}
+
+fn assert_same_rows(
+    got: &[autofeature::applog::event::BehaviorEvent],
+    want: &[autofeature::applog::event::BehaviorEvent],
+    ctx: &str,
+) {
+    assert_eq!(got.len(), want.len(), "{ctx}: row count");
+    for (x, y) in got.iter().zip(want) {
+        assert_eq!(x.seq_no, y.seq_no, "{ctx}");
+        assert_eq!(x.event_type, y.event_type, "{ctx}");
+        assert_eq!(x.timestamp_ms, y.timestamp_ms, "{ctx}");
+        assert_eq!(x.payload, y.payload, "{ctx}");
+    }
+}
+
+/// Query differential: `retrieve`, `count` and `retrieve_project` agree
+/// bit-for-bit across every compaction threshold, for random windows
+/// and type sets; the flat arm additionally agrees with the linear-scan
+/// oracle.
+#[test]
+fn queries_bit_identical_across_thresholds_all_services() {
+    for kind in ServiceKind::ALL {
+        for codec_kind in [CodecKind::Jsonish, CodecKind::Binary] {
+            let stores = stores_for(kind, codec_kind);
+            let flat = stores.last().unwrap();
+            assert_eq!(flat.num_segments(), 0, "threshold ∞ must stay flat");
+            assert!(
+                stores[0].num_segments() > 0,
+                "threshold 1 must have sealed segments"
+            );
+            let codec = codec_kind.build();
+            let latest = flat.latest_timestamp().unwrap();
+            let mut rng = SimRng::seed_from_u64(service_seed(kind) ^ 0xABCD);
+            for probe in 0..12 {
+                let n_types = rng.range_u(1, 5);
+                let types: Vec<u16> =
+                    (0..n_types).map(|_| rng.range_u(0, 44) as u16).collect();
+                let a = rng.range_i(-1_000, latest + 1_000);
+                let b = rng.range_i(-1_000, latest + 1_000);
+                let w = TimeWindow {
+                    start_ms: a.min(b),
+                    end_ms: a.max(b),
+                };
+                let want = retrieve(flat, &types, w);
+                assert_same_rows(
+                    &want,
+                    &retrieve_scan(flat, &types, w),
+                    &format!("{kind:?} probe {probe}: flat vs scan oracle"),
+                );
+                for (ti, store) in stores.iter().enumerate() {
+                    let ctx = format!(
+                        "{kind:?}/{codec_kind:?} probe {probe} threshold {}",
+                        THRESHOLDS[ti]
+                    );
+                    assert_same_rows(&retrieve(store, &types, w), &want, &ctx);
+                    for &t in &types {
+                        assert_eq!(
+                            count(store, t, w),
+                            retrieve(flat, &[t], w).len(),
+                            "{ctx}: count type {t}"
+                        );
+                        // Fused Retrieve+Decode projection must equal
+                        // retrieve-then-decode_project on the reference.
+                        let wanted: Vec<u16> = vec![0, 2, 5];
+                        let (rows, stats) =
+                            retrieve_project(store, t, w, codec.as_ref(), &wanted).unwrap();
+                        let reference: Vec<_> = retrieve(flat, &[t], w)
+                            .iter()
+                            .map(|r| {
+                                (
+                                    r.timestamp_ms,
+                                    r.seq_no,
+                                    codec.decode_project(&r.payload, &wanted).unwrap(),
+                                )
+                            })
+                            .collect();
+                        assert_eq!(rows.len() as u64, stats.rows, "{ctx}");
+                        assert_eq!(rows.len(), reference.len(), "{ctx}");
+                        for (x, (ts, seq, attrs)) in rows.iter().zip(&reference) {
+                            assert_eq!(x.ts, *ts, "{ctx}");
+                            assert_eq!(x.seq, *seq, "{ctx}");
+                            assert_eq!(&x.attrs, attrs, "{ctx}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Feature-value differential: the full engine (fusion + cache across
+/// consecutive inferences) and the naive extractor produce bit-identical
+/// values (`==`, not approx) on every threshold arm, for all five
+/// services and both codecs.
+#[test]
+fn feature_values_bit_identical_across_thresholds_all_services() {
+    let catalog = eval_catalog();
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        for codec_kind in [CodecKind::Jsonish, CodecKind::Binary] {
+            let stores = stores_for(kind, codec_kind);
+            let nows = [8 * 60_000i64, 16 * 60_000, 17 * 60_000, 29 * 60_000];
+
+            // One engine/naive pair per threshold arm, sharing one
+            // compiled plan; caches warm across the `nows` schedule so
+            // the consecutive-inference path is exercised too.
+            let cfg = EngineConfig {
+                codec: codec_kind,
+                ..EngineConfig::autofeature()
+            };
+            let compiled = std::sync::Arc::new(
+                autofeature::engine::offline::compile(svc.features.clone(), &catalog, &cfg)
+                    .unwrap(),
+            );
+            let mut engines: Vec<Engine> = stores
+                .iter()
+                .map(|_| Engine::from_shared(std::sync::Arc::clone(&compiled), cfg))
+                .collect();
+            let mut naives: Vec<NaiveExtractor> = stores
+                .iter()
+                .map(|_| NaiveExtractor::new(svc.features.clone(), codec_kind))
+                .collect();
+
+            for &now in &nows {
+                let engine_ref = engines
+                    .last_mut()
+                    .unwrap()
+                    .extract(stores.last().unwrap(), now)
+                    .unwrap()
+                    .values;
+                let naive_ref = naives
+                    .last_mut()
+                    .unwrap()
+                    .extract(stores.last().unwrap(), now)
+                    .unwrap()
+                    .values;
+                for ti in 0..THRESHOLDS.len() - 1 {
+                    let got = engines[ti].extract(&stores[ti], now).unwrap().values;
+                    assert_eq!(
+                        got, engine_ref,
+                        "{kind:?}/{codec_kind:?} engine threshold {} vs flat @ {now}",
+                        THRESHOLDS[ti]
+                    );
+                    let got = naives[ti].extract(&stores[ti], now).unwrap().values;
+                    assert_eq!(
+                        got, naive_ref,
+                        "{kind:?}/{codec_kind:?} naive threshold {} vs flat @ {now}",
+                        THRESHOLDS[ti]
+                    );
+                }
+                // Sanity: the two methods agree (approximately) too.
+                for (a, b) in engine_ref.iter().zip(&naive_ref) {
+                    assert!(a.approx_eq(b, 1e-9), "{kind:?} engine vs naive @ {now}");
+                }
+            }
+        }
+    }
+}

@@ -15,7 +15,7 @@ fn sim(interval_ms: i64) -> SimConfig {
         duration_ms: 3 * 60_000,
         inference_interval_ms: interval_ms,
         seed: 99,
-        codec: Default::default(),
+        ..SimConfig::default()
     }
 }
 

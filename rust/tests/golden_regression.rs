@@ -1,0 +1,203 @@
+//! Golden regression tests pinning the extraction *values* behind the
+//! `fig16_overall` and `fig21_redundancy` drivers at `BENCH_QUICK`-scale
+//! seeds, so a storage-layer refactor that silently changes feature
+//! values fails loudly in tier-1.
+//!
+//! Two layers of teeth:
+//! 1. **Cross-layout differential golden** (always enforced): every cell
+//!    is run twice — on the segmented columnar store and on the flat
+//!    row layout — and the value streams must be bit-identical.
+//! 2. **Blessed fingerprints**: each cell's value stream is reduced to a
+//!    stable FNV-1a fingerprint (values quantized to 12 significant
+//!    digits so libm ulp differences across platforms don't trip it)
+//!    and compared against `rust/tests/golden/extraction_values.txt`.
+//!    If the blessed file is missing it is written in place — commit it
+//!    to arm the check; delete it to re-bless after an *intentional*
+//!    semantic change.
+
+use std::fmt::Write as _;
+
+use autofeature::applog::codec::CodecKind;
+use autofeature::engine::config::EngineConfig;
+use autofeature::engine::online::Engine;
+use autofeature::engine::Extractor;
+use autofeature::features::catalog::generate_synthetic_redundant;
+use autofeature::harness::{eval_catalog, experiments::Scale};
+use autofeature::workload::behavior::Period;
+use autofeature::workload::driver::{run_simulation, SimConfig, SimOutcome};
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+
+/// FNV-1a over the label and the quantized value stream of a run.
+fn fingerprint(out: &SimOutcome) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut feed = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for r in &out.records {
+        feed(&r.now.to_le_bytes());
+        for v in &r.extraction.values {
+            match v {
+                autofeature::features::value::FeatureValue::Scalar(x) => {
+                    feed(b"s");
+                    feed(format!("{x:.12e}").as_bytes());
+                }
+                autofeature::features::value::FeatureValue::Vector(xs) => {
+                    feed(b"v");
+                    feed(&(xs.len() as u64).to_le_bytes());
+                    for x in xs {
+                        feed(format!("{x:.12e}").as_bytes());
+                    }
+                }
+            }
+        }
+    }
+    h
+}
+
+/// Run one cell on both storage layouts; assert bit-identical values,
+/// return the (shared) fingerprint.
+fn cell_fingerprint(
+    label: &str,
+    features: &[autofeature::features::spec::FeatureSpec],
+    base_sim: &SimConfig,
+    method_naive: bool,
+) -> u64 {
+    let catalog = eval_catalog();
+    let run = |segment_rows: usize| -> SimOutcome {
+        let sim = SimConfig {
+            segment_rows,
+            ..base_sim.clone()
+        };
+        let mut extractor: Box<dyn Extractor> = if method_naive {
+            Box::new(autofeature::baseline::naive::NaiveExtractor::new(
+                features.to_vec(),
+                CodecKind::Jsonish,
+            ))
+        } else {
+            Box::new(
+                Engine::new(features.to_vec(), &catalog, EngineConfig::autofeature()).unwrap(),
+            )
+        };
+        run_simulation(&catalog, extractor.as_mut(), None, &sim).unwrap()
+    };
+    let segmented = run(SimConfig::default().segment_rows);
+    let flat = run(usize::MAX);
+    assert_eq!(
+        segmented.records.len(),
+        flat.records.len(),
+        "{label}: request counts diverge across storage layouts"
+    );
+    for (a, b) in segmented.records.iter().zip(&flat.records) {
+        assert_eq!(
+            a.extraction.values, b.extraction.values,
+            "{label} @ {}: segmented and flat stores extracted different values",
+            a.now
+        );
+    }
+    fingerprint(&segmented)
+}
+
+/// All golden cells: label → fingerprint.
+fn collect_fingerprints() -> Vec<(String, u64)> {
+    let catalog = eval_catalog();
+    let scale = Scale::Quick;
+    let mut cells = Vec::new();
+
+    // fig16_overall cells at the driver's exact Quick-scale sim
+    // (seed 100 + user 0): every service on the night period, plus the
+    // full period sweep on SR (the cheapest service) — enough coverage
+    // to trip any value drift without re-running the whole figure grid.
+    let mut fig16_cells: Vec<(ServiceKind, Period)> =
+        ServiceKind::ALL.iter().map(|&k| (k, Period::Night)).collect();
+    for period in [Period::Noon, Period::Evening] {
+        fig16_cells.push((ServiceKind::SR, period));
+    }
+    for (kind, period) in fig16_cells {
+        let svc = ServiceSpec::build(kind, &catalog);
+        let sim = scale.sim(period, kind.inference_interval_ms(), 100);
+        for naive in [true, false] {
+            let label = format!(
+                "fig16/{}/{}/{}",
+                kind.id(),
+                period.label(),
+                if naive { "naive" } else { "autofeature" }
+            );
+            cells.push((label.clone(), cell_fingerprint(&label, &svc.features, &sim, naive)));
+        }
+    }
+
+    // fig21_redundancy cells: the driver's Quick redundancy levels at
+    // the high-frequency interval (seed 71, synthetic seed 61).
+    for &r in &[0.0f64, 0.5, 0.9] {
+        let specs = generate_synthetic_redundant(&catalog, 60, r, 61);
+        let sim = scale.sim(Period::Night, 10_000, 71);
+        for naive in [true, false] {
+            let label = format!(
+                "fig21/r{:.0}/{}",
+                r * 100.0,
+                if naive { "naive" } else { "autofeature" }
+            );
+            cells.push((label.clone(), cell_fingerprint(&label, &specs, &sim, naive)));
+        }
+    }
+    cells
+}
+
+#[test]
+fn golden_extraction_values_fig16_and_fig21() {
+    let got = collect_fingerprints();
+    let golden_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("extraction_values.txt");
+
+    let mut rendered = String::from(
+        "# Golden extraction-value fingerprints (fig16_overall + fig21_redundancy,\n\
+         # BENCH_QUICK-scale seeds). Regenerate by deleting this file and re-running\n\
+         # `cargo test golden_extraction_values` — only after an INTENTIONAL change\n\
+         # to extraction semantics or workload seeds.\n",
+    );
+    for (label, fp) in &got {
+        writeln!(rendered, "{label} {fp:016x}").unwrap();
+    }
+
+    match std::fs::read_to_string(&golden_path) {
+        Ok(blessed) => {
+            let want: Vec<(String, u64)> = blessed
+                .lines()
+                .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+                .map(|l| {
+                    let (label, fp) = l.rsplit_once(' ').expect("malformed golden line");
+                    (label.to_string(), u64::from_str_radix(fp, 16).expect("bad fp"))
+                })
+                .collect();
+            let want_labels: Vec<&String> = want.iter().map(|(l, _)| l).collect();
+            let got_labels: Vec<&String> = got.iter().map(|(l, _)| l).collect();
+            assert_eq!(
+                want_labels, got_labels,
+                "golden cell set changed — delete {} to re-bless",
+                golden_path.display()
+            );
+            for ((label, g), (_, w)) in got.iter().zip(&want) {
+                assert_eq!(
+                    g, w,
+                    "extraction values drifted for {label} — if intentional, delete {} \
+                     and re-run to re-bless",
+                    golden_path.display()
+                );
+            }
+        }
+        Err(_) => {
+            std::fs::create_dir_all(golden_path.parent().unwrap()).unwrap();
+            std::fs::write(&golden_path, rendered).unwrap();
+            println!(
+                "blessed {} golden fingerprints at {} — commit this file",
+                got.len(),
+                golden_path.display()
+            );
+        }
+    }
+}

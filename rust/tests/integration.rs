@@ -17,6 +17,7 @@ fn quick_sim(interval_ms: i64, seed: u64) -> SimConfig {
         inference_interval_ms: interval_ms,
         seed,
         codec: CodecKind::Jsonish,
+        ..SimConfig::default()
     }
 }
 

@@ -71,10 +71,19 @@ fn random_spec(rng: &mut SimRng, catalog: &Catalog, id: u32) -> FeatureSpec {
     .normalized()
 }
 
+/// Random compaction threshold: flat, per-row segments, small and
+/// default segment sizes all appear across the sweep.
+fn random_segment_rows(rng: &mut SimRng) -> usize {
+    [1usize, 7, 64, 256, usize::MAX][rng.range_u(0, 5)]
+}
+
 /// Random log: bursty arrivals incl. equal-timestamp runs (tie-break
-/// coverage).
+/// coverage), over a random segmented/flat storage layout.
 fn random_store(rng: &mut SimRng, catalog: &Catalog, codec: &dyn AttrCodec, n: usize) -> AppLogStore {
-    let mut store = AppLogStore::new(StoreConfig::default());
+    let mut store = AppLogStore::new(StoreConfig {
+        segment_rows: random_segment_rows(rng),
+        ..StoreConfig::default()
+    });
     let mut ts = 0i64;
     for _ in 0..n {
         // 20% of events share the previous timestamp exactly.
@@ -308,6 +317,181 @@ fn prop_greedy_two_approximation() {
             gu >= 0.5 * du - 1e-6,
             "case {case}: greedy {gu} < half of dp {du}"
         );
+    }
+}
+
+/// Assert two stores hold bit-identical rows (seq, type, ts, payload).
+fn assert_stores_identical(a: &AppLogStore, b: &AppLogStore, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: row count");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.seq_no, y.seq_no, "{ctx}: row {i} seq");
+        assert_eq!(x.event_type, y.event_type, "{ctx}: row {i} type");
+        assert_eq!(x.timestamp_ms, y.timestamp_ms, "{ctx}: row {i} ts");
+        assert_eq!(x.payload, y.payload, "{ctx}: row {i} payload");
+    }
+}
+
+/// PROPERTY: snapshot round-trips (current v2 segmented format AND the
+/// legacy v1 flat format) are exact — rows, order, seq_nos and payload
+/// bytes — for random logs over random storage layouts and both codecs.
+#[test]
+fn prop_snapshot_roundtrip_v1_and_v2_exact() {
+    use autofeature::applog::persist::{from_bytes, to_bytes, to_bytes_v1};
+    for case in 0..CASES {
+        let mut rng = SimRng::seed_from_u64(7000 + case);
+        let catalog = Catalog::generate(&CatalogConfig::small(), case);
+        let codec: &dyn AttrCodec = if case % 2 == 0 { &JsonishCodec } else { &BinaryCodec };
+        let store = random_store(&mut rng, &catalog, codec, 120);
+
+        let v2 = from_bytes(&to_bytes(&store), StoreConfig::default()).unwrap();
+        assert_stores_identical(&store, &v2, &format!("case {case} v2"));
+        assert_eq!(store.total_appended(), v2.total_appended());
+
+        let v1 = from_bytes(&to_bytes_v1(&store), StoreConfig::default()).unwrap();
+        assert_stores_identical(&store, &v1, &format!("case {case} v1"));
+
+        // Loaded stores answer queries identically to the original.
+        let latest = store.latest_timestamp().unwrap();
+        for _ in 0..5 {
+            let t = rng.range_u(0, 8) as u16;
+            let a = rng.range_i(0, latest + 1000);
+            let b = rng.range_i(0, latest + 1000);
+            let w = TimeWindow { start_ms: a.min(b), end_ms: a.max(b) };
+            let want = retrieve(&store, &[t], w);
+            for (name, loaded) in [("v2", &v2), ("v1", &v1)] {
+                let got = retrieve(loaded, &[t], w);
+                assert_eq!(got.len(), want.len(), "case {case} {name}");
+                for (x, y) in got.iter().zip(&want) {
+                    assert_eq!(x.seq_no, y.seq_no, "case {case} {name}");
+                    assert_eq!(x.payload, y.payload, "case {case} {name}");
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: every single-byte truncation of a valid snapshot blob, and
+/// every single-byte corruption of it (bit flips at every offset), is
+/// rejected with an error — never a silently wrong log. v2 carries a
+/// declared length + CRC-32, which detects all 8-bit burst errors; v1
+/// (no checksum) still rejects every truncation via its length fields.
+#[test]
+fn prop_snapshot_rejects_every_single_byte_mutation() {
+    use autofeature::applog::persist::{from_bytes, to_bytes, to_bytes_v1};
+    let mut rng = SimRng::seed_from_u64(7777);
+    let catalog = Catalog::generate(&CatalogConfig::small(), 3);
+    // Several segments plus a non-empty tail.
+    let mut store = AppLogStore::new(StoreConfig {
+        segment_rows: 7,
+        ..StoreConfig::default()
+    });
+    let mut ts = 0i64;
+    for _ in 0..25 {
+        ts += rng.range_i(1, 2_000);
+        let t = rng.range_u(0, catalog.len()) as u16;
+        let attrs = catalog.schema(t).sample_attrs(&mut rng);
+        store.append(t, ts, JsonishCodec.encode(&attrs)).unwrap();
+    }
+
+    let blob = to_bytes(&store);
+    assert!(from_bytes(&blob, StoreConfig::default()).is_ok());
+    for cut in 0..blob.len() {
+        assert!(
+            from_bytes(&blob[..cut], StoreConfig::default()).is_err(),
+            "v2 truncation to {cut}/{} bytes was accepted",
+            blob.len()
+        );
+    }
+    for i in 0..blob.len() {
+        for mask in [0x01u8, 0x80, 0xFF] {
+            let mut bad = blob.clone();
+            bad[i] ^= mask;
+            assert!(
+                from_bytes(&bad, StoreConfig::default()).is_err(),
+                "v2 corruption at byte {i} (mask {mask:#x}) was accepted"
+            );
+        }
+    }
+
+    let v1 = to_bytes_v1(&store);
+    assert!(from_bytes(&v1, StoreConfig::default()).is_ok());
+    for cut in 0..v1.len() {
+        assert!(
+            from_bytes(&v1[..cut], StoreConfig::default()).is_err(),
+            "v1 truncation to {cut}/{} bytes was accepted",
+            v1.len()
+        );
+    }
+}
+
+/// A codec that deliberately does NOT override `decode_project`,
+/// exercising the trait's default full-decode-then-filter fallback.
+struct DefaultProjectCodec;
+
+impl AttrCodec for DefaultProjectCodec {
+    fn encode(&self, attrs: &[(u16, AttrValue)]) -> Vec<u8> {
+        JsonishCodec.encode(attrs)
+    }
+    fn decode(&self, payload: &[u8]) -> anyhow::Result<Vec<(u16, AttrValue)>> {
+        JsonishCodec.decode(payload)
+    }
+    fn name(&self) -> &'static str {
+        "default-project"
+    }
+}
+
+/// PROPERTY (codec contract): for both built-in codecs AND the default
+/// trait fallback, `decode_project(payload, wanted)` equals
+/// `decode` + filter, for random attr subsets including the empty and
+/// the full set.
+#[test]
+fn prop_decode_project_equals_decode_then_filter() {
+    for case in 0..100u64 {
+        let mut rng = SimRng::seed_from_u64(8000 + case);
+        let catalog = Catalog::generate(&CatalogConfig::small(), case % 5);
+        let t = rng.range_u(0, catalog.len()) as u16;
+        let attrs = catalog.schema(t).sample_attrs(&mut rng);
+        let mut all_ids: Vec<u16> = attrs.iter().map(|(a, _)| *a).collect();
+        all_ids.sort_unstable();
+
+        // Random subsets + the two boundary sets + an absent-id set.
+        let mut subsets: Vec<Vec<u16>> = vec![vec![], all_ids.clone(), vec![u16::MAX]];
+        for _ in 0..4 {
+            let mut s: Vec<u16> = all_ids
+                .iter()
+                .copied()
+                .filter(|_| rng.bool_p(0.4))
+                .collect();
+            if rng.bool_p(0.3) {
+                s.push(9999); // an id the payload never carries
+            }
+            s.sort_unstable();
+            s.dedup();
+            subsets.push(s);
+        }
+
+        for codec in [
+            &JsonishCodec as &dyn AttrCodec,
+            &BinaryCodec,
+            &DefaultProjectCodec,
+        ] {
+            let payload = codec.encode(&attrs);
+            for wanted in &subsets {
+                let got = codec.decode_project(&payload, wanted).unwrap();
+                let want: Vec<(u16, AttrValue)> = codec
+                    .decode(&payload)
+                    .unwrap()
+                    .into_iter()
+                    .filter(|(a, _)| wanted.binary_search(a).is_ok())
+                    .collect();
+                assert_eq!(
+                    got,
+                    want,
+                    "case {case} codec {} wanted {wanted:?}",
+                    codec.name()
+                );
+            }
+        }
     }
 }
 
