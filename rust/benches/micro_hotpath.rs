@@ -18,6 +18,7 @@ use autofeature::applog::query::{retrieve, retrieve_project, TimeWindow};
 use autofeature::applog::store::{AppLogStore, StoreConfig};
 use autofeature::engine::config::EngineConfig;
 use autofeature::engine::online::Engine;
+use autofeature::engine::Extractor;
 use autofeature::harness::{eval_catalog, Method};
 use autofeature::optimizer::fusion::fuse;
 use autofeature::optimizer::hierarchical::{DirectWalker, LaneWalker, RowView};
@@ -25,6 +26,7 @@ use autofeature::optimizer::plan::FeatureAcc;
 use autofeature::util::rng::SimRng;
 use autofeature::workload::driver::{run_simulation, SimConfig};
 use autofeature::workload::services::{ServiceKind, ServiceSpec};
+use autofeature::workload::traces::{log_events, TraceConfig, TraceGenerator};
 
 fn quick() -> bool {
     std::env::var("BENCH_QUICK").is_ok()
@@ -178,6 +180,54 @@ fn main() {
         }
         black_box(sinks);
     });
+
+    // --- incremental (O(Δ)) vs full-rewalk compute --------------------------
+    // A steady trigger train over a warm cache: the classic path rewalks
+    // every cached row through Filter+Compute per trigger, the
+    // incremental path only touches the inter-trigger delta. The gap is
+    // the PR 4 tentpole and widens as the interval shrinks.
+    {
+        let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+            duration_ms: 2 * 60 * 60_000,
+            seed: 4242,
+            ..TraceConfig::default()
+        });
+        let mut store = AppLogStore::new(StoreConfig::default());
+        log_events(&mut store, &JsonishCodec, &trace).unwrap();
+        let warm = 60 * 60_000i64;
+        let horizon = 2 * 60 * 60_000 - 60_000;
+        for &interval_ms in &[1_000i64, 5_000, 30_000] {
+            for inc in [false, true] {
+                let cfg = EngineConfig {
+                    incremental_compute: inc,
+                    // Roomy budget: measure compute, not cache churn.
+                    cache_budget_bytes: 4 << 20,
+                    ..EngineConfig::autofeature()
+                };
+                let mut eng = Engine::new(svc.features.clone(), &catalog, cfg).unwrap();
+                let mut now = warm;
+                eng.extract(&store, now).unwrap(); // warm the cache + states
+                let steps = iters(200).min(((horizon - now) / interval_ms).max(1) as u64);
+                let (mut delta, mut replayed) = (0u64, 0u64);
+                let t0 = Instant::now();
+                for _ in 0..steps {
+                    now += interval_ms;
+                    let r = eng.extract(&store, now).unwrap();
+                    delta += r.breakdown.rows_delta;
+                    replayed += r.breakdown.rows_replayed;
+                }
+                let per = t0.elapsed().as_nanos() as f64 / steps as f64;
+                println!(
+                    "steady-state VR extract [{}] interval {:>5} ms {:>12.1} ns/req  rows/req: delta {:>8.1}  replayed {:>8.1}",
+                    if inc { "incremental" } else { "full-rewalk" },
+                    interval_ms,
+                    per,
+                    delta as f64 / steps as f64,
+                    replayed as f64 / steps as f64,
+                );
+            }
+        }
+    }
 
     // --- full extraction (VR) ---------------------------------------------
     let sim = SimConfig {

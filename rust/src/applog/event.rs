@@ -47,10 +47,22 @@ impl AttrValue {
     }
 
     /// Approximate in-memory size in bytes (used by cache accounting).
+    /// Strings are charged at heap *capacity*, not `len` — the allocator
+    /// reserves the former.
     pub fn approx_size(&self) -> usize {
         match self {
             AttrValue::Int(_) | AttrValue::Float(_) => 8,
-            AttrValue::Str(s) => s.len() + 8,
+            AttrValue::Str(s) => s.capacity() + 8,
+        }
+    }
+
+    /// Bytes this value owns *outside* its own enum slot (string heap
+    /// buffers, at capacity). Containers that already charge their
+    /// element slots at `size_of` add this to avoid double counting.
+    pub fn heap_size(&self) -> usize {
+        match self {
+            AttrValue::Int(_) | AttrValue::Float(_) => 0,
+            AttrValue::Str(s) => s.capacity(),
         }
     }
 }

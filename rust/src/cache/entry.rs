@@ -18,13 +18,22 @@ pub struct CachedRow {
 
 impl CachedRow {
     /// Approximate in-memory size (bytes) for budget accounting.
+    ///
+    /// Capacity-aware: the attrs `Vec` is charged at its *capacity*
+    /// times the real slot size (not a flat header constant), and
+    /// string values charge their heap buffers at capacity too — the
+    /// quantities the allocator actually reserves. Keeping this model
+    /// honest keeps [`CachedLane::bytes`] (and with it the engine's
+    /// budget enforcement) from drifting under the real footprint.
     pub fn approx_size(&self) -> usize {
-        // ts + seq + vec header + per-attr (id + value).
-        16 + 24
+        let slot = std::mem::size_of::<(AttrId, AttrValue)>();
+        16 // ts + seq
+            + std::mem::size_of::<Vec<(AttrId, AttrValue)>>()
+            + self.attrs.capacity() * slot
             + self
                 .attrs
                 .iter()
-                .map(|(_, v)| 2 + v.approx_size())
+                .map(|(_, v)| v.heap_size())
                 .sum::<usize>()
     }
 }
@@ -84,19 +93,18 @@ impl CachedLane {
     }
 
     /// Drop rows older than `cutoff` (retention = the type's max feature
-    /// window). Returns bytes freed.
-    pub fn prune_before(&mut self, cutoff: TimestampMs) -> usize {
-        let mut freed = 0;
-        while let Some(front) = self.rows.front() {
-            if front.ts < cutoff {
-                freed += front.approx_size();
-                self.rows.pop_front();
-            } else {
-                break;
-            }
-        }
-        self.bytes -= freed;
-        freed
+    /// window). Returns the evicted rows, still in chronological order —
+    /// the incremental compute layer retracts exactly these from its
+    /// persistent accumulators (bytes freed = their summed
+    /// [`CachedRow::approx_size`]). When nothing expires the returned
+    /// `Vec` is empty and allocation-free, so callers that discard the
+    /// result (the classic path, `CacheStore::prune`) only pay for
+    /// evictions that actually happened.
+    pub fn prune_before(&mut self, cutoff: TimestampMs) -> Vec<CachedRow> {
+        let n = self.rows.partition_point(|r| r.ts < cutoff);
+        let evicted: Vec<CachedRow> = self.rows.drain(..n).collect();
+        self.bytes -= evicted.iter().map(|r| r.approx_size()).sum::<usize>();
+        evicted
     }
 }
 
@@ -120,9 +128,53 @@ mod tests {
         }
         let full = lane.bytes();
         assert_eq!(full, lane.rows.iter().map(|r| r.approx_size()).sum());
-        let freed = lane.prune_before(5000);
+        let evicted = lane.prune_before(5000);
+        let freed: usize = evicted.iter().map(|r| r.approx_size()).sum();
         assert_eq!(lane.len(), 5);
         assert_eq!(lane.bytes(), full - freed);
+        // Evicted rows come back in chronological order (the incremental
+        // layer retracts them in exactly this order).
+        let ts: Vec<i64> = evicted.iter().map(|r| r.ts).collect();
+        assert_eq!(ts, vec![0, 1000, 2000, 3000, 4000]);
+    }
+
+    #[test]
+    fn approx_size_is_capacity_aware() {
+        // A string with slack capacity must be charged at capacity, not
+        // len — otherwise the budget accounting drifts under the real
+        // heap footprint.
+        let mut s = String::with_capacity(128);
+        s.push_str("ab");
+        let fat = CachedRow {
+            ts: 0,
+            seq: 0,
+            attrs: vec![(0, AttrValue::Str(s))],
+        };
+        let lean = CachedRow {
+            ts: 0,
+            seq: 0,
+            attrs: vec![(0, AttrValue::Str("ab".to_string()))],
+        };
+        assert!(
+            fat.approx_size() >= lean.approx_size() + 128 - "ab".len(),
+            "fat {} vs lean {}",
+            fat.approx_size(),
+            lean.approx_size()
+        );
+        // And the Vec buffer itself is charged at capacity.
+        let mut attrs = Vec::with_capacity(16);
+        attrs.push((0u16, AttrValue::Int(1)));
+        let slack = CachedRow { ts: 0, seq: 0, attrs };
+        let tight = CachedRow {
+            ts: 0,
+            seq: 0,
+            attrs: vec![(0, AttrValue::Int(1))],
+        };
+        let slot = std::mem::size_of::<(AttrId, AttrValue)>();
+        assert_eq!(
+            slack.approx_size(),
+            tight.approx_size() + (16 - tight.attrs.capacity()) * slot
+        );
     }
 
     #[test]

@@ -14,6 +14,14 @@ pub struct EngineConfig {
     /// Hierarchical filtering in fused lanes (off = direct fused filter,
     /// the Fig. 11 "original design" ablation).
     pub hierarchical_filter: bool,
+    /// Persistent incremental `Compute` state across extractions: the
+    /// fused Filter+Compute stages process only the inter-trigger delta
+    /// (fresh rows entering the windows, expired rows retracted) instead
+    /// of rewalking every cached row — O(Δ) per inference at a warm
+    /// cache. Requires `enable_cache` (the delta is defined by the
+    /// cached lane's watermark); ignored otherwise. Off by default so
+    /// the classic full-rewalk path stays the differential oracle.
+    pub incremental_compute: bool,
     /// Cache memory budget in bytes (dynamic in production; §4.2 shows
     /// full caches stay under 100 KB).
     pub cache_budget_bytes: usize,
@@ -44,11 +52,21 @@ impl EngineConfig {
             enable_fusion: true,
             enable_cache: true,
             hierarchical_filter: true,
+            incremental_compute: false,
             cache_budget_bytes: 256 * 1024,
             policy: PolicyKind::Greedy,
             expected_interval_ms: 5_000,
             staleness_ttl_ms: 0,
             codec: CodecKind::Jsonish,
+        }
+    }
+
+    /// Full AutoFeature plus the persistent incremental compute layer:
+    /// O(Δ) Filter+Compute per trigger instead of a full window rewalk.
+    pub fn incremental() -> Self {
+        EngineConfig {
+            incremental_compute: true,
+            ..Self::autofeature()
         }
     }
 
@@ -103,5 +121,8 @@ mod tests {
         assert!(EngineConfig::cache_only().enable_cache);
         assert!(!EngineConfig::naive().enable_fusion);
         assert!(!EngineConfig::naive().enable_cache);
+        assert!(!EngineConfig::autofeature().incremental_compute);
+        assert!(EngineConfig::incremental().incremental_compute);
+        assert!(EngineConfig::incremental().enable_cache);
     }
 }

@@ -17,7 +17,7 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::applog::codec::AttrCodec;
-use crate::applog::event::{EventTypeId, TimestampMs};
+use crate::applog::event::{AttrId, AttrValue, EventTypeId, TimestampMs};
 use crate::applog::query::{self, TimeWindow};
 use crate::applog::schema::Catalog;
 use crate::applog::store::AppLogStore;
@@ -25,10 +25,11 @@ use crate::cache::entry::{CachedLane, CachedRow};
 use crate::cache::policy::select;
 use crate::cache::store::CacheStore;
 use crate::cache::valuation::{evaluate, Candidate};
+use crate::features::incremental::IncrementalState;
 use crate::features::spec::FeatureSpec;
 use crate::features::value::FeatureValue;
 use crate::fegraph::node::OpBreakdown;
-use crate::optimizer::hierarchical::{DirectWalker, LaneWalker, RowView};
+use crate::optimizer::hierarchical::{lookup, DirectWalker, LaneWalker, RowView};
 use crate::optimizer::plan::FeatureAcc;
 
 use super::config::EngineConfig;
@@ -60,8 +61,58 @@ pub struct ExtractionResult {
 
 /// Rows available for one behavior type during one extraction.
 struct TypeRows {
+    /// Cache-resident rows, already pruned to the retention window.
     cached: CachedLane,
+    /// Freshly retrieved+decoded rows of the missing interval.
     fresh: Vec<CachedRow>,
+    /// Rows that left the retention window since the previous
+    /// extraction (evicted by the prune) — the incremental compute
+    /// layer retracts these.
+    expired: Vec<CachedRow>,
+    /// The lane's watermark when it was fetched from the cache (`None`
+    /// when the type started cold). Equal to the previous extraction's
+    /// trigger time iff the lane survived continuously — the validity
+    /// condition for the delta path.
+    resumed: Option<TimestampMs>,
+}
+
+/// How one feature's Compute runs this extraction (incremental mode).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum FeedMode {
+    /// Persistent state valid: apply only the inter-trigger delta.
+    Delta,
+    /// Persistent state missing/invalidated (cold start, lane evicted
+    /// by policy or budget shrink): rebuild it from the full window.
+    Rebuild,
+    /// Unsupported feature (multi-lane `Concat`): classic one-shot
+    /// accumulator.
+    Oneshot,
+}
+
+/// Persistent per-feature incremental compute state (kept beside the
+/// cache; dies with it on [`Extractor::reset`]).
+struct IncBank {
+    /// Trigger time the states are synchronized to (`None` until the
+    /// first incremental extraction completes).
+    synced_at: Option<TimestampMs>,
+    /// One slot per plan feature; `None` = unsupported (one-shot only).
+    states: Vec<Option<IncrementalState>>,
+}
+
+/// Attribute lookup in a cached row's sorted attr-union projection
+/// (the walker-shared helper, so fused and incremental paths address
+/// attrs identically).
+#[inline]
+fn attr_of(row: &CachedRow, id: AttrId) -> Option<&AttrValue> {
+    lookup(&row.attrs, id)
+}
+
+/// All current-window rows of a member whose lower boundary is `lo`:
+/// the cached suffix followed by the fresh suffix (both chronological).
+fn window_rows(rows: &TypeRows, lo: TimestampMs) -> impl Iterator<Item = &CachedRow> + '_ {
+    let cs = rows.cached.rows.partition_point(|r| r.ts < lo);
+    let fs = rows.fresh.partition_point(|r| r.ts < lo);
+    rows.cached.rows.range(cs..).chain(rows.fresh[fs..].iter())
 }
 
 /// The AutoFeature online engine.
@@ -81,6 +132,9 @@ pub struct Engine {
     last_now: Option<TimestampMs>,
     /// Previous extraction's values (kept only in co-design mode).
     last_values: Option<(TimestampMs, Vec<FeatureValue>)>,
+    /// Persistent incremental compute states
+    /// (`EngineConfig::incremental_compute`).
+    inc: Option<IncBank>,
 }
 
 impl Engine {
@@ -110,6 +164,7 @@ impl Engine {
             compiled,
             last_now: None,
             last_values: None,
+            inc: None,
         }
     }
 
@@ -126,6 +181,13 @@ impl Engine {
     /// Current cache usage in bytes (Fig. 17b metric).
     pub fn cache_bytes(&self) -> usize {
         self.cache.used_bytes()
+    }
+
+    /// The cross-execution cache (inspection: tests assert the
+    /// watermark-vs-log contract that `build_type_rows` only
+    /// `debug_assert!`s on the hot path).
+    pub fn cache(&self) -> &CacheStore {
+        &self.cache
     }
 
     /// Dynamically adjust the cache budget (OS memory pressure). Evicts
@@ -180,12 +242,13 @@ impl Engine {
         // everything below the watermark is already cached. The debug
         // check below verifies it against the store's index.
         let t0 = Instant::now();
-        let mut cached = match self.cache.evict(t) {
+        let (mut cached, resumed, expired) = match self.cache.evict(t) {
             Some(mut lane) => {
-                lane.prune_before(window_start);
-                lane
+                let resumed = Some(lane.watermark);
+                let expired = lane.prune_before(window_start);
+                (lane, resumed, expired)
             }
-            None => CachedLane::new(t, window_start),
+            None => (CachedLane::new(t, window_start), None, Vec::new()),
         };
         // Never re-retrieve what the cache already covers.
         let missing_from = cached.watermark.max(window_start);
@@ -236,7 +299,12 @@ impl Engine {
             .collect();
         cached.watermark = now;
 
-        Ok(TypeRows { cached, fresh })
+        Ok(TypeRows {
+            cached,
+            fresh,
+            expired,
+            resumed,
+        })
     }
 
     /// Run one lane's filter over an available row set.
@@ -266,6 +334,7 @@ impl Engine {
                 );
             }
             *boundary_cmps += w.boundary_cmps;
+            bd.rows_replayed += w.rows;
         } else {
             let mut w = DirectWalker::new();
             for r in rows.cached.rows.iter().chain(rows.fresh.iter()) {
@@ -281,8 +350,219 @@ impl Engine {
                 );
             }
             *boundary_cmps += w.boundary_cmps;
+            bd.rows_replayed += w.rows;
         }
         bd.filter_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    /// Incremental Filter+Compute (❸ under `incremental_compute`):
+    /// instead of rewalking every cached row, update the persistent
+    /// per-feature states by the inter-trigger delta.
+    ///
+    /// Per member (feature × lane) with window `w`, between the previous
+    /// sync `prev` and the trigger `now`:
+    /// * **retract** the rows whose age crossed the member's lower
+    ///   boundary — timestamps in `[prev − w, now − w)`, found in the
+    ///   expired prefix plus the retained cached prefix (already
+    ///   isolated by `prune_before` and the lane ordering);
+    /// * **push** the fresh rows at/above the boundary (`ts ≥ now − w`).
+    ///
+    /// The delta path is valid for a feature only if every backing lane
+    /// survived in the cache since the previous extraction (watermark ==
+    /// previous trigger). Otherwise — cold start, policy eviction,
+    /// budget shrink — the state is rebuilt from the full window
+    /// ([`FeedMode::Rebuild`]); this is also the exact-recompute
+    /// fallback when a bounded auxiliary structure reports
+    /// [`IncrementalState::is_dirty`] after the delta. Either way the
+    /// state ends the extraction synchronized to `now`, bit-equivalent
+    /// to a fresh rebuild (modulo float associativity, covered by the
+    /// 1e-9 differential bar).
+    ///
+    /// Returns one `Some(value)` per incrementally computed feature;
+    /// `None` marks features left to their one-shot sink.
+    ///
+    /// Cost note: the rebuild/one-shot fallbacks feed per (member, row)
+    /// with a per-attr binary search, without the fused walker's shared
+    /// merge-join — `O(members × window)` where `feed_lane` pays
+    /// `O(window)` per lane. That is deliberate: rebuilds only run on
+    /// cold start, lane eviction, or aux-set exhaustion, and sharing
+    /// the steady-state delta machinery keeps the two paths
+    /// bit-equivalent. A session that expects frequent evictions should
+    /// simply run the classic path.
+    fn feed_incremental(
+        &mut self,
+        avail: &HashMap<EventTypeId, TypeRows>,
+        now: TimestampMs,
+        sinks: &mut [FeatureAcc],
+        bd: &mut OpBreakdown,
+    ) -> Vec<Option<FeatureValue>> {
+        let compiled = Arc::clone(&self.compiled);
+        let plan = &compiled.plan;
+        let t0 = Instant::now();
+        let bank = self.inc.get_or_insert_with(|| IncBank {
+            synced_at: None,
+            states: plan
+                .features
+                .iter()
+                .map(IncrementalState::for_spec)
+                .collect(),
+        });
+        let prev = bank.synced_at;
+
+        let modes: Vec<FeedMode> = plan
+            .features
+            .iter()
+            .zip(&bank.states)
+            .map(|(spec, st)| {
+                if st.is_none() {
+                    FeedMode::Oneshot
+                } else if prev.is_some()
+                    && spec
+                        .event_types
+                        .iter()
+                        .all(|t| avail.get(t).is_some_and(|r| r.resumed == prev))
+                {
+                    FeedMode::Delta
+                } else {
+                    FeedMode::Rebuild
+                }
+            })
+            .collect();
+        for (mode, st) in modes.iter().zip(bank.states.iter_mut()) {
+            if let Some(st) = st {
+                match mode {
+                    FeedMode::Delta => st.rebase(now),
+                    FeedMode::Rebuild => st.reset(now),
+                    FeedMode::Oneshot => {}
+                }
+            }
+        }
+
+        // Delta iff every lane survived, so `prev` is set for Delta.
+        let prev_now = prev.unwrap_or(now);
+        for lane in &plan.lanes {
+            let rows = &avail[&lane.event_type];
+            for group in &lane.groups {
+                let w = group.window.duration_ms;
+                let new_lo = now - w;
+                let old_lo = prev_now - w;
+                // Boundary slices depend only on the group's window —
+                // one set of binary searches shared by every member
+                // (the same per-group sharing the hierarchical walker
+                // exploits). Crossing rows (`[old_lo, new_lo)`) live in
+                // the expired slice plus the retained cached prefix;
+                // the member's current window is the cached suffix plus
+                // the fresh suffix.
+                let es = rows.expired.partition_point(|r| r.ts < old_lo);
+                let ee = rows.expired.partition_point(|r| r.ts < new_lo);
+                let cs = rows.cached.rows.partition_point(|r| r.ts < old_lo);
+                let ce = rows.cached.rows.partition_point(|r| r.ts < new_lo);
+                let fs = rows.fresh.partition_point(|r| r.ts < new_lo);
+                for m in &group.members {
+                    match modes[m.feature_idx] {
+                        FeedMode::Delta => {
+                            let st = bank.states[m.feature_idx].as_mut().unwrap();
+                            for r in rows.expired[es..ee]
+                                .iter()
+                                .chain(rows.cached.rows.range(cs..ce))
+                            {
+                                bd.rows_delta += 1;
+                                for &a in &m.attrs {
+                                    if let Some(v) = attr_of(r, a) {
+                                        st.retract(r.ts, r.seq, v);
+                                    }
+                                }
+                            }
+                            for r in &rows.fresh[fs..] {
+                                bd.rows_delta += 1;
+                                for &a in &m.attrs {
+                                    if let Some(v) = attr_of(r, a) {
+                                        st.push(r.ts, r.seq, v);
+                                    }
+                                }
+                            }
+                        }
+                        FeedMode::Rebuild => {
+                            let st = bank.states[m.feature_idx].as_mut().unwrap();
+                            for r in rows
+                                .cached
+                                .rows
+                                .range(ce..)
+                                .chain(rows.fresh[fs..].iter())
+                            {
+                                bd.rows_replayed += 1;
+                                for &a in &m.attrs {
+                                    if let Some(v) = attr_of(r, a) {
+                                        st.push(r.ts, r.seq, v);
+                                    }
+                                }
+                            }
+                        }
+                        FeedMode::Oneshot => {
+                            let sink = &mut sinks[m.feature_idx];
+                            for r in rows
+                                .cached
+                                .rows
+                                .range(ce..)
+                                .chain(rows.fresh[fs..].iter())
+                            {
+                                bd.rows_replayed += 1;
+                                for &a in &m.attrs {
+                                    if let Some(v) = attr_of(r, a) {
+                                        sink.push(r.ts, r.seq, v);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Exact-recompute fallback: any state whose bounded structure
+        // was exhausted by the delta rebuilds from the cached window.
+        // Self-healing and test-observable (rows_replayed > 0) — the
+        // release-mode replacement for a debug assert.
+        for i in 0..plan.features.len() {
+            let needs_repair = matches!(modes[i], FeedMode::Delta)
+                && bank.states[i].as_ref().is_some_and(|st| st.is_dirty());
+            if !needs_repair {
+                continue;
+            }
+            let st = bank.states[i].as_mut().unwrap();
+            st.reset(now);
+            for lane in &plan.lanes {
+                let rows = &avail[&lane.event_type];
+                for group in &lane.groups {
+                    let new_lo = now - group.window.duration_ms;
+                    for m in &group.members {
+                        if m.feature_idx != i {
+                            continue;
+                        }
+                        for r in window_rows(rows, new_lo) {
+                            bd.rows_replayed += 1;
+                            for &a in &m.attrs {
+                                if let Some(v) = attr_of(r, a) {
+                                    st.push(r.ts, r.seq, v);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        bank.synced_at = Some(now);
+        bd.filter_ns += t0.elapsed().as_nanos() as u64;
+
+        let t1 = Instant::now();
+        let values: Vec<Option<FeatureValue>> = bank
+            .states
+            .iter()
+            .map(|st| st.as_ref().map(|s| s.snapshot()))
+            .collect();
+        bd.compute_ns += t1.elapsed().as_nanos() as u64;
+        values
     }
 
     /// No-cache lane execution: own Retrieve/Decode per lane (the
@@ -326,6 +606,7 @@ impl Engine {
                 );
             }
             *boundary_cmps += w.boundary_cmps;
+            bd.rows_replayed += w.rows;
         } else {
             let mut w = DirectWalker::new();
             for r in &rows {
@@ -341,6 +622,7 @@ impl Engine {
                 );
             }
             *boundary_cmps += w.boundary_cmps;
+            bd.rows_replayed += w.rows;
         }
         bd.filter_ns += t0.elapsed().as_nanos() as u64;
         Ok(())
@@ -376,9 +658,17 @@ impl Engine {
         }
         let selection = select(self.cfg.policy, &candidates, self.cache.budget());
         self.cache.clear();
+        // In incremental mode empty lanes are cached unconditionally —
+        // the policy rightly scores them at zero utility, but they also
+        // cost zero bytes, and dropping them would break watermark
+        // continuity for every feature touching an idle type, forcing a
+        // full O(window) rebuild of the feature's *other* lanes on each
+        // trigger.
+        let keep_empty = self.cfg.incremental_compute;
         for (keep, (_, lane)) in selection.into_iter().zip(entries) {
-            if keep && !lane.is_empty() {
-                // Selection cost == lane bytes, so insertion cannot fail.
+            if (keep && !lane.is_empty()) || (keep_empty && lane.is_empty()) {
+                // Selection cost == lane bytes (zero for the empty
+                // lanes), so insertion cannot fail.
                 let _ = self.cache.insert(lane);
             }
         }
@@ -397,6 +687,15 @@ impl Extractor for Engine {
                 if now - *t <= self.cfg.staleness_ttl_ms {
                     let wall = Instant::now();
                     let values = values.clone();
+                    // A stale serve is still an extraction: advance the
+                    // trigger clock so (a) the next real extraction's
+                    // interval estimate — which drives cache valuation
+                    // and the arbiter's overlap priority — measures the
+                    // true inter-extraction gap, not the distance to the
+                    // pre-stale trigger, and (b) the monotonicity
+                    // `ensure!` above also guards against triggers that
+                    // jump behind a served-stale one.
+                    self.last_now = Some(now);
                     return Ok(ExtractionResult {
                         values,
                         breakdown: OpBreakdown::default(),
@@ -421,9 +720,11 @@ impl Extractor for Engine {
             .map(|f| FeatureAcc::new(f, now))
             .collect();
 
+        let mut inc_values: Option<Vec<Option<FeatureValue>>> = None;
         if self.cfg.enable_cache {
             // Build per-type row sets once (❶❷), shared across all lanes
-            // of the type, then feed every lane (❸).
+            // of the type, then feed every lane (❸) — classic full
+            // rewalk or the incremental delta path.
             let mut avail: HashMap<EventTypeId, TypeRows> = HashMap::new();
             for lane_idx in 0..self.compiled.plan.lanes.len() {
                 let t = self.compiled.plan.lanes[lane_idx].event_type;
@@ -431,8 +732,14 @@ impl Extractor for Engine {
                     let rows = self.build_type_rows(store, t, now, &mut bd)?;
                     avail.insert(t, rows);
                 }
-                let rows = &avail[&t];
-                self.feed_lane(lane_idx, rows, now, &mut sinks, &mut bd, &mut boundary_cmps);
+            }
+            if self.cfg.incremental_compute {
+                inc_values = Some(self.feed_incremental(&avail, now, &mut sinks, &mut bd));
+            } else {
+                for lane_idx in 0..self.compiled.plan.lanes.len() {
+                    let rows = &avail[&self.compiled.plan.lanes[lane_idx].event_type];
+                    self.feed_lane(lane_idx, rows, now, &mut sinks, &mut bd, &mut boundary_cmps);
+                }
             }
             self.update_cache(avail, now, &mut bd);
         } else {
@@ -448,9 +755,17 @@ impl Extractor for Engine {
             }
         }
 
-        // Assemble (❸ tail): finish accumulators in feature order.
+        // Assemble (❸ tail): incremental snapshots where available,
+        // finished one-shot accumulators everywhere else.
         let t0 = Instant::now();
-        let values: Vec<FeatureValue> = sinks.into_iter().map(|s| s.finish()).collect();
+        let values: Vec<FeatureValue> = match inc_values {
+            Some(iv) => sinks
+                .into_iter()
+                .zip(iv)
+                .map(|(s, v)| v.unwrap_or_else(|| s.finish()))
+                .collect(),
+            None => sinks.into_iter().map(|s| s.finish()).collect(),
+        };
         bd.compute_ns += t0.elapsed().as_nanos() as u64;
 
         self.last_now = Some(now);
@@ -471,6 +786,7 @@ impl Extractor for Engine {
 
     fn label(&self) -> &'static str {
         match (self.cfg.enable_fusion, self.cfg.enable_cache) {
+            (true, true) if self.cfg.incremental_compute => "AutoFeature+Δ",
             (true, true) => "AutoFeature",
             (true, false) => "w/ Fusion",
             (false, true) => "w/ Cache",
@@ -482,6 +798,9 @@ impl Extractor for Engine {
         self.cache.clear();
         self.last_now = None;
         self.last_values = None;
+        // Incremental states are deltas *over the cache* — they die
+        // with it.
+        self.inc = None;
     }
 }
 
@@ -548,6 +867,11 @@ mod tests {
             EngineConfig {
                 hierarchical_filter: false,
                 ..EngineConfig::autofeature()
+            },
+            EngineConfig::incremental(),
+            EngineConfig {
+                enable_fusion: false,
+                ..EngineConfig::incremental()
             },
         ] {
             let got = extract_with(cfg, &specs, &cat, &store, &nows);
@@ -638,6 +962,183 @@ mod tests {
         // Beyond the TTL: fresh extraction again.
         let r3 = eng.extract(&store, 32 * 60_000).unwrap();
         assert!(!r3.served_stale);
+    }
+
+    #[test]
+    fn stale_serve_advances_the_trigger_clock() {
+        // Regression (§5 fast path): serving stale values used to return
+        // without touching `last_now`, so the next real extraction's
+        // interval estimate — the dynamic term of the cache valuation —
+        // measured from the pre-stale trigger, and non-monotonic
+        // triggers behind a stale serve slipped past the `ensure!`.
+        let (cat, specs, store) = setup();
+        let mut eng = Engine::new(specs, &cat, EngineConfig::stale_tolerant(60_000)).unwrap();
+        let t1 = 30 * 60_000i64;
+        let r1 = eng.extract(&store, t1).unwrap();
+        assert!(!r1.served_stale);
+        let t2 = t1 + 30_000;
+        let r2 = eng.extract(&store, t2).unwrap();
+        assert!(r2.served_stale);
+        // The stale serve is an extraction: the clock advanced.
+        assert_eq!(eng.last_now, Some(t2));
+        // Valuation sees the true inter-extraction interval (t3 - t2,
+        // not t3 - t1).
+        let t3 = t1 + 90_000;
+        assert_eq!(eng.interval_ms(t3), t3 - t2);
+        // And monotonicity is enforced against the served trigger too.
+        assert!(eng.extract(&store, t2 - 10_000).is_err());
+        let r3 = eng.extract(&store, t3).unwrap();
+        assert!(!r3.served_stale);
+    }
+
+    #[test]
+    fn incremental_steady_state_is_delta_bound() {
+        // Single-type feature sets are fully supported by the persistent
+        // path: once warm, every extraction must do O(Δ) compute work —
+        // zero full-path row visits outside the (rare, self-healing)
+        // aux-set repairs — while staying exact vs the naive oracle.
+        let (cat, _, store) = setup();
+        let specs = generate_feature_set(
+            &cat,
+            &FeatureSetConfig {
+                num_features: 24,
+                num_types: 6,
+                identical_share: 0.6,
+                windows: vec![TimeRange::mins(5), TimeRange::mins(30)],
+                multi_type_prob: 0.0, // single-lane features only
+                seed: 99,
+            },
+        );
+        // Roomy budget: every lane stays cached, so the only row visits
+        // after warm-up are deltas and (rare) aux repairs.
+        let roomy = EngineConfig {
+            cache_budget_bytes: 4 << 20,
+            ..EngineConfig::incremental()
+        };
+        let mut inc = Engine::new(specs.clone(), &cat, roomy).unwrap();
+        let mut full = Engine::new(
+            specs.clone(),
+            &cat,
+            EngineConfig {
+                incremental_compute: false,
+                ..roomy
+            },
+        )
+        .unwrap();
+        let mut naive = NaiveExtractor::new(specs, CodecKindForTest());
+        // Warm both engines.
+        inc.extract(&store, 30 * 60_000).unwrap();
+        full.extract(&store, 30 * 60_000).unwrap();
+        let (mut delta, mut replayed, mut full_replayed) = (0u64, 0u64, 0u64);
+        for step in 1..=10i64 {
+            // 10 s triggers against 5/30-min windows: the crossing +
+            // fresh delta is a few percent of the window even after
+            // accounting for the per-(member, row) counting unit of
+            // `rows_delta` vs the classic per-(lane, row) unit.
+            let now = 30 * 60_000 + step * 10_000;
+            let ri = inc.extract(&store, now).unwrap();
+            let rf = full.extract(&store, now).unwrap();
+            let want = naive.extract(&store, now).unwrap();
+            for (x, y) in ri.values.iter().zip(&want.values) {
+                assert!(x.approx_eq(y, 1e-9), "step {step}: {x:?} vs {y:?}");
+            }
+            delta += ri.breakdown.rows_delta;
+            replayed += ri.breakdown.rows_replayed;
+            full_replayed += rf.breakdown.rows_replayed;
+        }
+        assert!(delta > 0, "delta path never exercised");
+        assert!(
+            delta + replayed < full_replayed / 2,
+            "delta {delta} + replayed {replayed} vs full rewalk {full_replayed}"
+        );
+    }
+
+    #[test]
+    fn idle_type_does_not_defeat_delta_mode() {
+        // Regression: empty lanes used to be dropped by the cache
+        // update, so a feature spanning a busy type and an idle one
+        // (zero in-window rows) lost watermark continuity every trigger
+        // and rebuilt its busy lane from the full window — O(window)
+        // forever, silently defeating incremental_compute.
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        let spec = FeatureSpec {
+            id: crate::features::spec::FeatureId(0),
+            name: "busy_plus_idle".into(),
+            event_types: vec![0, 1], // type 1 never logs an event
+            window: TimeRange::mins(5),
+            attrs: vec![0],
+            comp: crate::features::compute::CompFunc::Sum,
+        }
+        .normalized();
+        let codec = JsonishCodec;
+        let mut store = AppLogStore::new(StoreConfig::default());
+        for i in 0..1200i64 {
+            store
+                .append(0, i * 1_000, codec.encode(&[(0, crate::applog::event::AttrValue::Int(i))]))
+                .unwrap();
+        }
+        let mut eng =
+            Engine::new(vec![spec.clone()], &cat, EngineConfig::incremental()).unwrap();
+        let mut naive = NaiveExtractor::new(vec![spec], CodecKindForTest());
+        eng.extract(&store, 10 * 60_000).unwrap(); // warm (rebuild)
+        for step in 1..=5i64 {
+            let now = 10 * 60_000 + step * 10_000;
+            let r = eng.extract(&store, now).unwrap();
+            assert_eq!(
+                r.breakdown.rows_replayed, 0,
+                "step {step}: idle type forced a rebuild"
+            );
+            assert!(r.breakdown.rows_delta > 0, "step {step}");
+            let want = naive.extract(&store, now).unwrap();
+            for (x, y) in r.values.iter().zip(&want.values) {
+                assert!(x.approx_eq(y, 1e-9), "step {step}: {x:?} vs {y:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_rebuilds_after_budget_eviction() {
+        // "State dies with its lane": a budget shrink evicts cached
+        // lanes; the next extraction must detect the watermark mismatch,
+        // rebuild (observable as rows_replayed > 0) and stay exact.
+        let (cat, specs, store) = setup();
+        let roomy = EngineConfig {
+            cache_budget_bytes: 4 << 20,
+            ..EngineConfig::incremental()
+        };
+        let mut eng = Engine::new(specs.clone(), &cat, roomy).unwrap();
+        let mut naive = NaiveExtractor::new(specs, CodecKindForTest());
+        eng.extract(&store, 30 * 60_000).unwrap();
+        eng.extract(&store, 31 * 60_000).unwrap();
+        assert!(eng.cache_bytes() > 0);
+        eng.set_cache_budget(0, 60_000);
+        assert_eq!(eng.cache_bytes(), 0);
+        let now = 32 * 60_000;
+        let r = eng.extract(&store, now).unwrap();
+        assert!(r.breakdown.rows_replayed > 0, "eviction must force a rebuild");
+        let want = naive.extract(&store, now).unwrap();
+        for (x, y) in r.values.iter().zip(&want.values) {
+            assert!(x.approx_eq(y, 1e-9), "{x:?} vs {y:?}");
+        }
+        // Restore the budget: the path re-warms back to delta-only.
+        eng.set_cache_budget(4 << 20, 60_000);
+        eng.extract(&store, 33 * 60_000).unwrap();
+        let r = eng.extract(&store, 34 * 60_000).unwrap();
+        assert!(r.breakdown.rows_delta > 0);
+    }
+
+    #[test]
+    fn incremental_reset_clears_persistent_state() {
+        let (cat, specs, store) = setup();
+        let mut eng = Engine::new(specs, &cat, EngineConfig::incremental()).unwrap();
+        eng.extract(&store, 30 * 60_000).unwrap();
+        assert!(eng.inc.is_some());
+        eng.reset();
+        assert!(eng.inc.is_none());
+        // Post-reset extraction rebuilds cold and stays correct.
+        let r = eng.extract(&store, 31 * 60_000).unwrap();
+        assert_eq!(r.breakdown.rows_from_cache, 0);
+        assert!(r.breakdown.rows_replayed > 0);
     }
 
     #[test]

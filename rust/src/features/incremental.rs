@@ -1,0 +1,805 @@
+//! Persistent incremental accumulators: cross-inference reuse of the
+//! `Compute` operation (the delta layer above the §3.4 cache).
+//!
+//! PR 2's segmented store and the cache watermark eliminate redundant
+//! `Retrieve`/`Decode` across consecutive inferences, but the classic
+//! online path still rewalks **every** cached row through Filter+Compute
+//! on each trigger, so those stages stay O(window) even at a 100% cache
+//! hit rate. This module extends redundancy elimination from raw data to
+//! computation state: each supported feature keeps one
+//! [`IncrementalState`] alive across extractions, and per trigger the
+//! engine feeds it only the *delta* — [`IncrementalState::push`] for
+//! observations entering the feature's window, and
+//! [`IncrementalState::retract`] for observations leaving it.
+//!
+//! Retraction strategy per [`CompFunc`]:
+//!
+//! * `Count`/`Sum`/`Mean` — invertible group operations (`acc -= x`).
+//!   The running sum is re-zeroed exactly whenever the live-observation
+//!   count reaches 0, so floating-point residue can never leak into an
+//!   empty window's value.
+//! * `DecayedSum` — timestamp-shift renormalization: on every trigger
+//!   the accumulator is rebased `acc *= 0.5^(Δt / half_life)`
+//!   ([`IncrementalState::rebase`]), after which push/retract
+//!   contributions are computed against the new trigger time.
+//! * `Min`/`Max`/`Earliest` — bounded auxiliary state: a sorted,
+//!   downward-closed set of the [`AUX_CAP`] most extreme live
+//!   observations. Retracting a non-extreme observation is a no-op;
+//!   retracting the current extreme reveals the runner-up. If churn
+//!   exhausts the set while observations remain, the state reports
+//!   [`IncrementalState::is_dirty`] and the engine rebuilds it from the
+//!   cached window — the exact-recompute fallback.
+//! * `Latest` — endpoint tracking: the newest observation rarely
+//!   expires; when it does (the window drained) either a fresh push
+//!   re-establishes the endpoint or the dirty flag triggers a rebuild.
+//! * `DistinctCount` — refcounted sorted value set (exact retraction).
+//! * `Concat` — its natural ring of the last `max_len` observations;
+//!   ring displacement and oldest-first expiry commute (see
+//!   `retract`), so the ring is exact without any fallback.
+//!
+//! Multi-lane order-sensitive features (`Concat` spanning several
+//! behavior types) cannot be maintained as a persistent delta structure
+//! — [`IncrementalState::for_spec`] returns `None` and the engine keeps
+//! them on the classic one-shot path.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::VecDeque;
+
+use crate::applog::event::{AttrValue, TimestampMs};
+
+use super::compute::CompFunc;
+use super::spec::FeatureSpec;
+use super::value::FeatureValue;
+
+/// Capacity of the bounded auxiliary sets backing `Min`/`Max`/
+/// `Earliest`. Larger values survive more churn between exact-recompute
+/// fallbacks at the price of per-state memory (`AUX_CAP` entries of
+/// ~32 B each).
+pub const AUX_CAP: usize = 32;
+
+/// `(timestamp, seq_no)` — the total order the engine feeds rows in.
+type Key = (TimestampMs, u64);
+
+/// `f64` with the IEEE total order, so extreme sets can sort values.
+#[derive(Debug, Clone, Copy)]
+struct OrdF64(f64);
+
+impl PartialEq for OrdF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Bounded sorted set of the (at most [`AUX_CAP`]) smallest live
+/// elements by `O`, maintained *downward-closed*: every live observation
+/// not in the set orders `>=` the set's maximum. `offer` preserves the
+/// invariant under arbitrary insertion order (multi-lane features feed
+/// lane-by-lane, not globally sorted), and `remove` preserves it because
+/// only live observations are ever retracted.
+#[derive(Debug, Clone)]
+struct SmallestSet<O: Ord + Copy> {
+    /// `(order key, answer payload)`, ascending by key.
+    items: Vec<(O, f64)>,
+}
+
+impl<O: Ord + Copy> SmallestSet<O> {
+    fn new() -> Self {
+        SmallestSet { items: Vec::new() }
+    }
+
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Offer a new live element. `covers_all` must be true iff the set
+    /// currently tracks *every* live observation — only then may an
+    /// element above the current maximum enter without breaking
+    /// downward closure. In particular an *empty* set accepts an
+    /// element only under `covers_all`: emptiness is vacuously "below
+    /// max", but unless the set provably covers everything, untracked
+    /// smaller live elements may exist and the insert would let
+    /// `first()` lie (the caller's drain flag forces the rebuild
+    /// instead).
+    fn offer(&mut self, o: O, payload: f64, covers_all: bool) {
+        let below_max = self.items.last().is_some_and(|&(m, _)| o < m);
+        if !covers_all && !below_max {
+            return;
+        }
+        // Insert AFTER any run of equal keys: ties then keep push
+        // order, so `first()` answers with the first-pushed value —
+        // matching the one-shot accumulator's strict-inequality
+        // tie-break (multi-attribute rows push several observations
+        // under one `(ts, seq)` key).
+        let pos = self.items.partition_point(|&(x, _)| x <= o);
+        self.items.insert(pos, (o, payload));
+        if self.items.len() > AUX_CAP {
+            self.items.pop();
+        }
+    }
+
+    /// Remove a retracted element. Absence is legal (the element ordered
+    /// above the tracked prefix) and a no-op.
+    fn remove(&mut self, o: &O) {
+        if let Ok(pos) = self.items.binary_search_by(|(x, _)| x.cmp(o)) {
+            self.items.remove(pos);
+        }
+    }
+
+    /// The current extreme's payload.
+    fn first(&self) -> Option<f64> {
+        self.items.first().map(|&(_, v)| v)
+    }
+}
+
+/// Function-specific incremental core.
+#[derive(Debug, Clone)]
+enum Core {
+    /// Row count — the live-observation counter itself is the state.
+    Count,
+    /// Invertible running sum.
+    Sum { sum: f64 },
+    /// Invertible running sum; divided by the live count on snapshot.
+    Mean { sum: f64 },
+    /// Bounded set of the smallest values.
+    Min { set: SmallestSet<(OrdF64, Key)> },
+    /// Bounded set of the largest values (reverse value order).
+    Max { set: SmallestSet<(Reverse<OrdF64>, Key)> },
+    /// Newest-endpoint tracking.
+    Latest { best: Option<(Key, f64)> },
+    /// Bounded set of the oldest keys.
+    Earliest { set: SmallestSet<Key> },
+    /// Refcounted sorted set of distinct value bit patterns.
+    Distinct { set: Vec<(u64, u32)> },
+    /// Ring of the last `max_len` observations, chronological.
+    Concat {
+        /// `(key, value)` entries, oldest first.
+        ring: VecDeque<(Key, f64)>,
+        /// Ring capacity (the feature's `max_len`).
+        max_len: usize,
+    },
+    /// Time-decayed sum, rebased to the state's trigger anchor.
+    Decayed { acc: f64, half_life_ms: i64 },
+}
+
+/// Persistent accumulator for one feature, surviving across extractions.
+///
+/// Contract (enforced by the engine): per extraction the engine first
+/// calls [`rebase`](Self::rebase) with the new trigger time, then
+/// retracts every observation that left the feature's window since the
+/// previous sync (oldest-first *per lane*; lanes may interleave), then
+/// pushes every observation that entered it. After applying a delta the
+/// engine must check [`is_dirty`](Self::is_dirty) and, if set, rebuild
+/// via [`reset`](Self::reset) + pushes of the full in-window row set.
+/// [`snapshot`](Self::snapshot) then yields exactly the value a one-shot
+/// [`super::compute::ComputeState`] over the in-window observations
+/// would produce (up to float associativity).
+#[derive(Debug, Clone)]
+pub struct IncrementalState {
+    comp: CompFunc,
+    /// Trigger time the state is rebased to (decay anchor).
+    now: TimestampMs,
+    /// Live observation count (pushes minus retracts).
+    n: u64,
+    /// Hard invariant violation observed (retract of an unknown
+    /// observation / counter underflow): the state can no longer answer
+    /// and must be rebuilt.
+    corrupt: bool,
+    core: Core,
+}
+
+impl IncrementalState {
+    /// Persistent state for a feature, or `None` when the feature can
+    /// only run one-shot (order-sensitive computation spanning multiple
+    /// lanes — the same condition that buffers
+    /// [`crate::optimizer::plan::FeatureAcc`]).
+    pub fn for_spec(spec: &FeatureSpec) -> Option<IncrementalState> {
+        if matches!(spec.comp, CompFunc::Concat { .. }) && spec.event_types.len() > 1 {
+            return None;
+        }
+        let mut st = IncrementalState {
+            comp: spec.comp,
+            now: 0,
+            n: 0,
+            corrupt: false,
+            core: Core::Count,
+        };
+        st.reset(0);
+        Some(st)
+    }
+
+    /// Drop all accumulated state and re-anchor at trigger time `now`
+    /// (the exact-recompute fallback entry point).
+    pub fn reset(&mut self, now: TimestampMs) {
+        self.now = now;
+        self.n = 0;
+        self.corrupt = false;
+        self.core = match self.comp {
+            CompFunc::Count => Core::Count,
+            CompFunc::Sum => Core::Sum { sum: 0.0 },
+            CompFunc::Mean => Core::Mean { sum: 0.0 },
+            CompFunc::Min => Core::Min {
+                set: SmallestSet::new(),
+            },
+            CompFunc::Max => Core::Max {
+                set: SmallestSet::new(),
+            },
+            CompFunc::Latest => Core::Latest { best: None },
+            CompFunc::Earliest => Core::Earliest {
+                set: SmallestSet::new(),
+            },
+            CompFunc::DistinctCount => Core::Distinct { set: Vec::new() },
+            CompFunc::Concat { max_len } => Core::Concat {
+                ring: VecDeque::with_capacity(max_len.min(64)),
+                max_len,
+            },
+            CompFunc::DecayedSum { half_life_ms } => Core::Decayed {
+                acc: 0.0,
+                half_life_ms,
+            },
+        };
+    }
+
+    /// Advance the state's trigger anchor to `now` (call once per
+    /// extraction, before any retract/push of that extraction).
+    /// `DecayedSum` renormalizes by the timestamp shift:
+    /// `acc *= 0.5^(Δt / half_life)`.
+    pub fn rebase(&mut self, now: TimestampMs) {
+        if let Core::Decayed { acc, half_life_ms } = &mut self.core {
+            let dt = now - self.now;
+            if dt > 0 && *acc != 0.0 {
+                *acc *= 0.5f64.powf(dt as f64 / *half_life_ms as f64);
+            }
+        }
+        self.now = now;
+    }
+
+    /// Live observation count (pushes minus retracts).
+    pub fn live(&self) -> u64 {
+        self.n
+    }
+
+    /// Feed one observation entering the window.
+    pub fn push(&mut self, ts: TimestampMs, seq: u64, value: &AttrValue) {
+        let x = value.as_f64();
+        let key = (ts, seq);
+        let n_before = self.n;
+        match &mut self.core {
+            Core::Count => {}
+            Core::Sum { sum } | Core::Mean { sum } => *sum += x,
+            Core::Min { set } => {
+                let covers = set.len() as u64 == n_before;
+                set.offer((OrdF64(x), key), x, covers);
+            }
+            Core::Max { set } => {
+                let covers = set.len() as u64 == n_before;
+                set.offer((Reverse(OrdF64(x)), key), x, covers);
+            }
+            Core::Latest { best } => {
+                if best.map_or(true, |(k, _)| key >= k) {
+                    *best = Some((key, x));
+                }
+            }
+            Core::Earliest { set } => {
+                let covers = set.len() as u64 == n_before;
+                set.offer(key, x, covers);
+            }
+            Core::Distinct { set } => {
+                let bits = x.to_bits();
+                match set.binary_search_by_key(&bits, |(b, _)| *b) {
+                    Ok(pos) => set[pos].1 += 1,
+                    Err(pos) => set.insert(pos, (bits, 1)),
+                }
+            }
+            Core::Concat { ring, max_len } => {
+                ring.push_back((key, x));
+                if ring.len() > *max_len {
+                    ring.pop_front();
+                }
+            }
+            Core::Decayed { acc, half_life_ms } => {
+                let age = (self.now - ts).max(0) as f64;
+                *acc += x * 0.5f64.powf(age / *half_life_ms as f64);
+            }
+        }
+        self.n += 1;
+    }
+
+    /// Retract one observation leaving the window. The engine feeds the
+    /// exact `(ts, seq, value)` triple it pushed earlier.
+    pub fn retract(&mut self, ts: TimestampMs, seq: u64, value: &AttrValue) {
+        let x = value.as_f64();
+        let key = (ts, seq);
+        if self.n == 0 {
+            self.corrupt = true;
+            return;
+        }
+        self.n -= 1;
+        let drained = self.n == 0;
+        match &mut self.core {
+            Core::Count => {}
+            Core::Sum { sum } | Core::Mean { sum } => {
+                *sum -= x;
+                if drained {
+                    *sum = 0.0;
+                }
+            }
+            Core::Min { set } => set.remove(&(OrdF64(x), key)),
+            Core::Max { set } => set.remove(&(Reverse(OrdF64(x)), key)),
+            Core::Latest { best } => {
+                // The newest observation only expires once everything
+                // older is gone too; clearing is exact unless other
+                // lanes still hold rows (then `is_dirty` triggers the
+                // rebuild fallback).
+                if best.is_some_and(|(k, _)| k == key) {
+                    *best = None;
+                }
+            }
+            Core::Earliest { set } => set.remove(&key),
+            Core::Distinct { set } => {
+                match set.binary_search_by_key(&x.to_bits(), |(b, _)| *b) {
+                    Ok(pos) => {
+                        set[pos].1 -= 1;
+                        if set[pos].1 == 0 {
+                            set.remove(pos);
+                        }
+                    }
+                    Err(_) => self.corrupt = true,
+                }
+            }
+            Core::Concat { ring, .. } => {
+                // Observations expire in exactly the order they entered,
+                // so an expired observation is either the ring's front
+                // (window shorter than max_len) or was already displaced
+                // by newer pushes (no-op either way).
+                if ring.front().is_some_and(|(k, _)| *k == key) {
+                    ring.pop_front();
+                }
+            }
+            Core::Decayed { acc, half_life_ms } => {
+                let age = (self.now - ts).max(0) as f64;
+                *acc -= x * 0.5f64.powf(age / *half_life_ms as f64);
+                if drained {
+                    *acc = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Whether the state can no longer answer exactly and must be
+    /// rebuilt from the full in-window row set. Check after applying an
+    /// extraction's complete delta (intermediate emptiness while a
+    /// multi-attribute row retracts halfway is legal).
+    pub fn is_dirty(&self) -> bool {
+        self.corrupt
+            || (self.n > 0
+                && match &self.core {
+                    Core::Min { set } => set.is_empty(),
+                    Core::Max { set } => set.is_empty(),
+                    Core::Earliest { set } => set.is_empty(),
+                    Core::Latest { best } => best.is_none(),
+                    _ => false,
+                })
+    }
+
+    /// Current feature value. Matches a one-shot
+    /// [`super::compute::ComputeState`] over the live observations,
+    /// including the empty-window contract (scalar `0` / empty vector —
+    /// never a `±INFINITY` or endpoint sentinel).
+    pub fn snapshot(&self) -> FeatureValue {
+        let empty = self.n == 0;
+        match &self.core {
+            Core::Count => FeatureValue::Scalar(self.n as f64),
+            Core::Sum { sum } => FeatureValue::Scalar(if empty { 0.0 } else { *sum }),
+            Core::Mean { sum } => {
+                FeatureValue::Scalar(if empty { 0.0 } else { *sum / self.n as f64 })
+            }
+            Core::Min { set } => FeatureValue::Scalar(set.first().unwrap_or(0.0)),
+            Core::Max { set } => FeatureValue::Scalar(set.first().unwrap_or(0.0)),
+            Core::Latest { best } => {
+                FeatureValue::Scalar(best.map(|(_, v)| v).unwrap_or(0.0))
+            }
+            Core::Earliest { set } => FeatureValue::Scalar(set.first().unwrap_or(0.0)),
+            Core::Distinct { set } => FeatureValue::Scalar(set.len() as f64),
+            Core::Concat { ring, .. } => {
+                FeatureValue::Vector(ring.iter().map(|&(_, v)| v).collect())
+            }
+            Core::Decayed { acc, .. } => FeatureValue::Scalar(if empty { 0.0 } else { *acc }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::spec::{FeatureId, TimeRange};
+    use crate::util::rng::SimRng;
+
+    const COMPS: [CompFunc; 10] = [
+        CompFunc::Count,
+        CompFunc::Sum,
+        CompFunc::Mean,
+        CompFunc::Min,
+        CompFunc::Max,
+        CompFunc::Latest,
+        CompFunc::Earliest,
+        CompFunc::DistinctCount,
+        CompFunc::Concat { max_len: 4 },
+        CompFunc::DecayedSum { half_life_ms: 7_000 },
+    ];
+
+    fn spec_for(comp: CompFunc, types: Vec<u16>) -> FeatureSpec {
+        FeatureSpec {
+            id: FeatureId(0),
+            name: "probe".into(),
+            event_types: types,
+            window: TimeRange::secs(10),
+            attrs: vec![0],
+            comp,
+        }
+        .normalized()
+    }
+
+    /// One-shot reference over exactly the in-window observations.
+    fn reference(comp: CompFunc, obs: &[(i64, u64, f64)], now: i64, w: i64) -> FeatureValue {
+        let mut st = comp.accumulator(now);
+        for &(ts, seq, v) in obs {
+            if ts >= now - w && ts < now {
+                st.push(ts, seq, &AttrValue::Float(v));
+            }
+        }
+        st.finish()
+    }
+
+    /// Drive a state the way the engine does: rebase, retract the
+    /// boundary crossers, push the fresh arrivals, rebuild on dirty.
+    /// Returns (snapshot, rebuilt_this_step).
+    fn step(
+        st: &mut IncrementalState,
+        obs: &[(i64, u64, f64)],
+        prev: Option<i64>,
+        now: i64,
+        w: i64,
+    ) -> (FeatureValue, bool) {
+        let rebuild = |st: &mut IncrementalState| {
+            st.reset(now);
+            for &(ts, seq, v) in obs {
+                if ts >= now - w && ts < now {
+                    st.push(ts, seq, &AttrValue::Float(v));
+                }
+            }
+        };
+        let mut rebuilt = false;
+        match prev {
+            None => {
+                rebuild(&mut *st);
+                rebuilt = true;
+            }
+            Some(prev) => {
+                st.rebase(now);
+                let (old_lo, new_lo) = (prev - w, now - w);
+                for &(ts, seq, v) in obs {
+                    if ts >= old_lo && ts < new_lo {
+                        st.retract(ts, seq, &AttrValue::Float(v));
+                    }
+                }
+                for &(ts, seq, v) in obs {
+                    if ts >= prev && ts < now && ts >= new_lo {
+                        st.push(ts, seq, &AttrValue::Float(v));
+                    }
+                }
+                if st.is_dirty() {
+                    rebuild(&mut *st);
+                    rebuilt = true;
+                }
+            }
+        }
+        (st.snapshot(), rebuilt)
+    }
+
+    #[test]
+    fn delta_matches_one_shot_over_random_trigger_trains() {
+        let mut rng = SimRng::seed_from_u64(0xD317A);
+        for comp in COMPS {
+            for trial in 0..6 {
+                let mut obs: Vec<(i64, u64, f64)> = Vec::new();
+                let mut ts = 0i64;
+                for seq in 0..300u64 {
+                    ts += rng.range_i(1, 300);
+                    // Quantized values so duplicates occur (DistinctCount).
+                    obs.push((ts, seq, rng.range_i(0, 40) as f64 / 4.0));
+                }
+                let w = rng.range_i(2_000, 15_000);
+                let horizon = ts + 2 * w;
+                let mut st = IncrementalState::for_spec(&spec_for(comp, vec![0])).unwrap();
+                let mut prev: Option<i64> = None;
+                let mut now = rng.range_i(1, 2_000);
+                while now < horizon {
+                    let (got, _) = step(&mut st, &obs, prev, now, w);
+                    let want = reference(comp, &obs, now, w);
+                    assert!(
+                        got.approx_eq(&want, 1e-9),
+                        "{comp:?} trial {trial} @ {now} (w {w}): {got:?} vs {want:?}"
+                    );
+                    prev = Some(now);
+                    // Mix tiny gaps, same-trigger repeats and full drains.
+                    now += match rng.range_u(0, 8) {
+                        0 => 0,
+                        1 => w + rng.range_i(1, 4_000), // whole window expires
+                        _ => rng.range_i(1, 2_500),
+                    };
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_order_lane_feed_matches_one_shot() {
+        // Multi-lane features feed lane-by-lane: within a lane keys
+        // ascend, across lanes they interleave arbitrarily. Emulate two
+        // lanes by splitting the stream on seq parity and feeding each
+        // half separately per trigger.
+        let mut rng = SimRng::seed_from_u64(0xAB1E);
+        for comp in [
+            CompFunc::Sum,
+            CompFunc::Min,
+            CompFunc::Max,
+            CompFunc::Latest,
+            CompFunc::Earliest,
+            CompFunc::DistinctCount,
+        ] {
+            let mut obs: Vec<(i64, u64, f64)> = Vec::new();
+            let mut ts = 0i64;
+            for seq in 0..240u64 {
+                ts += rng.range_i(1, 200);
+                obs.push((ts, seq, rng.range_i(0, 50) as f64));
+            }
+            let w = 6_000i64;
+            let lanes: [Vec<(i64, u64, f64)>; 2] = [
+                obs.iter().copied().filter(|(_, s, _)| s % 2 == 0).collect(),
+                obs.iter().copied().filter(|(_, s, _)| s % 2 == 1).collect(),
+            ];
+            let mut st = IncrementalState::for_spec(&spec_for(comp, vec![0, 1])).unwrap();
+            let mut prev: Option<i64> = None;
+            let mut now = 500i64;
+            while now < ts + w {
+                match prev {
+                    None => {
+                        st.reset(now);
+                        for lane in &lanes {
+                            for &(ts, seq, v) in lane {
+                                if ts >= now - w && ts < now {
+                                    st.push(ts, seq, &AttrValue::Float(v));
+                                }
+                            }
+                        }
+                    }
+                    Some(prev) => {
+                        st.rebase(now);
+                        let (old_lo, new_lo) = (prev - w, now - w);
+                        for lane in &lanes {
+                            for &(ts, seq, v) in lane {
+                                if ts >= old_lo && ts < new_lo {
+                                    st.retract(ts, seq, &AttrValue::Float(v));
+                                }
+                            }
+                        }
+                        for lane in &lanes {
+                            for &(ts, seq, v) in lane {
+                                if ts >= prev && ts < now && ts >= new_lo {
+                                    st.push(ts, seq, &AttrValue::Float(v));
+                                }
+                            }
+                        }
+                        if st.is_dirty() {
+                            st.reset(now);
+                            for lane in &lanes {
+                                for &(ts, seq, v) in lane {
+                                    if ts >= now - w && ts < now {
+                                        st.push(ts, seq, &AttrValue::Float(v));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                let want = reference(comp, &obs, now, w);
+                let got = st.snapshot();
+                assert!(
+                    got.approx_eq(&want, 1e-9),
+                    "{comp:?} @ {now}: {got:?} vs {want:?}"
+                );
+                prev = Some(now);
+                now += rng.range_i(1, 1_800);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_drained_states_yield_exact_zeros() {
+        for comp in COMPS {
+            let mut st = IncrementalState::for_spec(&spec_for(comp, vec![0])).unwrap();
+            st.reset(1_000);
+            let empty = st.snapshot();
+            match comp {
+                CompFunc::Concat { .. } => assert_eq!(empty, FeatureValue::Vector(vec![])),
+                _ => assert_eq!(empty, FeatureValue::Scalar(0.0), "{comp:?}"),
+            }
+            // Fill, rebase, retract everything: the drained state must
+            // return the exact empty value again (no float residue, no
+            // sentinel leak).
+            for i in 0..20 {
+                st.push(500 + i, i as u64, &AttrValue::Float(0.1 + i as f64));
+            }
+            st.rebase(50_000);
+            for i in 0..20 {
+                st.retract(500 + i, i as u64, &AttrValue::Float(0.1 + i as f64));
+            }
+            assert!(!st.is_dirty(), "{comp:?}");
+            assert_eq!(st.live(), 0, "{comp:?}");
+            assert_eq!(st.snapshot(), empty, "{comp:?}");
+        }
+    }
+
+    #[test]
+    fn concat_ring_displacement_commutes_with_expiry() {
+        let spec = spec_for(CompFunc::Concat { max_len: 2 }, vec![0]);
+        let mut st = IncrementalState::for_spec(&spec).unwrap();
+        st.reset(0);
+        for i in 0..4i64 {
+            st.push(i, i as u64, &AttrValue::Float(i as f64));
+        }
+        // Ring holds the last 2; retracting the displaced first rows is
+        // a no-op, retracting a ring member pops it.
+        assert_eq!(st.snapshot(), FeatureValue::Vector(vec![2.0, 3.0]));
+        st.retract(0, 0, &AttrValue::Float(0.0));
+        st.retract(1, 1, &AttrValue::Float(1.0));
+        assert_eq!(st.snapshot(), FeatureValue::Vector(vec![2.0, 3.0]));
+        st.retract(2, 2, &AttrValue::Float(2.0));
+        assert_eq!(st.snapshot(), FeatureValue::Vector(vec![3.0]));
+    }
+
+    #[test]
+    fn distinct_refcount_survives_duplicates() {
+        let mut st = IncrementalState::for_spec(&spec_for(CompFunc::DistinctCount, vec![0]))
+            .unwrap();
+        st.reset(0);
+        st.push(1, 0, &AttrValue::Float(7.0));
+        st.push(2, 1, &AttrValue::Float(7.0));
+        st.push(3, 2, &AttrValue::Float(9.0));
+        assert_eq!(st.snapshot(), FeatureValue::Scalar(2.0));
+        st.retract(1, 0, &AttrValue::Float(7.0));
+        assert_eq!(st.snapshot(), FeatureValue::Scalar(2.0)); // one 7 left
+        st.retract(2, 1, &AttrValue::Float(7.0));
+        assert_eq!(st.snapshot(), FeatureValue::Scalar(1.0));
+        assert!(!st.is_dirty());
+        // Retracting an unknown value is a hard violation -> dirty.
+        st.retract(3, 2, &AttrValue::Float(8.0));
+        assert!(st.is_dirty());
+    }
+
+    #[test]
+    fn aux_exhaustion_flags_dirty_instead_of_lying() {
+        // More rows than AUX_CAP, then expire a prefix wider than the
+        // tracked set: the state must demand a rebuild, not answer.
+        let mut st = IncrementalState::for_spec(&spec_for(CompFunc::Min, vec![0])).unwrap();
+        st.reset(0);
+        let n = (AUX_CAP * 4) as i64;
+        // Increasing values: the tracked smallest are the OLDEST rows,
+        // so expiring a wide-enough prefix drains the whole set.
+        for i in 0..n {
+            st.push(i, i as u64, &AttrValue::Float(i as f64));
+        }
+        st.rebase(n + 1);
+        for i in 0..(AUX_CAP as i64 + 8) {
+            st.retract(i, i as u64, &AttrValue::Float(i as f64));
+        }
+        assert!(st.live() > 0);
+        assert!(st.is_dirty(), "set drained but observations remain");
+        // The fallback restores exactness.
+        st.reset(n + 1);
+        for i in (AUX_CAP as i64 + 8)..n {
+            st.push(i, i as u64, &AttrValue::Float(i as f64));
+        }
+        assert!(!st.is_dirty());
+        assert_eq!(
+            st.snapshot(),
+            FeatureValue::Scalar((AUX_CAP + 8) as f64)
+        );
+    }
+
+    #[test]
+    fn drained_set_stays_dirty_despite_fresh_pushes() {
+        // Regression: a drained-but-live set used to accept fresh
+        // elements vacuously ("empty is below max"), re-filling itself
+        // with values that are NOT the window's extremes and masking
+        // the dirty flag — the engine then skipped the rebuild and
+        // served a wrong minimum. The drained set must reject
+        // non-covering inserts so `is_dirty` keeps demanding the exact
+        // rebuild.
+        let mut st = IncrementalState::for_spec(&spec_for(CompFunc::Min, vec![0])).unwrap();
+        st.reset(0);
+        let n = (AUX_CAP * 3) as i64;
+        for i in 0..n {
+            st.push(i, i as u64, &AttrValue::Float(i as f64)); // min set = oldest
+        }
+        st.rebase(n + 10);
+        // Expire more than the tracked prefix: the set drains.
+        for i in 0..(AUX_CAP as i64 + 4) {
+            st.retract(i, i as u64, &AttrValue::Float(i as f64));
+        }
+        // Fresh pushes (larger values) arrive in the same extraction.
+        st.push(n + 1, n as u64 + 1, &AttrValue::Float((n + 1) as f64));
+        st.push(n + 2, n as u64 + 2, &AttrValue::Float((n + 2) as f64));
+        assert!(
+            st.is_dirty(),
+            "fresh pushes must not mask a drained extreme set"
+        );
+    }
+
+    #[test]
+    fn equal_key_ties_match_the_one_shot_accumulator() {
+        // Multi-attribute rows push several observations under one
+        // (ts, seq) key. The one-shot accumulators tie-break with
+        // strict inequality (Earliest keeps the FIRST pushed value,
+        // Latest the LAST); the persistent sets must agree.
+        let mut early =
+            IncrementalState::for_spec(&spec_for(CompFunc::Earliest, vec![0])).unwrap();
+        let mut late = IncrementalState::for_spec(&spec_for(CompFunc::Latest, vec![0])).unwrap();
+        for st in [&mut early, &mut late] {
+            st.reset(0);
+            st.push(100, 7, &AttrValue::Float(5.0)); // attr 0
+            st.push(100, 7, &AttrValue::Float(9.0)); // attr 1, same key
+        }
+        // One-shot oracle:
+        let mut e = CompFunc::Earliest.accumulator(1_000);
+        let mut l = CompFunc::Latest.accumulator(1_000);
+        for acc in [&mut e, &mut l] {
+            acc.push(100, 7, &AttrValue::Float(5.0));
+            acc.push(100, 7, &AttrValue::Float(9.0));
+        }
+        assert_eq!(early.snapshot(), e.finish()); // 5.0 — first push wins
+        assert_eq!(late.snapshot(), l.finish()); // 9.0 — last push wins
+    }
+
+    #[test]
+    fn multi_lane_concat_is_unsupported() {
+        assert!(IncrementalState::for_spec(&spec_for(
+            CompFunc::Concat { max_len: 3 },
+            vec![0, 1]
+        ))
+        .is_none());
+        assert!(IncrementalState::for_spec(&spec_for(CompFunc::Sum, vec![0, 1])).is_some());
+        assert!(
+            IncrementalState::for_spec(&spec_for(CompFunc::Concat { max_len: 3 }, vec![0]))
+                .is_some()
+        );
+    }
+
+    #[test]
+    fn decayed_sum_rebase_renormalizes() {
+        let spec = spec_for(CompFunc::DecayedSum { half_life_ms: 1_000 }, vec![0]);
+        let mut st = IncrementalState::for_spec(&spec).unwrap();
+        st.reset(2_000);
+        st.push(1_000, 0, &AttrValue::Float(8.0)); // one half-life old: 4.0
+        assert!(st.snapshot().approx_eq(&FeatureValue::Scalar(4.0), 1e-9));
+        st.rebase(3_000); // one more half-life
+        assert!(st.snapshot().approx_eq(&FeatureValue::Scalar(2.0), 1e-9));
+        st.retract(1_000, 0, &AttrValue::Float(8.0));
+        assert_eq!(st.snapshot(), FeatureValue::Scalar(0.0));
+    }
+}

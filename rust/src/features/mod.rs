@@ -9,11 +9,16 @@
 //! * [`compute`] — the `Compute` operation's functions as streaming
 //!   accumulators (so fused execution never materializes per-feature row
 //!   sets),
+//! * [`incremental`] — persistent per-feature accumulators updated only
+//!   by the inter-trigger delta (push on window entry, retract on window
+//!   exit), the O(Δ) compute path behind
+//!   `EngineConfig::incremental_compute`,
 //! * [`value`] — extracted feature values,
 //! * [`catalog`] — feature-set generators: per-service sets matching
 //!   Fig. 12a and synthetic sets with controlled redundancy (Fig. 21).
 
 pub mod catalog;
 pub mod compute;
+pub mod incremental;
 pub mod spec;
 pub mod value;

@@ -108,6 +108,17 @@ pub struct OpBreakdown {
     pub rows_decoded: u64,
     /// Rows served from the cross-execution cache.
     pub rows_from_cache: u64,
+    /// Row visits replayed through the full (non-delta) Filter+Compute
+    /// path: on the classic path every row a fused-lane walk touches
+    /// (once per lane), on the incremental path every `(member, row)`
+    /// visit of a rebuild or one-shot fallback. O(window) work.
+    pub rows_replayed: u64,
+    /// Row visits on the incremental delta path
+    /// (`EngineConfig::incremental_compute`): boundary-crossing
+    /// retractions plus fresh pushes, per `(member, row)`. Proportional
+    /// to the inter-trigger delta, not the window — the Fig. 6b
+    /// redundancy, eliminated from Filter+Compute.
+    pub rows_delta: u64,
 }
 
 impl OpBreakdown {
@@ -132,6 +143,8 @@ impl OpBreakdown {
         self.rows_retrieved += o.rows_retrieved;
         self.rows_decoded += o.rows_decoded;
         self.rows_from_cache += o.rows_from_cache;
+        self.rows_replayed += o.rows_replayed;
+        self.rows_delta += o.rows_delta;
     }
 
     /// Time attributed to one op kind.
@@ -162,12 +175,16 @@ mod tests {
             rows_retrieved: 5,
             rows_decoded: 5,
             rows_from_cache: 0,
+            rows_replayed: 5,
+            rows_delta: 2,
         };
         assert_eq!(a.total_ns(), 40);
         let b = a;
         a.merge(&b);
         assert_eq!(a.total_ns(), 80);
         assert_eq!(a.rows_retrieved, 10);
+        assert_eq!(a.rows_replayed, 10);
+        assert_eq!(a.rows_delta, 4);
     }
 
     #[test]

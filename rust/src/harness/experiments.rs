@@ -710,6 +710,70 @@ pub fn ext_codec_ablation(scale: Scale) -> Result<Vec<Row>> {
     Ok(rows)
 }
 
+/// Ablation (PR 4 tentpole): persistent incremental compute vs the full
+/// Filter+Compute rewalk, VR service, sweeping the trigger interval.
+/// At a warm cache the classic path still revisits every cached row per
+/// trigger (`rows_replayed` ~ window size); the incremental path's work
+/// (`rows_delta`) is proportional to the inter-trigger delta, so the
+/// gap widens as triggers get denser — the same shape as the Fig. 6b
+/// cross-inference redundancy it eliminates.
+pub fn ext_incremental(scale: Scale) -> Result<Vec<Row>> {
+    use crate::workload::driver::run_simulation;
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let intervals: &[(i64, &str)] = match scale {
+        Scale::Quick => &[(5_000, "5s"), (60_000, "1m")],
+        Scale::Full => &[
+            (1_000, "1s"),
+            (5_000, "5s"),
+            (30_000, "30s"),
+            (5 * 60_000, "5m"),
+        ],
+    };
+    let mut rows = Vec::new();
+    for &(interval, label) in intervals {
+        let mut sim = scale.sim(Period::Night, interval, 101);
+        sim.duration_ms = sim.duration_ms.max(4 * interval);
+        let mut row = Row::new(label);
+        for (name, inc) in [("full", false), ("incremental", true)] {
+            // Roomy cache budget: this arm ablates the *compute* path,
+            // so no lane may fall out of cache and conflate the two.
+            let mut eng = Engine::new(
+                svc.features.clone(),
+                &catalog,
+                EngineConfig {
+                    incremental_compute: inc,
+                    cache_budget_bytes: 4 << 20,
+                    ..EngineConfig::autofeature()
+                },
+            )?;
+            let out = run_simulation(&catalog, &mut eng, None, &sim)?;
+            let reqs = out.records.len().max(1) as f64;
+            let per_req = |f: &dyn Fn(&crate::fegraph::node::OpBreakdown) -> u64| {
+                out.records
+                    .iter()
+                    .map(|r| f(&r.extraction.breakdown) as f64)
+                    .sum::<f64>()
+                    / reqs
+            };
+            row.push(&format!("{name}_ms"), out.mean_extraction_ms());
+            row.push(
+                &format!("{name}_rows_replayed"),
+                per_req(&|b| b.rows_replayed),
+            );
+            if inc {
+                row.push("incremental_rows_delta", per_req(&|b| b.rows_delta));
+            }
+        }
+        rows.push(row);
+    }
+    print_rows(
+        "Ablation — incremental (O(Δ)) compute vs full rewalk (VR)",
+        &rows,
+    );
+    Ok(rows)
+}
+
 /// Deployment study: all five services running against ONE shared
 /// device log (the real multi-team phone), each with its own engine.
 /// Reports per-service latency and the aggregate device-wide cache
@@ -941,6 +1005,24 @@ mod tests {
     }
 
     #[test]
+    fn incremental_ablation_is_delta_bound() {
+        let rows = ext_incremental(Scale::Quick).unwrap();
+        // Shortest trigger interval: maximal cross-inference overlap.
+        let short = &rows[0];
+        let full = short.get("full_rows_replayed").unwrap();
+        let delta = short.get("incremental_rows_delta").unwrap();
+        assert!(delta > 0.0, "{short:?}");
+        // Filter+Compute work proportional to the delta, not the
+        // window. Note the units: `rows_delta` counts per (member, row)
+        // while the classic arm counts per (lane, row), so the delta is
+        // charged `members/lanes`-times MORE per touched row — the
+        // bound below holds despite that handicap. rows_replayed is not
+        // compared across arms (same unit mismatch, dominated by the
+        // one-shot multi-lane-Concat fallback and rare aux repairs).
+        assert!(delta < full / 2.0, "{short:?}");
+    }
+
+    #[test]
     fn multimodel_serves_all_services_under_shared_log() {
         let rows = ext_multimodel(Scale::Quick).unwrap();
         assert_eq!(rows.len(), 6);
@@ -948,8 +1030,15 @@ mod tests {
             assert!(row.get("requests").unwrap() >= 2.0, "{row:?}");
             assert!(row.get("mean_extraction_ms").unwrap() > 0.0);
         }
-        // Device-wide cache stays phone-plausible (< 1 MB).
-        assert!(rows[5].get("peak_cache_kb").unwrap() < 1024.0);
+        // Device-wide cache stays phone-plausible: bounded by the five
+        // engines' summed budgets. The capacity-aware accounting model
+        // charges real allocator reservations, so usage sits close to
+        // the 256 KB per-engine cap and the old "< 1 MB" empirical
+        // bound no longer discriminates; this budget-sum check is a
+        // sanity bound only — the anti-drift teeth live in
+        // prop_cached_lane_bytes_never_drift, which pins the byte
+        // ledger to an independently recomputed exact sum.
+        assert!(rows[5].get("peak_cache_kb").unwrap() <= 5.0 * 256.0);
     }
 
     #[test]

@@ -42,6 +42,9 @@ pub enum Method {
     CacheOnly,
     /// Full AutoFeature.
     AutoFeature,
+    /// AutoFeature plus persistent incremental compute (O(Δ)
+    /// Filter+Compute per trigger; the PR 4 tentpole's ablation arm).
+    Incremental,
     /// AutoFeature with the random cache policy (*w/ Random*, Fig. 19b).
     RandomCache,
     /// Cloud baseline 1 (Table 1).
@@ -66,6 +69,7 @@ impl Method {
             Method::FusionOnly => "w/ Fusion",
             Method::CacheOnly => "w/ Cache",
             Method::AutoFeature => "AutoFeature",
+            Method::Incremental => "AutoFeature+Δ",
             Method::RandomCache => "w/ Random",
             Method::DecodedLog => "Decoded Log",
             Method::FeatureStore => "Feature Store",
@@ -100,6 +104,11 @@ pub fn make_extractor(
             features,
             catalog,
             engine_cfg(EngineConfig::autofeature()),
+        )?),
+        Method::Incremental => Box::new(Engine::new(
+            features,
+            catalog,
+            engine_cfg(EngineConfig::incremental()),
         )?),
         Method::RandomCache => Box::new(Engine::new(
             features,
@@ -233,6 +242,7 @@ mod tests {
             Method::FusionOnly,
             Method::CacheOnly,
             Method::AutoFeature,
+            Method::Incremental,
             Method::RandomCache,
             Method::DecodedLog,
             Method::FeatureStore,

@@ -17,13 +17,13 @@ const USAGE: &str = "\
 autofeature — on-device feature extraction engine (SenSys '26 reproduction)
 
 USAGE:
-  autofeature simulate [--service cp|kp|sr|pr|vr] [--method naive|fusion|cache|autofeature|decodedlog|featurestore]
+  autofeature simulate [--service cp|kp|sr|pr|vr] [--method naive|fusion|cache|autofeature|incremental|decodedlog|featurestore]
                        [--period noon|evening|night] [--minutes N] [--artifacts DIR] [--no-model] [--seed N]
   autofeature coordinator [--service ID] [--minutes N] [--artifacts DIR]
   autofeature fleet [--service ID] [--users N] [--shards N] [--minutes N] [--cache-kb N] [--surrogate] [--seed N]
   autofeature inspect
   autofeature experiment [fig4|fig10|fig11|fig16|fig17|fig18|fig19a|fig19b|fig20|fig21|
-                          ext-staleness|ext-codec|ext-multimodel|ext-fleet|all]
+                          ext-staleness|ext-codec|ext-incremental|ext-multimodel|ext-fleet|all]
                          [--full] [--artifacts DIR]
   autofeature help
 ";
@@ -76,6 +76,7 @@ fn parse_method(s: &str) -> Result<harness::Method> {
         "fusion" => harness::Method::FusionOnly,
         "cache" => harness::Method::CacheOnly,
         "autofeature" => harness::Method::AutoFeature,
+        "incremental" => harness::Method::Incremental,
         "decodedlog" => harness::Method::DecodedLog,
         "featurestore" => harness::Method::FeatureStore,
         other => bail!("unknown method {other}"),
@@ -294,6 +295,9 @@ fn main() -> Result<()> {
             }
             if all || which == "ext-codec" {
                 experiments::ext_codec_ablation(scale)?;
+            }
+            if all || which == "ext-incremental" {
+                experiments::ext_incremental(scale)?;
             }
             if all || which == "ext-multimodel" {
                 experiments::ext_multimodel(scale)?;

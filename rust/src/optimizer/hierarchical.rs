@@ -26,8 +26,12 @@ pub struct RowView<'a> {
     pub attrs: &'a [(AttrId, AttrValue)],
 }
 
+/// Attribute lookup in a sorted `(AttrId, value)` projection — shared
+/// by the direct walker and the engine's incremental delta path (one
+/// definition, so the fused and incremental paths cannot diverge on
+/// attr addressing).
 #[inline]
-fn lookup<'a>(attrs: &'a [(AttrId, AttrValue)], id: AttrId) -> Option<&'a AttrValue> {
+pub(crate) fn lookup<'a>(attrs: &'a [(AttrId, AttrValue)], id: AttrId) -> Option<&'a AttrValue> {
     attrs
         .binary_search_by_key(&id, |(a, _)| *a)
         .ok()

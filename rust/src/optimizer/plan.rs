@@ -77,11 +77,20 @@ impl OptimizedPlan {
     }
 }
 
-/// Per-feature output accumulator used during plan execution.
+/// Per-feature output accumulator used during plan execution — the
+/// **one-shot** compute mode: built at the start of an extraction, fed
+/// every in-window row, consumed by [`FeatureAcc::finish`].
 ///
 /// Streaming for order-insensitive computations; buffered (sort on
 /// finish) for order-sensitive ones (`Concat`) whose feature spans
 /// multiple lanes and therefore receives rows out of global order.
+///
+/// The engine's `incremental_compute` mode replaces this with the
+/// **persistent** counterpart
+/// [`crate::features::incremental::IncrementalState`], which survives
+/// across extractions and is updated only by the inter-trigger delta;
+/// features [`FeatureAcc::supports_persistent`] rejects (multi-lane
+/// `Concat`) stay on the one-shot path even there.
 #[derive(Debug)]
 pub enum FeatureAcc {
     /// Streaming accumulator (the common, allocation-free case).
@@ -98,7 +107,14 @@ pub enum FeatureAcc {
 }
 
 impl FeatureAcc {
-    /// Create the right accumulator for a feature.
+    /// Whether the feature can instead be maintained as persistent
+    /// incremental state across extractions (the engine's
+    /// `incremental_compute` mode).
+    pub fn supports_persistent(spec: &FeatureSpec) -> bool {
+        crate::features::incremental::IncrementalState::for_spec(spec).is_some()
+    }
+
+    /// Create the right one-shot accumulator for a feature.
     pub fn new(spec: &FeatureSpec, now: TimestampMs) -> FeatureAcc {
         let order_sensitive = matches!(spec.comp, CompFunc::Concat { .. });
         if order_sensitive && spec.event_types.len() > 1 {
@@ -173,6 +189,21 @@ mod tests {
     fn single_lane_concat_streams() {
         let s = spec(vec![0], CompFunc::Concat { max_len: 3 });
         assert!(matches!(FeatureAcc::new(&s, 0), FeatureAcc::Stream(_)));
+    }
+
+    #[test]
+    fn persistent_mode_mirrors_the_buffering_condition() {
+        // Exactly the features the one-shot path must buffer are the
+        // ones the persistent path cannot maintain.
+        assert!(!FeatureAcc::supports_persistent(&spec(
+            vec![0, 1],
+            CompFunc::Concat { max_len: 3 }
+        )));
+        assert!(FeatureAcc::supports_persistent(&spec(
+            vec![0],
+            CompFunc::Concat { max_len: 3 }
+        )));
+        assert!(FeatureAcc::supports_persistent(&spec(vec![0, 1, 2], CompFunc::Sum)));
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Differential + edge-case tests for the incremental (O(Δ)) compute
+//! layer: the `incremental_compute` engine must extract bit-equivalent
+//! (1e-9) values to the classic full-rewalk engine and the naive
+//! oracle, across all five services, every compaction threshold,
+//! adversarial trigger spacings (sub-second bursts, same-trigger
+//! repeats, gaps that expire whole windows), empty windows, and
+//! auxiliary-structure exhaustion (the self-healing rebuild fallback).
+
+use autofeature::applog::codec::{AttrCodec, CodecKind, JsonishCodec};
+use autofeature::applog::event::AttrValue;
+use autofeature::applog::query::{count, TimeWindow};
+use autofeature::applog::store::{AppLogStore, StoreConfig};
+use autofeature::baseline::naive::NaiveExtractor;
+use autofeature::engine::config::EngineConfig;
+use autofeature::engine::online::Engine;
+use autofeature::engine::Extractor;
+use autofeature::features::compute::CompFunc;
+use autofeature::features::spec::{FeatureId, FeatureSpec, TimeRange};
+use autofeature::features::value::FeatureValue;
+use autofeature::harness::eval_catalog;
+use autofeature::util::rng::SimRng;
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+use autofeature::workload::traces::{log_events, TraceConfig, TraceGenerator};
+
+const THRESHOLDS: [usize; 4] = [1, 7, 64, usize::MAX];
+
+fn assert_values_match(got: &[FeatureValue], want: &[FeatureValue], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: value count");
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        assert!(x.approx_eq(y, 1e-9), "{ctx} feature {i}: {x:?} vs {y:?}");
+        // No sentinel may ever leak into a feature value.
+        match x {
+            FeatureValue::Scalar(v) => {
+                assert!(v.is_finite(), "{ctx} feature {i}: non-finite {v}")
+            }
+            FeatureValue::Vector(vs) => {
+                assert!(
+                    vs.iter().all(|v| v.is_finite()),
+                    "{ctx} feature {i}: non-finite in {vs:?}"
+                )
+            }
+        }
+    }
+}
+
+/// The incremental engine against the naive oracle *and* the classic
+/// full-rewalk engine (the differential oracle the ISSUE pins), over
+/// every service, every compaction threshold, and a trigger schedule
+/// mixing sub-second spacing, same-instant repeats, and gaps that fully
+/// expire the 5-minute windows.
+#[test]
+fn incremental_matches_oracles_all_services_all_thresholds() {
+    let catalog = eval_catalog();
+    let nows = [
+        60_000i64,       // 1 min: windows larger than history (clamped)
+        8 * 60_000,      // warm
+        8 * 60_000,      // same-trigger repeat (empty delta)
+        8 * 60_000 + 40, // sub-second spacing
+        15 * 60_000,     // expires the whole 5-min windows in one hop
+        15 * 60_000 + 900,
+        29 * 60_000, // another full 5-min drain near the trace end
+    ];
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+            duration_ms: 30 * 60_000,
+            seed: 0xF00D + kind.id().as_bytes()[0] as u64,
+            ..TraceConfig::default()
+        });
+        for segment_rows in THRESHOLDS {
+            let mut store = AppLogStore::new(StoreConfig {
+                segment_rows,
+                ..StoreConfig::default()
+            });
+            log_events(&mut store, &JsonishCodec, &trace).unwrap();
+
+            let mut inc = Engine::new(svc.features.clone(), &catalog, EngineConfig::incremental())
+                .unwrap();
+            let mut classic =
+                Engine::new(svc.features.clone(), &catalog, EngineConfig::autofeature()).unwrap();
+            let mut naive = NaiveExtractor::new(svc.features.clone(), CodecKind::Jsonish);
+            for &now in &nows {
+                let got = inc.extract(&store, now).unwrap().values;
+                let ctx = format!("{kind:?} seg={segment_rows} @ {now}");
+                let oracle = naive.extract(&store, now).unwrap().values;
+                assert_values_match(&got, &oracle, &format!("{ctx} vs naive"));
+                let full = classic.extract(&store, now).unwrap().values;
+                assert_values_match(&got, &full, &format!("{ctx} vs full rewalk"));
+            }
+        }
+    }
+}
+
+/// Hand-built feature set covering every `CompFunc` — including
+/// `Earliest`, which the generated service sets never draw — over two
+/// behavior types, single- and multi-lane.
+fn probe_specs(type_a: u16, type_b: u16) -> Vec<FeatureSpec> {
+    let comps = [
+        CompFunc::Count,
+        CompFunc::Sum,
+        CompFunc::Mean,
+        CompFunc::Min,
+        CompFunc::Max,
+        CompFunc::Latest,
+        CompFunc::Earliest,
+        CompFunc::DistinctCount,
+        CompFunc::Concat { max_len: 3 },
+        CompFunc::DecayedSum {
+            half_life_ms: 90_000,
+        },
+    ];
+    let mut specs = Vec::new();
+    for (i, comp) in comps.iter().enumerate() {
+        specs.push(
+            FeatureSpec {
+                id: FeatureId(i as u32),
+                name: format!("single_{i}"),
+                event_types: vec![type_a],
+                window: TimeRange::mins(5),
+                attrs: vec![0],
+                comp: *comp,
+            }
+            .normalized(),
+        );
+    }
+    for (j, comp) in [
+        CompFunc::Sum,
+        CompFunc::Min,
+        CompFunc::Latest,
+        CompFunc::Earliest,
+        CompFunc::Concat { max_len: 4 }, // multi-lane Concat: one-shot path
+    ]
+    .iter()
+    .enumerate()
+    {
+        specs.push(
+            FeatureSpec {
+                id: FeatureId(100 + j as u32),
+                name: format!("multi_{j}"),
+                event_types: vec![type_a, type_b],
+                window: TimeRange::mins(2),
+                attrs: vec![0, 1],
+                comp: *comp,
+            }
+            .normalized(),
+        );
+    }
+    specs
+}
+
+/// Zero-row windows (trigger before any event) and windows fully
+/// expired between triggers must yield the documented empty values —
+/// exact scalar 0 / empty vector, never a `±INFINITY`/`i64::MAX`
+/// sentinel — on every engine configuration, matching the naive oracle.
+#[test]
+fn empty_and_fully_expired_windows_all_configs() {
+    let catalog = eval_catalog();
+    // Two types whose schemas carry at least attrs {0, 1}.
+    let mut picks = (0..catalog.len() as u16).filter(|&t| catalog.schema(t).attrs.len() >= 2);
+    let (type_a, type_b) = (picks.next().unwrap(), picks.next().unwrap());
+    let specs = probe_specs(type_a, type_b);
+
+    // Events only inside [10 min, 20 min): both edge regimes exist.
+    let mut rng = SimRng::seed_from_u64(0xE577);
+    let mut store = AppLogStore::new(StoreConfig::default());
+    let mut ts = 10 * 60_000i64;
+    let mut seq = 0u64;
+    while ts < 20 * 60_000 {
+        let t = if seq % 2 == 0 { type_a } else { type_b };
+        let attrs = catalog.schema(t).sample_attrs(&mut rng);
+        store.append(t, ts, JsonishCodec.encode(&attrs)).unwrap();
+        ts += rng.range_i(2_000, 8_000);
+        seq += 1;
+    }
+
+    let nows = [
+        60_000i64,    // empty: no events logged yet anywhere
+        5 * 60_000,   // still empty
+        11 * 60_000,  // partially filled
+        20 * 60_000,  // full windows
+        26 * 60_000,  // everything expired between triggers (5-min max)
+        27 * 60_000,  // stays empty, watermarks keep advancing
+    ];
+    let empty_steps = [0usize, 1, 4, 5];
+
+    for cfg in [
+        EngineConfig::autofeature(),
+        EngineConfig::incremental(),
+        EngineConfig {
+            enable_fusion: false,
+            ..EngineConfig::incremental()
+        },
+        EngineConfig::fusion_only(),
+        EngineConfig::naive(),
+    ] {
+        let mut eng = Engine::new(specs.clone(), &catalog, cfg).unwrap();
+        let mut naive = NaiveExtractor::new(specs.clone(), CodecKind::Jsonish);
+        for (step, &now) in nows.iter().enumerate() {
+            let got = eng.extract(&store, now).unwrap().values;
+            let want = naive.extract(&store, now).unwrap().values;
+            let ctx = format!(
+                "cfg(fusion={},cache={},inc={}) step {step}",
+                cfg.enable_fusion, cfg.enable_cache, cfg.incremental_compute
+            );
+            assert_values_match(&got, &want, &ctx);
+            if empty_steps.contains(&step) {
+                for (i, v) in got.iter().enumerate() {
+                    match v {
+                        FeatureValue::Scalar(x) => {
+                            assert_eq!(*x, 0.0, "{ctx} feature {i}: sentinel leak {x}")
+                        }
+                        FeatureValue::Vector(xs) => {
+                            assert!(xs.is_empty(), "{ctx} feature {i}: {xs:?}")
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Bounded-aux exhaustion: with monotonically increasing values the
+/// `Min` set and the `Earliest` set track exactly the rows that expire
+/// first, so a dense trigger train drains them continuously. The engine
+/// must fall back to exact rebuilds (observable as `rows_replayed > 0`
+/// after warm-up — the promoted, release-mode-visible invariant) while
+/// staying exact against the oracle.
+#[test]
+fn delta_path_self_heals_on_aux_exhaustion() {
+    let catalog = eval_catalog();
+    let specs: Vec<FeatureSpec> = [CompFunc::Min, CompFunc::Earliest, CompFunc::Max]
+        .iter()
+        .enumerate()
+        .map(|(i, comp)| {
+            FeatureSpec {
+                id: FeatureId(i as u32),
+                name: format!("aux_{i}"),
+                event_types: vec![0],
+                window: TimeRange::mins(1),
+                attrs: vec![0],
+                comp: *comp,
+            }
+            .normalized()
+        })
+        .collect();
+
+    // One event per 100 ms with value == timestamp: windows hold ~600
+    // rows, far beyond AUX_CAP, and the tracked extremes are exactly
+    // the expiring prefix.
+    let mut store = AppLogStore::new(StoreConfig::default());
+    let mut ts = 0i64;
+    while ts < 5 * 60_000 {
+        store
+            .append(0, ts, JsonishCodec.encode(&[(0, AttrValue::Float(ts as f64))]))
+            .unwrap();
+        ts += 100;
+    }
+
+    let mut eng = Engine::new(specs.clone(), &catalog, EngineConfig::incremental()).unwrap();
+    let mut naive = NaiveExtractor::new(specs, CodecKind::Jsonish);
+    eng.extract(&store, 61_000).unwrap(); // warm (initial rebuild)
+    let mut repair_visits = 0u64;
+    for step in 1..=20i64 {
+        let now = 61_000 + step * 10_000;
+        let r = eng.extract(&store, now).unwrap();
+        let want = naive.extract(&store, now).unwrap();
+        assert_values_match(&r.values, &want.values, &format!("step {step}"));
+        assert!(r.breakdown.rows_delta > 0, "step {step}: delta never ran");
+        repair_visits += r.breakdown.rows_replayed;
+    }
+    assert!(
+        repair_visits > 0,
+        "aux sets never drained — the fallback path went unexercised"
+    );
+}
+
+/// The watermark-vs-log contract that `build_type_rows` only
+/// `debug_assert!`s on the hot path, promoted to a test-observable
+/// invariant that also runs in release builds (where debug asserts are
+/// compiled out): after every extraction, each cached lane holds
+/// exactly the log rows of its retention window below its watermark.
+#[test]
+fn cache_watermark_contract_holds_without_debug_asserts() {
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::SR, &catalog);
+    let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+        duration_ms: 40 * 60_000,
+        seed: 77,
+        ..TraceConfig::default()
+    });
+    for segment_rows in THRESHOLDS {
+        let mut store = AppLogStore::new(StoreConfig {
+            segment_rows,
+            ..StoreConfig::default()
+        });
+        let mut eng =
+            Engine::new(svc.features.clone(), &catalog, EngineConfig::incremental()).unwrap();
+        let mut fed = 0usize;
+        for step in 1..=8i64 {
+            let now = step * 5 * 60_000;
+            let upto = trace.partition_point(|e| e.timestamp_ms < now);
+            log_events(&mut store, &JsonishCodec, &trace[fed..upto]).unwrap();
+            fed = upto;
+            eng.extract(&store, now).unwrap();
+            for (&t, &window_ms) in &eng.compiled().type_windows {
+                if let Some(lane) = eng.cache().lane(t) {
+                    assert_eq!(lane.watermark, now, "seg={segment_rows} step {step} type {t}");
+                    let start = (now - window_ms).max(0);
+                    assert_eq!(
+                        lane.len(),
+                        count(
+                            &store,
+                            t,
+                            TimeWindow {
+                                start_ms: start,
+                                end_ms: now
+                            }
+                        ),
+                        "seg={segment_rows} step {step} type {t}: lane desynced from log"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -124,6 +124,7 @@ fn prop_optimized_extraction_equals_naive() {
                 hierarchical_filter: false,
                 ..EngineConfig::autofeature()
             },
+            EngineConfig::incremental(),
         ] {
             let mut engine = Engine::new(specs.clone(), &catalog, cfg).unwrap();
             let got = engine.extract(&store, now).unwrap().values;
@@ -160,12 +161,17 @@ fn prop_cache_is_transparent_across_schedules() {
             _ => PolicyKind::All,
         };
         let budget = rng.range_u(256, 128 * 1024);
+        // Half the cases run the persistent incremental compute path:
+        // tiny budgets force constant policy evictions, which must be
+        // absorbed by rebuild-on-watermark-mismatch without any drift.
+        let incremental_compute = rng.bool_p(0.5);
         let mut engine = Engine::new(
             specs.clone(),
             &catalog,
             EngineConfig {
                 policy,
                 cache_budget_bytes: budget,
+                incremental_compute,
                 ..EngineConfig::autofeature()
             },
         )
@@ -204,6 +210,41 @@ fn prop_cache_is_transparent_across_schedules() {
                     "case {case} step {step} policy {policy:?} feature {i}: {a:?} vs {b:?}"
                 );
             }
+        }
+    }
+}
+
+/// PROPERTY: the cache's incremental byte ledger equals a from-scratch
+/// recomputation of every row's (capacity-aware) size after arbitrary
+/// push/prune churn — the budget accounting cannot drift.
+#[test]
+fn prop_cached_lane_bytes_never_drift() {
+    use autofeature::cache::entry::{CachedLane, CachedRow};
+    for case in 0..CASES {
+        let mut rng = SimRng::seed_from_u64(7000 + case);
+        let mut lane = CachedLane::new(0, 0);
+        let (mut ts, mut seq) = (0i64, 0u64);
+        for step in 0..120 {
+            for _ in 0..rng.range_u(0, 6) {
+                ts += rng.range_i(1, 5_000);
+                seq += 1;
+                // Strings with random slack capacity: the ledger must
+                // charge what the allocator reserves, not `len`.
+                let mut s = String::with_capacity(rng.range_u(1, 64));
+                for _ in 0..rng.range_u(0, 16) {
+                    s.push('x');
+                }
+                let mut attrs = Vec::with_capacity(rng.range_u(2, 8));
+                attrs.push((0u16, AttrValue::Int(rng.range_i(0, 1_000))));
+                attrs.push((3u16, AttrValue::Str(s)));
+                lane.push(CachedRow { ts, seq, attrs });
+            }
+            if step % 3 == 0 {
+                let evicted = lane.prune_before(ts - rng.range_i(0, 25_000));
+                assert!(evicted.windows(2).all(|w| (w[0].ts, w[0].seq) < (w[1].ts, w[1].seq)));
+            }
+            let exact: usize = lane.rows.iter().map(|r| r.approx_size()).sum();
+            assert_eq!(lane.bytes(), exact, "case {case} step {step}");
         }
     }
 }
