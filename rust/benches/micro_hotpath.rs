@@ -16,7 +16,10 @@ use std::time::Instant;
 use autofeature::applog::codec::{AttrCodec, BinaryCodec, JsonishCodec};
 use autofeature::applog::query::{retrieve, retrieve_project, TimeWindow};
 use autofeature::applog::store::{AppLogStore, StoreConfig};
+use autofeature::cache::entry::{CachedLane, CachedRow};
 use autofeature::engine::config::EngineConfig;
+use autofeature::features::compute::CompFunc;
+use autofeature::features::spec::{FeatureId, FeatureSpec, TimeRange};
 use autofeature::engine::online::Engine;
 use autofeature::engine::Extractor;
 use autofeature::harness::{eval_catalog, Method};
@@ -135,6 +138,82 @@ fn main() {
         "Retrieve+Decode, window touching <50% of segments: segmented fused is {:.2}x flat",
         flat_rd / seg_rd
     );
+
+    // --- columnar scan vs materialized-row walk ---------------------------
+    // One-shot ExecPlan pipelines walk borrowed DecodedRow batches
+    // straight off the segments (Scan source=log); the cache bridge
+    // instead spills the batch into a CachedLane (capacity-aware byte
+    // accounting + VecDeque) before walking. This arm prices that spill
+    // — the cost the columnar fast path avoids whenever a lane is not
+    // cache-resident.
+    {
+        let mini: Vec<FeatureSpec> = (0..4)
+            .map(|i| {
+                FeatureSpec {
+                    id: FeatureId(i),
+                    name: format!("m{i}"),
+                    event_types: vec![0],
+                    window: TimeRange::secs(if i % 2 == 0 { 100 } else { 200 }),
+                    attrs: vec![(i % 2) as u16],
+                    comp: CompFunc::Sum,
+                }
+                .normalized()
+            })
+            .collect();
+        let mini_plan = fuse(&mini, true);
+        let mlane = &mini_plan.lanes[0];
+        let now_b = n_rows * 50;
+        let col = time_per_op("columnar scan→walk (one-shot pipeline)", iters(500), || {
+            let (rows, _) =
+                retrieve_project(&seg_store, 0, w, &JsonishCodec, &mlane.attr_union).unwrap();
+            let mut sinks: Vec<FeatureAcc> =
+                mini.iter().map(|f| FeatureAcc::new(f, now_b)).collect();
+            let mut wlk = LaneWalker::new(mlane, now_b);
+            for r in &rows {
+                wlk.push_row(
+                    mlane,
+                    RowView {
+                        ts: r.ts,
+                        seq: r.seq,
+                        attrs: &r.attrs,
+                    },
+                    &mut sinks,
+                );
+            }
+            black_box(sinks);
+        });
+        let mat = time_per_op("scan→spill CachedLane→walk (cache bridge)", iters(500), || {
+            let (rows, _) =
+                retrieve_project(&seg_store, 0, w, &JsonishCodec, &mlane.attr_union).unwrap();
+            let mut lane_rows = CachedLane::new(0, 0);
+            for r in rows {
+                lane_rows.push(CachedRow {
+                    ts: r.ts,
+                    seq: r.seq,
+                    attrs: r.attrs,
+                });
+            }
+            let mut sinks: Vec<FeatureAcc> =
+                mini.iter().map(|f| FeatureAcc::new(f, now_b)).collect();
+            let mut wlk = LaneWalker::new(mlane, now_b);
+            for r in &lane_rows.rows {
+                wlk.push_row(
+                    mlane,
+                    RowView {
+                        ts: r.ts,
+                        seq: r.seq,
+                        attrs: &r.attrs,
+                    },
+                    &mut sinks,
+                );
+            }
+            black_box((sinks, lane_rows));
+        });
+        println!(
+            "columnar fast path avoids the CachedRow spill: materialized is {:.2}x columnar",
+            mat / col
+        );
+    }
 
     // --- hierarchical vs direct filter walk -------------------------------
     let svc = ServiceSpec::build(ServiceKind::VR, &catalog);

@@ -6,24 +6,37 @@ use anyhow::Result;
 
 use crate::applog::codec::{AttrCodec, CodecKind};
 use crate::applog::store::AppLogStore;
+use crate::engine::exec::pipeline::run_standalone;
 use crate::engine::online::ExtractionResult;
 use crate::engine::Extractor;
 use crate::features::spec::FeatureSpec;
-use crate::fegraph::exec::execute_graph;
 use crate::fegraph::graph::FeGraph;
+use crate::optimizer::lower::{lower, ExecPlan, LowerConfig};
+use crate::optimizer::plan::OptimizedPlan;
 
 /// Industry-standard on-device feature extraction: each user feature is
 /// extracted independently without optimization (paper §4.1 baselines).
+/// Executes through the same lowered-pipeline executor as the engine
+/// (the baseline's chain-per-feature shape is lowered once, here).
 pub struct NaiveExtractor {
     graph: FeGraph,
+    opt: OptimizedPlan,
+    exec: ExecPlan,
     codec: Box<dyn AttrCodec>,
 }
 
 impl NaiveExtractor {
-    /// Build the unoptimized FE-graph for a feature set.
+    /// Build the unoptimized FE-graph for a feature set and lower it to
+    /// its one-shot ExecPlan (one single-member pipeline per sub-chain,
+    /// full decode — the unoptimized cost shape).
     pub fn new(features: Vec<FeatureSpec>, codec: CodecKind) -> Self {
+        let graph = FeGraph::from_specs(features);
+        let opt = crate::optimizer::fusion::fuse(&graph.features, false);
+        let exec = lower(&opt, &LowerConfig::baseline());
         NaiveExtractor {
-            graph: FeGraph::from_specs(features),
+            graph,
+            opt,
+            exec,
             codec: codec.build(),
         }
     }
@@ -37,7 +50,8 @@ impl NaiveExtractor {
 impl Extractor for NaiveExtractor {
     fn extract(&mut self, store: &AppLogStore, now: i64) -> Result<ExtractionResult> {
         let wall = Instant::now();
-        let (values, breakdown) = execute_graph(&self.graph, store, self.codec.as_ref(), now)?;
+        let out = run_standalone(&self.opt, &self.exec, self.codec.as_ref(), store, now)?;
+        let (values, breakdown) = (out.values, out.counters.breakdown());
         Ok(ExtractionResult {
             values,
             breakdown,

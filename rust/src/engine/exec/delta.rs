@@ -1,0 +1,458 @@
+//! The `WindowSlice → Aggregate` stages of
+//! [`Strategy::IncrementalDelta`] pipelines: persistent per-feature
+//! state banks fed only the inter-trigger boundary delta.
+//!
+//! Per member (feature × lane) with window `w`, between the previous
+//! sync `prev` and the trigger `now`:
+//! * **retract** the rows whose age crossed the member's lower
+//!   boundary — timestamps in `[prev − w, now − w)`, found in the
+//!   expired prefix plus the retained cached prefix (already isolated
+//!   by `prune_before` and the lane ordering);
+//! * **push** the fresh rows at/above the boundary (`ts ≥ now − w`).
+//!
+//! The delta path is valid for a feature only if every backing lane
+//! survived in the cache since the previous extraction (watermark ==
+//! previous trigger). Otherwise — cold start, policy eviction, budget
+//! shrink — the state is rebuilt from the full window
+//! ([`FeedMode::Rebuild`]); this is also the exact-recompute fallback
+//! when a bounded auxiliary structure reports
+//! [`IncrementalState::is_dirty`] after the delta. Either way the state
+//! ends the extraction synchronized to `now`, bit-equivalent to a fresh
+//! rebuild (modulo float associativity, covered by the 1e-9
+//! differential bar).
+//!
+//! Which features run persistently is **not decided here**: lowering
+//! annotated every feature with an [`AggMode`] (from the one shared
+//! eligibility predicate), and [`IncBank::for_plan`] instantiates
+//! exactly those states.
+//!
+//! [`Strategy::IncrementalDelta`]: crate::optimizer::lower::Strategy::IncrementalDelta
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::applog::event::{EventTypeId, TimestampMs};
+use crate::features::incremental::IncrementalState;
+use crate::features::spec::FeatureSpec;
+use crate::features::value::FeatureValue;
+use crate::optimizer::hierarchical::lookup;
+use crate::optimizer::lower::{AggMode, ExecPlan, Stage};
+use crate::optimizer::plan::FeatureAcc;
+
+use super::super::offline::CompiledEngine;
+use super::materialize::{window_rows, TypeRows};
+use super::pipeline::ExecCounters;
+
+/// How one feature's `Aggregate` runs this extraction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum FeedMode {
+    /// Persistent state valid: apply only the inter-trigger delta.
+    Delta,
+    /// Persistent state missing/invalidated (cold start, lane evicted
+    /// by policy or budget shrink): rebuild it from the full window.
+    Rebuild,
+    /// [`AggMode::OneShot`] annotation (multi-lane `Concat`): classic
+    /// one-shot accumulator.
+    Oneshot,
+}
+
+/// Persistent per-feature incremental compute state (kept beside the
+/// cache; dies with it on [`crate::engine::Extractor::reset`]).
+pub(crate) struct IncBank {
+    /// Trigger time the states are synchronized to (`None` until the
+    /// first delta extraction completes).
+    pub synced_at: Option<TimestampMs>,
+    /// One slot per plan feature; `None` = one-shot only.
+    pub states: Vec<Option<IncrementalState>>,
+}
+
+impl IncBank {
+    /// Instantiate the bank from the lowered plan's per-feature
+    /// [`AggMode`] annotations — lowering is the single point that
+    /// decided persistence eligibility.
+    pub(crate) fn for_plan(exec: &ExecPlan, features: &[FeatureSpec]) -> IncBank {
+        IncBank {
+            synced_at: None,
+            states: exec
+                .agg_modes
+                .iter()
+                .zip(features)
+                .map(|(mode, spec)| match mode {
+                    AggMode::Persistent => IncrementalState::for_spec(spec),
+                    AggMode::OneShot => None,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Run the delta stages over the materialized row sets.
+///
+/// Returns one `Some(value)` per persistently computed feature; `None`
+/// marks features left to their one-shot sink.
+///
+/// Cost note: the rebuild/one-shot fallbacks feed per (member, row)
+/// with a per-attr binary search, without the fused walker's shared
+/// merge-join — `O(members × window)` where the classic walk pays
+/// `O(window)` per lane. That is deliberate: rebuilds only run on cold
+/// start, lane eviction, or aux-set exhaustion, and sharing the
+/// steady-state delta machinery keeps the two paths bit-equivalent. A
+/// session that expects frequent evictions should simply run the
+/// cached-rewalk strategy.
+pub(crate) fn feed(
+    compiled: &CompiledEngine,
+    avail: &HashMap<EventTypeId, TypeRows>,
+    now: TimestampMs,
+    inc: &mut Option<IncBank>,
+    sinks: &mut [FeatureAcc],
+    c: &mut ExecCounters,
+) -> Vec<Option<FeatureValue>> {
+    let plan = &compiled.plan;
+    let t0 = Instant::now();
+    let bank = inc.get_or_insert_with(|| IncBank::for_plan(&compiled.exec, &plan.features));
+    let prev = bank.synced_at;
+    // Per-operator tallies, flushed into the counter table at the end
+    // (keeps the per-row hot loops on plain integer adds).
+    let mut slice_ns = 0u64;
+    let mut rows_delta = 0u64;
+    let mut rows_replayed = 0u64;
+
+    let modes: Vec<FeedMode> = plan
+        .features
+        .iter()
+        .zip(&bank.states)
+        .map(|(spec, st)| {
+            if st.is_none() {
+                FeedMode::Oneshot
+            } else if prev.is_some()
+                && spec
+                    .event_types
+                    .iter()
+                    .all(|t| avail.get(t).is_some_and(|r| r.resumed == prev))
+            {
+                FeedMode::Delta
+            } else {
+                FeedMode::Rebuild
+            }
+        })
+        .collect();
+    for (mode, st) in modes.iter().zip(bank.states.iter_mut()) {
+        if let Some(st) = st {
+            match mode {
+                FeedMode::Delta => st.rebase(now),
+                FeedMode::Rebuild => st.reset(now),
+                FeedMode::Oneshot => {}
+            }
+        }
+    }
+
+    // Delta iff every lane survived, so `prev` is set for Delta.
+    let prev_now = prev.unwrap_or(now);
+    for lane in &plan.lanes {
+        let rows = &avail[&lane.event_type];
+        for group in &lane.groups {
+            let w = group.window.duration_ms;
+            let new_lo = now - w;
+            let old_lo = prev_now - w;
+            // WindowSlice: boundary slices depend only on the group's
+            // window — one set of binary searches shared by every
+            // member (the same per-group sharing the hierarchical
+            // walker exploits). Crossing rows (`[old_lo, new_lo)`) live
+            // in the expired slice plus the retained cached prefix; the
+            // member's current window is the cached suffix plus the
+            // fresh suffix.
+            let ts = Instant::now();
+            let es = rows.expired.partition_point(|r| r.ts < old_lo);
+            let ee = rows.expired.partition_point(|r| r.ts < new_lo);
+            let cs = rows.cached.rows.partition_point(|r| r.ts < old_lo);
+            let ce = rows.cached.rows.partition_point(|r| r.ts < new_lo);
+            let fs = rows.fresh.partition_point(|r| r.ts < new_lo);
+            slice_ns += ts.elapsed().as_nanos() as u64;
+            for m in &group.members {
+                match modes[m.feature_idx] {
+                    FeedMode::Delta => {
+                        let st = bank.states[m.feature_idx].as_mut().unwrap();
+                        for r in rows.expired[es..ee]
+                            .iter()
+                            .chain(rows.cached.rows.range(cs..ce))
+                        {
+                            rows_delta += 1;
+                            for &a in &m.attrs {
+                                if let Some(v) = lookup(&r.attrs, a) {
+                                    st.retract(r.ts, r.seq, v);
+                                }
+                            }
+                        }
+                        for r in &rows.fresh[fs..] {
+                            rows_delta += 1;
+                            for &a in &m.attrs {
+                                if let Some(v) = lookup(&r.attrs, a) {
+                                    st.push(r.ts, r.seq, v);
+                                }
+                            }
+                        }
+                    }
+                    FeedMode::Rebuild => {
+                        let st = bank.states[m.feature_idx].as_mut().unwrap();
+                        for r in rows
+                            .cached
+                            .rows
+                            .range(ce..)
+                            .chain(rows.fresh[fs..].iter())
+                        {
+                            rows_replayed += 1;
+                            for &a in &m.attrs {
+                                if let Some(v) = lookup(&r.attrs, a) {
+                                    st.push(r.ts, r.seq, v);
+                                }
+                            }
+                        }
+                    }
+                    FeedMode::Oneshot => {
+                        let sink = &mut sinks[m.feature_idx];
+                        for r in rows
+                            .cached
+                            .rows
+                            .range(ce..)
+                            .chain(rows.fresh[fs..].iter())
+                        {
+                            rows_replayed += 1;
+                            for &a in &m.attrs {
+                                if let Some(v) = lookup(&r.attrs, a) {
+                                    sink.push(r.ts, r.seq, v);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Exact-recompute fallback: any state whose bounded structure was
+    // exhausted by the delta rebuilds from the cached window.
+    // Self-healing and test-observable (rows_replayed > 0) — the
+    // release-mode replacement for a debug assert.
+    for i in 0..plan.features.len() {
+        let needs_repair = matches!(modes[i], FeedMode::Delta)
+            && bank.states[i].as_ref().is_some_and(|st| st.is_dirty());
+        if !needs_repair {
+            continue;
+        }
+        let st = bank.states[i].as_mut().unwrap();
+        st.reset(now);
+        for lane in &plan.lanes {
+            let rows = &avail[&lane.event_type];
+            for group in &lane.groups {
+                let new_lo = now - group.window.duration_ms;
+                for m in &group.members {
+                    if m.feature_idx != i {
+                        continue;
+                    }
+                    for r in window_rows(rows, new_lo) {
+                        rows_replayed += 1;
+                        for &a in &m.attrs {
+                            if let Some(v) = lookup(&r.attrs, a) {
+                                st.push(r.ts, r.seq, v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    bank.synced_at = Some(now);
+
+    // Flush operator counters. The delta is WindowSlice's output and
+    // Aggregate's input; full-path row visits (rebuild/one-shot/repair)
+    // are Filter rows-in, exactly like a classic lane walk.
+    let total_ns = t0.elapsed().as_nanos() as u64;
+    let ws = c.stage_mut(Stage::WindowSlice);
+    ws.ns += slice_ns;
+    ws.rows_out += rows_delta;
+    let f = c.stage_mut(Stage::Filter);
+    f.rows_in += rows_replayed;
+    let a = c.stage_mut(Stage::Aggregate);
+    a.ns += total_ns.saturating_sub(slice_ns);
+    a.rows_in += rows_delta + rows_replayed;
+
+    // Emit (persistent half): snapshot the state banks.
+    let t1 = Instant::now();
+    let values: Vec<Option<FeatureValue>> = bank
+        .states
+        .iter()
+        .map(|st| st.as_ref().map(|s| s.snapshot()))
+        .collect();
+    let e = c.stage_mut(Stage::Emit);
+    e.ns += t1.elapsed().as_nanos() as u64;
+    values
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::applog::codec::{CodecKind, JsonishCodec};
+    use crate::applog::schema::{Catalog, CatalogConfig};
+    use crate::applog::store::{AppLogStore, StoreConfig};
+    use crate::baseline::naive::NaiveExtractor;
+    use crate::engine::config::EngineConfig;
+    use crate::engine::exec::testutil::setup;
+    use crate::engine::online::Engine;
+    use crate::engine::Extractor;
+    use crate::features::catalog::{generate_feature_set, FeatureSetConfig};
+    use crate::features::spec::{FeatureSpec, TimeRange};
+
+    #[test]
+    fn incremental_steady_state_is_delta_bound() {
+        // Single-type feature sets are fully supported by the persistent
+        // path: once warm, every extraction must do O(Δ) compute work —
+        // zero full-path row visits outside the (rare, self-healing)
+        // aux-set repairs — while staying exact vs the naive oracle.
+        let (cat, _, store) = setup();
+        let specs = generate_feature_set(
+            &cat,
+            &FeatureSetConfig {
+                num_features: 24,
+                num_types: 6,
+                identical_share: 0.6,
+                windows: vec![TimeRange::mins(5), TimeRange::mins(30)],
+                multi_type_prob: 0.0, // single-lane features only
+                seed: 99,
+            },
+        );
+        // Roomy budget: every lane stays cached, so the only row visits
+        // after warm-up are deltas and (rare) aux repairs.
+        let roomy = EngineConfig {
+            cache_budget_bytes: 4 << 20,
+            ..EngineConfig::incremental()
+        };
+        let mut inc = Engine::new(specs.clone(), &cat, roomy).unwrap();
+        let mut full = Engine::new(
+            specs.clone(),
+            &cat,
+            EngineConfig {
+                incremental_compute: false,
+                ..roomy
+            },
+        )
+        .unwrap();
+        let mut naive = NaiveExtractor::new(specs, CodecKind::Jsonish);
+        // Warm both engines.
+        inc.extract(&store, 30 * 60_000).unwrap();
+        full.extract(&store, 30 * 60_000).unwrap();
+        let (mut delta, mut replayed, mut full_replayed) = (0u64, 0u64, 0u64);
+        for step in 1..=10i64 {
+            // 10 s triggers against 5/30-min windows: the crossing +
+            // fresh delta is a few percent of the window even after
+            // accounting for the per-(member, row) counting unit of
+            // `rows_delta` vs the classic per-(lane, row) unit.
+            let now = 30 * 60_000 + step * 10_000;
+            let ri = inc.extract(&store, now).unwrap();
+            let rf = full.extract(&store, now).unwrap();
+            let want = naive.extract(&store, now).unwrap();
+            for (x, y) in ri.values.iter().zip(&want.values) {
+                assert!(x.approx_eq(y, 1e-9), "step {step}: {x:?} vs {y:?}");
+            }
+            delta += ri.breakdown.rows_delta;
+            replayed += ri.breakdown.rows_replayed;
+            full_replayed += rf.breakdown.rows_replayed;
+        }
+        assert!(delta > 0, "delta path never exercised");
+        assert!(
+            delta + replayed < full_replayed / 2,
+            "delta {delta} + replayed {replayed} vs full rewalk {full_replayed}"
+        );
+    }
+
+    #[test]
+    fn idle_type_does_not_defeat_delta_mode() {
+        // Regression: empty lanes used to be dropped by the cache
+        // update, so a feature spanning a busy type and an idle one
+        // (zero in-window rows) lost watermark continuity every trigger
+        // and rebuilt its busy lane from the full window — O(window)
+        // forever, silently defeating incremental_compute.
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        let spec = FeatureSpec {
+            id: crate::features::spec::FeatureId(0),
+            name: "busy_plus_idle".into(),
+            event_types: vec![0, 1], // type 1 never logs an event
+            window: TimeRange::mins(5),
+            attrs: vec![0],
+            comp: crate::features::compute::CompFunc::Sum,
+        }
+        .normalized();
+        let codec = JsonishCodec;
+        let mut store = AppLogStore::new(StoreConfig::default());
+        for i in 0..1200i64 {
+            use crate::applog::codec::AttrCodec;
+            store
+                .append(
+                    0,
+                    i * 1_000,
+                    codec.encode(&[(0, crate::applog::event::AttrValue::Int(i))]),
+                )
+                .unwrap();
+        }
+        let mut eng = Engine::new(vec![spec.clone()], &cat, EngineConfig::incremental()).unwrap();
+        let mut naive = NaiveExtractor::new(vec![spec], CodecKind::Jsonish);
+        eng.extract(&store, 10 * 60_000).unwrap(); // warm (rebuild)
+        for step in 1..=5i64 {
+            let now = 10 * 60_000 + step * 10_000;
+            let r = eng.extract(&store, now).unwrap();
+            assert_eq!(
+                r.breakdown.rows_replayed, 0,
+                "step {step}: idle type forced a rebuild"
+            );
+            assert!(r.breakdown.rows_delta > 0, "step {step}");
+            let want = naive.extract(&store, now).unwrap();
+            for (x, y) in r.values.iter().zip(&want.values) {
+                assert!(x.approx_eq(y, 1e-9), "step {step}: {x:?} vs {y:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_rebuilds_after_budget_eviction() {
+        // "State dies with its lane": a budget shrink evicts cached
+        // lanes; the next extraction must detect the watermark mismatch,
+        // rebuild (observable as rows_replayed > 0) and stay exact.
+        let (cat, specs, store) = setup();
+        let roomy = EngineConfig {
+            cache_budget_bytes: 4 << 20,
+            ..EngineConfig::incremental()
+        };
+        let mut eng = Engine::new(specs.clone(), &cat, roomy).unwrap();
+        let mut naive = NaiveExtractor::new(specs, CodecKind::Jsonish);
+        eng.extract(&store, 30 * 60_000).unwrap();
+        eng.extract(&store, 31 * 60_000).unwrap();
+        assert!(eng.cache_bytes() > 0);
+        eng.set_cache_budget(0, 60_000);
+        assert_eq!(eng.cache_bytes(), 0);
+        let now = 32 * 60_000;
+        let r = eng.extract(&store, now).unwrap();
+        assert!(r.breakdown.rows_replayed > 0, "eviction must force a rebuild");
+        let want = naive.extract(&store, now).unwrap();
+        for (x, y) in r.values.iter().zip(&want.values) {
+            assert!(x.approx_eq(y, 1e-9), "{x:?} vs {y:?}");
+        }
+        // Restore the budget: the path re-warms back to delta-only.
+        eng.set_cache_budget(4 << 20, 60_000);
+        eng.extract(&store, 33 * 60_000).unwrap();
+        let r = eng.extract(&store, 34 * 60_000).unwrap();
+        assert!(r.breakdown.rows_delta > 0);
+    }
+
+    #[test]
+    fn incremental_reset_clears_persistent_state() {
+        let (cat, specs, store) = setup();
+        let mut eng = Engine::new(specs, &cat, EngineConfig::incremental()).unwrap();
+        eng.extract(&store, 30 * 60_000).unwrap();
+        assert!(eng.has_incremental_state());
+        eng.reset();
+        assert!(!eng.has_incremental_state());
+        // Post-reset extraction rebuilds cold and stays correct.
+        let r = eng.extract(&store, 31 * 60_000).unwrap();
+        assert_eq!(r.breakdown.rows_from_cache, 0);
+        assert!(r.breakdown.rows_replayed > 0);
+    }
+}

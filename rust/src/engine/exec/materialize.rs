@@ -1,0 +1,347 @@
+//! The row/cache bridge of [`ScanSource::CacheBridge`] scans: fetch the
+//! cache-resident lane (❶), scan+project only the missing interval from
+//! the columnar log (❷), and — after the pipelines ran — re-select and
+//! re-insert lanes under the memory budget (❹).
+//!
+//! This is the *only* place rows are materialized as [`CachedRow`]s;
+//! one-shot pipelines ([`ScanSource::Columnar`]) never touch this module
+//! and walk borrowed segment batches instead.
+//!
+//! [`ScanSource::CacheBridge`]: crate::optimizer::lower::ScanSource::CacheBridge
+//! [`ScanSource::Columnar`]: crate::optimizer::lower::ScanSource::Columnar
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::applog::codec::AttrCodec;
+use crate::applog::event::{EventTypeId, TimestampMs};
+use crate::applog::query::{self, TimeWindow};
+use crate::applog::store::AppLogStore;
+use crate::cache::entry::{CachedLane, CachedRow};
+use crate::cache::policy::{select, PolicyKind};
+use crate::cache::store::CacheStore;
+use crate::cache::valuation::{evaluate, Candidate};
+use crate::optimizer::lower::{Stage, Strategy};
+
+use super::super::offline::CompiledEngine;
+use super::pipeline::ExecCounters;
+
+/// Rows available for one behavior type during one extraction.
+pub(crate) struct TypeRows {
+    /// Cache-resident rows, already pruned to the retention window.
+    pub cached: CachedLane,
+    /// Freshly retrieved+decoded rows of the missing interval.
+    pub fresh: Vec<CachedRow>,
+    /// Rows that left the retention window since the previous
+    /// extraction (evicted by the prune) — the delta layer retracts
+    /// these.
+    pub expired: Vec<CachedRow>,
+    /// The lane's watermark when it was fetched from the cache (`None`
+    /// when the type started cold). Equal to the previous extraction's
+    /// trigger time iff the lane survived continuously — the validity
+    /// condition for the delta path.
+    pub resumed: Option<TimestampMs>,
+}
+
+/// All current-window rows of a member whose lower boundary is `lo`:
+/// the cached suffix followed by the fresh suffix (both chronological).
+pub(crate) fn window_rows(
+    rows: &TypeRows,
+    lo: TimestampMs,
+) -> impl Iterator<Item = &CachedRow> + '_ {
+    let cs = rows.cached.rows.partition_point(|r| r.ts < lo);
+    let fs = rows.fresh.partition_point(|r| r.ts < lo);
+    rows.cached.rows.range(cs..).chain(rows.fresh[fs..].iter())
+}
+
+/// Build the available-row set for a behavior type: cache fetch (❶)
+/// plus scan+project of the missing interval (❷). Cache-fetch work
+/// lands in the executor's cache counter; log work in the `Scan` /
+/// `Project` operator counters.
+pub(crate) fn build_type_rows(
+    cache: &mut CacheStore,
+    compiled: &CompiledEngine,
+    codec: &dyn AttrCodec,
+    store: &AppLogStore,
+    t: EventTypeId,
+    now: TimestampMs,
+    c: &mut ExecCounters,
+) -> Result<TypeRows> {
+    let window_ms = compiled.type_windows[&t];
+    // Clamped to the log epoch: at session start a retention window
+    // can exceed the whole log history, and a negative start would
+    // leak into the lane watermark (and from there into the
+    // missing-interval computation of every later extraction).
+    let window_start = (now - window_ms).max(0);
+
+    // ❶ Cache fetch: take ownership of the lane (re-inserted by the
+    // update step) and drop rows that fell out of the window.
+    //
+    // Contract (mobile logging is causal): rows are appended with
+    // timestamps >= the previous extraction's trigger time, so
+    // everything below the watermark is already cached. The debug
+    // check below verifies it against the store's index.
+    let t0 = Instant::now();
+    let (mut cached, resumed, expired) = match cache.evict(t) {
+        Some(mut lane) => {
+            let resumed = Some(lane.watermark);
+            let expired = lane.prune_before(window_start);
+            (lane, resumed, expired)
+        }
+        None => (CachedLane::new(t, window_start), None, Vec::new()),
+    };
+    // Never re-retrieve what the cache already covers.
+    let missing_from = cached.watermark.max(window_start);
+    debug_assert_eq!(
+        cached.len(),
+        query::count(
+            store,
+            t,
+            TimeWindow {
+                start_ms: window_start,
+                end_ms: missing_from
+            }
+        ),
+        "late-arriving rows below the cache watermark (type {t}): \
+         the log/extraction time contract was violated"
+    );
+    c.cache.ns += t0.elapsed().as_nanos() as u64;
+    c.cache.rows_out += cached.len() as u64;
+
+    // ❷ Scan + Project only the missing interval, fused and pushed down
+    // to segment granularity: zone maps prune whole segments, survivors
+    // decode straight into the attr-union projection from the payload
+    // arena (§Perf: the fused path never materializes owned event rows
+    // or unneeded attribute values), producing the rows both the filter
+    // and the cache share.
+    let union = &compiled.attr_unions[&t];
+    let (rows, stats) = query::retrieve_project(
+        store,
+        t,
+        TimeWindow {
+            start_ms: missing_from,
+            end_ms: now,
+        },
+        codec,
+        union,
+    )?;
+    let scan = c.stage_mut(Stage::Scan);
+    scan.ns += stats.retrieve_ns;
+    scan.rows_out += stats.rows;
+    let project = c.stage_mut(Stage::Project);
+    project.ns += stats.decode_ns;
+    project.rows_in += stats.rows;
+    project.rows_out += stats.rows;
+    // The spill into cache-row form is a move (`DecodedRow` and
+    // `CachedRow` share their field layout) — the lane is cache-resident
+    // by construction on this path, so materialization is warranted.
+    let fresh: Vec<CachedRow> = rows
+        .into_iter()
+        .map(|r| CachedRow {
+            ts: r.ts,
+            seq: r.seq,
+            attrs: r.attrs,
+        })
+        .collect();
+    cached.watermark = now;
+
+    Ok(TypeRows {
+        cached,
+        fresh,
+        expired,
+        resumed,
+    })
+}
+
+/// ❹ Cache update: valuate candidates, select under budget, rebuild.
+pub(crate) fn update_cache(
+    cache: &mut CacheStore,
+    compiled: &CompiledEngine,
+    policy: PolicyKind,
+    interval_ms: i64,
+    avail: HashMap<EventTypeId, TypeRows>,
+    now: TimestampMs,
+    c: &mut ExecCounters,
+) {
+    let t0 = Instant::now();
+    let mut entries: Vec<(EventTypeId, CachedLane)> = Vec::with_capacity(avail.len());
+    let mut candidates: Vec<Candidate> = Vec::with_capacity(avail.len());
+    for (t, rows) in avail {
+        let mut lane = rows.cached;
+        for r in rows.fresh {
+            lane.push(r);
+        }
+        lane.watermark = now;
+        let window_ms = compiled.type_windows[&t];
+        candidates.push(evaluate(
+            t,
+            lane.len(),
+            lane.bytes(),
+            window_ms,
+            interval_ms,
+            compiled.profile.stat(t),
+        ));
+        entries.push((t, lane));
+    }
+    let selection = select(policy, &candidates, cache.budget());
+    cache.clear();
+    // Under the delta strategy empty lanes are cached unconditionally —
+    // the policy rightly scores them at zero utility, but they also
+    // cost zero bytes, and dropping them would break watermark
+    // continuity for every feature touching an idle type, forcing a
+    // full O(window) rebuild of the feature's *other* lanes on each
+    // trigger.
+    let keep_empty = compiled.exec.strategy == Strategy::IncrementalDelta;
+    for (keep, (_, lane)) in selection.into_iter().zip(entries) {
+        if (keep && !lane.is_empty()) || (keep_empty && lane.is_empty()) {
+            // Selection cost == lane bytes (zero for the empty
+            // lanes), so insertion cannot fail.
+            let _ = cache.insert(lane);
+        }
+    }
+    c.cache.ns += t0.elapsed().as_nanos() as u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::applog::codec::JsonishCodec;
+    use crate::applog::store::{AppLogStore, StoreConfig};
+    use crate::baseline::naive::NaiveExtractor;
+    use crate::engine::config::EngineConfig;
+    use crate::engine::exec::testutil::setup;
+    use crate::engine::online::{Engine, ExtractionResult};
+    use crate::engine::Extractor;
+    use crate::workload::traces::{log_events, TraceConfig, TraceGenerator};
+
+    fn rows_cached_exceed(second: &ExtractionResult, first: &ExtractionResult) -> bool {
+        second.breakdown.rows_from_cache > 0
+            && second.breakdown.rows_decoded < first.breakdown.rows_decoded
+    }
+
+    #[test]
+    fn cache_reduces_decoded_rows_on_second_extraction() {
+        let (cat, specs, store) = setup();
+        let mut eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
+        let r1 = eng.extract(&store, 30 * 60_000).unwrap();
+        let r2 = eng.extract(&store, 31 * 60_000).unwrap();
+        assert!(rows_cached_exceed(&r2, &r1), "r1={r1:?} r2={r2:?}");
+    }
+
+    #[test]
+    fn cache_stays_under_budget() {
+        let (cat, specs, store) = setup();
+        let cfg = EngineConfig {
+            cache_budget_bytes: 8 * 1024, // tight
+            ..EngineConfig::autofeature()
+        };
+        let mut eng = Engine::new(specs, &cat, cfg).unwrap();
+        for i in 1..=10 {
+            let r = eng.extract(&store, i * 3 * 60_000).unwrap();
+            assert!(r.cache_bytes <= 8 * 1024, "step {i}: {}", r.cache_bytes);
+        }
+    }
+
+    #[test]
+    fn reset_clears_warm_state() {
+        let (cat, specs, store) = setup();
+        let mut eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
+        eng.extract(&store, 30 * 60_000).unwrap();
+        assert!(eng.cache_bytes() > 0);
+        eng.reset();
+        assert_eq!(eng.cache_bytes(), 0);
+        let r = eng.extract(&store, 31 * 60_000).unwrap();
+        assert_eq!(r.breakdown.rows_from_cache, 0);
+    }
+
+    #[test]
+    fn shrinking_budget_evicts() {
+        let (cat, specs, store) = setup();
+        let mut eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
+        eng.extract(&store, 30 * 60_000).unwrap();
+        let before = eng.cache_bytes();
+        assert!(before > 0);
+        eng.set_cache_budget(before / 2, 60_000);
+        assert!(eng.cache_bytes() <= before / 2);
+    }
+
+    #[test]
+    fn early_trigger_with_window_exceeding_history() {
+        // Regression: a trigger before `now >= window` used to push a
+        // negative window start into the lane watermark
+        // (`CachedLane::new(t, now - window_ms)`), corrupting the
+        // missing-interval bookkeeping of every later extraction.
+        let (cat, specs, _) = setup();
+        let gen = TraceGenerator::new(&cat);
+        let events = gen.generate(&TraceConfig {
+            duration_ms: 4 * 60_000, // far shorter than the 1 h windows
+            seed: 13,
+            ..TraceConfig::default()
+        });
+        let mut store = AppLogStore::new(StoreConfig::default());
+        log_events(&mut store, &JsonishCodec, &events).unwrap();
+
+        let mut eng = Engine::new(specs.clone(), &cat, EngineConfig::autofeature()).unwrap();
+        let mut naive = NaiveExtractor::new(specs, crate::applog::codec::CodecKind::Jsonish);
+        // now (2 min) << the feature windows (up to 1 h): start clamps.
+        for now in [2 * 60_000i64, 3 * 60_000, 5 * 60_000] {
+            let got = eng.extract(&store, now).unwrap();
+            let want = naive.extract(&store, now).unwrap();
+            for (x, y) in got.values.iter().zip(&want.values) {
+                assert!(x.approx_eq(y, 1e-9), "{x:?} vs {y:?} @ {now}");
+            }
+        }
+        // Second extraction must hit the cache (sane watermarks).
+        let r = eng.extract(&store, 6 * 60_000).unwrap();
+        assert!(r.breakdown.rows_from_cache > 0);
+    }
+
+    #[test]
+    fn watermarks_respect_segment_boundaries() {
+        // The consecutive-inference cache tracks a per-type timestamp
+        // watermark. Compaction re-layouts rows into columnar segments
+        // *between* extractions; the missing-interval bookkeeping (and
+        // its debug_assert against `query::count`, which now spans
+        // segments + tail) must stay exact no matter where the segment
+        // boundaries fall relative to the watermark.
+        let (cat, specs, _) = setup();
+        let gen = TraceGenerator::new(&cat);
+        let events = gen.generate(&TraceConfig {
+            duration_ms: 40 * 60_000,
+            seed: 21,
+            ..TraceConfig::default()
+        });
+        for segment_rows in [1usize, 7, 64] {
+            let mut store = AppLogStore::new(StoreConfig {
+                segment_rows,
+                ..Default::default()
+            });
+            let mut eng = Engine::new(specs.clone(), &cat, EngineConfig::autofeature()).unwrap();
+            let mut naive =
+                NaiveExtractor::new(specs.clone(), crate::applog::codec::CodecKind::Jsonish);
+            let mut fed = 0usize;
+            let mut cache_hits = 0u64;
+            for step in 1..=8i64 {
+                let now = step * 5 * 60_000;
+                let upto = events.partition_point(|e| e.timestamp_ms < now);
+                log_events(&mut store, &JsonishCodec, &events[fed..upto]).unwrap();
+                fed = upto;
+                let got = eng.extract(&store, now).unwrap();
+                let want = naive.extract(&store, now).unwrap();
+                for (x, y) in got.values.iter().zip(&want.values) {
+                    assert!(
+                        x.approx_eq(y, 1e-9),
+                        "seg_rows {segment_rows} step {step}: {x:?} vs {y:?}"
+                    );
+                }
+                cache_hits += got.breakdown.rows_from_cache;
+            }
+            assert!(
+                store.num_segments() > 0 || store.len() < segment_rows,
+                "seg_rows {segment_rows}: tail grew past the threshold unsealed"
+            );
+            assert!(cache_hits > 0, "seg_rows {segment_rows}: cache never hit");
+        }
+    }
+}

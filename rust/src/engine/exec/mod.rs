@@ -1,0 +1,28 @@
+//! Execution of lowered [`ExecPlan`](crate::optimizer::lower::ExecPlan)
+//! pipelines — the online phase's engine room.
+//!
+//! `engine/online.rs` used to hand-thread three execution strategies
+//! (classic rewalk, incremental delta, uncached one-shot) through ad-hoc
+//! row vectors; this module family replaces all of that with **one
+//! executor over the explicit IR**:
+//!
+//! * [`pipeline`] — the executor: strategy dispatch, lane walks, the
+//!   per-operator rows-in/rows-out/ns counter table that produces the
+//!   extraction's `OpBreakdown`.
+//! * [`materialize`] — the row/cache bridge: cache fetch + missing-
+//!   interval scan into per-type row sets, and the budgeted cache
+//!   update. The only place rows become `CachedRow`s.
+//! * [`delta`] — the `WindowSlice`/`Aggregate` stages of the
+//!   incremental strategy: persistent state banks
+//!   (`features::incremental`) fed boundary-sliced deltas, with the
+//!   exact-recompute repair fallback.
+//!
+//! The unoptimized `fegraph::exec` baseline re-targets
+//! [`pipeline::run_standalone`], so there is exactly one extraction
+//! semantics in the crate.
+
+pub(crate) mod delta;
+pub(crate) mod materialize;
+pub mod pipeline;
+#[cfg(test)]
+pub(crate) mod testutil;

@@ -1,0 +1,503 @@
+//! The one pipeline executor: runs a lowered
+//! [`ExecPlan`](crate::optimizer::lower::ExecPlan) — whatever its
+//! strategy — and meters every operator.
+//!
+//! There is exactly one semantics: the online engine (all cache/fusion/
+//! incremental configurations), the offline-compiled plan, and the
+//! unoptimized `fegraph::exec` baseline all execute through this module.
+//! Per-operator rows-in/rows-out/ns counters ([`ExecCounters`]) are the
+//! *only* source of the extraction's [`OpBreakdown`] — no hand-
+//! maintained tallies anywhere else.
+//!
+//! Counter → breakdown mapping (DESIGN.md §ExecPlan):
+//!
+//! | operator      | ns →          | rows →                              |
+//! |---------------|---------------|-------------------------------------|
+//! | `Scan`        | `retrieve_ns` | rows-out → `rows_retrieved`         |
+//! | `Project`     | `decode_ns`   | rows-out → `rows_decoded`           |
+//! | `Filter`      | `filter_ns`   | rows-in → `rows_replayed`           |
+//! | `WindowSlice` | `filter_ns`   | rows-out → `rows_delta`             |
+//! | `Aggregate`   | `filter_ns`   | rows-in = observations fed          |
+//! | `Emit`        | `compute_ns`  | rows-out = features emitted         |
+//! | cache bridge  | `cache_ns`    | rows-out → `rows_from_cache`        |
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::applog::codec::AttrCodec;
+use crate::applog::event::{EventTypeId, TimestampMs};
+use crate::applog::query::{self, DecodedRow};
+use crate::applog::store::AppLogStore;
+use crate::cache::policy::PolicyKind;
+use crate::cache::store::CacheStore;
+use crate::features::value::FeatureValue;
+use crate::fegraph::node::OpBreakdown;
+use crate::optimizer::hierarchical::{DirectWalker, LaneWalker, RowView};
+use crate::optimizer::lower::{ExecOp, ExecPlan, FilterMode, LanePipeline, Stage, Strategy};
+use crate::optimizer::plan::{FeatureAcc, FusedLane, OptimizedPlan};
+
+use super::super::offline::CompiledEngine;
+use super::delta::{self, IncBank};
+use super::materialize::{self, TypeRows};
+
+/// Rows-in / rows-out / wall time of one operator (stage), accumulated
+/// across a plan's pipelines within one extraction.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageCounters {
+    /// Rows (or row visits) entering the operator.
+    pub rows_in: u64,
+    /// Rows (or observations) the operator produced.
+    pub rows_out: u64,
+    /// Wall time spent in the operator (ns).
+    pub ns: u64,
+}
+
+impl StageCounters {
+    fn add_ns(&mut self, t0: Instant) {
+        self.ns += t0.elapsed().as_nanos() as u64;
+    }
+}
+
+/// Executor-level per-operator counter table: one slot per pipeline
+/// stage, plus the cache bridge (fetch + update), which is session
+/// state rather than an IR operator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecCounters {
+    stages: [StageCounters; Stage::ALL.len()],
+    /// Cache-bridge work: `ns` = fetch + update, `rows_out` = rows
+    /// served from the cache.
+    pub cache: StageCounters,
+}
+
+impl ExecCounters {
+    /// Counters of one stage.
+    pub fn stage(&self, s: Stage) -> &StageCounters {
+        &self.stages[s as usize]
+    }
+
+    /// Mutable counters of one stage.
+    pub(crate) fn stage_mut(&mut self, s: Stage) -> &mut StageCounters {
+        &mut self.stages[s as usize]
+    }
+
+    /// Derive the per-operation breakdown — the single producer of
+    /// [`OpBreakdown`] on every engine path.
+    pub fn breakdown(&self) -> OpBreakdown {
+        OpBreakdown {
+            retrieve_ns: self.stage(Stage::Scan).ns,
+            decode_ns: self.stage(Stage::Project).ns,
+            filter_ns: self.stage(Stage::Filter).ns
+                + self.stage(Stage::WindowSlice).ns
+                + self.stage(Stage::Aggregate).ns,
+            compute_ns: self.stage(Stage::Emit).ns,
+            branch_ns: 0,
+            cache_ns: self.cache.ns,
+            rows_retrieved: self.stage(Stage::Scan).rows_out,
+            rows_decoded: self.stage(Stage::Project).rows_out,
+            rows_from_cache: self.cache.rows_out,
+            rows_replayed: self.stage(Stage::Filter).rows_in,
+            rows_delta: self.stage(Stage::WindowSlice).rows_out,
+        }
+    }
+}
+
+/// Everything one executor run produces.
+pub(crate) struct ExecOutput {
+    /// Feature values, in feature order.
+    pub values: Vec<FeatureValue>,
+    /// Per-operator counters (→ [`OpBreakdown`] via
+    /// [`ExecCounters::breakdown`]).
+    pub counters: ExecCounters,
+    /// Hierarchical-filter boundary comparisons (Fig. 11 metric).
+    pub boundary_cmps: u64,
+}
+
+/// The lowered Filter operator's walk implementation for a pipeline.
+fn filter_mode(pipe: &LanePipeline) -> FilterMode {
+    pipe.ops
+        .iter()
+        .find_map(|o| match &o.op {
+            ExecOp::Filter { mode, .. } => Some(*mode),
+            _ => None,
+        })
+        .unwrap_or(FilterMode::Hierarchical)
+}
+
+/// The lowered Project operator's projection (`None` = full decode).
+fn projection(pipe: &LanePipeline) -> Option<&[crate::applog::event::AttrId]> {
+    pipe.ops
+        .iter()
+        .find_map(|o| match &o.op {
+            ExecOp::Project { attrs } => Some(attrs.as_deref()),
+            _ => None,
+        })
+        .flatten()
+}
+
+/// Run one lane's Filter+Aggregate stages over a chronological row
+/// stream, metering the walk.
+fn walk_lane<'a>(
+    lane: &FusedLane,
+    mode: FilterMode,
+    now: TimestampMs,
+    rows: impl Iterator<Item = RowView<'a>>,
+    sinks: &mut [FeatureAcc],
+    c: &mut ExecCounters,
+    boundary_cmps: &mut u64,
+) {
+    let t0 = Instant::now();
+    let (rows_n, pushes, cmps) = match mode {
+        FilterMode::Hierarchical => {
+            let mut w = LaneWalker::new(lane, now);
+            for r in rows {
+                w.push_row(lane, r, sinks);
+            }
+            (w.rows, w.pushes, w.boundary_cmps)
+        }
+        FilterMode::Direct => {
+            let mut w = DirectWalker::new();
+            for r in rows {
+                w.push_row(lane, now, r, sinks);
+            }
+            (w.rows, w.pushes, w.boundary_cmps)
+        }
+    };
+    let f = c.stage_mut(Stage::Filter);
+    f.add_ns(t0);
+    f.rows_in += rows_n;
+    f.rows_out += pushes;
+    c.stage_mut(Stage::Aggregate).rows_in += pushes;
+    *boundary_cmps += cmps;
+}
+
+fn view_cached(r: &crate::cache::entry::CachedRow) -> RowView<'_> {
+    RowView {
+        ts: r.ts,
+        seq: r.seq,
+        attrs: &r.attrs,
+    }
+}
+
+fn view_decoded(r: &DecodedRow) -> RowView<'_> {
+    RowView {
+        ts: r.ts,
+        seq: r.seq,
+        attrs: &r.attrs,
+    }
+}
+
+/// Run every pipeline of a [`Strategy::OneShot`] plan: columnar `Scan`
+/// straight over segment batches (zone-map pruned, no cache-row
+/// materialization), then the lane walk.
+#[allow(clippy::too_many_arguments)]
+fn run_oneshot(
+    opt: &OptimizedPlan,
+    exec: &ExecPlan,
+    codec: &dyn AttrCodec,
+    store: &AppLogStore,
+    now: TimestampMs,
+    sinks: &mut [FeatureAcc],
+    c: &mut ExecCounters,
+    boundary_cmps: &mut u64,
+) -> Result<()> {
+    for pipe in &exec.pipelines {
+        let lane = &opt.lanes[pipe.lane_idx];
+        let window = lane.max_window.window_at(now);
+        let rows: Vec<DecodedRow> = match projection(pipe) {
+            // §Perf: fused lanes only read their attr union, decoded at
+            // segment granularity behind the zone maps.
+            Some(wanted) => {
+                let (rows, stats) =
+                    query::retrieve_project(store, lane.event_type, window, codec, wanted)?;
+                let scan = c.stage_mut(Stage::Scan);
+                scan.ns += stats.retrieve_ns;
+                scan.rows_out += stats.rows;
+                let project = c.stage_mut(Stage::Project);
+                project.ns += stats.decode_ns;
+                project.rows_in += stats.rows;
+                project.rows_out += stats.rows;
+                rows
+            }
+            // Full decode (the unoptimized baseline shape): Scan copies
+            // rows out of storage, Project decodes every attribute, the
+            // Filter stage projects at walk time.
+            None => {
+                let t0 = Instant::now();
+                let raw = query::retrieve(store, &[lane.event_type], window);
+                let scan = c.stage_mut(Stage::Scan);
+                scan.add_ns(t0);
+                scan.rows_out += raw.len() as u64;
+                let t0 = Instant::now();
+                let rows = raw
+                    .iter()
+                    .map(|r| {
+                        Ok(DecodedRow {
+                            ts: r.timestamp_ms,
+                            seq: r.seq_no,
+                            attrs: codec.decode(&r.payload)?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let project = c.stage_mut(Stage::Project);
+                project.add_ns(t0);
+                project.rows_in += raw.len() as u64;
+                project.rows_out += raw.len() as u64;
+                rows
+            }
+        };
+        walk_lane(
+            lane,
+            filter_mode(pipe),
+            now,
+            rows.iter().map(view_decoded),
+            sinks,
+            c,
+            boundary_cmps,
+        );
+    }
+    Ok(())
+}
+
+/// Standalone one-shot execution over a bare plan pair — the entry
+/// point `fegraph::exec` re-targets, so the unoptimized baseline and
+/// the engine share one executor (and one semantics).
+pub(crate) fn run_standalone(
+    opt: &OptimizedPlan,
+    exec: &ExecPlan,
+    codec: &dyn AttrCodec,
+    store: &AppLogStore,
+    now: TimestampMs,
+) -> Result<ExecOutput> {
+    debug_assert_eq!(
+        exec.strategy,
+        Strategy::OneShot,
+        "standalone execution has no session state (cache / state banks)"
+    );
+    let mut c = ExecCounters::default();
+    let mut boundary_cmps = 0u64;
+    let mut sinks: Vec<FeatureAcc> = opt
+        .features
+        .iter()
+        .map(|f| FeatureAcc::new(f, now))
+        .collect();
+    run_oneshot(opt, exec, codec, store, now, &mut sinks, &mut c, &mut boundary_cmps)?;
+    let values = emit(sinks, None, &mut c);
+    Ok(ExecOutput {
+        values,
+        counters: c,
+        boundary_cmps,
+    })
+}
+
+/// Emit: assemble final feature values — persistent snapshots where the
+/// delta stages produced them, finished one-shot accumulators
+/// everywhere else.
+fn emit(
+    sinks: Vec<FeatureAcc>,
+    inc_values: Option<Vec<Option<FeatureValue>>>,
+    c: &mut ExecCounters,
+) -> Vec<FeatureValue> {
+    let t0 = Instant::now();
+    let values: Vec<FeatureValue> = match inc_values {
+        Some(iv) => sinks
+            .into_iter()
+            .zip(iv)
+            .map(|(s, v)| v.unwrap_or_else(|| s.finish()))
+            .collect(),
+        None => sinks.into_iter().map(|s| s.finish()).collect(),
+    };
+    let e = c.stage_mut(Stage::Emit);
+    e.add_ns(t0);
+    e.rows_out += values.len() as u64;
+    values
+}
+
+/// Execute a compiled plan for one extraction trigger: the single
+/// driver behind [`crate::engine::online::Engine::extract`], dispatching
+/// on the strategy lowering chose.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn execute(
+    compiled: &CompiledEngine,
+    codec: &dyn AttrCodec,
+    policy: PolicyKind,
+    cache: &mut CacheStore,
+    inc: &mut Option<IncBank>,
+    store: &AppLogStore,
+    now: TimestampMs,
+    interval_ms: i64,
+) -> Result<ExecOutput> {
+    let exec = &compiled.exec;
+    let opt = &compiled.plan;
+    let mut c = ExecCounters::default();
+    let mut boundary_cmps = 0u64;
+    let mut sinks: Vec<FeatureAcc> = opt
+        .features
+        .iter()
+        .map(|f| FeatureAcc::new(f, now))
+        .collect();
+    let mut inc_values: Option<Vec<Option<FeatureValue>>> = None;
+
+    match exec.strategy {
+        Strategy::OneShot => {
+            run_oneshot(
+                opt,
+                exec,
+                codec,
+                store,
+                now,
+                &mut sinks,
+                &mut c,
+                &mut boundary_cmps,
+            )?;
+        }
+        Strategy::CachedRewalk | Strategy::IncrementalDelta => {
+            // Materialize per-type row sets once (❶❷), shared across all
+            // pipelines of the type, then run the compute stages (❸) —
+            // classic full rewalk or the boundary-sliced delta.
+            let mut avail: HashMap<EventTypeId, TypeRows> = HashMap::new();
+            for pipe in &exec.pipelines {
+                let t = opt.lanes[pipe.lane_idx].event_type;
+                if !avail.contains_key(&t) {
+                    let rows = materialize::build_type_rows(
+                        cache, compiled, codec, store, t, now, &mut c,
+                    )?;
+                    avail.insert(t, rows);
+                }
+            }
+            if exec.strategy == Strategy::IncrementalDelta {
+                inc_values = Some(delta::feed(compiled, &avail, now, inc, &mut sinks, &mut c));
+            } else {
+                for pipe in &exec.pipelines {
+                    let lane = &opt.lanes[pipe.lane_idx];
+                    let rows = &avail[&lane.event_type];
+                    walk_lane(
+                        lane,
+                        filter_mode(pipe),
+                        now,
+                        rows.cached
+                            .rows
+                            .iter()
+                            .map(view_cached)
+                            .chain(rows.fresh.iter().map(view_cached)),
+                        &mut sinks,
+                        &mut c,
+                        &mut boundary_cmps,
+                    );
+                }
+            }
+            materialize::update_cache(cache, compiled, policy, interval_ms, avail, now, &mut c);
+        }
+    }
+
+    let values = emit(sinks, inc_values, &mut c);
+    Ok(ExecOutput {
+        values,
+        counters: c,
+        boundary_cmps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::codec::{CodecKind, JsonishCodec};
+    use crate::baseline::naive::NaiveExtractor;
+    use crate::engine::config::EngineConfig;
+    use crate::engine::exec::testutil::setup;
+    use crate::engine::online::Engine;
+    use crate::engine::Extractor;
+    use crate::optimizer::fusion::fuse;
+    use crate::optimizer::lower::{lower, LowerConfig};
+
+    #[test]
+    fn standalone_oneshot_matches_naive() {
+        let (_, specs, store) = setup();
+        let opt = fuse(&specs, false);
+        let exec = lower(&opt, &LowerConfig::baseline());
+        let out = run_standalone(&opt, &exec, &JsonishCodec, &store, 40 * 60_000).unwrap();
+        let mut naive = NaiveExtractor::new(specs, CodecKind::Jsonish);
+        let want = naive.extract(&store, 40 * 60_000).unwrap();
+        assert_eq!(out.values.len(), want.values.len());
+        for (x, y) in out.values.iter().zip(&want.values) {
+            assert!(x.approx_eq(y, 1e-9), "{x:?} vs {y:?}");
+        }
+    }
+
+    #[test]
+    fn per_operator_counters_feed_the_breakdown() {
+        let (cat, specs, store) = setup();
+        // Classic cached engine: Scan/Project/Filter populated, cache
+        // bridge active on the second trigger.
+        let mut eng = Engine::new(specs.clone(), &cat, EngineConfig::autofeature()).unwrap();
+        eng.extract(&store, 30 * 60_000).unwrap();
+        let r = eng.extract(&store, 31 * 60_000).unwrap();
+        assert!(r.breakdown.rows_from_cache > 0);
+        assert!(r.breakdown.rows_replayed > 0);
+        assert!(r.breakdown.filter_ns > 0);
+        assert!(r.breakdown.cache_ns > 0);
+        assert_eq!(r.breakdown.rows_retrieved, r.breakdown.rows_decoded);
+        assert_eq!(r.breakdown.rows_delta, 0, "classic path never slices");
+
+        // Delta engine: WindowSlice rows flow to rows_delta.
+        let mut inc = Engine::new(specs, &cat, EngineConfig::incremental()).unwrap();
+        inc.extract(&store, 30 * 60_000).unwrap();
+        let r = inc.extract(&store, 31 * 60_000).unwrap();
+        assert!(r.breakdown.rows_delta > 0);
+    }
+
+    #[test]
+    fn counters_map_stages_onto_breakdown_fields() {
+        let mut c = ExecCounters::default();
+        c.stage_mut(Stage::Scan).ns = 1;
+        c.stage_mut(Stage::Scan).rows_out = 10;
+        c.stage_mut(Stage::Project).ns = 2;
+        c.stage_mut(Stage::Project).rows_out = 9;
+        c.stage_mut(Stage::Filter).ns = 4;
+        c.stage_mut(Stage::Filter).rows_in = 8;
+        c.stage_mut(Stage::WindowSlice).ns = 8;
+        c.stage_mut(Stage::WindowSlice).rows_out = 7;
+        c.stage_mut(Stage::Aggregate).ns = 16;
+        c.stage_mut(Stage::Emit).ns = 32;
+        c.cache.ns = 64;
+        c.cache.rows_out = 6;
+        let bd = c.breakdown();
+        assert_eq!(bd.retrieve_ns, 1);
+        assert_eq!(bd.rows_retrieved, 10);
+        assert_eq!(bd.decode_ns, 2);
+        assert_eq!(bd.rows_decoded, 9);
+        assert_eq!(bd.filter_ns, 4 + 8 + 16);
+        assert_eq!(bd.compute_ns, 32);
+        assert_eq!(bd.cache_ns, 64);
+        assert_eq!(bd.rows_from_cache, 6);
+        assert_eq!(bd.rows_replayed, 8);
+        assert_eq!(bd.rows_delta, 7);
+        assert_eq!(bd.branch_ns, 0);
+    }
+
+    #[test]
+    fn filter_rows_out_bounds_aggregate_rows_in() {
+        // The walk's pushes are exactly what Aggregate consumes.
+        let (_, specs, store) = setup();
+        let opt = fuse(&specs, true);
+        let exec = lower(
+            &opt,
+            &LowerConfig {
+                enable_cache: false,
+                incremental_compute: false,
+                hierarchical_filter: true,
+                projected_decode: true,
+            },
+        );
+        let out = run_standalone(&opt, &exec, &JsonishCodec, &store, 40 * 60_000).unwrap();
+        let f = out.counters.stage(Stage::Filter);
+        let a = out.counters.stage(Stage::Aggregate);
+        assert!(f.rows_in > 0);
+        assert_eq!(f.rows_out, a.rows_in);
+        assert_eq!(
+            out.counters.stage(Stage::Emit).rows_out,
+            specs.len() as u64
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Shared fixture for the engine/executor test suites — one canonical
+//! mixed-window scenario so the online, pipeline, materialize and
+//! delta suites all exercise exactly the same workload (and a tweak to
+//! it lands everywhere at once).
+
+use crate::applog::codec::JsonishCodec;
+use crate::applog::schema::{Catalog, CatalogConfig};
+use crate::applog::store::{AppLogStore, StoreConfig};
+use crate::features::catalog::{generate_feature_set, FeatureSetConfig};
+use crate::features::spec::{FeatureSpec, TimeRange};
+use crate::workload::traces::{log_events, TraceConfig, TraceGenerator};
+
+/// 30 features over 8 types (70% identical conditions, 5 min / 30 min /
+/// 1 h windows, 30% multi-type) plus 45 minutes of seeded trace.
+pub(crate) fn setup() -> (Catalog, Vec<FeatureSpec>, AppLogStore) {
+    let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+    let specs = generate_feature_set(
+        &cat,
+        &FeatureSetConfig {
+            num_features: 30,
+            num_types: 8,
+            identical_share: 0.7,
+            windows: vec![
+                TimeRange::mins(5),
+                TimeRange::mins(30),
+                TimeRange::hours(1),
+            ],
+            multi_type_prob: 0.3,
+            seed: 77,
+        },
+    );
+    let gen = TraceGenerator::new(&cat);
+    let events = gen.generate(&TraceConfig {
+        duration_ms: 45 * 60_000,
+        seed: 9,
+        ..TraceConfig::default()
+    });
+    let mut store = AppLogStore::new(StoreConfig::default());
+    log_events(&mut store, &JsonishCodec, &events).unwrap();
+    (cat, specs, store)
+}

@@ -5,12 +5,16 @@
 //!   paper's ablations),
 //! * [`profiler`] — offline per-type cost/size profiling,
 //! * [`offline`] — the one-time offline phase run when a model is
-//!   (re)deployed: graph generation → optimization → profiling →
-//!   valuation constants,
-//! * [`online`] — the per-request online phase: fetch cached results →
-//!   extract missing → assemble features → update cache.
+//!   (re)deployed: graph generation → optimization → **lowering to the
+//!   ExecPlan IR** → profiling → valuation constants,
+//! * [`exec`] — the single pipeline executor running lowered plans
+//!   (every strategy, with per-operator counters),
+//! * [`online`] — the per-request online phase: a thin driver that
+//!   schedules the lowered pipelines and keeps the session state
+//!   (cache, watermarks, staleness fast path).
 
 pub mod config;
+pub mod exec;
 pub mod offline;
 pub mod online;
 pub mod profiler;

@@ -21,6 +21,7 @@ use crate::applog::schema::Catalog;
 use crate::features::spec::FeatureSpec;
 use crate::fegraph::graph::FeGraph;
 use crate::optimizer::fusion::fuse;
+use crate::optimizer::lower::{lower, ExecPlan, LowerConfig};
 use crate::optimizer::plan::OptimizedPlan;
 
 use super::config::EngineConfig;
@@ -49,8 +50,11 @@ impl OfflineStats {
 pub struct CompiledEngine {
     /// The unoptimized FE-graph (kept for reporting/inspection).
     pub graph: FeGraph,
-    /// The optimized execution plan.
+    /// The optimized execution plan (lane/group geometry).
     pub plan: OptimizedPlan,
+    /// The lowered operator-pipeline IR the executor runs: strategy,
+    /// staged operators, per-operator fingerprints.
+    pub exec: ExecPlan,
     /// Profiled static valuation terms.
     pub profile: ProfileTable,
     /// Per-type retention horizon: max member window (cache prune
@@ -75,9 +79,20 @@ pub fn compile(
     let graph = FeGraph::from_specs(features);
     stats.graph_build_ns = t0.elapsed().as_nanos() as u64;
 
-    // ② Graph optimizer (partition + fusion).
+    // ② Graph optimizer (partition + fusion), then lowering to the
+    // ExecPlan IR — the execution strategy is decided here, once, not
+    // branch-by-branch inside the online engine.
     let t0 = Instant::now();
     let plan = fuse(&graph.features, cfg.enable_fusion);
+    let exec = lower(
+        &plan,
+        &LowerConfig {
+            enable_cache: cfg.enable_cache,
+            incremental_compute: cfg.incremental_compute,
+            hierarchical_filter: cfg.hierarchical_filter,
+            projected_decode: true,
+        },
+    );
     let mut type_windows: HashMap<EventTypeId, i64> = HashMap::new();
     let mut attr_unions: HashMap<EventTypeId, Vec<AttrId>> = HashMap::new();
     for lane in &plan.lanes {
@@ -100,11 +115,20 @@ pub fn compile(
     Ok(CompiledEngine {
         graph,
         plan,
+        exec,
         profile: prof,
         type_windows,
         attr_unions,
         stats,
     })
+}
+
+impl CompiledEngine {
+    /// Render the lowered plan (`autofeature explain`, golden plan
+    /// snapshots). Delegates to [`ExecPlan::explain`].
+    pub fn explain(&self) -> String {
+        self.exec.explain()
+    }
 }
 
 #[cfg(test)]
@@ -157,6 +181,21 @@ mod tests {
         // Paper: millisecond-scale offline cost. Allow generous slack on
         // CI boxes but catch pathological blowups.
         assert!(c.stats.total_ns() < 500_000_000, "{}", c.stats.total_ns());
+    }
+
+    #[test]
+    fn compile_lowers_the_exec_plan() {
+        let c = setup(true);
+        assert_eq!(
+            c.exec.strategy,
+            crate::optimizer::lower::Strategy::CachedRewalk
+        );
+        assert_eq!(c.exec.pipelines.len(), c.plan.lanes.len());
+        assert!(
+            c.explain().starts_with("ExecPlan strategy=cached-rewalk"),
+            "{}",
+            c.explain()
+        );
     }
 
     #[test]

@@ -9,30 +9,30 @@
 //!   and assemble real-time feature values,
 //! ❹ update the cache under the current memory budget via the greedy
 //!   valuation policy.
+//!
+//! All of ❶–❹ live in the [`super::exec`] pipeline executor, driven by
+//! the [`crate::optimizer::lower::ExecPlan`] IR lowered at compile time;
+//! [`Engine`] is a thin per-session driver holding the mutable state
+//! (cache, trigger watermarks, incremental state banks, the §5
+//! staleness fast path) and scheduling the lowered pipelines.
 
-use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
 use crate::applog::codec::AttrCodec;
-use crate::applog::event::{AttrId, AttrValue, EventTypeId, TimestampMs};
-use crate::applog::query::{self, TimeWindow};
+use crate::applog::event::{EventTypeId, TimestampMs};
 use crate::applog::schema::Catalog;
 use crate::applog::store::AppLogStore;
-use crate::cache::entry::{CachedLane, CachedRow};
-use crate::cache::policy::select;
 use crate::cache::store::CacheStore;
-use crate::cache::valuation::{evaluate, Candidate};
-use crate::features::incremental::IncrementalState;
 use crate::features::spec::FeatureSpec;
 use crate::features::value::FeatureValue;
 use crate::fegraph::node::OpBreakdown;
-use crate::optimizer::hierarchical::{lookup, DirectWalker, LaneWalker, RowView};
-use crate::optimizer::plan::FeatureAcc;
 
 use super::config::EngineConfig;
+use super::exec::delta::IncBank;
+use super::exec::pipeline;
 use super::offline::{compile, CompiledEngine};
 use super::Extractor;
 
@@ -41,7 +41,8 @@ use super::Extractor;
 pub struct ExtractionResult {
     /// Feature values, in feature order.
     pub values: Vec<FeatureValue>,
-    /// Per-operation breakdown.
+    /// Per-operation breakdown (derived from the executor's
+    /// per-operator counters).
     pub breakdown: OpBreakdown,
     /// End-to-end extraction wall time (ns).
     pub wall_ns: u64,
@@ -59,71 +60,17 @@ pub struct ExtractionResult {
     pub extra_storage_bytes: usize,
 }
 
-/// Rows available for one behavior type during one extraction.
-struct TypeRows {
-    /// Cache-resident rows, already pruned to the retention window.
-    cached: CachedLane,
-    /// Freshly retrieved+decoded rows of the missing interval.
-    fresh: Vec<CachedRow>,
-    /// Rows that left the retention window since the previous
-    /// extraction (evicted by the prune) — the incremental compute
-    /// layer retracts these.
-    expired: Vec<CachedRow>,
-    /// The lane's watermark when it was fetched from the cache (`None`
-    /// when the type started cold). Equal to the previous extraction's
-    /// trigger time iff the lane survived continuously — the validity
-    /// condition for the delta path.
-    resumed: Option<TimestampMs>,
-}
-
-/// How one feature's Compute runs this extraction (incremental mode).
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum FeedMode {
-    /// Persistent state valid: apply only the inter-trigger delta.
-    Delta,
-    /// Persistent state missing/invalidated (cold start, lane evicted
-    /// by policy or budget shrink): rebuild it from the full window.
-    Rebuild,
-    /// Unsupported feature (multi-lane `Concat`): classic one-shot
-    /// accumulator.
-    Oneshot,
-}
-
-/// Persistent per-feature incremental compute state (kept beside the
-/// cache; dies with it on [`Extractor::reset`]).
-struct IncBank {
-    /// Trigger time the states are synchronized to (`None` until the
-    /// first incremental extraction completes).
-    synced_at: Option<TimestampMs>,
-    /// One slot per plan feature; `None` = unsupported (one-shot only).
-    states: Vec<Option<IncrementalState>>,
-}
-
-/// Attribute lookup in a cached row's sorted attr-union projection
-/// (the walker-shared helper, so fused and incremental paths address
-/// attrs identically).
-#[inline]
-fn attr_of(row: &CachedRow, id: AttrId) -> Option<&AttrValue> {
-    lookup(&row.attrs, id)
-}
-
-/// All current-window rows of a member whose lower boundary is `lo`:
-/// the cached suffix followed by the fresh suffix (both chronological).
-fn window_rows(rows: &TypeRows, lo: TimestampMs) -> impl Iterator<Item = &CachedRow> + '_ {
-    let cs = rows.cached.rows.partition_point(|r| r.ts < lo);
-    let fs = rows.fresh.partition_point(|r| r.ts < lo);
-    rows.cached.rows.range(cs..).chain(rows.fresh[fs..].iter())
-}
-
 /// The AutoFeature online engine.
 ///
 /// Ownership is split for multi-session serving: the immutable
-/// offline-compiled plan lives in a shared [`Arc<CompiledEngine>`]
-/// (compile once per deployed model, share across every user session of
-/// the service — see [`crate::coordinator::pool::SessionPool`]), while
-/// all per-session mutable state (the [`CacheStore`], extraction
-/// watermarks, the staleness fast path) stays inside this lightweight
-/// per-user value.
+/// offline-compiled plan — including the lowered
+/// [`crate::optimizer::lower::ExecPlan`] — lives in a shared
+/// [`Arc<CompiledEngine>`] (compile once per deployed model, share
+/// across every user session of the service — see
+/// [`crate::coordinator::pool::SessionPool`]), while all per-session
+/// mutable state (the [`CacheStore`], extraction watermarks, the
+/// incremental state banks, the staleness fast path) stays inside this
+/// lightweight per-user value.
 pub struct Engine {
     cfg: EngineConfig,
     compiled: Arc<CompiledEngine>,
@@ -132,8 +79,7 @@ pub struct Engine {
     last_now: Option<TimestampMs>,
     /// Previous extraction's values (kept only in co-design mode).
     last_values: Option<(TimestampMs, Vec<FeatureValue>)>,
-    /// Persistent incremental compute states
-    /// (`EngineConfig::incremental_compute`).
+    /// Persistent incremental state banks (delta-strategy plans).
     inc: Option<IncBank>,
 }
 
@@ -155,7 +101,8 @@ impl Engine {
 
     /// Instantiate a per-session engine over a *shared* compiled plan.
     /// `cfg` must be the configuration the plan was compiled with
-    /// (fusion and codec choices are baked into the plan).
+    /// (fusion, codec and the lowered execution strategy are baked into
+    /// the plan).
     pub fn from_shared(compiled: Arc<CompiledEngine>, cfg: EngineConfig) -> Engine {
         Engine {
             codec: cfg.codec.build(),
@@ -184,10 +131,16 @@ impl Engine {
     }
 
     /// The cross-execution cache (inspection: tests assert the
-    /// watermark-vs-log contract that `build_type_rows` only
+    /// watermark-vs-log contract that the cache bridge only
     /// `debug_assert!`s on the hot path).
     pub fn cache(&self) -> &CacheStore {
         &self.cache
+    }
+
+    /// Whether persistent incremental state banks currently exist
+    /// (inspection; delta-strategy sessions only).
+    pub fn has_incremental_state(&self) -> bool {
+        self.inc.is_some()
     }
 
     /// Dynamically adjust the cache budget (OS memory pressure). Evicts
@@ -216,463 +169,6 @@ impl Engine {
             Some(last) if now > last => now - last,
             _ => self.cfg.expected_interval_ms,
         }
-    }
-
-    /// Build the available-row set for a behavior type: cache fetch (❶)
-    /// plus retrieve+decode of the missing interval (❷).
-    fn build_type_rows(
-        &mut self,
-        store: &AppLogStore,
-        t: EventTypeId,
-        now: TimestampMs,
-        bd: &mut OpBreakdown,
-    ) -> Result<TypeRows> {
-        let window_ms = self.compiled.type_windows[&t];
-        // Clamped to the log epoch: at session start a retention window
-        // can exceed the whole log history, and a negative start would
-        // leak into the lane watermark (and from there into the
-        // missing-interval computation of every later extraction).
-        let window_start = (now - window_ms).max(0);
-
-        // ❶ Cache fetch: take ownership of the lane (re-inserted by the
-        // update step) and drop rows that fell out of the window.
-        //
-        // Contract (mobile logging is causal): rows are appended with
-        // timestamps >= the previous extraction's trigger time, so
-        // everything below the watermark is already cached. The debug
-        // check below verifies it against the store's index.
-        let t0 = Instant::now();
-        let (mut cached, resumed, expired) = match self.cache.evict(t) {
-            Some(mut lane) => {
-                let resumed = Some(lane.watermark);
-                let expired = lane.prune_before(window_start);
-                (lane, resumed, expired)
-            }
-            None => (CachedLane::new(t, window_start), None, Vec::new()),
-        };
-        // Never re-retrieve what the cache already covers.
-        let missing_from = cached.watermark.max(window_start);
-        debug_assert_eq!(
-            cached.len(),
-            query::count(
-                store,
-                t,
-                TimeWindow {
-                    start_ms: window_start,
-                    end_ms: missing_from
-                }
-            ),
-            "late-arriving rows below the cache watermark (type {t}): \
-             the log/extraction time contract was violated"
-        );
-        bd.cache_ns += t0.elapsed().as_nanos() as u64;
-        bd.rows_from_cache += cached.len() as u64;
-
-        // ❷ Retrieve + Decode only the missing interval, fused and
-        // pushed down to segment granularity: zone maps prune whole
-        // segments, survivors decode straight into the attr-union
-        // projection from the payload arena (§Perf: the fused path never
-        // materializes owned event rows or unneeded attribute values),
-        // producing the rows both the filter and the cache share.
-        let union = &self.compiled.attr_unions[&t];
-        let (rows, stats) = query::retrieve_project(
-            store,
-            t,
-            TimeWindow {
-                start_ms: missing_from,
-                end_ms: now,
-            },
-            self.codec.as_ref(),
-            union,
-        )?;
-        bd.retrieve_ns += stats.retrieve_ns;
-        bd.rows_retrieved += stats.rows;
-        bd.decode_ns += stats.decode_ns;
-        bd.rows_decoded += stats.rows;
-        let fresh: Vec<CachedRow> = rows
-            .into_iter()
-            .map(|r| CachedRow {
-                ts: r.ts,
-                seq: r.seq,
-                attrs: r.attrs,
-            })
-            .collect();
-        cached.watermark = now;
-
-        Ok(TypeRows {
-            cached,
-            fresh,
-            expired,
-            resumed,
-        })
-    }
-
-    /// Run one lane's filter over an available row set.
-    #[allow(clippy::too_many_arguments)]
-    fn feed_lane(
-        &self,
-        lane_idx: usize,
-        rows: &TypeRows,
-        now: TimestampMs,
-        sinks: &mut [FeatureAcc],
-        bd: &mut OpBreakdown,
-        boundary_cmps: &mut u64,
-    ) {
-        let lane = &self.compiled.plan.lanes[lane_idx];
-        let t0 = Instant::now();
-        if self.cfg.hierarchical_filter {
-            let mut w = LaneWalker::new(lane, now);
-            for r in rows.cached.rows.iter().chain(rows.fresh.iter()) {
-                w.push_row(
-                    lane,
-                    RowView {
-                        ts: r.ts,
-                        seq: r.seq,
-                        attrs: &r.attrs,
-                    },
-                    sinks,
-                );
-            }
-            *boundary_cmps += w.boundary_cmps;
-            bd.rows_replayed += w.rows;
-        } else {
-            let mut w = DirectWalker::new();
-            for r in rows.cached.rows.iter().chain(rows.fresh.iter()) {
-                w.push_row(
-                    lane,
-                    now,
-                    RowView {
-                        ts: r.ts,
-                        seq: r.seq,
-                        attrs: &r.attrs,
-                    },
-                    sinks,
-                );
-            }
-            *boundary_cmps += w.boundary_cmps;
-            bd.rows_replayed += w.rows;
-        }
-        bd.filter_ns += t0.elapsed().as_nanos() as u64;
-    }
-
-    /// Incremental Filter+Compute (❸ under `incremental_compute`):
-    /// instead of rewalking every cached row, update the persistent
-    /// per-feature states by the inter-trigger delta.
-    ///
-    /// Per member (feature × lane) with window `w`, between the previous
-    /// sync `prev` and the trigger `now`:
-    /// * **retract** the rows whose age crossed the member's lower
-    ///   boundary — timestamps in `[prev − w, now − w)`, found in the
-    ///   expired prefix plus the retained cached prefix (already
-    ///   isolated by `prune_before` and the lane ordering);
-    /// * **push** the fresh rows at/above the boundary (`ts ≥ now − w`).
-    ///
-    /// The delta path is valid for a feature only if every backing lane
-    /// survived in the cache since the previous extraction (watermark ==
-    /// previous trigger). Otherwise — cold start, policy eviction,
-    /// budget shrink — the state is rebuilt from the full window
-    /// ([`FeedMode::Rebuild`]); this is also the exact-recompute
-    /// fallback when a bounded auxiliary structure reports
-    /// [`IncrementalState::is_dirty`] after the delta. Either way the
-    /// state ends the extraction synchronized to `now`, bit-equivalent
-    /// to a fresh rebuild (modulo float associativity, covered by the
-    /// 1e-9 differential bar).
-    ///
-    /// Returns one `Some(value)` per incrementally computed feature;
-    /// `None` marks features left to their one-shot sink.
-    ///
-    /// Cost note: the rebuild/one-shot fallbacks feed per (member, row)
-    /// with a per-attr binary search, without the fused walker's shared
-    /// merge-join — `O(members × window)` where `feed_lane` pays
-    /// `O(window)` per lane. That is deliberate: rebuilds only run on
-    /// cold start, lane eviction, or aux-set exhaustion, and sharing
-    /// the steady-state delta machinery keeps the two paths
-    /// bit-equivalent. A session that expects frequent evictions should
-    /// simply run the classic path.
-    fn feed_incremental(
-        &mut self,
-        avail: &HashMap<EventTypeId, TypeRows>,
-        now: TimestampMs,
-        sinks: &mut [FeatureAcc],
-        bd: &mut OpBreakdown,
-    ) -> Vec<Option<FeatureValue>> {
-        let compiled = Arc::clone(&self.compiled);
-        let plan = &compiled.plan;
-        let t0 = Instant::now();
-        let bank = self.inc.get_or_insert_with(|| IncBank {
-            synced_at: None,
-            states: plan
-                .features
-                .iter()
-                .map(IncrementalState::for_spec)
-                .collect(),
-        });
-        let prev = bank.synced_at;
-
-        let modes: Vec<FeedMode> = plan
-            .features
-            .iter()
-            .zip(&bank.states)
-            .map(|(spec, st)| {
-                if st.is_none() {
-                    FeedMode::Oneshot
-                } else if prev.is_some()
-                    && spec
-                        .event_types
-                        .iter()
-                        .all(|t| avail.get(t).is_some_and(|r| r.resumed == prev))
-                {
-                    FeedMode::Delta
-                } else {
-                    FeedMode::Rebuild
-                }
-            })
-            .collect();
-        for (mode, st) in modes.iter().zip(bank.states.iter_mut()) {
-            if let Some(st) = st {
-                match mode {
-                    FeedMode::Delta => st.rebase(now),
-                    FeedMode::Rebuild => st.reset(now),
-                    FeedMode::Oneshot => {}
-                }
-            }
-        }
-
-        // Delta iff every lane survived, so `prev` is set for Delta.
-        let prev_now = prev.unwrap_or(now);
-        for lane in &plan.lanes {
-            let rows = &avail[&lane.event_type];
-            for group in &lane.groups {
-                let w = group.window.duration_ms;
-                let new_lo = now - w;
-                let old_lo = prev_now - w;
-                // Boundary slices depend only on the group's window —
-                // one set of binary searches shared by every member
-                // (the same per-group sharing the hierarchical walker
-                // exploits). Crossing rows (`[old_lo, new_lo)`) live in
-                // the expired slice plus the retained cached prefix;
-                // the member's current window is the cached suffix plus
-                // the fresh suffix.
-                let es = rows.expired.partition_point(|r| r.ts < old_lo);
-                let ee = rows.expired.partition_point(|r| r.ts < new_lo);
-                let cs = rows.cached.rows.partition_point(|r| r.ts < old_lo);
-                let ce = rows.cached.rows.partition_point(|r| r.ts < new_lo);
-                let fs = rows.fresh.partition_point(|r| r.ts < new_lo);
-                for m in &group.members {
-                    match modes[m.feature_idx] {
-                        FeedMode::Delta => {
-                            let st = bank.states[m.feature_idx].as_mut().unwrap();
-                            for r in rows.expired[es..ee]
-                                .iter()
-                                .chain(rows.cached.rows.range(cs..ce))
-                            {
-                                bd.rows_delta += 1;
-                                for &a in &m.attrs {
-                                    if let Some(v) = attr_of(r, a) {
-                                        st.retract(r.ts, r.seq, v);
-                                    }
-                                }
-                            }
-                            for r in &rows.fresh[fs..] {
-                                bd.rows_delta += 1;
-                                for &a in &m.attrs {
-                                    if let Some(v) = attr_of(r, a) {
-                                        st.push(r.ts, r.seq, v);
-                                    }
-                                }
-                            }
-                        }
-                        FeedMode::Rebuild => {
-                            let st = bank.states[m.feature_idx].as_mut().unwrap();
-                            for r in rows
-                                .cached
-                                .rows
-                                .range(ce..)
-                                .chain(rows.fresh[fs..].iter())
-                            {
-                                bd.rows_replayed += 1;
-                                for &a in &m.attrs {
-                                    if let Some(v) = attr_of(r, a) {
-                                        st.push(r.ts, r.seq, v);
-                                    }
-                                }
-                            }
-                        }
-                        FeedMode::Oneshot => {
-                            let sink = &mut sinks[m.feature_idx];
-                            for r in rows
-                                .cached
-                                .rows
-                                .range(ce..)
-                                .chain(rows.fresh[fs..].iter())
-                            {
-                                bd.rows_replayed += 1;
-                                for &a in &m.attrs {
-                                    if let Some(v) = attr_of(r, a) {
-                                        sink.push(r.ts, r.seq, v);
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-
-        // Exact-recompute fallback: any state whose bounded structure
-        // was exhausted by the delta rebuilds from the cached window.
-        // Self-healing and test-observable (rows_replayed > 0) — the
-        // release-mode replacement for a debug assert.
-        for i in 0..plan.features.len() {
-            let needs_repair = matches!(modes[i], FeedMode::Delta)
-                && bank.states[i].as_ref().is_some_and(|st| st.is_dirty());
-            if !needs_repair {
-                continue;
-            }
-            let st = bank.states[i].as_mut().unwrap();
-            st.reset(now);
-            for lane in &plan.lanes {
-                let rows = &avail[&lane.event_type];
-                for group in &lane.groups {
-                    let new_lo = now - group.window.duration_ms;
-                    for m in &group.members {
-                        if m.feature_idx != i {
-                            continue;
-                        }
-                        for r in window_rows(rows, new_lo) {
-                            bd.rows_replayed += 1;
-                            for &a in &m.attrs {
-                                if let Some(v) = attr_of(r, a) {
-                                    st.push(r.ts, r.seq, v);
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-
-        bank.synced_at = Some(now);
-        bd.filter_ns += t0.elapsed().as_nanos() as u64;
-
-        let t1 = Instant::now();
-        let values: Vec<Option<FeatureValue>> = bank
-            .states
-            .iter()
-            .map(|st| st.as_ref().map(|s| s.snapshot()))
-            .collect();
-        bd.compute_ns += t1.elapsed().as_nanos() as u64;
-        values
-    }
-
-    /// No-cache lane execution: own Retrieve/Decode per lane (the
-    /// unoptimized cross-execution path).
-    fn run_lane_uncached(
-        &self,
-        lane_idx: usize,
-        store: &AppLogStore,
-        now: TimestampMs,
-        sinks: &mut [FeatureAcc],
-        bd: &mut OpBreakdown,
-        boundary_cmps: &mut u64,
-    ) -> Result<()> {
-        let lane = &self.compiled.plan.lanes[lane_idx];
-        // §Perf: fused lanes only read their attr union, decoded at
-        // segment granularity behind the zone maps.
-        let (rows, stats) = query::retrieve_project(
-            store,
-            lane.event_type,
-            lane.max_window.window_at(now),
-            self.codec.as_ref(),
-            &lane.attr_union,
-        )?;
-        bd.retrieve_ns += stats.retrieve_ns;
-        bd.rows_retrieved += stats.rows;
-        bd.decode_ns += stats.decode_ns;
-        bd.rows_decoded += stats.rows;
-
-        let t0 = Instant::now();
-        if self.cfg.hierarchical_filter {
-            let mut w = LaneWalker::new(lane, now);
-            for r in &rows {
-                w.push_row(
-                    lane,
-                    RowView {
-                        ts: r.ts,
-                        seq: r.seq,
-                        attrs: &r.attrs,
-                    },
-                    sinks,
-                );
-            }
-            *boundary_cmps += w.boundary_cmps;
-            bd.rows_replayed += w.rows;
-        } else {
-            let mut w = DirectWalker::new();
-            for r in &rows {
-                w.push_row(
-                    lane,
-                    now,
-                    RowView {
-                        ts: r.ts,
-                        seq: r.seq,
-                        attrs: &r.attrs,
-                    },
-                    sinks,
-                );
-            }
-            *boundary_cmps += w.boundary_cmps;
-            bd.rows_replayed += w.rows;
-        }
-        bd.filter_ns += t0.elapsed().as_nanos() as u64;
-        Ok(())
-    }
-
-    /// ❹ Cache update: valuate candidates, select under budget, rebuild.
-    fn update_cache(
-        &mut self,
-        avail: HashMap<EventTypeId, TypeRows>,
-        now: TimestampMs,
-        bd: &mut OpBreakdown,
-    ) {
-        let t0 = Instant::now();
-        let interval = self.interval_ms(now);
-        let mut entries: Vec<(EventTypeId, CachedLane)> = Vec::with_capacity(avail.len());
-        let mut candidates: Vec<Candidate> = Vec::with_capacity(avail.len());
-        for (t, rows) in avail {
-            let mut lane = rows.cached;
-            for r in rows.fresh {
-                lane.push(r);
-            }
-            lane.watermark = now;
-            let window_ms = self.compiled.type_windows[&t];
-            candidates.push(evaluate(
-                t,
-                lane.len(),
-                lane.bytes(),
-                window_ms,
-                interval,
-                self.compiled.profile.stat(t),
-            ));
-            entries.push((t, lane));
-        }
-        let selection = select(self.cfg.policy, &candidates, self.cache.budget());
-        self.cache.clear();
-        // In incremental mode empty lanes are cached unconditionally —
-        // the policy rightly scores them at zero utility, but they also
-        // cost zero bytes, and dropping them would break watermark
-        // continuity for every feature touching an idle type, forcing a
-        // full O(window) rebuild of the feature's *other* lanes on each
-        // trigger.
-        let keep_empty = self.cfg.incremental_compute;
-        for (keep, (_, lane)) in selection.into_iter().zip(entries) {
-            if (keep && !lane.is_empty()) || (keep_empty && lane.is_empty()) {
-                // Selection cost == lane bytes (zero for the empty
-                // lanes), so insertion cannot fail.
-                let _ = self.cache.insert(lane);
-            }
-        }
-        bd.cache_ns += t0.elapsed().as_nanos() as u64;
     }
 }
 
@@ -709,76 +205,33 @@ impl Extractor for Engine {
                 }
             }
         }
+        // Schedule the lowered pipelines — strategy dispatch, lane
+        // walks, cache bridging and per-operator metering all live in
+        // the executor.
         let wall = Instant::now();
-        let mut bd = OpBreakdown::default();
-        let mut boundary_cmps = 0u64;
-        let mut sinks: Vec<FeatureAcc> = self
-            .compiled
-            .plan
-            .features
-            .iter()
-            .map(|f| FeatureAcc::new(f, now))
-            .collect();
-
-        let mut inc_values: Option<Vec<Option<FeatureValue>>> = None;
-        if self.cfg.enable_cache {
-            // Build per-type row sets once (❶❷), shared across all lanes
-            // of the type, then feed every lane (❸) — classic full
-            // rewalk or the incremental delta path.
-            let mut avail: HashMap<EventTypeId, TypeRows> = HashMap::new();
-            for lane_idx in 0..self.compiled.plan.lanes.len() {
-                let t = self.compiled.plan.lanes[lane_idx].event_type;
-                if !avail.contains_key(&t) {
-                    let rows = self.build_type_rows(store, t, now, &mut bd)?;
-                    avail.insert(t, rows);
-                }
-            }
-            if self.cfg.incremental_compute {
-                inc_values = Some(self.feed_incremental(&avail, now, &mut sinks, &mut bd));
-            } else {
-                for lane_idx in 0..self.compiled.plan.lanes.len() {
-                    let rows = &avail[&self.compiled.plan.lanes[lane_idx].event_type];
-                    self.feed_lane(lane_idx, rows, now, &mut sinks, &mut bd, &mut boundary_cmps);
-                }
-            }
-            self.update_cache(avail, now, &mut bd);
-        } else {
-            for lane_idx in 0..self.compiled.plan.lanes.len() {
-                self.run_lane_uncached(
-                    lane_idx,
-                    store,
-                    now,
-                    &mut sinks,
-                    &mut bd,
-                    &mut boundary_cmps,
-                )?;
-            }
-        }
-
-        // Assemble (❸ tail): incremental snapshots where available,
-        // finished one-shot accumulators everywhere else.
-        let t0 = Instant::now();
-        let values: Vec<FeatureValue> = match inc_values {
-            Some(iv) => sinks
-                .into_iter()
-                .zip(iv)
-                .map(|(s, v)| v.unwrap_or_else(|| s.finish()))
-                .collect(),
-            None => sinks.into_iter().map(|s| s.finish()).collect(),
-        };
-        bd.compute_ns += t0.elapsed().as_nanos() as u64;
+        let interval_ms = self.interval_ms(now);
+        let out = pipeline::execute(
+            &self.compiled,
+            self.codec.as_ref(),
+            self.cfg.policy,
+            &mut self.cache,
+            &mut self.inc,
+            store,
+            now,
+            interval_ms,
+        )?;
 
         self.last_now = Some(now);
         if self.cfg.staleness_ttl_ms > 0 {
-            self.last_values = Some((now, values.clone()));
+            self.last_values = Some((now, out.values.clone()));
         }
         Ok(ExtractionResult {
-            values,
-            breakdown: bd,
+            values: out.values,
+            breakdown: out.counters.breakdown(),
             wall_ns: wall.elapsed().as_nanos() as u64,
             cache_bytes: self.cache.used_bytes(),
             cached_types: self.cache.num_types(),
-            boundary_cmps,
+            boundary_cmps: out.boundary_cmps,
             served_stale: false,
             extra_storage_bytes: 0,
         })
@@ -807,47 +260,26 @@ impl Extractor for Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::applog::codec::JsonishCodec;
-    use crate::applog::schema::{Catalog, CatalogConfig};
-    use crate::applog::store::StoreConfig;
     use crate::baseline::naive::NaiveExtractor;
-    use crate::features::catalog::{generate_feature_set, FeatureSetConfig};
-    use crate::features::spec::TimeRange;
-    use crate::workload::traces::{log_events, TraceConfig, TraceGenerator};
+    use crate::engine::exec::testutil::setup;
 
-    fn setup() -> (Catalog, Vec<FeatureSpec>, AppLogStore) {
-        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
-        let specs = generate_feature_set(
-            &cat,
-            &FeatureSetConfig {
-                num_features: 30,
-                num_types: 8,
-                identical_share: 0.7,
-                windows: vec![
-                    TimeRange::mins(5),
-                    TimeRange::mins(30),
-                    TimeRange::hours(1),
-                ],
-                multi_type_prob: 0.3,
-                seed: 77,
-            },
-        );
-        let gen = TraceGenerator::new(&cat);
-        let events = gen.generate(&TraceConfig {
-            duration_ms: 45 * 60_000,
-            seed: 9,
-            ..TraceConfig::default()
-        });
-        let mut store = AppLogStore::new(StoreConfig::default());
-        log_events(&mut store, &JsonishCodec, &events).unwrap();
-        (cat, specs, store)
-    }
-
-    fn extract_with(cfg: EngineConfig, specs: &[FeatureSpec], cat: &Catalog, store: &AppLogStore, nows: &[i64]) -> Vec<Vec<FeatureValue>> {
+    fn extract_with(
+        cfg: EngineConfig,
+        specs: &[FeatureSpec],
+        cat: &Catalog,
+        store: &AppLogStore,
+        nows: &[i64],
+    ) -> Vec<Vec<FeatureValue>> {
         let mut eng = Engine::new(specs.to_vec(), cat, cfg).unwrap();
         nows.iter()
             .map(|&now| eng.extract(store, now).unwrap().values)
             .collect()
+    }
+
+    // Helper shim: NaiveExtractor takes a CodecKind.
+    #[allow(non_snake_case)]
+    fn CodecKindForTest() -> crate::applog::codec::CodecKind {
+        crate::applog::codec::CodecKind::Jsonish
     }
 
     #[test]
@@ -888,70 +320,10 @@ mod tests {
         }
     }
 
-    // Helper shim: NaiveExtractor takes a CodecKind.
-    #[allow(non_snake_case)]
-    fn CodecKindForTest() -> crate::applog::codec::CodecKind {
-        crate::applog::codec::CodecKind::Jsonish
-    }
-
-    #[test]
-    fn cache_reduces_decoded_rows_on_second_extraction() {
-        let (cat, specs, store) = setup();
-        let mut eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
-        let r1 = eng.extract(&store, 30 * 60_000).unwrap();
-        let r2 = eng.extract(&store, 31 * 60_000).unwrap();
-        assert!(r2.rows_cached_exceed(&r1), "r1={r1:?} r2={r2:?}");
-    }
-
-    impl ExtractionResult {
-        fn rows_cached_exceed(&self, first: &ExtractionResult) -> bool {
-            self.breakdown.rows_from_cache > 0
-                && self.breakdown.rows_decoded < first.breakdown.rows_decoded
-        }
-    }
-
-    #[test]
-    fn cache_stays_under_budget() {
-        let (cat, specs, store) = setup();
-        let cfg = EngineConfig {
-            cache_budget_bytes: 8 * 1024, // tight
-            ..EngineConfig::autofeature()
-        };
-        let mut eng = Engine::new(specs, &cat, cfg).unwrap();
-        for i in 1..=10 {
-            let r = eng.extract(&store, i * 3 * 60_000).unwrap();
-            assert!(r.cache_bytes <= 8 * 1024, "step {i}: {}", r.cache_bytes);
-        }
-    }
-
-    #[test]
-    fn reset_clears_warm_state() {
-        let (cat, specs, store) = setup();
-        let mut eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
-        eng.extract(&store, 30 * 60_000).unwrap();
-        assert!(eng.cache_bytes() > 0);
-        eng.reset();
-        assert_eq!(eng.cache_bytes(), 0);
-        let r = eng.extract(&store, 31 * 60_000).unwrap();
-        assert_eq!(r.breakdown.rows_from_cache, 0);
-    }
-
-    #[test]
-    fn shrinking_budget_evicts() {
-        let (cat, specs, store) = setup();
-        let mut eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
-        eng.extract(&store, 30 * 60_000).unwrap();
-        let before = eng.cache_bytes();
-        assert!(before > 0);
-        eng.set_cache_budget(before / 2, 60_000);
-        assert!(eng.cache_bytes() <= before / 2);
-    }
-
     #[test]
     fn staleness_mode_serves_bounded_stale_values() {
         let (cat, specs, store) = setup();
-        let mut eng =
-            Engine::new(specs, &cat, EngineConfig::stale_tolerant(60_000)).unwrap();
+        let mut eng = Engine::new(specs, &cat, EngineConfig::stale_tolerant(60_000)).unwrap();
         let r1 = eng.extract(&store, 30 * 60_000).unwrap();
         assert!(!r1.served_stale);
         // Within the TTL: same values, no work.
@@ -989,156 +361,6 @@ mod tests {
         assert!(eng.extract(&store, t2 - 10_000).is_err());
         let r3 = eng.extract(&store, t3).unwrap();
         assert!(!r3.served_stale);
-    }
-
-    #[test]
-    fn incremental_steady_state_is_delta_bound() {
-        // Single-type feature sets are fully supported by the persistent
-        // path: once warm, every extraction must do O(Δ) compute work —
-        // zero full-path row visits outside the (rare, self-healing)
-        // aux-set repairs — while staying exact vs the naive oracle.
-        let (cat, _, store) = setup();
-        let specs = generate_feature_set(
-            &cat,
-            &FeatureSetConfig {
-                num_features: 24,
-                num_types: 6,
-                identical_share: 0.6,
-                windows: vec![TimeRange::mins(5), TimeRange::mins(30)],
-                multi_type_prob: 0.0, // single-lane features only
-                seed: 99,
-            },
-        );
-        // Roomy budget: every lane stays cached, so the only row visits
-        // after warm-up are deltas and (rare) aux repairs.
-        let roomy = EngineConfig {
-            cache_budget_bytes: 4 << 20,
-            ..EngineConfig::incremental()
-        };
-        let mut inc = Engine::new(specs.clone(), &cat, roomy).unwrap();
-        let mut full = Engine::new(
-            specs.clone(),
-            &cat,
-            EngineConfig {
-                incremental_compute: false,
-                ..roomy
-            },
-        )
-        .unwrap();
-        let mut naive = NaiveExtractor::new(specs, CodecKindForTest());
-        // Warm both engines.
-        inc.extract(&store, 30 * 60_000).unwrap();
-        full.extract(&store, 30 * 60_000).unwrap();
-        let (mut delta, mut replayed, mut full_replayed) = (0u64, 0u64, 0u64);
-        for step in 1..=10i64 {
-            // 10 s triggers against 5/30-min windows: the crossing +
-            // fresh delta is a few percent of the window even after
-            // accounting for the per-(member, row) counting unit of
-            // `rows_delta` vs the classic per-(lane, row) unit.
-            let now = 30 * 60_000 + step * 10_000;
-            let ri = inc.extract(&store, now).unwrap();
-            let rf = full.extract(&store, now).unwrap();
-            let want = naive.extract(&store, now).unwrap();
-            for (x, y) in ri.values.iter().zip(&want.values) {
-                assert!(x.approx_eq(y, 1e-9), "step {step}: {x:?} vs {y:?}");
-            }
-            delta += ri.breakdown.rows_delta;
-            replayed += ri.breakdown.rows_replayed;
-            full_replayed += rf.breakdown.rows_replayed;
-        }
-        assert!(delta > 0, "delta path never exercised");
-        assert!(
-            delta + replayed < full_replayed / 2,
-            "delta {delta} + replayed {replayed} vs full rewalk {full_replayed}"
-        );
-    }
-
-    #[test]
-    fn idle_type_does_not_defeat_delta_mode() {
-        // Regression: empty lanes used to be dropped by the cache
-        // update, so a feature spanning a busy type and an idle one
-        // (zero in-window rows) lost watermark continuity every trigger
-        // and rebuilt its busy lane from the full window — O(window)
-        // forever, silently defeating incremental_compute.
-        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
-        let spec = FeatureSpec {
-            id: crate::features::spec::FeatureId(0),
-            name: "busy_plus_idle".into(),
-            event_types: vec![0, 1], // type 1 never logs an event
-            window: TimeRange::mins(5),
-            attrs: vec![0],
-            comp: crate::features::compute::CompFunc::Sum,
-        }
-        .normalized();
-        let codec = JsonishCodec;
-        let mut store = AppLogStore::new(StoreConfig::default());
-        for i in 0..1200i64 {
-            store
-                .append(0, i * 1_000, codec.encode(&[(0, crate::applog::event::AttrValue::Int(i))]))
-                .unwrap();
-        }
-        let mut eng =
-            Engine::new(vec![spec.clone()], &cat, EngineConfig::incremental()).unwrap();
-        let mut naive = NaiveExtractor::new(vec![spec], CodecKindForTest());
-        eng.extract(&store, 10 * 60_000).unwrap(); // warm (rebuild)
-        for step in 1..=5i64 {
-            let now = 10 * 60_000 + step * 10_000;
-            let r = eng.extract(&store, now).unwrap();
-            assert_eq!(
-                r.breakdown.rows_replayed, 0,
-                "step {step}: idle type forced a rebuild"
-            );
-            assert!(r.breakdown.rows_delta > 0, "step {step}");
-            let want = naive.extract(&store, now).unwrap();
-            for (x, y) in r.values.iter().zip(&want.values) {
-                assert!(x.approx_eq(y, 1e-9), "step {step}: {x:?} vs {y:?}");
-            }
-        }
-    }
-
-    #[test]
-    fn incremental_rebuilds_after_budget_eviction() {
-        // "State dies with its lane": a budget shrink evicts cached
-        // lanes; the next extraction must detect the watermark mismatch,
-        // rebuild (observable as rows_replayed > 0) and stay exact.
-        let (cat, specs, store) = setup();
-        let roomy = EngineConfig {
-            cache_budget_bytes: 4 << 20,
-            ..EngineConfig::incremental()
-        };
-        let mut eng = Engine::new(specs.clone(), &cat, roomy).unwrap();
-        let mut naive = NaiveExtractor::new(specs, CodecKindForTest());
-        eng.extract(&store, 30 * 60_000).unwrap();
-        eng.extract(&store, 31 * 60_000).unwrap();
-        assert!(eng.cache_bytes() > 0);
-        eng.set_cache_budget(0, 60_000);
-        assert_eq!(eng.cache_bytes(), 0);
-        let now = 32 * 60_000;
-        let r = eng.extract(&store, now).unwrap();
-        assert!(r.breakdown.rows_replayed > 0, "eviction must force a rebuild");
-        let want = naive.extract(&store, now).unwrap();
-        for (x, y) in r.values.iter().zip(&want.values) {
-            assert!(x.approx_eq(y, 1e-9), "{x:?} vs {y:?}");
-        }
-        // Restore the budget: the path re-warms back to delta-only.
-        eng.set_cache_budget(4 << 20, 60_000);
-        eng.extract(&store, 33 * 60_000).unwrap();
-        let r = eng.extract(&store, 34 * 60_000).unwrap();
-        assert!(r.breakdown.rows_delta > 0);
-    }
-
-    #[test]
-    fn incremental_reset_clears_persistent_state() {
-        let (cat, specs, store) = setup();
-        let mut eng = Engine::new(specs, &cat, EngineConfig::incremental()).unwrap();
-        eng.extract(&store, 30 * 60_000).unwrap();
-        assert!(eng.inc.is_some());
-        eng.reset();
-        assert!(eng.inc.is_none());
-        // Post-reset extraction rebuilds cold and stays correct.
-        let r = eng.extract(&store, 31 * 60_000).unwrap();
-        assert_eq!(r.breakdown.rows_from_cache, 0);
-        assert!(r.breakdown.rows_replayed > 0);
     }
 
     #[test]
@@ -1187,84 +409,5 @@ mod tests {
         a.reset();
         assert_eq!(a.cache_bytes(), 0);
         assert!(b.cache_bytes() > 0);
-    }
-
-    #[test]
-    fn early_trigger_with_window_exceeding_history() {
-        // Regression: a trigger before `now >= window` used to push a
-        // negative window start into the lane watermark
-        // (`CachedLane::new(t, now - window_ms)`), corrupting the
-        // missing-interval bookkeeping of every later extraction.
-        let (cat, specs, _) = setup();
-        let gen = TraceGenerator::new(&cat);
-        let events = gen.generate(&TraceConfig {
-            duration_ms: 4 * 60_000, // far shorter than the 1 h windows
-            seed: 13,
-            ..TraceConfig::default()
-        });
-        let mut store = AppLogStore::new(crate::applog::store::StoreConfig::default());
-        log_events(&mut store, &JsonishCodec, &events).unwrap();
-
-        let mut eng = Engine::new(specs.clone(), &cat, EngineConfig::autofeature()).unwrap();
-        let mut naive = NaiveExtractor::new(specs, CodecKindForTest());
-        // now (2 min) << the feature windows (up to 1 h): start clamps.
-        for now in [2 * 60_000i64, 3 * 60_000, 5 * 60_000] {
-            let got = eng.extract(&store, now).unwrap();
-            let want = naive.extract(&store, now).unwrap();
-            for (x, y) in got.values.iter().zip(&want.values) {
-                assert!(x.approx_eq(y, 1e-9), "{x:?} vs {y:?} @ {now}");
-            }
-        }
-        // Second extraction must hit the cache (sane watermarks).
-        let r = eng.extract(&store, 6 * 60_000).unwrap();
-        assert!(r.breakdown.rows_from_cache > 0);
-    }
-
-    #[test]
-    fn watermarks_respect_segment_boundaries() {
-        // The consecutive-inference cache tracks a per-type timestamp
-        // watermark. Compaction re-layouts rows into columnar segments
-        // *between* extractions; the missing-interval bookkeeping (and
-        // its debug_assert against `query::count`, which now spans
-        // segments + tail) must stay exact no matter where the segment
-        // boundaries fall relative to the watermark.
-        let (cat, specs, _) = setup();
-        let gen = TraceGenerator::new(&cat);
-        let events = gen.generate(&TraceConfig {
-            duration_ms: 40 * 60_000,
-            seed: 21,
-            ..TraceConfig::default()
-        });
-        for segment_rows in [1usize, 7, 64] {
-            let mut store = AppLogStore::new(crate::applog::store::StoreConfig {
-                segment_rows,
-                ..Default::default()
-            });
-            let mut eng =
-                Engine::new(specs.clone(), &cat, EngineConfig::autofeature()).unwrap();
-            let mut naive = NaiveExtractor::new(specs.clone(), CodecKindForTest());
-            let mut fed = 0usize;
-            let mut cache_hits = 0u64;
-            for step in 1..=8i64 {
-                let now = step * 5 * 60_000;
-                let upto = events.partition_point(|e| e.timestamp_ms < now);
-                log_events(&mut store, &JsonishCodec, &events[fed..upto]).unwrap();
-                fed = upto;
-                let got = eng.extract(&store, now).unwrap();
-                let want = naive.extract(&store, now).unwrap();
-                for (x, y) in got.values.iter().zip(&want.values) {
-                    assert!(
-                        x.approx_eq(y, 1e-9),
-                        "seg_rows {segment_rows} step {step}: {x:?} vs {y:?}"
-                    );
-                }
-                cache_hits += got.breakdown.rows_from_cache;
-            }
-            assert!(
-                store.num_segments() > 0 || store.len() < segment_rows,
-                "seg_rows {segment_rows}: tail grew past the threshold unsealed"
-            );
-            assert!(cache_hits > 0, "seg_rows {segment_rows}: cache never hit");
-        }
     }
 }

@@ -205,10 +205,12 @@ pub struct IncrementalState {
 impl IncrementalState {
     /// Persistent state for a feature, or `None` when the feature can
     /// only run one-shot (order-sensitive computation spanning multiple
-    /// lanes — the same condition that buffers
-    /// [`crate::optimizer::plan::FeatureAcc`]).
+    /// lanes — exactly the condition that buffers
+    /// [`crate::optimizer::plan::FeatureAcc`], shared via
+    /// [`FeatureSpec::requires_cross_lane_order`] so the two execution
+    /// decisions cannot diverge).
     pub fn for_spec(spec: &FeatureSpec) -> Option<IncrementalState> {
-        if matches!(spec.comp, CompFunc::Concat { .. }) && spec.event_types.len() > 1 {
+        if spec.requires_cross_lane_order() {
             return None;
         }
         let mut st = IncrementalState {

@@ -75,6 +75,21 @@ impl FeatureSpec {
         self
     }
 
+    /// Whether the feature's computation is order-sensitive **and** its
+    /// observations arrive from more than one fused lane (behavior
+    /// type), so no single lane sees them in global `(ts, seq)` order.
+    ///
+    /// This is the one source of truth for two execution decisions that
+    /// must never diverge:
+    /// * the one-shot accumulator must *buffer* and sort on finish
+    ///   ([`crate::optimizer::plan::FeatureAcc::new`]), and
+    /// * the persistent incremental state cannot be maintained at all
+    ///   ([`crate::features::incremental::IncrementalState::for_spec`]),
+    ///   so plan lowering pins the feature to the one-shot path.
+    pub fn requires_cross_lane_order(&self) -> bool {
+        matches!(self.comp, CompFunc::Concat { .. }) && self.event_types.len() > 1
+    }
+
     /// Condition-overlap classification against another feature
     /// (paper §3.2 "Redundancy Identification").
     pub fn redundancy_with(&self, other: &FeatureSpec) -> RedundancyLevel {

@@ -4,97 +4,78 @@
 //! runs its own `Retrieve` → `Decode` → `Filter` → `Compute` chain
 //! independently, repeating work on overlapping rows. It is also the
 //! semantic oracle the engine's property tests compare against.
-
-use std::time::Instant;
+//!
+//! Since the ExecPlan refactor this module no longer keeps its own
+//! chain interpreter: each per-feature chain is lowered to a
+//! single-member one-shot pipeline
+//! ([`LowerConfig::baseline`] — no cache bridge, **full** payload decode
+//! with filter-time projection, direct walk) and run through the same
+//! executor as the engine ([`crate::engine::exec::pipeline`]), so there
+//! is exactly one extraction semantics in the crate. The unoptimized
+//! cost shape is preserved by the lowering, not by separate code: one
+//! `Scan` per (feature, type) sub-chain repeats the redundant
+//! `Retrieve`/`Decode` work the paper measures.
+//!
+//! Both functions are stateless conveniences and lower the plan per
+//! call; repeated extraction over the same feature set should go
+//! through [`crate::baseline::naive::NaiveExtractor`], which lowers
+//! once at construction.
 
 use anyhow::Result;
 
 use crate::applog::codec::AttrCodec;
-use crate::applog::event::{AttrValue, TimestampMs};
-use crate::applog::query::{self};
+use crate::applog::event::TimestampMs;
 use crate::applog::store::AppLogStore;
+use crate::engine::exec::pipeline::run_standalone;
 use crate::features::spec::FeatureSpec;
 use crate::features::value::FeatureValue;
+use crate::optimizer::fusion::fuse;
+use crate::optimizer::lower::{lower, LowerConfig};
 
 use super::graph::FeGraph;
 use super::node::{OpBreakdown, OpNode};
 
-/// Execute one feature's chain directly against the store.
-///
-/// Mirrors the production pipeline stage-by-stage so that the timing
-/// breakdown is attributable: retrieve (query + row copy), decode
-/// (payload parse), filter (attribute projection into a computable
-/// vector), compute (summarization).
+/// Execute one feature's chain against the store, via the lowered
+/// one-shot pipeline. The timing breakdown stays attributable:
+/// retrieve (query + row copy), decode (full payload parse), filter
+/// (projection + window walk), compute (value assembly).
 pub fn extract_feature(
     store: &AppLogStore,
     codec: &dyn AttrCodec,
     spec: &FeatureSpec,
     now: TimestampMs,
 ) -> Result<(FeatureValue, OpBreakdown)> {
-    let mut bd = OpBreakdown::default();
-
-    // Retrieve(event_names, time_range)
-    let t0 = Instant::now();
-    let rows = query::retrieve(store, &spec.event_types, spec.window.window_at(now));
-    bd.retrieve_ns = t0.elapsed().as_nanos() as u64;
-    bd.rows_retrieved = rows.len() as u64;
-
-    // Decode()
-    let t0 = Instant::now();
-    let mut decoded = Vec::with_capacity(rows.len());
-    for r in &rows {
-        decoded.push(codec.decode(&r.payload)?);
-    }
-    bd.decode_ns = t0.elapsed().as_nanos() as u64;
-    bd.rows_decoded = rows.len() as u64;
-
-    // Filter(attr_names): project onto the needed attributes, converting
-    // to a computable vector ("like C array or Python list").
-    let t0 = Instant::now();
-    let mut computable: Vec<(TimestampMs, u64, AttrValue)> = Vec::new();
-    for (r, attrs) in rows.iter().zip(&decoded) {
-        for want in &spec.attrs {
-            // Decoded attrs are sorted by id.
-            if let Ok(i) = attrs.binary_search_by_key(want, |(a, _)| *a) {
-                computable.push((r.timestamp_ms, r.seq_no, attrs[i].1.clone()));
-            }
-        }
-    }
-    bd.filter_ns = t0.elapsed().as_nanos() as u64;
-
-    // Compute(comp_func)
-    let t0 = Instant::now();
-    let mut acc = spec.comp.accumulator(now);
-    for (ts, seq, v) in &computable {
-        acc.push(*ts, *seq, v);
-    }
-    let value = acc.finish();
-    bd.compute_ns = t0.elapsed().as_nanos() as u64;
-
-    Ok((value, bd))
+    let opt = fuse(std::slice::from_ref(spec), false);
+    let exec = lower(&opt, &LowerConfig::baseline());
+    let out = run_standalone(&opt, &exec, codec, store, now)?;
+    let value = out
+        .values
+        .into_iter()
+        .next()
+        .expect("one feature in, one value out");
+    Ok((value, out.counters.breakdown()))
 }
 
 /// Execute a whole unoptimized FE-graph: every chain independently
-/// (the *w/o AutoFeature* baseline).
+/// (the *w/o AutoFeature* baseline), as one lowered one-shot plan with
+/// one single-member pipeline per sub-chain.
 pub fn execute_graph(
     graph: &FeGraph,
     store: &AppLogStore,
     codec: &dyn AttrCodec,
     now: TimestampMs,
 ) -> Result<(Vec<FeatureValue>, OpBreakdown)> {
-    let mut values = Vec::with_capacity(graph.features.len());
-    let mut total = OpBreakdown::default();
-    for chain in &graph.chains {
-        // The chain interpreter currently recognizes the canonical
-        // 4-node shape emitted by `FeGraph::from_specs`; the optimizer
-        // produces its own plan type instead of rewriting chains.
-        debug_assert!(matches!(chain.nodes[0], OpNode::Retrieve { .. }));
-        let spec = &graph.features[chain.feature_idx];
-        let (v, bd) = extract_feature(store, codec, spec, now)?;
-        values.push(v);
-        total.merge(&bd);
-    }
-    Ok((values, total))
+    // The FE-graph's chains stay the canonical 4-node shape emitted by
+    // `FeGraph::from_specs`; lowering re-derives the same per-sub-chain
+    // structure from the specs (unfused: one lane per sub-chain).
+    debug_assert!(graph
+        .chains
+        .iter()
+        .all(|c| matches!(c.nodes[0], OpNode::Retrieve { .. })));
+    let opt = fuse(&graph.features, false);
+    let exec = lower(&opt, &LowerConfig::baseline());
+    let out = run_standalone(&opt, &exec, codec, store, now)?;
+    Ok((out.values, out.counters.breakdown()))
 }
 
 #[cfg(test)]

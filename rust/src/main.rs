@@ -22,6 +22,7 @@ USAGE:
   autofeature coordinator [--service ID] [--minutes N] [--artifacts DIR]
   autofeature fleet [--service ID] [--users N] [--shards N] [--minutes N] [--cache-kb N] [--surrogate] [--seed N]
   autofeature inspect
+  autofeature explain [--service cp|kp|sr|pr|vr|all] [--no-fusion] [--no-cache] [--incremental] [--direct-filter]
   autofeature experiment [fig4|fig10|fig11|fig16|fig17|fig18|fig19a|fig19b|fig20|fig21|
                           ext-staleness|ext-codec|ext-incremental|ext-multimodel|ext-fleet|all]
                          [--full] [--artifacts DIR]
@@ -244,6 +245,45 @@ fn main() -> Result<()> {
         }
         "inspect" => {
             experiments::motivation_stats();
+        }
+        "explain" => {
+            // Print the lowered ExecPlan IR for a service's feature set
+            // (DESIGN.md §ExecPlan). The same rendering the golden
+            // plan-snapshot tests pin.
+            let service = args.get("service").unwrap_or("all");
+            let kinds: Vec<ServiceKind> = if service == "all" {
+                ServiceKind::ALL.to_vec()
+            } else {
+                vec![ServiceKind::from_id(service)
+                    .ok_or_else(|| anyhow::anyhow!("unknown service {service}"))?]
+            };
+            let mut cfg = autofeature::engine::config::EngineConfig::autofeature();
+            if args.has("no-fusion") {
+                cfg.enable_fusion = false;
+            }
+            if args.has("no-cache") {
+                cfg.enable_cache = false;
+            }
+            if args.has("incremental") {
+                cfg.incremental_compute = true;
+            }
+            if args.has("direct-filter") {
+                cfg.hierarchical_filter = false;
+            }
+            let catalog = harness::eval_catalog();
+            for kind in kinds {
+                let svc = ServiceSpec::build(kind, &catalog);
+                let compiled =
+                    autofeature::engine::offline::compile(svc.features.clone(), &catalog, &cfg)?;
+                println!(
+                    "=== {} ({}) — {} features, {} lanes ===",
+                    kind.name(),
+                    kind.id(),
+                    compiled.plan.features.len(),
+                    compiled.plan.lanes.len()
+                );
+                print!("{}", compiled.explain());
+            }
         }
         "experiment" => {
             let which = args

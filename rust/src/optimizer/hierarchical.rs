@@ -63,6 +63,9 @@ pub struct LaneWalker {
     pub boundary_cmps: u64,
     /// Rows processed.
     pub rows: u64,
+    /// Observations pushed into member accumulators (the Filter
+    /// operator's rows-out in the executor's per-operator counters).
+    pub pushes: u64,
 }
 
 const ABSENT: u32 = u32::MAX;
@@ -76,6 +79,7 @@ impl LaneWalker {
             slots: vec![ABSENT; lane.attr_union.len()],
             boundary_cmps: 0,
             rows: 0,
+            pushes: 0,
         }
     }
 
@@ -124,6 +128,7 @@ impl LaneWalker {
                     if idx != ABSENT {
                         let v = &row.attrs[idx as usize].1;
                         sinks[m.feature_idx].push(row.ts, row.seq, v);
+                        self.pushes += 1;
                     }
                 }
             }
@@ -140,6 +145,8 @@ pub struct DirectWalker {
     pub boundary_cmps: u64,
     /// Rows processed.
     pub rows: u64,
+    /// Observations pushed into member accumulators.
+    pub pushes: u64,
 }
 
 impl DirectWalker {
@@ -166,6 +173,7 @@ impl DirectWalker {
                     for &a in &m.attrs {
                         if let Some(v) = lookup(row.attrs, a) {
                             sinks[m.feature_idx].push(row.ts, row.seq, v);
+                            self.pushes += 1;
                         }
                     }
                 }

@@ -1,0 +1,763 @@
+//! Lowering: from the fused [`OptimizedPlan`] to the **ExecPlan IR** —
+//! an explicit, inspectable operator pipeline per fused lane.
+//!
+//! The optimizer's output used to stop at the lane/group geometry and
+//! leave the actual execution shape (cache bridging, rewalk vs delta,
+//! hierarchical vs direct filtering) to branches buried inside the
+//! online engine. Lowering makes those choices **plan state**: each lane
+//! becomes a staged pipeline
+//!
+//! ```text
+//! Scan → Project → Filter [→ WindowSlice] → Aggregate        (per lane)
+//!                                            Emit             (per plan)
+//! ```
+//!
+//! with an execution [`Strategy`] chosen once, at lowering time, from
+//! the engine configuration:
+//!
+//! * [`Strategy::OneShot`] — no cross-execution cache: every `Scan`
+//!   reads the app log directly ([`ScanSource::Columnar`] — segment
+//!   batches from `applog::retrieve_project`, no row materialization).
+//! * [`Strategy::CachedRewalk`] — cache-resident lanes plus a
+//!   missing-interval scan ([`ScanSource::CacheBridge`]); Filter+
+//!   Aggregate rewalk the full window each trigger.
+//! * [`Strategy::IncrementalDelta`] — as above, but a `WindowSlice`
+//!   operator isolates the inter-trigger boundary slices and `Aggregate`
+//!   maintains persistent per-feature states; features that cannot be
+//!   maintained incrementally (see
+//!   [`crate::features::spec::FeatureSpec::requires_cross_lane_order`])
+//!   are annotated
+//!   [`AggMode::OneShot`] **here**, so the executor never re-derives the
+//!   eligibility predicate.
+//!
+//! Every operator carries a content [`fingerprint`](OpDesc::fingerprint)
+//! (FNV-1a over its descriptor, chained through the pipeline), and
+//! [`ExecPlan::explain`] renders the whole plan as deterministic text —
+//! the unit the golden plan-snapshot tests pin.
+
+use std::fmt::Write as _;
+
+use crate::applog::event::{AttrId, EventTypeId};
+
+use super::plan::{FeatureAcc, OptimizedPlan};
+
+/// Execution strategy of a lowered plan, fixed at lowering time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// No cross-execution cache: one columnar log scan per lane.
+    OneShot,
+    /// Cache bridge + full Filter/Aggregate rewalk per trigger.
+    CachedRewalk,
+    /// Cache bridge + boundary-sliced delta over persistent states.
+    IncrementalDelta,
+}
+
+impl Strategy {
+    /// Display label (stable — part of the explain snapshot format).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::OneShot => "one-shot",
+            Strategy::CachedRewalk => "cached-rewalk",
+            Strategy::IncrementalDelta => "incremental-delta",
+        }
+    }
+}
+
+/// Where a `Scan` operator reads its rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScanSource {
+    /// Straight from the segmented app log (zone-map pruned segment
+    /// batches); rows are never materialized as cache entries.
+    Columnar,
+    /// Cache-resident lane plus a columnar scan of the missing interval;
+    /// fresh rows are materialized into the lane for the next trigger.
+    CacheBridge,
+}
+
+impl ScanSource {
+    fn label(&self) -> &'static str {
+        match self {
+            ScanSource::Columnar => "log",
+            ScanSource::CacheBridge => "cache+log",
+        }
+    }
+}
+
+/// Filter implementation of a lane walk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FilterMode {
+    /// Monotone boundary pointer over window groups (§3.3, Fig. 11).
+    Hierarchical,
+    /// Every row tested against every member window (the ablation).
+    Direct,
+}
+
+impl FilterMode {
+    fn label(&self) -> &'static str {
+        match self {
+            FilterMode::Hierarchical => "hierarchical",
+            FilterMode::Direct => "direct",
+        }
+    }
+}
+
+/// How one feature's `Aggregate` runs under the plan's strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggMode {
+    /// Fresh accumulator per extraction ([`FeatureAcc`]).
+    OneShot,
+    /// Persistent [`crate::features::incremental::IncrementalState`],
+    /// updated by the inter-trigger delta.
+    Persistent,
+}
+
+/// Pipeline stages, in execution order. Indexes the executor's
+/// per-operator counter table and labels explain lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Row acquisition (cache fetch and/or log retrieve).
+    Scan,
+    /// Payload decode into the attr projection.
+    Project,
+    /// Window-membership filtering (the lane walk).
+    Filter,
+    /// Inter-trigger boundary slicing (delta strategy only).
+    WindowSlice,
+    /// Feeding member accumulators / persistent states.
+    Aggregate,
+    /// Assembling final feature values.
+    Emit,
+}
+
+impl Stage {
+    /// All stages in pipeline order.
+    pub const ALL: [Stage; 6] = [
+        Stage::Scan,
+        Stage::Project,
+        Stage::Filter,
+        Stage::WindowSlice,
+        Stage::Aggregate,
+        Stage::Emit,
+    ];
+
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Stage::Scan => "Scan",
+            Stage::Project => "Project",
+            Stage::Filter => "Filter",
+            Stage::WindowSlice => "WindowSlice",
+            Stage::Aggregate => "Aggregate",
+            Stage::Emit => "Emit",
+        }
+    }
+}
+
+/// One typed operator of a lowered pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecOp {
+    /// Acquire the lane's rows over its max window.
+    Scan {
+        /// The lane's behavior type.
+        event_type: EventTypeId,
+        /// The lane's fused retrieve range (max member window).
+        window_ms: i64,
+        /// Row source.
+        source: ScanSource,
+    },
+    /// Decode payloads into an attr projection.
+    Project {
+        /// Projected attrs (the lane's attr union), or `None` for a full
+        /// decode of every attribute (the unoptimized baseline shape —
+        /// projection then happens at Filter time).
+        attrs: Option<Vec<AttrId>>,
+    },
+    /// Window-membership filtering over the lane's groups.
+    Filter {
+        /// Walk implementation.
+        mode: FilterMode,
+        /// Distinct member windows, ascending (the group boundaries).
+        windows_ms: Vec<i64>,
+        /// Total members across groups.
+        members: usize,
+    },
+    /// Boundary slicing for the delta path: per group window `w`,
+    /// isolate rows crossing `[prev - w, now - w)` (retract) and fresh
+    /// rows at/above `now - w` (push).
+    WindowSlice {
+        /// Distinct member windows, ascending.
+        windows_ms: Vec<i64>,
+    },
+    /// Feed qualifying observations into member accumulators.
+    Aggregate {
+        /// One annotation per lane member, group-major.
+        members: Vec<AggMember>,
+    },
+    /// Assemble final feature values (plan-level, after all pipelines).
+    Emit {
+        /// Number of features emitted.
+        features: usize,
+        /// Features emitted from persistent state snapshots.
+        persistent: usize,
+    },
+}
+
+impl ExecOp {
+    /// The operator's pipeline stage.
+    pub fn stage(&self) -> Stage {
+        match self {
+            ExecOp::Scan { .. } => Stage::Scan,
+            ExecOp::Project { .. } => Stage::Project,
+            ExecOp::Filter { .. } => Stage::Filter,
+            ExecOp::WindowSlice { .. } => Stage::WindowSlice,
+            ExecOp::Aggregate { .. } => Stage::Aggregate,
+            ExecOp::Emit { .. } => Stage::Emit,
+        }
+    }
+
+    /// Fold the operator's descriptor into an FNV-1a fingerprint chain.
+    fn fold(&self, h: u64) -> u64 {
+        let mut h = fnv_u8(h, self.stage() as u8);
+        match self {
+            ExecOp::Scan { event_type, window_ms, source } => {
+                h = fnv_u64(h, *event_type as u64);
+                h = fnv_u64(h, *window_ms as u64);
+                h = fnv_u8(h, *source as u8);
+            }
+            ExecOp::Project { attrs } => match attrs {
+                Some(list) => {
+                    h = fnv_u64(h, list.len() as u64 + 1);
+                    for a in list {
+                        h = fnv_u64(h, *a as u64);
+                    }
+                }
+                None => h = fnv_u64(h, 0),
+            },
+            ExecOp::Filter { mode, windows_ms, members } => {
+                h = fnv_u8(h, *mode as u8);
+                h = fnv_u64(h, *members as u64);
+                for w in windows_ms {
+                    h = fnv_u64(h, *w as u64);
+                }
+            }
+            ExecOp::WindowSlice { windows_ms } => {
+                for w in windows_ms {
+                    h = fnv_u64(h, *w as u64);
+                }
+            }
+            ExecOp::Aggregate { members } => {
+                for m in members {
+                    h = fnv_u64(h, m.feature_idx as u64);
+                    h = fnv_u8(h, m.mode as u8);
+                    h = fnv_u64(h, m.attrs.len() as u64);
+                    for a in &m.attrs {
+                        h = fnv_u64(h, *a as u64);
+                    }
+                }
+            }
+            ExecOp::Emit { features, persistent } => {
+                h = fnv_u64(h, *features as u64);
+                h = fnv_u64(h, *persistent as u64);
+            }
+        }
+        h
+    }
+
+    /// Render one explain line (without the leading indent / fp column).
+    fn render(&self) -> String {
+        match self {
+            ExecOp::Scan { event_type, window_ms, source } => format!(
+                "Scan        type={event_type} window_ms={window_ms} source={}",
+                source.label()
+            ),
+            ExecOp::Project { attrs } => match attrs {
+                Some(list) => format!("Project     attrs={list:?}"),
+                None => "Project     attrs=* (full decode)".to_string(),
+            },
+            ExecOp::Filter { mode, windows_ms, members } => format!(
+                "Filter      {} windows_ms={windows_ms:?} members={members}",
+                mode.label()
+            ),
+            ExecOp::WindowSlice { windows_ms } => {
+                format!("WindowSlice windows_ms={windows_ms:?}")
+            }
+            ExecOp::Aggregate { members } => {
+                let persistent = members
+                    .iter()
+                    .filter(|m| m.mode == AggMode::Persistent)
+                    .count();
+                let attrs: Vec<(usize, &[AttrId])> = members
+                    .iter()
+                    .map(|m| (m.feature_idx, m.attrs.as_slice()))
+                    .collect();
+                format!(
+                    "Aggregate   members={} persistent={persistent} one-shot={} attrs={attrs:?}",
+                    members.len(),
+                    members.len() - persistent
+                )
+            }
+            ExecOp::Emit { features, persistent } => format!(
+                "Emit        features={features} persistent={persistent} one-shot={}",
+                features - persistent
+            ),
+        }
+    }
+}
+
+/// One lane member's `Aggregate` annotation. Carries the member's
+/// projected attrs so the fingerprint (and explain diff) catches a
+/// member being rewired to different attributes even when the lane's
+/// attr union is unchanged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AggMember {
+    /// Index of the feature in the plan's spec list.
+    pub feature_idx: usize,
+    /// Aggregate mode under the plan's strategy.
+    pub mode: AggMode,
+    /// Attributes this member projects from the lane's rows.
+    pub attrs: Vec<AttrId>,
+}
+
+/// An operator plus its chained content fingerprint: FNV-1a over the
+/// descriptor, seeded with the upstream operator's fingerprint, so any
+/// change anywhere upstream re-fingerprints the whole suffix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpDesc {
+    /// The operator.
+    pub op: ExecOp,
+    /// Chained content fingerprint.
+    pub fingerprint: u64,
+}
+
+/// The lowered pipeline of one fused lane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LanePipeline {
+    /// Index of the lane in the source [`OptimizedPlan::lanes`].
+    pub lane_idx: usize,
+    /// Operators in stage order.
+    pub ops: Vec<OpDesc>,
+    /// The pipeline's fingerprint (= its last operator's chain value).
+    pub fingerprint: u64,
+}
+
+/// The lowered execution plan: what the one pipeline executor runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecPlan {
+    /// Execution strategy (uniform across pipelines).
+    pub strategy: Strategy,
+    /// One pipeline per fused lane, in lane order.
+    pub pipelines: Vec<LanePipeline>,
+    /// Per-feature aggregate mode (index space =
+    /// [`OptimizedPlan::features`]). All [`AggMode::OneShot`] outside the
+    /// delta strategy.
+    pub agg_modes: Vec<AggMode>,
+    /// The plan-level emit operator.
+    pub emit: OpDesc,
+    /// Whole-plan fingerprint.
+    pub fingerprint: u64,
+}
+
+/// Knobs that shape lowering — the subset of the engine configuration
+/// that is *plan structure* rather than per-session state.
+#[derive(Debug, Clone, Copy)]
+pub struct LowerConfig {
+    /// Cross-execution caching: bridges `Scan` through cached lanes.
+    pub enable_cache: bool,
+    /// Persistent incremental compute (requires `enable_cache`).
+    pub incremental_compute: bool,
+    /// Hierarchical (vs direct) lane filtering.
+    pub hierarchical_filter: bool,
+    /// Push the attr-union projection down into `Project` (the engine
+    /// shape). `false` = full decode, filter-time projection (the
+    /// unoptimized baseline shape).
+    pub projected_decode: bool,
+}
+
+impl LowerConfig {
+    /// The unoptimized-baseline shape: no cache, full decode, direct
+    /// filter — how `fegraph::exec` lowers per-feature chains.
+    pub fn baseline() -> Self {
+        LowerConfig {
+            enable_cache: false,
+            incremental_compute: false,
+            hierarchical_filter: false,
+            projected_decode: false,
+        }
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv_u8(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(FNV_PRIME)
+}
+
+fn fnv_u64(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h = fnv_u8(h, b);
+    }
+    h
+}
+
+/// Lower an optimized plan into the ExecPlan IR under `cfg`.
+///
+/// Strategy selection (the rules DESIGN.md §ExecPlan documents):
+/// * `!enable_cache` → [`Strategy::OneShot`];
+/// * `enable_cache && !incremental_compute` → [`Strategy::CachedRewalk`];
+/// * `enable_cache && incremental_compute` →
+///   [`Strategy::IncrementalDelta`], with per-feature
+///   [`AggMode::Persistent`] iff [`FeatureAcc::supports_persistent`] —
+///   the single point where persistent eligibility is decided.
+pub fn lower(plan: &OptimizedPlan, cfg: &LowerConfig) -> ExecPlan {
+    let strategy = if !cfg.enable_cache {
+        Strategy::OneShot
+    } else if cfg.incremental_compute {
+        Strategy::IncrementalDelta
+    } else {
+        Strategy::CachedRewalk
+    };
+    let delta = strategy == Strategy::IncrementalDelta;
+
+    let agg_modes: Vec<AggMode> = plan
+        .features
+        .iter()
+        .map(|f| {
+            if delta && FeatureAcc::supports_persistent(f) {
+                AggMode::Persistent
+            } else {
+                AggMode::OneShot
+            }
+        })
+        .collect();
+
+    let filter_mode = if cfg.hierarchical_filter {
+        FilterMode::Hierarchical
+    } else {
+        FilterMode::Direct
+    };
+    let source = if cfg.enable_cache {
+        ScanSource::CacheBridge
+    } else {
+        ScanSource::Columnar
+    };
+
+    let mut plan_fp = fnv_u8(FNV_OFFSET, strategy as u8);
+    let pipelines: Vec<LanePipeline> = plan
+        .lanes
+        .iter()
+        .enumerate()
+        .map(|(lane_idx, lane)| {
+            let windows_ms: Vec<i64> = lane.groups.iter().map(|g| g.window.duration_ms).collect();
+            let members: Vec<AggMember> = lane
+                .groups
+                .iter()
+                .flat_map(|g| g.members.iter())
+                .map(|m| AggMember {
+                    feature_idx: m.feature_idx,
+                    mode: agg_modes[m.feature_idx],
+                    attrs: m.attrs.clone(),
+                })
+                .collect();
+
+            let mut ops: Vec<ExecOp> = vec![
+                ExecOp::Scan {
+                    event_type: lane.event_type,
+                    window_ms: lane.max_window.duration_ms,
+                    source,
+                },
+                ExecOp::Project {
+                    attrs: cfg.projected_decode.then(|| lane.attr_union.clone()),
+                },
+                ExecOp::Filter {
+                    mode: filter_mode,
+                    windows_ms: windows_ms.clone(),
+                    members: members.len(),
+                },
+            ];
+            if delta {
+                ops.push(ExecOp::WindowSlice { windows_ms });
+            }
+            ops.push(ExecOp::Aggregate { members });
+
+            let mut chain = fnv_u64(FNV_OFFSET, lane_idx as u64);
+            let ops: Vec<OpDesc> = ops
+                .into_iter()
+                .map(|op| {
+                    chain = op.fold(chain);
+                    OpDesc {
+                        op,
+                        fingerprint: chain,
+                    }
+                })
+                .collect();
+            plan_fp = fnv_u64(plan_fp, chain);
+            LanePipeline {
+                lane_idx,
+                ops,
+                fingerprint: chain,
+            }
+        })
+        .collect();
+
+    let persistent = agg_modes
+        .iter()
+        .filter(|m| **m == AggMode::Persistent)
+        .count();
+    let emit_op = ExecOp::Emit {
+        features: plan.features.len(),
+        persistent,
+    };
+    let emit_fp = emit_op.fold(plan_fp);
+    ExecPlan {
+        strategy,
+        pipelines,
+        agg_modes,
+        emit: OpDesc {
+            op: emit_op,
+            fingerprint: emit_fp,
+        },
+        fingerprint: emit_fp,
+    }
+}
+
+impl ExecPlan {
+    /// Deterministic textual rendering of the lowered plan — the golden
+    /// plan-snapshot unit and the `autofeature explain` output. Contains
+    /// only static plan structure (no runtime measurements), so the
+    /// same feature set + config always renders byte-identically.
+    pub fn explain(&self) -> String {
+        let mut s = String::new();
+        let ExecOp::Emit { features, persistent } = &self.emit.op else {
+            unreachable!("emit slot always holds Emit")
+        };
+        writeln!(
+            s,
+            "ExecPlan strategy={} features={features} persistent={persistent} pipelines={} fp={:016x}",
+            self.strategy.label(),
+            self.pipelines.len(),
+            self.fingerprint
+        )
+        .unwrap();
+        for p in &self.pipelines {
+            writeln!(s, "  pipeline[{}] fp={:016x}", p.lane_idx, p.fingerprint).unwrap();
+            for op in &p.ops {
+                writeln!(s, "    {:<60} fp={:016x}", op.op.render(), op.fingerprint).unwrap();
+            }
+        }
+        writeln!(
+            s,
+            "  {:<62} fp={:016x}",
+            self.emit.op.render(),
+            self.emit.fingerprint
+        )
+        .unwrap();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::compute::CompFunc;
+    use crate::features::spec::{FeatureId, FeatureSpec, TimeRange};
+    use crate::optimizer::fusion::fuse;
+
+    fn spec(id: u32, types: Vec<u16>, mins: i64, comp: CompFunc) -> FeatureSpec {
+        FeatureSpec {
+            id: FeatureId(id),
+            name: format!("f{id}"),
+            event_types: types,
+            window: TimeRange::mins(mins),
+            attrs: vec![0, 2],
+            comp,
+        }
+        .normalized()
+    }
+
+    fn sample() -> OptimizedPlan {
+        fuse(
+            &[
+                spec(0, vec![1], 5, CompFunc::Count),
+                spec(1, vec![1], 60, CompFunc::Sum),
+                spec(2, vec![2], 5, CompFunc::Concat { max_len: 4 }),
+                spec(3, vec![1, 2], 30, CompFunc::Concat { max_len: 4 }),
+            ],
+            true,
+        )
+    }
+
+    fn cfg(cache: bool, inc: bool) -> LowerConfig {
+        LowerConfig {
+            enable_cache: cache,
+            incremental_compute: inc,
+            hierarchical_filter: true,
+            projected_decode: true,
+        }
+    }
+
+    #[test]
+    fn strategy_selection_rules() {
+        let plan = sample();
+        assert_eq!(lower(&plan, &cfg(false, false)).strategy, Strategy::OneShot);
+        // Incremental without cache degrades to OneShot (the engine
+        // ignores the flag without a cache to define the delta).
+        assert_eq!(lower(&plan, &cfg(false, true)).strategy, Strategy::OneShot);
+        assert_eq!(
+            lower(&plan, &cfg(true, false)).strategy,
+            Strategy::CachedRewalk
+        );
+        assert_eq!(
+            lower(&plan, &cfg(true, true)).strategy,
+            Strategy::IncrementalDelta
+        );
+    }
+
+    #[test]
+    fn pipelines_mirror_lanes_and_stage_order() {
+        let plan = sample();
+        for c in [cfg(false, false), cfg(true, false), cfg(true, true)] {
+            let exec = lower(&plan, &c);
+            assert_eq!(exec.pipelines.len(), plan.lanes.len());
+            for (p, lane) in exec.pipelines.iter().zip(&plan.lanes) {
+                let stages: Vec<Stage> = p.ops.iter().map(|o| o.op.stage()).collect();
+                let want = if exec.strategy == Strategy::IncrementalDelta {
+                    vec![
+                        Stage::Scan,
+                        Stage::Project,
+                        Stage::Filter,
+                        Stage::WindowSlice,
+                        Stage::Aggregate,
+                    ]
+                } else {
+                    vec![Stage::Scan, Stage::Project, Stage::Filter, Stage::Aggregate]
+                };
+                assert_eq!(stages, want);
+                let ExecOp::Scan {
+                    event_type,
+                    window_ms,
+                    ..
+                } = &p.ops[0].op
+                else {
+                    panic!("first op must be Scan")
+                };
+                assert_eq!(*event_type, lane.event_type);
+                assert_eq!(*window_ms, lane.max_window.duration_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn delta_annotates_persistence_from_the_shared_predicate() {
+        let plan = sample();
+        let exec = lower(&plan, &cfg(true, true));
+        for (spec, mode) in plan.features.iter().zip(&exec.agg_modes) {
+            let want = if spec.requires_cross_lane_order() {
+                AggMode::OneShot
+            } else {
+                AggMode::Persistent
+            };
+            assert_eq!(*mode, want, "{}", spec.name);
+        }
+        // Outside the delta strategy everything is one-shot.
+        let exec = lower(&plan, &cfg(true, false));
+        assert!(exec.agg_modes.iter().all(|m| *m == AggMode::OneShot));
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_content_sensitive() {
+        let plan = sample();
+        let a = lower(&plan, &cfg(true, false));
+        let b = lower(&plan, &cfg(true, false));
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.explain(), b.explain());
+        // A different strategy re-fingerprints the plan.
+        let c = lower(&plan, &cfg(true, true));
+        assert_ne!(a.fingerprint, c.fingerprint);
+        // A geometry change (one more feature) re-fingerprints too.
+        let plan2 = fuse(
+            &[
+                spec(0, vec![1], 5, CompFunc::Count),
+                spec(1, vec![1], 60, CompFunc::Sum),
+                spec(2, vec![2], 5, CompFunc::Concat { max_len: 4 }),
+                spec(3, vec![1, 2], 30, CompFunc::Concat { max_len: 4 }),
+                spec(4, vec![1], 360, CompFunc::Mean),
+            ],
+            true,
+        );
+        let d = lower(&plan2, &cfg(true, false));
+        assert_ne!(a.fingerprint, d.fingerprint);
+        // Operators chain: two pipelines never share a fingerprint, and
+        // ops within a pipeline are pairwise distinct.
+        let mut seen: Vec<u64> = Vec::new();
+        for p in &a.pipelines {
+            for op in &p.ops {
+                assert!(!seen.contains(&op.fingerprint));
+                seen.push(op.fingerprint);
+            }
+        }
+    }
+
+    #[test]
+    fn member_attr_rewire_changes_the_fingerprint() {
+        // A member reading different attrs while the lane's attr UNION
+        // stays identical must still re-fingerprint the plan (the
+        // Aggregate descriptor carries per-member attrs precisely so
+        // the golden snapshots catch union-preserving rewires).
+        let with_attrs = |f1_attrs: Vec<u16>| {
+            let specs = vec![
+                FeatureSpec {
+                    id: FeatureId(0),
+                    name: "f0".into(),
+                    event_types: vec![1],
+                    window: TimeRange::mins(5),
+                    attrs: vec![0, 2],
+                    comp: CompFunc::Count,
+                }
+                .normalized(),
+                FeatureSpec {
+                    id: FeatureId(1),
+                    name: "f1".into(),
+                    event_types: vec![1],
+                    window: TimeRange::mins(5),
+                    attrs: f1_attrs,
+                    comp: CompFunc::Count,
+                }
+                .normalized(),
+            ];
+            lower(&fuse(&specs, true), &cfg(true, false))
+        };
+        let a = with_attrs(vec![0]);
+        let b = with_attrs(vec![2]);
+        // Same lane geometry and attr union ([0, 2]) either way…
+        assert_eq!(a.pipelines.len(), b.pipelines.len());
+        // …but the rewired member shows up in fingerprint and explain.
+        assert_ne!(a.fingerprint, b.fingerprint);
+        assert_ne!(a.explain(), b.explain());
+    }
+
+    #[test]
+    fn explain_renders_every_operator() {
+        let plan = sample();
+        let exec = lower(&plan, &cfg(true, true));
+        let text = exec.explain();
+        assert!(text.starts_with("ExecPlan strategy=incremental-delta"));
+        assert_eq!(
+            text.matches("pipeline[").count(),
+            plan.lanes.len(),
+            "{text}"
+        );
+        for stage in ["Scan", "Project", "Filter", "WindowSlice", "Aggregate"] {
+            assert_eq!(
+                text.matches(&format!("    {stage}")).count(),
+                plan.lanes.len(),
+                "{stage} lines\n{text}"
+            );
+        }
+        assert_eq!(text.matches("  Emit").count(), 1);
+        // The baseline shape renders the full-decode Project.
+        let base = lower(&fuse(&plan.features, false), &LowerConfig::baseline());
+        assert_eq!(base.strategy, Strategy::OneShot);
+        assert!(base.explain().contains("attrs=* (full decode)"));
+    }
+}

@@ -17,10 +17,13 @@
 //!    ([`hierarchical`]) with `O(len(inputs) + #distinct time ranges)`
 //!    termination cost instead of `O(len(inputs) × #features)`.
 //!
-//! The result is an [`plan::OptimizedPlan`] executed by
-//! [`crate::engine::online::Engine`].
+//! The result is an [`plan::OptimizedPlan`], which [`lower`] then turns
+//! into the explicit [`lower::ExecPlan`] operator-pipeline IR that the
+//! single executor in [`crate::engine::exec`] runs for every
+//! configuration (one-shot, cached rewalk, incremental delta).
 
 pub mod fusion;
 pub mod hierarchical;
+pub mod lower;
 pub mod partition;
 pub mod plan;

@@ -114,10 +114,12 @@ impl FeatureAcc {
         crate::features::incremental::IncrementalState::for_spec(spec).is_some()
     }
 
-    /// Create the right one-shot accumulator for a feature.
+    /// Create the right one-shot accumulator for a feature. The
+    /// buffering decision is [`FeatureSpec::requires_cross_lane_order`]
+    /// — the same predicate that disqualifies a feature from the
+    /// persistent path, so the two can never diverge.
     pub fn new(spec: &FeatureSpec, now: TimestampMs) -> FeatureAcc {
-        let order_sensitive = matches!(spec.comp, CompFunc::Concat { .. });
-        if order_sensitive && spec.event_types.len() > 1 {
+        if spec.requires_cross_lane_order() {
             FeatureAcc::Buffered {
                 pairs: Vec::new(),
                 comp: spec.comp,
@@ -194,16 +196,41 @@ mod tests {
     #[test]
     fn persistent_mode_mirrors_the_buffering_condition() {
         // Exactly the features the one-shot path must buffer are the
-        // ones the persistent path cannot maintain.
-        assert!(!FeatureAcc::supports_persistent(&spec(
-            vec![0, 1],
-            CompFunc::Concat { max_len: 3 }
-        )));
-        assert!(FeatureAcc::supports_persistent(&spec(
-            vec![0],
-            CompFunc::Concat { max_len: 3 }
-        )));
-        assert!(FeatureAcc::supports_persistent(&spec(vec![0, 1, 2], CompFunc::Sum)));
+        // ones the persistent path cannot maintain. Both decisions now
+        // derive from `FeatureSpec::requires_cross_lane_order`; this
+        // sweep over every comp function x lane arity documents the
+        // contract and catches any future re-divergence (e.g. a new
+        // CompFunc wired into only one of the two paths).
+        let comps = [
+            CompFunc::Count,
+            CompFunc::Sum,
+            CompFunc::Mean,
+            CompFunc::Min,
+            CompFunc::Max,
+            CompFunc::Latest,
+            CompFunc::Earliest,
+            CompFunc::DistinctCount,
+            CompFunc::Concat { max_len: 3 },
+            CompFunc::DecayedSum {
+                half_life_ms: 60_000,
+            },
+        ];
+        for comp in comps {
+            for types in [vec![0u16], vec![0, 1], vec![0, 1, 2]] {
+                let s = spec(types, comp);
+                let buffered = matches!(FeatureAcc::new(&s, 0), FeatureAcc::Buffered { .. });
+                assert_eq!(
+                    buffered,
+                    s.requires_cross_lane_order(),
+                    "buffering diverged from the shared predicate: {s:?}"
+                );
+                assert_eq!(
+                    FeatureAcc::supports_persistent(&s),
+                    !s.requires_cross_lane_order(),
+                    "persistent eligibility diverged from the shared predicate: {s:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! Golden `explain()` plan snapshots for the lowered ExecPlan IR: all
+//! five workload services × fusion on/off × incremental on/off, so any
+//! optimizer or lowering regression shows up as a **readable plan
+//! diff** rather than a silent behavior change.
+//!
+//! Two layers of teeth:
+//! 1. **Structural invariants** (always enforced): strategy-selection
+//!    rules, pipeline count == lane count, rendering determinism.
+//! 2. **Blessed snapshots**: the concatenated renderings are compared
+//!    section-by-section against `rust/tests/golden/plans.txt`. If the
+//!    blessed file is missing it is written in place — commit it to arm
+//!    the check; delete it to re-bless after an *intentional* plan
+//!    change.
+
+use std::fmt::Write as _;
+
+use autofeature::engine::config::EngineConfig;
+use autofeature::engine::offline::compile;
+use autofeature::harness::eval_catalog;
+use autofeature::optimizer::lower::Strategy;
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+
+fn config_cells() -> Vec<(&'static str, EngineConfig)> {
+    vec![
+        ("fusion_classic", EngineConfig::autofeature()),
+        ("fusion_incremental", EngineConfig::incremental()),
+        (
+            "nofusion_classic",
+            EngineConfig {
+                enable_fusion: false,
+                ..EngineConfig::autofeature()
+            },
+        ),
+        (
+            "nofusion_incremental",
+            EngineConfig {
+                enable_fusion: false,
+                ..EngineConfig::incremental()
+            },
+        ),
+    ]
+}
+
+/// Split the snapshot file into `## <label>` sections.
+fn sections(text: &str) -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> = Vec::new();
+    for line in text.lines() {
+        if let Some(label) = line.strip_prefix("## ") {
+            out.push((label.to_string(), String::new()));
+        } else if let Some((_, body)) = out.last_mut() {
+            body.push_str(line);
+            body.push('\n');
+        }
+        // Header comment lines before the first section are dropped.
+    }
+    out
+}
+
+#[test]
+fn lowered_plans_match_golden_snapshots() {
+    let catalog = eval_catalog();
+    let mut rendered = String::from(
+        "# Golden lowered-plan snapshots (ExecPlan IR explain() renderings for the\n\
+         # five workload services x fusion on/off x incremental on/off).\n\
+         # Regenerate by deleting this file and re-running\n\
+         # `cargo test lowered_plans_match_golden_snapshots` — only after an\n\
+         # INTENTIONAL optimizer/lowering change.\n",
+    );
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        for (label, cfg) in config_cells() {
+            let compiled = compile(svc.features.clone(), &catalog, &cfg).unwrap();
+            // Layer 1: structural invariants, independent of blessing.
+            assert_eq!(
+                compiled.exec.pipelines.len(),
+                compiled.plan.lanes.len(),
+                "{}/{label}: one pipeline per lane",
+                kind.id()
+            );
+            let want_strategy = if cfg.incremental_compute {
+                Strategy::IncrementalDelta
+            } else {
+                Strategy::CachedRewalk
+            };
+            assert_eq!(
+                compiled.exec.strategy,
+                want_strategy,
+                "{}/{label}: strategy-selection rule",
+                kind.id()
+            );
+            assert_eq!(
+                compiled.exec.agg_modes.len(),
+                compiled.plan.features.len(),
+                "{}/{label}: one agg mode per feature",
+                kind.id()
+            );
+            writeln!(rendered, "## {}/{label}", kind.id()).unwrap();
+            rendered.push_str(&compiled.explain());
+        }
+    }
+
+    // Rendering determinism: recompiling one cell reproduces its
+    // section byte-for-byte (fingerprints included).
+    {
+        let svc = ServiceSpec::build(ServiceKind::SR, &catalog);
+        let cfg = EngineConfig::incremental();
+        let a = compile(svc.features.clone(), &catalog, &cfg).unwrap();
+        let b = compile(svc.features.clone(), &catalog, &cfg).unwrap();
+        assert_eq!(a.explain(), b.explain(), "explain() must be deterministic");
+    }
+
+    let golden_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("plans.txt");
+    match std::fs::read_to_string(&golden_path) {
+        Ok(blessed) => {
+            let want = sections(&blessed);
+            let got = sections(&rendered);
+            let want_labels: Vec<&String> = want.iter().map(|(l, _)| l).collect();
+            let got_labels: Vec<&String> = got.iter().map(|(l, _)| l).collect();
+            assert_eq!(
+                want_labels, got_labels,
+                "plan snapshot cell set changed — delete {} to re-bless",
+                golden_path.display()
+            );
+            for ((label, w), (_, g)) in want.iter().zip(&got) {
+                assert_eq!(
+                    w, g,
+                    "lowered plan drifted for {label} — the diff above is the plan \
+                     change; if intentional, delete {} and re-run to re-bless",
+                    golden_path.display()
+                );
+            }
+        }
+        Err(_) => {
+            std::fs::create_dir_all(golden_path.parent().unwrap()).unwrap();
+            std::fs::write(&golden_path, &rendered).unwrap();
+            println!(
+                "blessed lowered-plan snapshots at {} — commit this file",
+                golden_path.display()
+            );
+        }
+    }
+}
