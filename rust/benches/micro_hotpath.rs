@@ -18,6 +18,8 @@ use autofeature::applog::query::{retrieve, retrieve_project, TimeWindow};
 use autofeature::applog::store::{AppLogStore, StoreConfig};
 use autofeature::cache::entry::{CachedLane, CachedRow};
 use autofeature::engine::config::EngineConfig;
+use autofeature::fegraph::node::OpBreakdown;
+use autofeature::harness::experiments::{ext_fleet, Scale};
 use autofeature::features::compute::CompFunc;
 use autofeature::features::spec::{FeatureId, FeatureSpec, TimeRange};
 use autofeature::engine::online::Engine;
@@ -305,6 +307,113 @@ fn main() {
                     replayed as f64 / steps as f64,
                 );
             }
+        }
+    }
+
+    // --- batch vs row-walk executor: per-operator rows/sec ----------------
+    // The PR 6 tentpole: the uncached pipeline runs Scan→Project→Filter
+    // over `ColumnBatch + SelectionVector` (zero row materialization);
+    // `row_walk_exec` re-lowers the same plan onto the classic row walk.
+    // Rows/sec per operator come straight from the per-operator counter
+    // table (`OpBreakdown` rows ÷ ns), so the two grains are compared on
+    // identical work.
+    {
+        let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+            duration_ms: 30 * 60_000,
+            seed: 0x6BA7C4,
+            ..TraceConfig::default()
+        });
+        let mut bstore = AppLogStore::new(StoreConfig::default());
+        log_events(&mut bstore, &JsonishCodec, &trace).unwrap();
+        let steps = iters(50) as i64;
+        let nows: Vec<i64> = (0..steps).map(|i| 20 * 60_000 + i * 5_000).collect();
+        let run_exec = |row_walk: bool| -> OpBreakdown {
+            let mut eng = Engine::new(
+                svc.features.clone(),
+                &catalog,
+                EngineConfig {
+                    row_walk_exec: row_walk,
+                    // Cache off: the pure uncached OneShot pipeline.
+                    ..EngineConfig::fusion_only()
+                },
+            )
+            .unwrap();
+            let mut sum = OpBreakdown::default();
+            for &now in &nows {
+                let r = eng.extract(&bstore, now).unwrap();
+                sum.merge(&r.breakdown);
+            }
+            sum
+        };
+        // Warmup + measure, both grains.
+        run_exec(false);
+        run_exec(true);
+        let b = run_exec(false);
+        let r = run_exec(true);
+        assert_eq!(
+            b.rows_materialized, 0,
+            "uncached batch path materialized rows — the zero-copy contract broke"
+        );
+        let rate = |rows: u64, ns: u64| rows as f64 * 1e9 / ns.max(1) as f64;
+        let ops = [
+            ("Scan", b.rows_retrieved, b.retrieve_ns, r.rows_retrieved, r.retrieve_ns),
+            ("Project", b.rows_decoded, b.decode_ns, r.rows_decoded, r.decode_ns),
+            ("Filter", b.rows_replayed, b.filter_ns, r.rows_replayed, r.filter_ns),
+        ];
+        let mut json_ops = String::new();
+        for (name, brows, bns, rrows, rns) in ops {
+            let (b_rate, r_rate) = (rate(brows, bns), rate(rrows, rns));
+            println!(
+                "batch-exec {name:8} {b_rate:>14.0} rows/s   row-walk {r_rate:>14.0} rows/s   speedup {:.2}x",
+                b_rate / r_rate.max(1.0)
+            );
+            if !json_ops.is_empty() {
+                json_ops.push_str(",\n");
+            }
+            json_ops.push_str(&format!(
+                "    \"{}\": {{\"batch_rows_per_s\": {:.0}, \"row_walk_rows_per_s\": {:.0}, \"speedup\": {:.3}}}",
+                name.to_lowercase(),
+                b_rate,
+                r_rate,
+                b_rate / r_rate.max(1.0)
+            ));
+        }
+
+        // Canonical artifact: BENCH_JSON_OUT=<path> writes the batch-vs-
+        // row operator rates plus the fleet-scaling sweep as BENCH_6.json.
+        if let Ok(path) = std::env::var("BENCH_JSON_OUT") {
+            let scale = if quick() { Scale::Quick } else { Scale::Full };
+            let fleet = ext_fleet(scale).unwrap();
+            let mut json_fleet = String::new();
+            for row in &fleet {
+                if !json_fleet.is_empty() {
+                    json_fleet.push_str(",\n");
+                }
+                let cols: Vec<String> = row
+                    .cols
+                    .iter()
+                    .map(|(k, v)| format!("\"{k}\": {v:.4}"))
+                    .collect();
+                json_fleet.push_str(&format!(
+                    "    {{\"label\": \"{}\", {}}}",
+                    row.label,
+                    cols.join(", ")
+                ));
+            }
+            let json = format!(
+                "{{\n  \"pr\": 6,\n  \"bench\": \"micro_hotpath batch-vs-row + fleet_scaling\",\n  \
+                 \"quick\": {},\n  \"triggers\": {},\n  \"rows_materialized_batch\": {},\n  \
+                 \"rows_materialized_row_walk\": {},\n  \"operators\": {{\n{}\n  }},\n  \
+                 \"fleet_scaling\": [\n{}\n  ]\n}}\n",
+                quick(),
+                steps,
+                b.rows_materialized,
+                r.rows_materialized,
+                json_ops,
+                json_fleet
+            );
+            std::fs::write(&path, json).unwrap();
+            println!("wrote {path}");
         }
     }
 

@@ -1,19 +1,27 @@
-//! The `Retrieve` query path (paper §3.2, operation 1).
+//! The `Retrieve` query path (paper §3.2, operation 1) — now a **batch
+//! producer** over zero-copy column views.
 //!
 //! Mirrors the SQL the paper shows in footnote 2:
 //! `SELECT * FROM applog WHERE event_name IN {event_names} AND
 //! timestamp > {current_time - time_range}`.
 //!
-//! Three strategies are provided:
-//! * [`retrieve`] — the indexed path over the segmented store: each
-//!   sealed segment is tested against its **zone map** (min/max
-//!   timestamp, type-occupancy bitmap) and skipped wholesale when it
-//!   cannot contribute; surviving segments binary-search their per-type
-//!   position lists, and the tail is merged last. Output order is global
-//!   chronological (= position/seq order), exactly as the flat store
-//!   produced.
-//! * [`retrieve_project`] — `Retrieve` fused with a segment-granular
-//!   `Decode`: rows that survive pruning are decoded straight into the
+//! The store exposes its rows as [`ColumnBatch`]es (one per sealed
+//! segment plus one for the mutable tail), each a set of borrowed
+//! column slices. A query runs per batch as
+//!
+//! ```text
+//! zone-map skip → ts range (binary search) → predicate bitmask over
+//! the type column → SelectionVector → selective decode of survivors
+//! ```
+//!
+//! never materializing a row for positions the predicate rejects.
+//!
+//! Three consumer-facing strategies are provided:
+//! * [`retrieve`] — indexed batch retrieve returning cloned rows in
+//!   global chronological order (the production data-movement cost the
+//!   paper measures).
+//! * [`retrieve_project`] — `Retrieve` fused with a batch-granular
+//!   `Decode`: surviving positions are decoded straight into the
 //!   requested attr projection from the de-duplicated payload arena
 //!   (duplicate payloads within a segment decode once), never
 //!   materializing an owned event row.
@@ -62,34 +70,279 @@ impl TimeWindow {
     }
 }
 
-/// Matching row positions of one segment, per queried type, merged back
-/// into position (= chronological + seq) order. Returns the number of
-/// positions pushed. The zone map is consulted first: a segment whose
-/// `[min_ts, max_ts]` misses the window or whose bitmap holds none of
-/// the queried types contributes nothing and is never row-scanned.
-fn segment_positions(seg: &Segment, types: &[EventTypeId], window: TimeWindow, out: &mut Vec<u32>) {
-    if !seg.overlaps(window.start_ms, window.end_ms) || !seg.bitmap().intersects(types) {
-        return;
+/// Row positions of one [`ColumnBatch`] that survived a predicate,
+/// strictly ascending (= chronological + seq order within the batch).
+///
+/// Built by decoding a per-word bitmask (`trailing_zeros` walk), so the
+/// sorted-unique invariant holds by construction; the reusable mask
+/// buffer is the kernel scratch.
+#[derive(Debug, Default)]
+pub struct SelectionVector {
+    idx: Vec<u32>,
+    /// Bitmask scratch: one bit per row of the probed ts range.
+    mask: Vec<u64>,
+}
+
+impl SelectionVector {
+    /// Empty selection.
+    pub fn new() -> Self {
+        Self::default()
     }
-    let before = out.len();
-    let mut runs = 0usize;
-    for &t in types {
-        if !seg.bitmap().contains(t) {
-            continue;
+
+    /// Surviving row positions, strictly ascending.
+    #[inline]
+    pub fn positions(&self) -> &[u32] {
+        &self.idx
+    }
+
+    /// Number of selected rows.
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Whether nothing survived.
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// The structural invariant the batch kernels guarantee (pinned by
+    /// the property tests): positions strictly increase.
+    pub fn is_sorted_unique(&self) -> bool {
+        self.idx.windows(2).all(|w| w[0] < w[1])
+    }
+
+    /// Decode the mask into ascending positions, offset by `lo`.
+    fn flush(&mut self, lo: usize) {
+        for (wi, word) in self.mask.iter().enumerate() {
+            let mut word = *word;
+            while word != 0 {
+                let b = word.trailing_zeros() as usize;
+                self.idx.push((lo + wi * 64 + b) as u32);
+                word &= word - 1;
+            }
         }
-        let pos = seg.positions_of(t);
-        let lo = pos.partition_point(|&p| seg.ts[p as usize] < window.start_ms);
-        let hi = pos.partition_point(|&p| seg.ts[p as usize] < window.end_ms);
-        if lo < hi {
-            out.extend_from_slice(&pos[lo..hi]);
-            runs += 1;
+    }
+}
+
+/// OR rows whose dictionary code equals `want` into the mask
+/// (segment type column: one byte per row).
+fn or_mask_u8(mask: &mut [u64], codes: &[u8], want: u8) {
+    for (w, chunk) in mask.iter_mut().zip(codes.chunks(64)) {
+        let mut bits = 0u64;
+        for (i, &c) in chunk.iter().enumerate() {
+            bits |= ((c == want) as u64) << i;
+        }
+        *w |= bits;
+    }
+}
+
+/// OR rows whose type equals `want` into the mask (tail type column).
+fn or_mask_u16(mask: &mut [u64], types: &[EventTypeId], want: EventTypeId) {
+    for (w, chunk) in mask.iter_mut().zip(types.chunks(64)) {
+        let mut bits = 0u64;
+        for (i, &t) in chunk.iter().enumerate() {
+            bits |= ((t == want) as u64) << i;
+        }
+        *w |= bits;
+    }
+}
+
+/// Column source behind a batch: an immutable sealed segment or the
+/// store's mutable tail (via its lockstep column mirrors).
+#[derive(Debug, Clone, Copy)]
+enum BatchCols<'a> {
+    Seg(&'a Segment),
+    Tail {
+        types: &'a [EventTypeId],
+        rows: &'a [BehaviorEvent],
+    },
+}
+
+/// A zero-copy column view over one contiguous chronological chunk of
+/// the app log — the unit the batch executor operates on. No `RowRef`
+/// or owned row is materialized to *produce* a batch; consumers decide
+/// per selected position whether to decode or clone.
+#[derive(Debug, Clone, Copy)]
+pub struct ColumnBatch<'a> {
+    ts: &'a [TimestampMs],
+    seq: &'a [u64],
+    cols: BatchCols<'a>,
+}
+
+impl<'a> ColumnBatch<'a> {
+    fn from_segment(seg: &'a Segment) -> Self {
+        ColumnBatch {
+            ts: &seg.ts,
+            seq: &seg.seq,
+            cols: BatchCols::Seg(seg),
         }
     }
-    if runs > 1 {
-        // Per-type runs interleave within the segment; position order is
-        // append order, which is chronological with seq tie-breaking.
-        out[before..].sort_unstable();
+
+    /// Number of rows in the batch.
+    pub fn len(&self) -> usize {
+        self.ts.len()
     }
+
+    /// Whether the batch holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.ts.is_empty()
+    }
+
+    /// Whether this batch views a sealed segment (vs the mutable tail).
+    pub fn is_segment(&self) -> bool {
+        matches!(self.cols, BatchCols::Seg(_))
+    }
+
+    /// Zone map: can the window select anything here? Segments answer
+    /// from their min/max timestamps; the tail from its ts column ends.
+    #[inline]
+    pub fn overlaps(&self, window: TimeWindow) -> bool {
+        match self.cols {
+            BatchCols::Seg(seg) => seg.overlaps(window.start_ms, window.end_ms),
+            BatchCols::Tail { .. } => match (self.ts.first(), self.ts.last()) {
+                (Some(&first), Some(&last)) => first < window.end_ms && last >= window.start_ms,
+                _ => false,
+            },
+        }
+    }
+
+    /// Zone map: can the batch hold rows of type `t`? Segments answer
+    /// from their occupancy bitmap; the tail has no zone map and always
+    /// answers yes (the bitmask kernel resolves it).
+    #[inline]
+    pub fn contains_type(&self, t: EventTypeId) -> bool {
+        match self.cols {
+            BatchCols::Seg(seg) => seg.bitmap().contains(t),
+            BatchCols::Tail { .. } => true,
+        }
+    }
+
+    /// The timestamp column.
+    #[inline]
+    pub fn ts(&self) -> &'a [TimestampMs] {
+        self.ts
+    }
+
+    /// Timestamp of the row at `pos`.
+    #[inline]
+    pub fn ts_at(&self, pos: u32) -> TimestampMs {
+        self.ts[pos as usize]
+    }
+
+    /// Seq_no of the row at `pos`.
+    #[inline]
+    pub fn seq_at(&self, pos: u32) -> u64 {
+        self.seq[pos as usize]
+    }
+
+    /// Behavior type of the row at `pos`.
+    #[inline]
+    pub fn event_type_at(&self, pos: u32) -> EventTypeId {
+        match self.cols {
+            BatchCols::Seg(seg) => seg.event_type_at(pos),
+            BatchCols::Tail { types, .. } => types[pos as usize],
+        }
+    }
+
+    /// Payload bytes of the row at `pos`, borrowed from the segment
+    /// arena or the tail row.
+    #[inline]
+    pub fn payload_at(&self, pos: u32) -> &'a [u8] {
+        match self.cols {
+            BatchCols::Seg(seg) => seg.payload_at(pos),
+            BatchCols::Tail { rows, .. } => &rows[pos as usize].payload,
+        }
+    }
+
+    /// Dictionary code of the payload at `pos` (`None` for tail rows,
+    /// which are not dictionary-coded). Stable within the batch: equal
+    /// codes ⇒ identical payload bytes, the decode-memo key.
+    #[inline]
+    pub fn payload_code(&self, pos: u32) -> Option<u32> {
+        match self.cols {
+            BatchCols::Seg(seg) => Some(seg.payload_codes[pos as usize]),
+            BatchCols::Tail { .. } => None,
+        }
+    }
+
+    /// Whether the batch's payload dictionary actually de-duplicates
+    /// (decode memoization is only worth keying when it does).
+    pub fn dedup_payloads(&self) -> bool {
+        match self.cols {
+            BatchCols::Seg(seg) => seg.unique_payloads() < seg.len(),
+            BatchCols::Tail { .. } => false,
+        }
+    }
+
+    /// Materialize the row at `pos` as an owned event (clones payload).
+    pub fn materialize(&self, pos: u32) -> BehaviorEvent {
+        match self.cols {
+            BatchCols::Seg(seg) => seg.materialize(pos),
+            BatchCols::Tail { rows, .. } => rows[pos as usize].clone(),
+        }
+    }
+
+    /// The batch predicate kernel: zone-map skip → ts range by binary
+    /// search → per-type equality bitmask over the type column → sorted
+    /// selection vector. `sel` is overwritten (reusable scratch).
+    ///
+    /// `types` must be free of duplicates for SQL `IN` semantics —
+    /// duplicates are harmless to correctness (the mask OR is
+    /// idempotent) but waste a kernel pass.
+    pub fn select_types(
+        &self,
+        types: &[EventTypeId],
+        window: TimeWindow,
+        sel: &mut SelectionVector,
+    ) {
+        sel.idx.clear();
+        sel.mask.clear();
+        if !self.overlaps(window) {
+            return;
+        }
+        let lo = self.ts.partition_point(|&t| t < window.start_ms);
+        let hi = self.ts.partition_point(|&t| t < window.end_ms);
+        if lo >= hi {
+            return;
+        }
+        sel.mask.resize((hi - lo).div_ceil(64), 0);
+        match self.cols {
+            BatchCols::Seg(seg) => {
+                for &t in types {
+                    if let Some(code) = seg.code_of(t) {
+                        or_mask_u8(&mut sel.mask, &seg.type_codes()[lo..hi], code);
+                    }
+                }
+            }
+            BatchCols::Tail { types: col, .. } => {
+                for &t in types {
+                    or_mask_u16(&mut sel.mask, &col[lo..hi], t);
+                }
+            }
+        }
+        sel.flush(lo);
+    }
+}
+
+/// All column batches of a store, chronological: sealed segments first,
+/// then the mutable tail (when non-empty).
+pub fn column_batches(store: &AppLogStore) -> Vec<ColumnBatch<'_>> {
+    let mut out: Vec<ColumnBatch<'_>> = store
+        .segments()
+        .iter()
+        .map(ColumnBatch::from_segment)
+        .collect();
+    if !store.tail().is_empty() {
+        out.push(ColumnBatch {
+            ts: store.tail_ts(),
+            seq: store.tail_seq(),
+            cols: BatchCols::Tail {
+                types: store.tail_types(),
+                rows: store.tail(),
+            },
+        });
+    }
+    out
 }
 
 /// Indexed retrieve: rows of any of `event_types` within `window`,
@@ -110,41 +363,15 @@ pub fn retrieve(
     types.dedup();
 
     let mut out = Vec::new();
-    let mut scratch: Vec<u32> = Vec::new();
-    for seg in store.segments() {
-        scratch.clear();
-        segment_positions(seg, &types, window, &mut scratch);
-        out.extend(scratch.iter().map(|&p| seg.materialize(p)));
-    }
-    scratch.clear();
-    tail_positions(store, &types, window, &mut scratch);
-    let tail = store.tail();
-    out.extend(scratch.iter().map(|&p| tail[p as usize].clone()));
-    out
-}
-
-/// Matching tail positions, merged into position order.
-fn tail_positions(
-    store: &AppLogStore,
-    types: &[EventTypeId],
-    window: TimeWindow,
-    out: &mut Vec<u32>,
-) {
-    let tail = store.tail();
-    let before = out.len();
-    let mut runs = 0usize;
-    for &t in types {
-        let pos = store.tail_type_positions(t);
-        let lo = pos.partition_point(|&p| tail[p as usize].timestamp_ms < window.start_ms);
-        let hi = pos.partition_point(|&p| tail[p as usize].timestamp_ms < window.end_ms);
-        if lo < hi {
-            out.extend_from_slice(&pos[lo..hi]);
-            runs += 1;
+    let mut sel = SelectionVector::new();
+    for batch in column_batches(store) {
+        if !types.iter().any(|&t| batch.contains_type(t)) {
+            continue;
         }
+        batch.select_types(&types, window, &mut sel);
+        out.extend(sel.positions().iter().map(|&p| batch.materialize(p)));
     }
-    if runs > 1 {
-        out[before..].sort_unstable();
-    }
+    out
 }
 
 /// One row decoded straight into an attr projection (output of the
@@ -175,11 +402,13 @@ pub struct RetrieveDecodeStats {
 }
 
 /// Fused `Retrieve` + projected `Decode` for one behavior type, pushed
-/// down to segment granularity: zone maps discard whole segments, the
-/// survivors' payloads are decoded from the arena without materializing
-/// owned rows, and duplicate payloads within a segment are decoded once
-/// (dictionary de-dup). Semantically identical to `retrieve` followed by
-/// `codec.decode_project` per row — pinned by the differential tests.
+/// down to batch granularity: zone maps discard whole segments, the
+/// survivors run the bitmask kernel over their type/ts columns, and
+/// only selected positions decode their payloads from the arena —
+/// duplicate payloads within a segment decode once (dictionary
+/// de-dup), and no owned event row is ever materialized. Semantically
+/// identical to `retrieve` followed by `codec.decode_project` per row —
+/// pinned by the differential tests.
 pub fn retrieve_project(
     store: &AppLogStore,
     event_type: EventTypeId,
@@ -189,68 +418,52 @@ pub fn retrieve_project(
 ) -> Result<(Vec<DecodedRow>, RetrieveDecodeStats)> {
     let mut out = Vec::new();
     let mut stats = RetrieveDecodeStats::default();
-    let types = [event_type];
-    let mut scratch: Vec<u32> = Vec::new();
+    let mut sel = SelectionVector::new();
     let mut memo: HashMap<u32, Vec<(AttrId, AttrValue)>> = HashMap::new();
 
-    for seg in store.segments() {
+    for batch in column_batches(store) {
         let t0 = Instant::now();
-        // Zone map first: a miss discards the segment without touching
-        // its rows ("pruned"); anything past this point is a visit.
-        if !seg.overlaps(window.start_ms, window.end_ms) || !seg.bitmap().contains(event_type) {
+        // Zone map first: a miss discards a whole segment without
+        // touching its rows ("pruned"); anything past this point is a
+        // visit. The tail has no zone map and is not counted either way.
+        if batch.is_segment() && (!batch.overlaps(window) || !batch.contains_type(event_type)) {
             stats.segments_pruned += 1;
             stats.retrieve_ns += t0.elapsed().as_nanos() as u64;
             continue;
         }
-        scratch.clear();
-        segment_positions(seg, &types, window, &mut scratch);
+        batch.select_types(&[event_type], window, &mut sel);
         stats.retrieve_ns += t0.elapsed().as_nanos() as u64;
-        stats.segments_scanned += 1;
-        if scratch.is_empty() {
+        if batch.is_segment() {
+            stats.segments_scanned += 1;
+        }
+        if sel.is_empty() {
             continue;
         }
-        stats.rows += scratch.len() as u64;
+        stats.rows += sel.len() as u64;
 
         let t0 = Instant::now();
-        let dedup = seg.unique_payloads() < seg.len();
+        let dedup = batch.dedup_payloads();
         memo.clear();
-        for &p in &scratch {
+        for &p in sel.positions() {
             let attrs = if dedup {
-                let code = seg.payload_codes[p as usize];
+                let code = batch
+                    .payload_code(p)
+                    .expect("dedup batches are dictionary-coded segments");
                 match memo.get(&code) {
                     Some(a) => a.clone(),
                     None => {
-                        let a = codec.decode_project(seg.payload_at(p), wanted)?;
+                        let a = codec.decode_project(batch.payload_at(p), wanted)?;
                         memo.insert(code, a.clone());
                         a
                     }
                 }
             } else {
-                codec.decode_project(seg.payload_at(p), wanted)?
+                codec.decode_project(batch.payload_at(p), wanted)?
             };
             out.push(DecodedRow {
-                ts: seg.ts[p as usize],
-                seq: seg.seq[p as usize],
+                ts: batch.ts_at(p),
+                seq: batch.seq_at(p),
                 attrs,
-            });
-        }
-        stats.decode_ns += t0.elapsed().as_nanos() as u64;
-    }
-
-    let t0 = Instant::now();
-    scratch.clear();
-    tail_positions(store, &types, window, &mut scratch);
-    stats.retrieve_ns += t0.elapsed().as_nanos() as u64;
-    if !scratch.is_empty() {
-        stats.rows += scratch.len() as u64;
-        let t0 = Instant::now();
-        let tail = store.tail();
-        for &p in &scratch {
-            let r = &tail[p as usize];
-            out.push(DecodedRow {
-                ts: r.timestamp_ms,
-                seq: r.seq_no,
-                attrs: codec.decode_project(&r.payload, wanted)?,
             });
         }
         stats.decode_ns += t0.elapsed().as_nanos() as u64;
@@ -331,6 +544,66 @@ mod tests {
                     assert_eq!(x.payload, y.payload);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn selection_vectors_are_sorted_unique_and_match_scan() {
+        // The bitmask→selection kernel, probed batch by batch: positions
+        // strictly ascending, and the selected rows equal the linear-
+        // scan oracle in global order.
+        for segment_rows in [1usize, 7, 16, usize::MAX] {
+            let s = store_seg(segment_rows);
+            let mut sel = SelectionVector::new();
+            for w in [
+                TimeWindow::last(80_000, 50_000),
+                TimeWindow::last(100_000, 100_000),
+                TimeWindow::last(3_000, 2_000),
+                TimeWindow { start_ms: 99_500, end_ms: 200_000 },
+            ] {
+                for types in [vec![0u16], vec![1, 3], vec![0, 1, 2, 3], vec![9]] {
+                    let mut got: Vec<BehaviorEvent> = Vec::new();
+                    for batch in column_batches(&s) {
+                        batch.select_types(&types, w, &mut sel);
+                        assert!(sel.is_sorted_unique(), "seg={segment_rows}");
+                        assert_eq!(sel.len(), sel.positions().len());
+                        for &p in sel.positions() {
+                            assert!(types.contains(&batch.event_type_at(p)));
+                            assert!(w.contains(batch.ts_at(p)));
+                            got.push(batch.materialize(p));
+                        }
+                    }
+                    let want = retrieve_scan(&s, &types, w);
+                    assert_eq!(got.len(), want.len(), "seg={segment_rows} {types:?}");
+                    for (x, y) in got.iter().zip(&want) {
+                        assert_eq!(x.seq_no, y.seq_no);
+                        assert_eq!(x.payload, y.payload);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn column_batches_cover_the_whole_store_in_order() {
+        for segment_rows in [1usize, 7, 16, usize::MAX] {
+            let s = store_seg(segment_rows);
+            let batches = column_batches(&s);
+            let total: usize = batches.iter().map(|b| b.len()).sum();
+            assert_eq!(total, s.len());
+            let mut seq = 0u64;
+            for b in &batches {
+                assert!(!b.is_empty());
+                for p in 0..b.len() as u32 {
+                    assert_eq!(b.seq_at(p), seq);
+                    seq += 1;
+                }
+            }
+            // Tail batch present iff the tail holds rows.
+            assert_eq!(
+                batches.iter().filter(|b| !b.is_segment()).count(),
+                usize::from(s.tail_len() > 0)
+            );
         }
     }
 

@@ -234,6 +234,21 @@ impl Segment {
         }
     }
 
+    /// The dictionary-coded type column as a zero-copy slice (one byte
+    /// per row; decode via `type_dict`). The batch query path runs its
+    /// predicate bitmask directly over this column.
+    #[inline]
+    pub(crate) fn type_codes(&self) -> &[u8] {
+        &self.type_codes
+    }
+
+    /// Dictionary code of a behavior type within this segment, if the
+    /// segment holds any of its rows.
+    #[inline]
+    pub(crate) fn code_of(&self, t: EventTypeId) -> Option<u8> {
+        self.type_dict.iter().position(|&x| x == t).map(|c| c as u8)
+    }
+
     /// Event type of the row at `pos`.
     #[inline]
     pub(crate) fn event_type_at(&self, pos: u32) -> EventTypeId {

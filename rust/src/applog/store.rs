@@ -93,6 +93,13 @@ pub struct AppLogStore {
     tail: Vec<BehaviorEvent>,
     /// Tail secondary index: per behavior type, tail positions.
     tail_type_index: Vec<Vec<u32>>,
+    /// Column mirrors of the tail (ts / seq / type), kept in lockstep
+    /// with `tail` so the batch query path can run predicate kernels
+    /// over the mutable tail with the same zero-copy slice shape as a
+    /// sealed segment's columns.
+    tail_ts: Vec<TimestampMs>,
+    tail_seq: Vec<u64>,
+    tail_types: Vec<EventTypeId>,
     next_seq: u64,
     total_appended: u64,
 }
@@ -107,6 +114,9 @@ impl AppLogStore {
             seg_rows: 0,
             tail: Vec::new(),
             tail_type_index: Vec::new(),
+            tail_ts: Vec::new(),
+            tail_seq: Vec::new(),
+            tail_types: Vec::new(),
             next_seq: 0,
             total_appended: 0,
         }
@@ -136,6 +146,9 @@ impl AppLogStore {
             timestamp_ms,
             payload,
         });
+        self.tail_ts.push(timestamp_ms);
+        self.tail_seq.push(seq_no);
+        self.tail_types.push(event_type);
         let idx = event_type as usize;
         if self.tail_type_index.len() <= idx {
             self.tail_type_index.resize_with(idx + 1, Vec::new);
@@ -160,6 +173,9 @@ impl AppLogStore {
             self.segments.push(seg);
         }
         self.tail.clear();
+        self.tail_ts.clear();
+        self.tail_seq.clear();
+        self.tail_types.clear();
         for v in &mut self.tail_type_index {
             v.clear();
         }
@@ -255,6 +271,21 @@ impl AppLogStore {
         self.next_seq
     }
 
+    /// Tail timestamp column (lockstep mirror of `tail`; query path).
+    pub(crate) fn tail_ts(&self) -> &[TimestampMs] {
+        &self.tail_ts
+    }
+
+    /// Tail seq column (lockstep mirror of `tail`; query path).
+    pub(crate) fn tail_seq(&self) -> &[u64] {
+        &self.tail_seq
+    }
+
+    /// Tail type column (lockstep mirror of `tail`; query path).
+    pub(crate) fn tail_types(&self) -> &[EventTypeId] {
+        &self.tail_types
+    }
+
     /// Tail positions of one behavior type (chronological).
     pub(crate) fn tail_type_positions(&self, t: EventTypeId) -> &[u32] {
         self.tail_type_index
@@ -311,6 +342,9 @@ impl AppLogStore {
         if keep_from > 0 {
             dropped += keep_from;
             self.tail.drain(..keep_from);
+            self.tail_ts.drain(..keep_from);
+            self.tail_seq.drain(..keep_from);
+            self.tail_types.drain(..keep_from);
             for v in &mut self.tail_type_index {
                 v.clear();
             }
@@ -354,6 +388,9 @@ impl AppLogStore {
                 store.tail_type_index.resize_with(idx + 1, Vec::new);
             }
             store.tail_type_index[idx].push(pos);
+            store.tail_ts.push(r.timestamp_ms);
+            store.tail_seq.push(r.seq_no);
+            store.tail_types.push(r.event_type);
             store.tail.push(r);
         }
         store.next_seq = next_seq;
@@ -506,6 +543,37 @@ mod tests {
             seg.storage_bytes(),
             flat.storage_bytes()
         );
+    }
+
+    #[test]
+    fn tail_column_mirrors_stay_in_lockstep() {
+        let check = |s: &AppLogStore| {
+            assert_eq!(s.tail_ts().len(), s.tail().len());
+            assert_eq!(s.tail_seq().len(), s.tail().len());
+            assert_eq!(s.tail_types().len(), s.tail().len());
+            for (i, r) in s.tail().iter().enumerate() {
+                assert_eq!(s.tail_ts()[i], r.timestamp_ms);
+                assert_eq!(s.tail_seq()[i], r.seq_no);
+                assert_eq!(s.tail_types()[i], r.event_type);
+            }
+        };
+        for seg_rows in [3usize, usize::MAX] {
+            let mut s = store_with_cfg(
+                10,
+                StoreConfig {
+                    retention_ms: 5000,
+                    segment_rows: seg_rows,
+                },
+            );
+            check(&s);
+            s.prune(10_000);
+            check(&s);
+            s.append(1, 20_000, vec![7]).unwrap();
+            check(&s);
+            s.compact();
+            check(&s);
+            assert!(s.tail().is_empty() == s.tail_ts().is_empty());
+        }
     }
 
     #[test]

@@ -37,6 +37,11 @@ pub struct EngineConfig {
     pub staleness_ttl_ms: i64,
     /// Payload codec of the app log this engine reads.
     pub codec: CodecKind,
+    /// Force the classic row-walk executor instead of the default
+    /// batch-grain one (`ExecMode` annotations at lowering). Test-only
+    /// differential oracle switch: the row walk survives solely so the
+    /// batch executor can be checked bit-for-bit against it.
+    pub row_walk_exec: bool,
 }
 
 impl Default for EngineConfig {
@@ -58,6 +63,7 @@ impl EngineConfig {
             expected_interval_ms: 5_000,
             staleness_ttl_ms: 0,
             codec: CodecKind::Jsonish,
+            row_walk_exec: false,
         }
     }
 

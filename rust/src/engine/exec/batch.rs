@@ -1,0 +1,615 @@
+//! Batch-grain lane execution ([`ExecMode::Batch`]): Scan → Project →
+//! Filter → Aggregate over `ColumnBatch + SelectionVector` instead of a
+//! materialized row stream.
+//!
+//! The uncached one-shot path runs entirely here: per column batch, the
+//! zone map either discards it outright or the bitmask kernel produces a
+//! selection vector; surviving positions decode **per unique payload**
+//! (not per row) into a reusable [`DecodedBatch`], and the lane walk
+//! consumes the selection directly — timestamps and seq_nos are read
+//! from the batch's zero-copy columns, attribute values from the
+//! decoded-payload table. No `BehaviorEvent`, `DecodedRow` or
+//! `CachedRow` is ever materialized (`ExecCounters::rows_materialized`
+//! stays 0; a release-mode test and a CI step assert it).
+//!
+//! Cached lanes are already materialized rows by design; for them
+//! [`walk_rows`] provides the batch-grain Filter+Aggregate over
+//! contiguous row slices (one per `VecDeque` half plus the fresh spill),
+//! replacing the per-row iterator chain.
+//!
+//! **Bit-identity with the row walk** (the differential suite's
+//! contract): each feature sink belongs to exactly one member of one
+//! window group per lane, and both grains feed any member its
+//! qualifying rows chronologically with the member's attrs in the same
+//! per-row order — so every sink observes the identical push sequence
+//! and the executor's rows-in/rows-out counters match exactly. Only the
+//! *boundary comparison* count differs: the row walk's monotone pointer
+//! pays O(rows + groups) per lane, the batch walk one binary search per
+//! (group, batch).
+//!
+//! [`ExecMode::Batch`]: crate::optimizer::lower::ExecMode::Batch
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::applog::codec::AttrCodec;
+use crate::applog::event::{AttrId, AttrValue, TimestampMs};
+use crate::applog::query::{column_batches, ColumnBatch, SelectionVector};
+use crate::applog::store::AppLogStore;
+use crate::cache::entry::CachedRow;
+use crate::optimizer::hierarchical::lookup;
+use crate::optimizer::lower::{FilterMode, Stage};
+use crate::optimizer::plan::{FeatureAcc, FusedLane};
+
+use super::pipeline::ExecCounters;
+
+const ABSENT: u32 = u32::MAX;
+
+/// Rows / pushes / boundary comparisons of one batch-grain walk.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct WalkStats {
+    /// Selected rows fed to the Filter stage.
+    pub rows: u64,
+    /// Observations pushed into member accumulators.
+    pub pushes: u64,
+    /// Window-boundary comparisons (binary-search probes per
+    /// (group, batch) on the hierarchical walk; per (row, member) on the
+    /// direct walk — matching the row-walk ablation's cost model).
+    pub cmps: u64,
+}
+
+impl WalkStats {
+    fn merge(&mut self, o: WalkStats) {
+        self.rows += o.rows;
+        self.pushes += o.pushes;
+        self.cmps += o.cmps;
+    }
+}
+
+/// Reusable per-batch decode table: the selection's payloads decoded
+/// into the lane's attr-union projection, **once per unique payload**
+/// (segment batches are dictionary-coded, so equal codes share one
+/// decode), plus a dense union-slot table per unique payload so member
+/// pushes index attr values in O(1) — the batch-grain analogue of the
+/// row walker's per-row merge-join.
+#[derive(Debug, Default)]
+pub(crate) struct DecodedBatch {
+    /// Decoded `(attr, value)` pairs of all unique payloads, flat.
+    flat: Vec<(AttrId, AttrValue)>,
+    /// Per unique payload: `(start, len)` into `flat`.
+    uniq: Vec<(u32, u32)>,
+    /// Per unique payload: `union_len` slots, `slots[u * union_len + j]`
+    /// = index of `union[j]` within the payload's attrs, or `ABSENT`.
+    slots: Vec<u32>,
+    /// Per selected row (parallel to the selection): unique-payload id.
+    row_uniq: Vec<u32>,
+    /// Dictionary code → unique-payload id memo (segment batches).
+    memo: HashMap<u32, u32>,
+    union_len: usize,
+}
+
+impl DecodedBatch {
+    /// Decode the selection's surviving payloads into `union` order.
+    pub(crate) fn decode(
+        &mut self,
+        cb: &ColumnBatch<'_>,
+        sel: &SelectionVector,
+        codec: &dyn AttrCodec,
+        union: &[AttrId],
+    ) -> Result<()> {
+        self.flat.clear();
+        self.uniq.clear();
+        self.slots.clear();
+        self.row_uniq.clear();
+        self.memo.clear();
+        self.union_len = union.len();
+        let dedup = cb.dedup_payloads();
+        for &p in sel.positions() {
+            let u = if dedup {
+                let code = cb
+                    .payload_code(p)
+                    .expect("dedup batches are dictionary-coded segments");
+                match self.memo.get(&code) {
+                    Some(&u) => u,
+                    None => {
+                        let u = self.push_unique(cb.payload_at(p), codec, union)?;
+                        self.memo.insert(code, u);
+                        u
+                    }
+                }
+            } else {
+                self.push_unique(cb.payload_at(p), codec, union)?
+            };
+            self.row_uniq.push(u);
+        }
+        Ok(())
+    }
+
+    fn push_unique(
+        &mut self,
+        payload: &[u8],
+        codec: &dyn AttrCodec,
+        union: &[AttrId],
+    ) -> Result<u32> {
+        let attrs = codec.decode_project(payload, union)?;
+        let start = self.flat.len() as u32;
+        // Merge-join decoded attrs (sorted) x union (sorted) into the
+        // payload's slot row.
+        let base = self.slots.len();
+        self.slots.resize(base + union.len(), ABSENT);
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < attrs.len() && j < union.len() {
+            match attrs[i].0.cmp(&union[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    self.slots[base + j] = i as u32;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        self.uniq.push((start, attrs.len() as u32));
+        self.flat.extend(attrs);
+        Ok((self.uniq.len() - 1) as u32)
+    }
+
+    /// Decoded attrs of one unique payload.
+    #[inline]
+    fn attrs_of(&self, u: u32) -> &[(AttrId, AttrValue)] {
+        let (start, len) = self.uniq[u as usize];
+        &self.flat[start as usize..(start + len) as usize]
+    }
+
+    /// Union-slot row of one unique payload.
+    #[inline]
+    fn slots_of(&self, u: u32) -> &[u32] {
+        let base = u as usize * self.union_len;
+        &self.slots[base..base + self.union_len]
+    }
+}
+
+/// First index of `pos` whose timestamp is `>= lo_ts` (the group's
+/// qualifying suffix), counting every probe as a boundary comparison.
+fn suffix_start(
+    cb: &ColumnBatch<'_>,
+    pos: &[u32],
+    lo_ts: TimestampMs,
+    cmps: &mut u64,
+) -> usize {
+    let (mut lo, mut hi) = (0usize, pos.len());
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        *cmps += 1;
+        if cb.ts_at(pos[mid]) < lo_ts {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// [`suffix_start`] over a cached-row slice.
+fn suffix_start_rows(rows: &[CachedRow], lo_ts: TimestampMs, cmps: &mut u64) -> usize {
+    let (mut lo, mut hi) = (0usize, rows.len());
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        *cmps += 1;
+        if rows[mid].ts < lo_ts {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Filter + Aggregate over one batch's selection vector: per window
+/// group, binary-search the qualifying suffix once, then feed every
+/// member its rows straight from the decode table.
+pub(crate) fn walk_selection(
+    lane: &FusedLane,
+    mode: FilterMode,
+    now: TimestampMs,
+    cb: &ColumnBatch<'_>,
+    sel: &SelectionVector,
+    dec: &DecodedBatch,
+    sinks: &mut [FeatureAcc],
+) -> WalkStats {
+    let pos = sel.positions();
+    let mut st = WalkStats {
+        rows: pos.len() as u64,
+        ..Default::default()
+    };
+    match mode {
+        FilterMode::Hierarchical => {
+            for group in &lane.groups {
+                let lo_ts = now - group.window.duration_ms;
+                let start = suffix_start(cb, pos, lo_ts, &mut st.cmps);
+                for m in &group.members {
+                    for (k, &p) in pos.iter().enumerate().skip(start) {
+                        let u = dec.row_uniq[k];
+                        let slots = dec.slots_of(u);
+                        let attrs = dec.attrs_of(u);
+                        for &slot in &m.attr_slots {
+                            let idx = slots[slot as usize];
+                            if idx != ABSENT {
+                                let v = &attrs[idx as usize].1;
+                                sinks[m.feature_idx].push(cb.ts_at(p), cb.seq_at(p), v);
+                                st.pushes += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        FilterMode::Direct => {
+            // The ablation's cost model: one comparison per (row,
+            // member), matching `DirectWalker` exactly.
+            for group in &lane.groups {
+                let w = group.window.duration_ms;
+                for m in &group.members {
+                    for (k, &p) in pos.iter().enumerate() {
+                        st.cmps += 1;
+                        if w >= now - cb.ts_at(p) {
+                            let attrs = dec.attrs_of(dec.row_uniq[k]);
+                            for &a in &m.attrs {
+                                if let Some(v) = lookup(attrs, a) {
+                                    sinks[m.feature_idx].push(cb.ts_at(p), cb.seq_at(p), v);
+                                    st.pushes += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    st
+}
+
+/// Batch-grain Filter + Aggregate over a contiguous cached-row slice —
+/// the cached-rewalk strategy's walk, fed one slice per `VecDeque` half
+/// plus the fresh spill (chronological concatenation).
+pub(crate) fn walk_rows(
+    lane: &FusedLane,
+    mode: FilterMode,
+    now: TimestampMs,
+    rows: &[CachedRow],
+    sinks: &mut [FeatureAcc],
+) -> WalkStats {
+    let mut st = WalkStats {
+        rows: rows.len() as u64,
+        ..Default::default()
+    };
+    match mode {
+        FilterMode::Hierarchical => {
+            for group in &lane.groups {
+                let lo_ts = now - group.window.duration_ms;
+                let start = suffix_start_rows(rows, lo_ts, &mut st.cmps);
+                for m in &group.members {
+                    for r in &rows[start..] {
+                        for &a in &m.attrs {
+                            if let Some(v) = lookup(&r.attrs, a) {
+                                sinks[m.feature_idx].push(r.ts, r.seq, v);
+                                st.pushes += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        FilterMode::Direct => {
+            for group in &lane.groups {
+                let w = group.window.duration_ms;
+                for m in &group.members {
+                    for r in rows {
+                        st.cmps += 1;
+                        if w >= now - r.ts {
+                            for &a in &m.attrs {
+                                if let Some(v) = lookup(&r.attrs, a) {
+                                    sinks[m.feature_idx].push(r.ts, r.seq, v);
+                                    st.pushes += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    st
+}
+
+/// Run one uncached lane end-to-end at batch grain, metering every
+/// operator. The Scan's zone checks are timed even for pruned batches
+/// (matching the row path's `retrieve_ns` semantics); `batches` counts
+/// only batches that survive the zone map.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_lane_oneshot(
+    lane: &FusedLane,
+    mode: FilterMode,
+    codec: &dyn AttrCodec,
+    store: &AppLogStore,
+    now: TimestampMs,
+    sinks: &mut [FeatureAcc],
+    c: &mut ExecCounters,
+    boundary_cmps: &mut u64,
+) -> Result<()> {
+    let window = lane.max_window.window_at(now);
+    let mut sel = SelectionVector::new();
+    let mut dec = DecodedBatch::default();
+    for cb in column_batches(store) {
+        // Scan: zone-map skip, then the bitmask selection kernel.
+        let t0 = Instant::now();
+        let pruned =
+            cb.is_segment() && (!cb.overlaps(window) || !cb.contains_type(lane.event_type));
+        if pruned {
+            c.stage_mut(Stage::Scan).add_ns(t0);
+            continue;
+        }
+        cb.select_types(&[lane.event_type], window, &mut sel);
+        let scan = c.stage_mut(Stage::Scan);
+        scan.add_ns(t0);
+        scan.batches += 1;
+        scan.rows_out += sel.len() as u64;
+        if sel.is_empty() {
+            continue;
+        }
+
+        // Project: per-unique-payload decode into the attr union.
+        let t0 = Instant::now();
+        dec.decode(&cb, &sel, codec, &lane.attr_union)?;
+        let project = c.stage_mut(Stage::Project);
+        project.add_ns(t0);
+        project.batches += 1;
+        project.rows_in += sel.len() as u64;
+        project.rows_out += sel.len() as u64;
+
+        // Filter + Aggregate directly over the selection.
+        let t0 = Instant::now();
+        let ws = walk_selection(lane, mode, now, &cb, &sel, &dec, sinks);
+        let f = c.stage_mut(Stage::Filter);
+        f.add_ns(t0);
+        f.batches += 1;
+        f.rows_in += ws.rows;
+        f.rows_out += ws.pushes;
+        c.stage_mut(Stage::Aggregate).rows_in += ws.pushes;
+        *boundary_cmps += ws.cmps;
+    }
+    Ok(())
+}
+
+/// Batch-grain cached-rewalk over a lane's row set: one walk per
+/// contiguous slice, chronological. Returns `(stats, batches walked)`.
+pub(crate) fn walk_cached_lane(
+    lane: &FusedLane,
+    mode: FilterMode,
+    now: TimestampMs,
+    cached: &crate::cache::entry::CachedLane,
+    fresh: &[CachedRow],
+    sinks: &mut [FeatureAcc],
+) -> (WalkStats, u64) {
+    let (a, b) = cached.rows.as_slices();
+    let mut st = WalkStats::default();
+    let mut batches = 0u64;
+    for slice in [a, b, fresh] {
+        if slice.is_empty() {
+            continue;
+        }
+        st.merge(walk_rows(lane, mode, now, slice, sinks));
+        batches += 1;
+    }
+    (st, batches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::codec::JsonishCodec;
+    use crate::applog::query::TimeWindow;
+    use crate::applog::store::{AppLogStore, StoreConfig};
+    use crate::features::compute::CompFunc;
+    use crate::features::spec::{FeatureId, FeatureSpec, TimeRange};
+    use crate::features::value::FeatureValue;
+    use crate::optimizer::fusion::fuse;
+    use crate::optimizer::hierarchical::{DirectWalker, LaneWalker, RowView};
+
+    fn specs() -> Vec<FeatureSpec> {
+        (0..6)
+            .map(|i| {
+                FeatureSpec {
+                    id: FeatureId(i as u32),
+                    name: format!("f{i}"),
+                    event_types: vec![1],
+                    window: TimeRange::mins([5, 30, 60][i % 3]),
+                    attrs: vec![(i % 2) as u16],
+                    comp: [CompFunc::Count, CompFunc::Sum][i % 2],
+                }
+                .normalized()
+            })
+            .collect()
+    }
+
+    fn store(segment_rows: usize) -> AppLogStore {
+        let codec = JsonishCodec;
+        let mut s = AppLogStore::new(StoreConfig {
+            segment_rows,
+            ..StoreConfig::default()
+        });
+        for i in 0..200i64 {
+            // Payloads repeat with period 21 so segment dictionaries
+            // actually dedup and the memo path gets exercised.
+            let attrs = vec![
+                (0u16, AttrValue::Int(i % 7)),
+                (1u16, AttrValue::Int(i % 3)),
+            ];
+            s.append((i % 3) as u16, i * 30_000, codec.encode(&attrs))
+                .unwrap();
+        }
+        s
+    }
+
+    #[test]
+    fn batch_walk_matches_row_walkers_bit_for_bit() {
+        let specs = specs();
+        let plan = fuse(&specs, true);
+        let lane = &plan.lanes[0];
+        let now = 200 * 30_000;
+        let window = lane.max_window.window_at(now);
+        let codec = JsonishCodec;
+
+        for segment_rows in [1usize, 7, 64, usize::MAX] {
+            let s = store(segment_rows);
+            for mode in [FilterMode::Hierarchical, FilterMode::Direct] {
+                // Batch grain.
+                let mut sinks_b: Vec<_> =
+                    specs.iter().map(|f| FeatureAcc::new(f, now)).collect();
+                let mut sel = SelectionVector::new();
+                let mut dec = DecodedBatch::default();
+                let mut bst = WalkStats::default();
+                for cb in column_batches(&s) {
+                    cb.select_types(&[lane.event_type], window, &mut sel);
+                    if sel.is_empty() {
+                        continue;
+                    }
+                    dec.decode(&cb, &sel, &codec, &lane.attr_union).unwrap();
+                    bst.merge(walk_selection(
+                        lane, mode, now, &cb, &sel, &dec, &mut sinks_b,
+                    ));
+                }
+
+                // Row grain over the same projected rows.
+                let (rows, _) = crate::applog::query::retrieve_project(
+                    &s,
+                    lane.event_type,
+                    window,
+                    &codec,
+                    &lane.attr_union,
+                )
+                .unwrap();
+                let mut sinks_r: Vec<_> =
+                    specs.iter().map(|f| FeatureAcc::new(f, now)).collect();
+                let (r_rows, r_pushes) = match mode {
+                    FilterMode::Hierarchical => {
+                        let mut w = LaneWalker::new(lane, now);
+                        for r in &rows {
+                            let rv = RowView {
+                                ts: r.ts,
+                                seq: r.seq,
+                                attrs: &r.attrs,
+                            };
+                            w.push_row(lane, rv, &mut sinks_r);
+                        }
+                        (w.rows, w.pushes)
+                    }
+                    FilterMode::Direct => {
+                        let mut w = DirectWalker::new();
+                        for r in &rows {
+                            let rv = RowView {
+                                ts: r.ts,
+                                seq: r.seq,
+                                attrs: &r.attrs,
+                            };
+                            w.push_row(lane, now, rv, &mut sinks_r);
+                        }
+                        (w.rows, w.pushes)
+                    }
+                };
+                assert_eq!(bst.rows, r_rows, "seg={segment_rows} {mode:?}");
+                assert_eq!(bst.pushes, r_pushes, "seg={segment_rows} {mode:?}");
+                let vb: Vec<FeatureValue> =
+                    sinks_b.into_iter().map(|x| x.finish()).collect();
+                let vr: Vec<FeatureValue> =
+                    sinks_r.into_iter().map(|x| x.finish()).collect();
+                assert_eq!(vb, vr, "seg={segment_rows} {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_slice_walk_matches_lane_walker() {
+        let specs = specs();
+        let plan = fuse(&specs, true);
+        let lane = &plan.lanes[0];
+        let now = 3_600_000i64;
+        let rows: Vec<CachedRow> = (0..120)
+            .map(|i| CachedRow {
+                ts: i * 30_000,
+                seq: i as u64,
+                attrs: vec![
+                    (0u16, AttrValue::Int(i % 5)),
+                    (1u16, AttrValue::Float(i as f64)),
+                ],
+            })
+            .collect();
+        for mode in [FilterMode::Hierarchical, FilterMode::Direct] {
+            let mut sinks_b: Vec<_> = specs.iter().map(|f| FeatureAcc::new(f, now)).collect();
+            // Feed as two slices — the VecDeque halves of a real lane.
+            let mut st = walk_rows(lane, mode, now, &rows[..50], &mut sinks_b);
+            st.merge(walk_rows(lane, mode, now, &rows[50..], &mut sinks_b));
+
+            let mut sinks_r: Vec<_> = specs.iter().map(|f| FeatureAcc::new(f, now)).collect();
+            let pushes = match mode {
+                FilterMode::Hierarchical => {
+                    let mut w = LaneWalker::new(lane, now);
+                    for r in &rows {
+                        let rv = RowView {
+                            ts: r.ts,
+                            seq: r.seq,
+                            attrs: &r.attrs,
+                        };
+                        w.push_row(lane, rv, &mut sinks_r);
+                    }
+                    w.pushes
+                }
+                FilterMode::Direct => {
+                    let mut w = DirectWalker::new();
+                    for r in &rows {
+                        let rv = RowView {
+                            ts: r.ts,
+                            seq: r.seq,
+                            attrs: &r.attrs,
+                        };
+                        w.push_row(lane, now, rv, &mut sinks_r);
+                    }
+                    w.pushes
+                }
+            };
+            assert_eq!(st.rows, rows.len() as u64);
+            assert_eq!(st.pushes, pushes, "{mode:?}");
+            let vb: Vec<FeatureValue> = sinks_b.into_iter().map(|x| x.finish()).collect();
+            let vr: Vec<FeatureValue> = sinks_r.into_iter().map(|x| x.finish()).collect();
+            assert_eq!(vb, vr, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn decode_table_memoizes_segment_payloads() {
+        let codec = JsonishCodec;
+        let s = store(64); // payloads repeat: dictionaries dedup
+        let union: Vec<u16> = vec![0, 1];
+        let w = TimeWindow::last(200 * 30_000, 200 * 30_000);
+        let mut sel = SelectionVector::new();
+        let mut dec = DecodedBatch::default();
+        for cb in column_batches(&s) {
+            cb.select_types(&[1], w, &mut sel);
+            if sel.is_empty() {
+                continue;
+            }
+            dec.decode(&cb, &sel, &codec, &union).unwrap();
+            assert_eq!(dec.row_uniq.len(), sel.len());
+            if cb.is_segment() {
+                assert!(dec.uniq.len() <= sel.len());
+            }
+            // Every row's table entry equals a direct projected decode.
+            for (k, &p) in sel.positions().iter().enumerate() {
+                let want = codec.decode_project(cb.payload_at(p), &union).unwrap();
+                assert_eq!(dec.attrs_of(dec.row_uniq[k]), want.as_slice());
+            }
+        }
+    }
+}

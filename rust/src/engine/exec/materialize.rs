@@ -134,9 +134,11 @@ pub(crate) fn build_type_rows(
     project.ns += stats.decode_ns;
     project.rows_in += stats.rows;
     project.rows_out += stats.rows;
+    c.rows_materialized += stats.rows;
     // The spill into cache-row form is a move (`DecodedRow` and
     // `CachedRow` share their field layout) — the lane is cache-resident
-    // by construction on this path, so materialization is warranted.
+    // by construction on this path, so materialization is warranted and
+    // counted in `rows_materialized`.
     let fresh: Vec<CachedRow> = rows
         .into_iter()
         .map(|r| CachedRow {

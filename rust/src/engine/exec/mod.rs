@@ -9,6 +9,9 @@
 //! * [`pipeline`] — the executor: strategy dispatch, lane walks, the
 //!   per-operator rows-in/rows-out/ns counter table that produces the
 //!   extraction's `OpBreakdown`.
+//! * [`batch`] — the batch-grain walkers (`ExecMode::Batch`): the
+//!   uncached one-shot path over `ColumnBatch + SelectionVector`
+//!   (zero row materialization) and the sliced cached-rewalk.
 //! * [`materialize`] — the row/cache bridge: cache fetch + missing-
 //!   interval scan into per-type row sets, and the budgeted cache
 //!   update. The only place rows become `CachedRow`s.
@@ -21,6 +24,7 @@
 //! [`pipeline::run_standalone`], so there is exactly one extraction
 //! semantics in the crate.
 
+pub(crate) mod batch;
 pub(crate) mod delta;
 pub(crate) mod materialize;
 pub mod pipeline;

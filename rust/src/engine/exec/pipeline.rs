@@ -20,6 +20,14 @@
 //! | `Aggregate`   | `filter_ns`   | rows-in = observations fed          |
 //! | `Emit`        | `compute_ns`  | rows-out = features emitted         |
 //! | cache bridge  | `cache_ns`    | rows-out → `rows_from_cache`        |
+//!
+//! Batch-mode operators additionally count `batches` (column batches /
+//! row slices processed), and the executor-level `rows_materialized`
+//! tally — every owned row the run constructed (retrieve clones,
+//! decoded row vectors, cache-row spills) — flows to
+//! `OpBreakdown::rows_materialized`. The uncached batch path keeps it
+//! at **zero** by construction (asserted in a release-mode test and a
+//! CI step).
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -35,10 +43,13 @@ use crate::cache::store::CacheStore;
 use crate::features::value::FeatureValue;
 use crate::fegraph::node::OpBreakdown;
 use crate::optimizer::hierarchical::{DirectWalker, LaneWalker, RowView};
-use crate::optimizer::lower::{ExecOp, ExecPlan, FilterMode, LanePipeline, Stage, Strategy};
+use crate::optimizer::lower::{
+    ExecMode, ExecOp, ExecPlan, FilterMode, LanePipeline, Stage, Strategy,
+};
 use crate::optimizer::plan::{FeatureAcc, FusedLane, OptimizedPlan};
 
 use super::super::offline::CompiledEngine;
+use super::batch;
 use super::delta::{self, IncBank};
 use super::materialize::{self, TypeRows};
 
@@ -52,10 +63,13 @@ pub struct StageCounters {
     pub rows_out: u64,
     /// Wall time spent in the operator (ns).
     pub ns: u64,
+    /// Column batches (or contiguous row slices) processed — only the
+    /// batch-grain walkers count these; row-walk operators leave 0.
+    pub batches: u64,
 }
 
 impl StageCounters {
-    fn add_ns(&mut self, t0: Instant) {
+    pub(crate) fn add_ns(&mut self, t0: Instant) {
         self.ns += t0.elapsed().as_nanos() as u64;
     }
 }
@@ -69,6 +83,9 @@ pub struct ExecCounters {
     /// Cache-bridge work: `ns` = fetch + update, `rows_out` = rows
     /// served from the cache.
     pub cache: StageCounters,
+    /// Owned rows this run constructed: retrieve clones, decoded row
+    /// vectors, cache-row spills. The uncached batch path stays at 0.
+    pub rows_materialized: u64,
 }
 
 impl ExecCounters {
@@ -99,6 +116,7 @@ impl ExecCounters {
             rows_from_cache: self.cache.rows_out,
             rows_replayed: self.stage(Stage::Filter).rows_in,
             rows_delta: self.stage(Stage::WindowSlice).rows_out,
+            rows_materialized: self.rows_materialized,
         }
     }
 }
@@ -123,6 +141,16 @@ fn filter_mode(pipe: &LanePipeline) -> FilterMode {
             _ => None,
         })
         .unwrap_or(FilterMode::Hierarchical)
+}
+
+/// The lowered Filter operator's execution grain for a pipeline —
+/// decides whether the compute stages run the batch-grain walkers.
+fn filter_exec_mode(pipe: &LanePipeline) -> ExecMode {
+    pipe.ops
+        .iter()
+        .find(|o| matches!(o.op, ExecOp::Filter { .. }))
+        .map(|o| o.mode)
+        .unwrap_or(ExecMode::RowWalk)
 }
 
 /// The lowered Project operator's projection (`None` = full decode).
@@ -204,6 +232,23 @@ fn run_oneshot(
 ) -> Result<()> {
     for pipe in &exec.pipelines {
         let lane = &opt.lanes[pipe.lane_idx];
+        // Default uncached grain: end-to-end column batches, zero row
+        // materialization. Lowering annotates the Scan `ExecMode`; the
+        // row path below survives as the differential oracle
+        // (`EngineConfig::row_walk_exec`) and the full-decode baseline.
+        if pipe.ops[0].mode == ExecMode::Batch {
+            batch::run_lane_oneshot(
+                lane,
+                filter_mode(pipe),
+                codec,
+                store,
+                now,
+                sinks,
+                c,
+                boundary_cmps,
+            )?;
+            continue;
+        }
         let window = lane.max_window.window_at(now);
         let rows: Vec<DecodedRow> = match projection(pipe) {
             // §Perf: fused lanes only read their attr union, decoded at
@@ -218,6 +263,7 @@ fn run_oneshot(
                 project.ns += stats.decode_ns;
                 project.rows_in += stats.rows;
                 project.rows_out += stats.rows;
+                c.rows_materialized += stats.rows;
                 rows
             }
             // Full decode (the unoptimized baseline shape): Scan copies
@@ -229,6 +275,7 @@ fn run_oneshot(
                 let scan = c.stage_mut(Stage::Scan);
                 scan.add_ns(t0);
                 scan.rows_out += raw.len() as u64;
+                c.rows_materialized += raw.len() as u64;
                 let t0 = Instant::now();
                 let rows = raw
                     .iter()
@@ -244,6 +291,7 @@ fn run_oneshot(
                 project.add_ns(t0);
                 project.rows_in += raw.len() as u64;
                 project.rows_out += raw.len() as u64;
+                c.rows_materialized += raw.len() as u64;
                 rows
             }
         };
@@ -372,6 +420,27 @@ pub(crate) fn execute(
                 for pipe in &exec.pipelines {
                     let lane = &opt.lanes[pipe.lane_idx];
                     let rows = &avail[&lane.event_type];
+                    if filter_exec_mode(pipe) == ExecMode::Batch {
+                        // Batch grain over the cached lane's contiguous
+                        // slices (VecDeque halves + fresh spill).
+                        let t0 = Instant::now();
+                        let (ws, batches) = batch::walk_cached_lane(
+                            lane,
+                            filter_mode(pipe),
+                            now,
+                            &rows.cached,
+                            &rows.fresh,
+                            &mut sinks,
+                        );
+                        let f = c.stage_mut(Stage::Filter);
+                        f.add_ns(t0);
+                        f.batches += batches;
+                        f.rows_in += ws.rows;
+                        f.rows_out += ws.pushes;
+                        c.stage_mut(Stage::Aggregate).rows_in += ws.pushes;
+                        boundary_cmps += ws.cmps;
+                        continue;
+                    }
                     walk_lane(
                         lane,
                         filter_mode(pipe),
@@ -462,6 +531,7 @@ mod tests {
         c.stage_mut(Stage::Emit).ns = 32;
         c.cache.ns = 64;
         c.cache.rows_out = 6;
+        c.rows_materialized = 5;
         let bd = c.breakdown();
         assert_eq!(bd.retrieve_ns, 1);
         assert_eq!(bd.rows_retrieved, 10);
@@ -473,6 +543,7 @@ mod tests {
         assert_eq!(bd.rows_from_cache, 6);
         assert_eq!(bd.rows_replayed, 8);
         assert_eq!(bd.rows_delta, 7);
+        assert_eq!(bd.rows_materialized, 5);
         assert_eq!(bd.branch_ns, 0);
     }
 
@@ -488,6 +559,7 @@ mod tests {
                 incremental_compute: false,
                 hierarchical_filter: true,
                 projected_decode: true,
+                batch_exec: true,
             },
         );
         let out = run_standalone(&opt, &exec, &JsonishCodec, &store, 40 * 60_000).unwrap();
@@ -499,5 +571,46 @@ mod tests {
             out.counters.stage(Stage::Emit).rows_out,
             specs.len() as u64
         );
+    }
+
+    #[test]
+    fn batch_executor_matches_row_walk_and_materializes_nothing() {
+        let (_, specs, store) = setup();
+        let opt = fuse(&specs, true);
+        let base = LowerConfig {
+            enable_cache: false,
+            incremental_compute: false,
+            hierarchical_filter: true,
+            projected_decode: true,
+            batch_exec: true,
+        };
+        let exec_b = lower(&opt, &base);
+        let exec_r = lower(
+            &opt,
+            &LowerConfig {
+                batch_exec: false,
+                ..base
+            },
+        );
+        let now = 40 * 60_000;
+        let b = run_standalone(&opt, &exec_b, &JsonishCodec, &store, now).unwrap();
+        let r = run_standalone(&opt, &exec_r, &JsonishCodec, &store, now).unwrap();
+
+        // Bit-identical values — not approx_eq: the batch walk must
+        // produce the exact same push sequence per sink.
+        assert_eq!(b.values, r.values);
+
+        // Identical per-operator row counts.
+        let bb = b.counters.breakdown();
+        let rb = r.counters.breakdown();
+        assert_eq!(bb.rows_retrieved, rb.rows_retrieved);
+        assert_eq!(bb.rows_decoded, rb.rows_decoded);
+        assert_eq!(bb.rows_replayed, rb.rows_replayed);
+
+        // The batch path materializes no rows; the row oracle does.
+        assert_eq!(bb.rows_materialized, 0);
+        assert!(rb.rows_materialized > 0);
+        assert!(b.counters.stage(Stage::Scan).batches > 0);
+        assert_eq!(r.counters.stage(Stage::Scan).batches, 0);
     }
 }

@@ -91,6 +91,7 @@ pub fn compile(
             incremental_compute: cfg.incremental_compute,
             hierarchical_filter: cfg.hierarchical_filter,
             projected_decode: true,
+            batch_exec: !cfg.row_walk_exec,
         },
     );
     let mut type_windows: HashMap<EventTypeId, i64> = HashMap::new();

@@ -119,6 +119,12 @@ pub struct OpBreakdown {
     /// to the inter-trigger delta, not the window — the Fig. 6b
     /// redundancy, eliminated from Filter+Compute.
     pub rows_delta: u64,
+    /// Owned row materializations during the extraction: retrieve
+    /// clones, decoded row vectors, cache-row spills. The default
+    /// uncached batch executor keeps this at **zero** — rows flow as
+    /// `ColumnBatch + SelectionVector` end-to-end; only the row-walk
+    /// oracle and the cache bridge construct rows.
+    pub rows_materialized: u64,
 }
 
 impl OpBreakdown {
@@ -145,6 +151,7 @@ impl OpBreakdown {
         self.rows_from_cache += o.rows_from_cache;
         self.rows_replayed += o.rows_replayed;
         self.rows_delta += o.rows_delta;
+        self.rows_materialized += o.rows_materialized;
     }
 
     /// Time attributed to one op kind.
@@ -177,6 +184,7 @@ mod tests {
             rows_from_cache: 0,
             rows_replayed: 5,
             rows_delta: 2,
+            rows_materialized: 3,
         };
         assert_eq!(a.total_ns(), 40);
         let b = a;
@@ -185,6 +193,7 @@ mod tests {
         assert_eq!(a.rows_retrieved, 10);
         assert_eq!(a.rows_replayed, 10);
         assert_eq!(a.rows_delta, 4);
+        assert_eq!(a.rows_materialized, 6);
     }
 
     #[test]

@@ -101,6 +101,35 @@ impl FilterMode {
     }
 }
 
+/// Execution grain of a lowered operator: column batches or the classic
+/// row-at-a-time walk.
+///
+/// Lowering annotates every operator with its grain. On the default
+/// engine shape the whole uncached pipeline runs at batch grain
+/// (`ColumnBatch` + `SelectionVector`, no row materialization); the
+/// cache bridge's `Scan`/`Project` stay row grain (cache-resident lanes
+/// are materialized rows by design). The full row-walk plan survives
+/// only as the differential-test oracle
+/// ([`crate::engine::config::EngineConfig::row_walk_exec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Column-batch grain: selection vectors over zero-copy segment
+    /// views, per-unique-payload decode, suffix walks per batch.
+    Batch,
+    /// Row-at-a-time grain over a materialized row stream.
+    RowWalk,
+}
+
+impl ExecMode {
+    /// Display label (stable — part of the explain format).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::Batch => "batch",
+            ExecMode::RowWalk => "row-walk",
+        }
+    }
+}
+
 /// How one feature's `Aggregate` runs under the plan's strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AggMode {
@@ -325,6 +354,8 @@ pub struct AggMember {
 pub struct OpDesc {
     /// The operator.
     pub op: ExecOp,
+    /// Execution grain the operator was lowered to.
+    pub mode: ExecMode,
     /// Chained content fingerprint.
     pub fingerprint: u64,
 }
@@ -371,17 +402,27 @@ pub struct LowerConfig {
     /// shape). `false` = full decode, filter-time projection (the
     /// unoptimized baseline shape).
     pub projected_decode: bool,
+    /// Lower operators to the batch-at-a-time executor
+    /// ([`ExecMode::Batch`]): selection vectors over zero-copy column
+    /// views instead of materialized row streams. Stages that must
+    /// consume materialized rows (the cache bridge's `Scan`/`Project`)
+    /// fall back to [`ExecMode::RowWalk`]. Requires `projected_decode`
+    /// (the batch kernels decode straight into the attr-union
+    /// projection); ignored without it.
+    pub batch_exec: bool,
 }
 
 impl LowerConfig {
     /// The unoptimized-baseline shape: no cache, full decode, direct
-    /// filter — how `fegraph::exec` lowers per-feature chains.
+    /// filter, row-at-a-time — how `fegraph::exec` lowers per-feature
+    /// chains.
     pub fn baseline() -> Self {
         LowerConfig {
             enable_cache: false,
             incremental_compute: false,
             hierarchical_filter: false,
             projected_decode: false,
+            batch_exec: false,
         }
     }
 }
@@ -441,6 +482,27 @@ pub fn lower(plan: &OptimizedPlan, cfg: &LowerConfig) -> ExecPlan {
     } else {
         ScanSource::Columnar
     };
+    // Batch lowering rules: the columnar Scan/Project (and every compute
+    // stage) run at batch grain; the cache bridge's Scan/Project consume
+    // materialized cache rows and stay row grain. Without
+    // `projected_decode` the batch kernels have no attr-union projection
+    // to decode into, so the whole plan falls back to the row walk.
+    let batch = cfg.batch_exec && cfg.projected_decode;
+    let op_mode = |stage: Stage| -> ExecMode {
+        if !batch {
+            return ExecMode::RowWalk;
+        }
+        match stage {
+            Stage::Scan | Stage::Project => {
+                if source == ScanSource::Columnar {
+                    ExecMode::Batch
+                } else {
+                    ExecMode::RowWalk
+                }
+            }
+            _ => ExecMode::Batch,
+        }
+    };
 
     let mut plan_fp = fnv_u8(FNV_OFFSET, strategy as u8);
     let pipelines: Vec<LanePipeline> = plan
@@ -484,9 +546,11 @@ pub fn lower(plan: &OptimizedPlan, cfg: &LowerConfig) -> ExecPlan {
             let ops: Vec<OpDesc> = ops
                 .into_iter()
                 .map(|op| {
-                    chain = op.fold(chain);
+                    let mode = op_mode(op.stage());
+                    chain = fnv_u8(op.fold(chain), mode as u8);
                     OpDesc {
                         op,
+                        mode,
                         fingerprint: chain,
                     }
                 })
@@ -508,13 +572,15 @@ pub fn lower(plan: &OptimizedPlan, cfg: &LowerConfig) -> ExecPlan {
         features: plan.features.len(),
         persistent,
     };
-    let emit_fp = emit_op.fold(plan_fp);
+    let emit_mode = op_mode(Stage::Emit);
+    let emit_fp = fnv_u8(emit_op.fold(plan_fp), emit_mode as u8);
     ExecPlan {
         strategy,
         pipelines,
         agg_modes,
         emit: OpDesc {
             op: emit_op,
+            mode: emit_mode,
             fingerprint: emit_fp,
         },
         fingerprint: emit_fp,
@@ -542,14 +608,22 @@ impl ExecPlan {
         for p in &self.pipelines {
             writeln!(s, "  pipeline[{}] fp={:016x}", p.lane_idx, p.fingerprint).unwrap();
             for op in &p.ops {
-                writeln!(s, "    {:<60} fp={:016x}", op.op.render(), op.fingerprint).unwrap();
+                writeln!(
+                    s,
+                    "    {:<60} fp={:016x} mode={}",
+                    op.op.render(),
+                    op.fingerprint,
+                    op.mode.label()
+                )
+                .unwrap();
             }
         }
         writeln!(
             s,
-            "  {:<62} fp={:016x}",
+            "  {:<62} fp={:016x} mode={}",
             self.emit.op.render(),
-            self.emit.fingerprint
+            self.emit.fingerprint,
+            self.emit.mode.label()
         )
         .unwrap();
         s
@@ -593,6 +667,7 @@ mod tests {
             incremental_compute: inc,
             hierarchical_filter: true,
             projected_decode: true,
+            batch_exec: true,
         }
     }
 
@@ -696,6 +771,74 @@ mod tests {
                 seen.push(op.fingerprint);
             }
         }
+    }
+
+    #[test]
+    fn batch_mode_annotations_follow_the_scan_source() {
+        let plan = sample();
+        // Uncached one-shot: the whole pipeline runs at batch grain.
+        let exec = lower(&plan, &cfg(false, false));
+        for p in &exec.pipelines {
+            assert!(p.ops.iter().all(|o| o.mode == ExecMode::Batch));
+        }
+        assert_eq!(exec.emit.mode, ExecMode::Batch);
+        // Cache bridge: Scan/Project consume materialized cache rows
+        // (row grain); Filter onward walks batches.
+        for c in [cfg(true, false), cfg(true, true)] {
+            let exec = lower(&plan, &c);
+            for p in &exec.pipelines {
+                for o in &p.ops {
+                    let want = match o.op.stage() {
+                        Stage::Scan | Stage::Project => ExecMode::RowWalk,
+                        _ => ExecMode::Batch,
+                    };
+                    assert_eq!(o.mode, want, "{:?}", o.op.stage());
+                }
+            }
+        }
+        // Without batch_exec — or without the projection it needs —
+        // every operator is the row-walk oracle.
+        for c in [
+            LowerConfig {
+                batch_exec: false,
+                ..cfg(false, false)
+            },
+            LowerConfig {
+                projected_decode: false,
+                ..cfg(false, false)
+            },
+        ] {
+            let exec = lower(&plan, &c);
+            assert!(exec
+                .pipelines
+                .iter()
+                .flat_map(|p| &p.ops)
+                .all(|o| o.mode == ExecMode::RowWalk));
+            assert_eq!(exec.emit.mode, ExecMode::RowWalk);
+        }
+        assert!(!LowerConfig::baseline().batch_exec);
+    }
+
+    #[test]
+    fn batch_toggle_re_fingerprints_and_renders() {
+        let plan = sample();
+        let a = lower(&plan, &cfg(false, false));
+        let b = lower(
+            &plan,
+            &LowerConfig {
+                batch_exec: false,
+                ..cfg(false, false)
+            },
+        );
+        assert_ne!(a.fingerprint, b.fingerprint);
+        assert!(a.explain().contains("mode=batch"));
+        assert!(!a.explain().contains("mode=row-walk"));
+        assert!(b.explain().contains("mode=row-walk"));
+        assert!(!b.explain().contains("mode=batch"));
+        // The bridge plan renders both grains.
+        let c = lower(&plan, &cfg(true, false));
+        assert!(c.explain().contains("mode=row-walk"));
+        assert!(c.explain().contains("mode=batch"));
     }
 
     #[test]

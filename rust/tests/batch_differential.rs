@@ -1,0 +1,250 @@
+//! Batch-vs-row differential suite: the batch-at-a-time executor (the
+//! default) must be **bit-identical** — exact `FeatureValue` equality,
+//! not approximate — to the classic row-walk oracle
+//! (`EngineConfig::row_walk_exec`) across all five services, every
+//! compaction threshold, and both compute strategies, with identical
+//! per-operator `OpBreakdown` row counts.
+//!
+//! Also holds the release-mode zero-materialization guarantee the CI
+//! gate runs (`cargo test --release --test batch_differential`): the
+//! uncached batch path reports `rows_materialized == 0` via
+//! `ExecCounters` — a runtime counter, not a `debug_assert!` — while
+//! the row-walk oracle on the same store reports a positive count.
+//!
+//! Plus property tests over random stores: selection vectors are sorted
+//! and duplicate-free with every position satisfying the predicate, and
+//! bitmask → selection → decode equals the flat row-scan oracle.
+
+use autofeature::applog::codec::{AttrCodec, JsonishCodec};
+use autofeature::applog::event::AttrValue;
+use autofeature::applog::query::{
+    column_batches, retrieve_scan, SelectionVector, TimeWindow,
+};
+use autofeature::applog::store::{AppLogStore, StoreConfig};
+use autofeature::engine::config::EngineConfig;
+use autofeature::engine::online::Engine;
+use autofeature::engine::Extractor;
+use autofeature::harness::eval_catalog;
+use autofeature::util::rng::SimRng;
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+use autofeature::workload::traces::{log_events, TraceConfig, TraceGenerator};
+
+const THRESHOLDS: [usize; 4] = [1, 7, 64, usize::MAX];
+
+/// Batch executor vs row-walk oracle: exact value equality and equal
+/// per-operator row counts on every service × threshold × strategy,
+/// over a trigger schedule that exercises cold, warm, and fully-expired
+/// windows.
+#[test]
+fn batch_matches_row_walk_bit_for_bit_everywhere() {
+    let catalog = eval_catalog();
+    let nows = [
+        60_000i64, // cold: windows larger than history
+        8 * 60_000,
+        8 * 60_000 + 40, // sub-second spacing
+        15 * 60_000,     // expires the 5-minute windows in one hop
+        29 * 60_000,
+    ];
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+            duration_ms: 30 * 60_000,
+            seed: 0xBA7C + kind.id().as_bytes()[0] as u64,
+            ..TraceConfig::default()
+        });
+        for segment_rows in THRESHOLDS {
+            let mut store = AppLogStore::new(StoreConfig {
+                segment_rows,
+                ..StoreConfig::default()
+            });
+            log_events(&mut store, &JsonishCodec, &trace).unwrap();
+            for incremental in [false, true] {
+                let base = if incremental {
+                    EngineConfig::incremental()
+                } else {
+                    EngineConfig::autofeature()
+                };
+                let mut batch = Engine::new(svc.features.clone(), &catalog, base).unwrap();
+                let mut row = Engine::new(
+                    svc.features.clone(),
+                    &catalog,
+                    EngineConfig {
+                        row_walk_exec: true,
+                        ..base
+                    },
+                )
+                .unwrap();
+                for &now in &nows {
+                    let b = batch.extract(&store, now).unwrap();
+                    let r = row.extract(&store, now).unwrap();
+                    let ctx = format!("{kind:?} seg={segment_rows} inc={incremental} @ {now}");
+                    // Bit-identical, not approx: the batch walk must
+                    // produce the exact per-sink push sequence.
+                    assert_eq!(b.values, r.values, "{ctx}");
+                    assert_eq!(
+                        b.breakdown.rows_retrieved, r.breakdown.rows_retrieved,
+                        "{ctx}: rows_retrieved"
+                    );
+                    assert_eq!(
+                        b.breakdown.rows_decoded, r.breakdown.rows_decoded,
+                        "{ctx}: rows_decoded"
+                    );
+                    assert_eq!(
+                        b.breakdown.rows_from_cache, r.breakdown.rows_from_cache,
+                        "{ctx}: rows_from_cache"
+                    );
+                    assert_eq!(
+                        b.breakdown.rows_replayed, r.breakdown.rows_replayed,
+                        "{ctx}: rows_replayed"
+                    );
+                    assert_eq!(
+                        b.breakdown.rows_delta, r.breakdown.rows_delta,
+                        "{ctx}: rows_delta"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The CI-gated invariant: the default uncached path reports **zero**
+/// row materializations through `ExecCounters` (release-mode
+/// observable), while the row-walk oracle on the same store reports a
+/// positive count for the same extraction.
+#[test]
+fn uncached_batch_path_materializes_zero_rows() {
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::SR, &catalog);
+    let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+        duration_ms: 30 * 60_000,
+        seed: 0x0BA7,
+        ..TraceConfig::default()
+    });
+    for segment_rows in THRESHOLDS {
+        let mut store = AppLogStore::new(StoreConfig {
+            segment_rows,
+            ..StoreConfig::default()
+        });
+        log_events(&mut store, &JsonishCodec, &trace).unwrap();
+
+        // fusion_only: cache off → the lowered strategy is OneShot, the
+        // pure uncached pipeline.
+        let mut batch =
+            Engine::new(svc.features.clone(), &catalog, EngineConfig::fusion_only()).unwrap();
+        let mut row = Engine::new(
+            svc.features.clone(),
+            &catalog,
+            EngineConfig {
+                row_walk_exec: true,
+                ..EngineConfig::fusion_only()
+            },
+        )
+        .unwrap();
+        let b = batch.extract(&store, 20 * 60_000).unwrap();
+        let r = row.extract(&store, 20 * 60_000).unwrap();
+        assert!(
+            b.breakdown.rows_retrieved > 0,
+            "seg={segment_rows}: the store must feed the extraction"
+        );
+        assert_eq!(
+            b.breakdown.rows_materialized, 0,
+            "seg={segment_rows}: uncached batch path materialized rows"
+        );
+        assert!(
+            r.breakdown.rows_materialized > 0,
+            "seg={segment_rows}: row-walk oracle stopped materializing — \
+             the differential is no longer testing anything"
+        );
+        assert_eq!(b.values, r.values, "seg={segment_rows}");
+    }
+}
+
+fn random_store(rng: &mut SimRng, segment_rows: usize) -> AppLogStore {
+    let mut store = AppLogStore::new(StoreConfig {
+        segment_rows,
+        ..StoreConfig::default()
+    });
+    let n = rng.range_u(0, 300);
+    let mut ts = 0i64;
+    for _ in 0..n {
+        ts += rng.range_i(0, 5_000); // repeats allowed: equal timestamps
+        let t = rng.range_u(0, 8) as u16;
+        let attrs = vec![
+            (0u16, AttrValue::Int(rng.range_i(0, 5))),
+            (1u16, AttrValue::Float(rng.range_i(0, 100) as f64)),
+        ];
+        store.append(t, ts, JsonishCodec.encode(&attrs)).unwrap();
+    }
+    store
+}
+
+/// Property: `select_types` always yields a sorted, duplicate-free
+/// selection whose every position satisfies the type + window
+/// predicate, on random stores, windows, and type sets.
+#[test]
+fn selection_vectors_stay_sorted_unique_and_exact() {
+    let mut rng = SimRng::seed_from_u64(0x5E7EC7);
+    for round in 0..60 {
+        let segment_rows = THRESHOLDS[round % THRESHOLDS.len()];
+        let store = random_store(&mut rng, segment_rows);
+        let horizon = 300 * 5_000i64;
+        let start = rng.range_i(0, horizon);
+        let window = TimeWindow {
+            start_ms: start,
+            end_ms: start + rng.range_i(1, horizon),
+        };
+        let mut types: Vec<u16> = (0..rng.range_u(1, 4)).map(|_| rng.range_u(0, 10) as u16).collect();
+        types.sort_unstable();
+        types.dedup();
+        let mut sel = SelectionVector::new();
+        for cb in column_batches(&store) {
+            cb.select_types(&types, window, &mut sel);
+            assert!(sel.is_sorted_unique(), "round {round}");
+            for &p in sel.positions() {
+                assert!(
+                    types.contains(&cb.event_type_at(p)),
+                    "round {round}: type predicate violated at {p}"
+                );
+                assert!(
+                    window.contains(cb.ts_at(p)),
+                    "round {round}: window predicate violated at {p}"
+                );
+            }
+        }
+    }
+}
+
+/// Property: bitmask → selection → materialize over all column batches
+/// reproduces the flat row-scan oracle exactly (same rows, same order).
+#[test]
+fn batch_selection_equals_flat_scan_oracle() {
+    let mut rng = SimRng::seed_from_u64(0xDEC0DE);
+    for round in 0..60 {
+        let segment_rows = THRESHOLDS[(round + 1) % THRESHOLDS.len()];
+        let store = random_store(&mut rng, segment_rows);
+        let horizon = 300 * 5_000i64;
+        let start = rng.range_i(0, horizon);
+        let window = TimeWindow {
+            start_ms: start,
+            end_ms: start + rng.range_i(1, horizon),
+        };
+        let mut types: Vec<u16> = (0..rng.range_u(1, 4)).map(|_| rng.range_u(0, 10) as u16).collect();
+        types.sort_unstable();
+        types.dedup();
+
+        let mut got: Vec<(u64, i64, u16)> = Vec::new();
+        let mut sel = SelectionVector::new();
+        for cb in column_batches(&store) {
+            cb.select_types(&types, window, &mut sel);
+            for &p in sel.positions() {
+                let e = cb.materialize(p);
+                got.push((e.seq_no, e.timestamp_ms, e.event_type));
+            }
+        }
+        let want: Vec<(u64, i64, u16)> = retrieve_scan(&store, &types, window)
+            .into_iter()
+            .map(|e| (e.seq_no, e.timestamp_ms, e.event_type))
+            .collect();
+        assert_eq!(got, want, "round {round} seg={segment_rows}");
+    }
+}
