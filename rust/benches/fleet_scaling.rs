@@ -1,14 +1,148 @@
-//! Bench: multi-user session-pool scaling — fleet latency percentiles
-//! and wall-clock throughput as the shard count grows, one shared
-//! compiled plan across all sessions (ROADMAP scaling direction).
-//! `BENCH_QUICK=1` shrinks the fleet for smoke runs.
+//! Bench: multi-user fleet scaling — the session-pool shard sweep plus
+//! the event-driven scheduler's hibernation sweep: 100k+ sessions
+//! multiplexed onto a fixed worker pool, reporting peak resident bytes
+//! (live cache + hibernated images) and rehydration latency
+//! percentiles. `BENCH_QUICK=1` shrinks the fleet for smoke runs;
+//! `BENCH_JSON_OUT=<path>` writes the sweep as BENCH_7.json.
 
 mod common;
 
-use autofeature::harness::experiments;
+use std::time::Instant;
+
+use autofeature::coordinator::pool::SessionConfig;
+use autofeature::coordinator::sched::{FleetScheduler, SchedConfig, SchedReport};
+use autofeature::harness::{eval_catalog, experiments};
+use autofeature::workload::behavior::{ActivityLevel, Period};
+use autofeature::workload::driver::SimConfig;
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok()
+}
+
+struct Arm {
+    label: &'static str,
+    report: SchedReport,
+    wall_s: f64,
+}
+
+/// The hibernation scaling sweep: one huge fleet of short sessions (the
+/// million-session shape: most users idle between a handful of
+/// triggers), once fully resident and once hibernating across every
+/// inter-trigger gap.
+fn hibernation_sweep() -> anyhow::Result<Vec<Arm>> {
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let num_users: usize = if quick() { 2_000 } else { 100_000 };
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(8);
+    // Tiny per-user sims: 2 min of history, 2 measured triggers. The
+    // point is session count, not per-session depth.
+    let base = SimConfig {
+        period: Period::Evening,
+        activity: ActivityLevel::P70,
+        warmup_ms: 2 * 60_000,
+        duration_ms: 60_000,
+        inference_interval_ms: 30_000,
+        seed: 2024,
+        ..SimConfig::default()
+    };
+    let users = SessionConfig::fleet(&base, num_users);
+    let cap = 64 * 1024 * 1024;
+
+    let sched = FleetScheduler::new(
+        svc.features.clone(),
+        &catalog,
+        SchedConfig {
+            workers,
+            global_cache_cap_bytes: cap,
+            ..SchedConfig::default()
+        },
+    )?;
+    let mut arms = Vec::new();
+    for (label, hibernate_after_ms) in [("resident", i64::MAX), ("hibernate", 1)] {
+        let runner = FleetScheduler::from_shared(
+            sched.shared_plan(),
+            SchedConfig {
+                workers,
+                global_cache_cap_bytes: cap,
+                hibernate_after_ms,
+                ..SchedConfig::default()
+            },
+        );
+        let t0 = Instant::now();
+        let report = runner.run(&catalog, &users, None)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        println!(
+            "[fleet {label}] {num_users} users / {workers} workers: {} requests in {wall_s:.2} s, \
+             peak live {:.1} KB, peak hibernated {:.1} KB, peak ledger {:.1} KB, \
+             {} hibernations, rehydrate p50 {:.1} us / p99 {:.1} us",
+            report.total_requests(),
+            report.peak_live_cache_bytes as f64 / 1024.0,
+            report.peak_hibernated_bytes as f64 / 1024.0,
+            report.peak_ledger_bytes as f64 / 1024.0,
+            report.hibernations,
+            report.rehydrate_p50_ns as f64 / 1e3,
+            report.rehydrate_p99_ns as f64 / 1e3,
+        );
+        arms.push(Arm {
+            label,
+            report,
+            wall_s,
+        });
+    }
+    Ok(arms)
+}
+
+fn write_json(path: &str, num_users_hint: usize, arms: &[Arm]) {
+    let mut json_arms = String::new();
+    for arm in arms {
+        if !json_arms.is_empty() {
+            json_arms.push_str(",\n");
+        }
+        let r = &arm.report;
+        json_arms.push_str(&format!(
+            "    {{\"label\": \"{}\", \"users\": {}, \"workers\": {}, \"requests\": {}, \
+             \"peak_live_cache_bytes\": {}, \"peak_hibernated_bytes\": {}, \
+             \"peak_ledger_bytes\": {}, \"hibernations\": {}, \"rehydrations\": {}, \
+             \"rehydrate_p50_us\": {:.3}, \"rehydrate_p99_us\": {:.3}, \
+             \"fleet_p50_ms\": {:.4}, \"fleet_p99_ms\": {:.4}, \"wall_s\": {:.3}}}",
+            arm.label,
+            r.sessions.len(),
+            r.workers,
+            r.total_requests(),
+            r.peak_live_cache_bytes,
+            r.peak_hibernated_bytes,
+            r.peak_ledger_bytes,
+            r.hibernations,
+            r.rehydrations,
+            r.rehydrate_p50_ns as f64 / 1e3,
+            r.rehydrate_p99_ns as f64 / 1e3,
+            r.fleet.p50_ms,
+            r.fleet.p99_ms,
+            arm.wall_s,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"pr\": 7,\n  \"bench\": \"fleet_scaling hibernation sweep\",\n  \
+         \"quick\": {},\n  \"users\": {},\n  \"arms\": [\n{}\n  ]\n}}\n",
+        quick(),
+        num_users_hint,
+        json_arms
+    );
+    std::fs::write(path, json).unwrap();
+    println!("wrote {path}");
+}
 
 fn main() {
     common::run("fleet_scaling", || {
-        experiments::ext_fleet(common::scale()).map(|_| ())
+        experiments::ext_fleet(common::scale()).map(|_| ())?;
+        let arms = hibernation_sweep()?;
+        let users = arms.first().map(|a| a.report.sessions.len()).unwrap_or(0);
+        if let Ok(path) = std::env::var("BENCH_JSON_OUT") {
+            write_json(&path, users, &arms);
+        }
+        Ok(())
     });
 }

@@ -19,47 +19,57 @@
 //! crc32 u32   (IEEE, over everything before it)
 //! ```
 //!
+//! **v3** (v2 + session-state block — what hibernation images use):
+//!
+//! ```text
+//! magic "AFLG" | version=3 u16 | blob_len u32 |
+//! ... v2 body (next_seq .. tail rows) ... |
+//! session_len u32 | session-state bytes ([`crate::engine::state`]) |
+//! crc32 u32   (IEEE, over everything before it)
+//! ```
+//!
 //! Snapshots round-trip exactly (rows, order, seq_nos, payload bytes).
-//! v2 loads verify the declared blob length and the trailing CRC-32
+//! v2/v3 loads verify the declared blob length and the trailing CRC-32
 //! before parsing, so **any** single-byte truncation or corruption is
 //! rejected with an error — a damaged file never produces a silently
 //! wrong log (CRC-32 detects every burst error of up to 32 bits). The
 //! property sweep in `rust/tests/prop_invariants.rs` pins this
-//! byte-by-byte.
+//! byte-by-byte. The CRC shares the const-built table in
+//! [`crate::util::wire`] with the session-state serializer.
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::event::BehaviorEvent;
 use super::segment::Segment;
 use super::store::{AppLogStore, StoreConfig};
+use crate::util::wire::crc32;
 
 const MAGIC: &[u8; 4] = b"AFLG";
 const VERSION_V1: u16 = 1;
 const VERSION_V2: u16 = 2;
-
-/// CRC-32 (IEEE 802.3, reflected). Table built per call — snapshots are
-/// loaded rarely and the build is 2k shifts.
-fn crc32(data: &[u8]) -> u32 {
-    let mut table = [0u32; 256];
-    for (i, slot) in table.iter_mut().enumerate() {
-        let mut c = i as u32;
-        for _ in 0..8 {
-            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
-        }
-        *slot = c;
-    }
-    let mut crc = 0xFFFF_FFFFu32;
-    for &b in data {
-        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
-    }
-    !crc
-}
+const VERSION_V3: u16 = 3;
 
 /// Serialize the live log to a v2 (segmented columnar) snapshot blob.
 pub fn to_bytes(store: &AppLogStore) -> Vec<u8> {
+    encode(store, None)
+}
+
+/// Serialize the live log *plus* an opaque session-state blob (produced
+/// by [`crate::engine::online::Engine::export_state`]) into one v3
+/// hibernation image. One CRC covers both parts.
+pub fn to_bytes_with_session(store: &AppLogStore, session_state: &[u8]) -> Vec<u8> {
+    encode(store, Some(session_state))
+}
+
+fn encode(store: &AppLogStore, session_state: Option<&[u8]>) -> Vec<u8> {
+    let version = if session_state.is_some() {
+        VERSION_V3
+    } else {
+        VERSION_V2
+    };
     let mut out = Vec::new();
     out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION_V2.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&0u32.to_le_bytes()); // blob_len, patched below
     out.extend_from_slice(&store.next_seq().to_le_bytes());
     out.extend_from_slice(&store.total_appended().to_le_bytes());
@@ -78,6 +88,10 @@ pub fn to_bytes(store: &AppLogStore) -> Vec<u8> {
         out.extend_from_slice(&r.timestamp_ms.to_le_bytes());
         out.extend_from_slice(&(r.payload.len() as u32).to_le_bytes());
         out.extend_from_slice(&r.payload);
+    }
+    if let Some(state) = session_state {
+        out.extend_from_slice(&(state.len() as u32).to_le_bytes());
+        out.extend_from_slice(state);
     }
     let blob_len = (out.len() + 4) as u32;
     out[6..10].copy_from_slice(&blob_len.to_le_bytes());
@@ -104,14 +118,25 @@ pub fn to_bytes_v1(store: &AppLogStore) -> Vec<u8> {
     out
 }
 
-/// Load a snapshot blob (v1 or v2) into a fresh store.
+/// Load a snapshot blob (v1, v2, or v3) into a fresh store. A v3
+/// image's session-state block is validated by the CRC but otherwise
+/// ignored; use [`from_bytes_with_session`] to recover it.
 pub fn from_bytes(data: &[u8], cfg: StoreConfig) -> Result<AppLogStore> {
+    from_bytes_with_session(data, cfg).map(|(store, _)| store)
+}
+
+/// Load a snapshot blob and, for v3 images, the embedded session-state
+/// block. v1/v2 blobs load with `None` — old snapshots stay readable.
+pub fn from_bytes_with_session(
+    data: &[u8],
+    cfg: StoreConfig,
+) -> Result<(AppLogStore, Option<Vec<u8>>)> {
     ensure!(data.len() >= 6, "snapshot too short");
     ensure!(&data[..4] == MAGIC, "bad snapshot magic");
     let version = u16::from_le_bytes(data[4..6].try_into().unwrap());
     match version {
-        VERSION_V1 => from_bytes_v1(data, cfg),
-        VERSION_V2 => from_bytes_v2(data, cfg),
+        VERSION_V1 => from_bytes_v1(data, cfg).map(|store| (store, None)),
+        VERSION_V2 | VERSION_V3 => from_bytes_v2plus(data, cfg, version),
         v => bail!("unsupported snapshot version {v}"),
     }
 }
@@ -166,10 +191,15 @@ fn from_bytes_v1(data: &[u8], cfg: StoreConfig) -> Result<AppLogStore> {
     Ok(AppLogStore::from_parts(cfg, Vec::new(), rows, next_seq, total))
 }
 
-/// Segmented columnar loader: verify length + CRC first, then parse and
-/// re-validate every store invariant (global chronology, strictly
-/// increasing seq_nos across segment boundaries).
-fn from_bytes_v2(data: &[u8], cfg: StoreConfig) -> Result<AppLogStore> {
+/// Segmented columnar loader (v2 and v3): verify length + CRC first,
+/// then parse and re-validate every store invariant (global chronology,
+/// strictly increasing seq_nos across segment boundaries). v3 carries
+/// one extra trailing block — the opaque session state — returned as-is.
+fn from_bytes_v2plus(
+    data: &[u8],
+    cfg: StoreConfig,
+    version: u16,
+) -> Result<(AppLogStore, Option<Vec<u8>>)> {
     ensure!(data.len() >= 14, "truncated v2 snapshot header");
     let declared = u32::from_le_bytes(data[6..10].try_into().unwrap()) as usize;
     ensure!(
@@ -238,6 +268,12 @@ fn from_bytes_v2(data: &[u8], cfg: StoreConfig) -> Result<AppLogStore> {
             payload,
         });
     }
+    let session_state = if version >= VERSION_V3 {
+        let len = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
+        Some(take(&mut i, len)?.to_vec())
+    } else {
+        None
+    };
     if i != body.len() {
         bail!("trailing garbage after snapshot ({} bytes)", body.len() - i);
     }
@@ -249,13 +285,8 @@ fn from_bytes_v2(data: &[u8], cfg: StoreConfig) -> Result<AppLogStore> {
         total_appended >= rows as u64,
         "total_appended {total_appended} below live row count {rows}"
     );
-    Ok(AppLogStore::from_parts(
-        cfg,
-        segments,
-        tail,
-        next_seq,
-        total_appended,
-    ))
+    let store = AppLogStore::from_parts(cfg, segments, tail, next_seq, total_appended);
+    Ok((store, session_state))
 }
 
 /// Write a snapshot to a file.
@@ -402,7 +433,41 @@ mod tests {
 
     #[test]
     fn crc32_matches_known_vector() {
-        // IEEE CRC-32 of "123456789".
+        // IEEE CRC-32 of "123456789" (via the shared const-table helper).
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn v3_session_block_roundtrips_and_plain_loaders_ignore_it() {
+        let a = populated();
+        let state = vec![7u8, 0, 255, 42, 1, 2, 3];
+        let bytes = to_bytes_with_session(&a, &state);
+        let (b, got) = from_bytes_with_session(&bytes, StoreConfig::default()).unwrap();
+        assert_rows_equal(&a, &b);
+        assert_eq!(got.as_deref(), Some(&state[..]));
+        // The store-only loader accepts v3 and drops the block.
+        let c = from_bytes(&bytes, StoreConfig::default()).unwrap();
+        assert_rows_equal(&a, &c);
+        // v2 blobs report no session state.
+        let (_, none) = from_bytes_with_session(&to_bytes(&a), StoreConfig::default()).unwrap();
+        assert!(none.is_none());
+        // Empty session state is a valid (if pointless) image.
+        let (_, empty) =
+            from_bytes_with_session(&to_bytes_with_session(&a, &[]), StoreConfig::default())
+                .unwrap();
+        assert_eq!(empty.as_deref(), Some(&[][..]));
+    }
+
+    #[test]
+    fn v3_rejects_corruption_of_session_block() {
+        let a = populated();
+        let bytes = to_bytes_with_session(&a, &[9u8; 64]);
+        // Flip a byte inside the trailing session block: CRC catches it.
+        let mut bad = bytes.clone();
+        let off = bad.len() - 20;
+        bad[off] ^= 0x01;
+        assert!(from_bytes_with_session(&bad, StoreConfig::default()).is_err());
+        // Truncation mid-block.
+        assert!(from_bytes_with_session(&bytes[..bytes.len() - 8], StoreConfig::default()).is_err());
     }
 }

@@ -103,6 +103,23 @@ impl CacheStore {
         self.lanes.remove(&t)
     }
 
+    /// All lanes in ascending event-type order — the deterministic
+    /// iteration session-state serialization needs (`HashMap` order
+    /// would make two exports of the same state byte-different).
+    pub fn lanes_sorted(&self) -> Vec<&CachedLane> {
+        let mut lanes: Vec<&CachedLane> = self.lanes.values().collect();
+        lanes.sort_by_key(|l| l.event_type);
+        lanes
+    }
+
+    /// Re-insert a lane during session-state import, bypassing the
+    /// budget check: the importer restores all lanes first and then
+    /// re-applies the budget, which evicts if the rehydrated session's
+    /// grant shrank while it slept.
+    pub(crate) fn restore_lane(&mut self, lane: CachedLane) {
+        self.lanes.insert(lane.event_type, lane);
+    }
+
     /// Drop everything (app restart / memory purge: the paper notes the
     /// first execution of each period starts cold).
     pub fn clear(&mut self) {

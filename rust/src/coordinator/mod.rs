@@ -15,10 +15,14 @@
 //!
 //! [`run_service`] drives one user; [`pool::SessionPool`] shards many
 //! user sessions over worker threads, each running this same
-//! producer/consumer loop per user against one shared compiled plan.
+//! producer/consumer loop per user against one shared compiled plan;
+//! [`sched::FleetScheduler`] replaces run-to-completion sharding with an
+//! event-driven trigger queue plus session hibernation, multiplexing
+//! fleets far larger than resident memory onto a fixed worker pool.
 
 pub mod metrics;
 pub mod pool;
+pub mod sched;
 
 use std::sync::mpsc::{sync_channel, TryRecvError};
 use std::sync::{Arc, Mutex};

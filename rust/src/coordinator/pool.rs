@@ -162,8 +162,11 @@ impl<'a> Session<'a> {
         interval_ms: i64,
         record_values: bool,
     ) -> Session<'a> {
+        // Entering the live tier: the ledger grants this session its
+        // initial cache budget (an even split over *live* sessions,
+        // clipped so outstanding grants never oversubscribe the cap).
         let engine_cfg = EngineConfig {
-            cache_budget_bytes: arbiter.session_budget(),
+            cache_budget_bytes: arbiter.activate(slot),
             ..cfg
         };
         Session {
@@ -183,7 +186,7 @@ impl Extractor for Session<'_> {
         // Pick up the arbiter's current split (grows on session churn;
         // a shrink evicts lowest-priority lanes inside the engine).
         self.engine
-            .set_cache_budget(self.arbiter.session_budget(), self.interval_ms);
+            .set_cache_budget(self.arbiter.session_budget(self.slot), self.interval_ms);
         let r = self.engine.extract(store, now)?;
         self.peak_cache_bytes = self.peak_cache_bytes.max(r.cache_bytes);
         self.arbiter.report_usage(self.slot, r.cache_bytes);

@@ -1,0 +1,820 @@
+//! Event-driven fleet scheduler with session hibernation.
+//!
+//! [`super::pool::SessionPool`] runs every session to completion on its
+//! shard — fine for thousands of users, but each live session pins its
+//! app log, cache lanes and incremental state in memory for the whole
+//! run, so a million-session host would hold a million resident
+//! sessions. This module replaces run-to-completion with an **event
+//! queue**: the fleet's per-user trigger timelines
+//! ([`crate::workload::driver::fleet_timeline`]) merge into one global
+//! time-ordered schedule, a fixed pool of workers pulls the next due
+//! trigger, advances just that session by one inference, and re-enqueues
+//! its successor trigger. Sessions between triggers hold no thread, and
+//! — under memory pressure or a long trigger gap — no memory either:
+//!
+//! ```text
+//!            activate                    next_trigger
+//!   Cold ──────────────▶ Live ─────────────────────────▶ Done
+//!                        ▲  │ hibernate (threshold gap,
+//!              rehydrate │  │  or ledger pressure victim)
+//!                        │  ▼
+//!                       Hibernated (applog snapshot + AFSS state blob)
+//! ```
+//!
+//! Hibernation serializes the session's whole mutable world — the app
+//! log via [`crate::applog::persist::to_bytes_with_session`] and the
+//! engine state via [`crate::engine::online::Engine::export_state`] —
+//! into one CRC-checked image accounted in the
+//! [`CacheArbiter`]'s hibernated tier; rehydration rebuilds both and is
+//! lossless, so per-user extraction values are **bit-identical** to the
+//! sequential driver and the thread-per-shard pool for any worker
+//! count and any hibernation policy (tested below).
+//!
+//! Determinism argument: each session's triggers execute in time order
+//! because exactly one queue entry per session exists at any moment (the
+//! successor is enqueued only after its predecessor completes), each
+//! user's trace/log/engine are private, and export/import round-trips
+//! losslessly. Worker interleaving across *different* users only
+//! reorders arbiter grants — and the cache is value-transparent, so
+//! values never depend on budgets.
+//!
+//! Locking: each session lives in a `Mutex` cell; worker queues are
+//! separate mutexes. Queue locks nest inside cell locks (processing a
+//! trigger re-enqueues while holding the cell); pressure eviction takes
+//! a victim's cell lock only after the worker released its own — no
+//! cycle, no deadlock.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::applog::persist;
+use crate::applog::schema::Catalog;
+use crate::applog::store::{AppLogStore, StoreConfig};
+use crate::cache::arbiter::{CacheArbiter, VictimQueue};
+use crate::engine::config::EngineConfig;
+use crate::engine::offline::{compile, CompiledEngine};
+use crate::engine::online::Engine;
+use crate::engine::Extractor;
+use crate::features::spec::FeatureSpec;
+use crate::features::value::FeatureValue;
+use crate::runtime::{pack_inputs, InferenceBackend};
+use crate::workload::driver::{first_trigger, next_trigger, recent_observations};
+use crate::workload::traces::{log_events, TraceConfig, TraceEvent, TraceGenerator};
+
+use super::metrics::{FleetSummary, LatencyRecorder};
+use super::pool::{SessionConfig, SessionReport};
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Worker threads pulling triggers from the event queues.
+    pub workers: usize,
+    /// Host-wide live-tier cache cap divided across live sessions by the
+    /// arbiter.
+    pub global_cache_cap_bytes: usize,
+    /// Ledger pressure threshold: when live cache usage exceeds this,
+    /// workers hibernate farthest-next-trigger victims until it fits.
+    /// `usize::MAX` disables pressure hibernation.
+    pub live_cap_bytes: usize,
+    /// Threshold hibernation: a session whose next trigger is at least
+    /// this far away hibernates immediately after serving. `i64::MAX`
+    /// never hibernates on time gaps.
+    pub hibernate_after_ms: i64,
+    /// Per-session engine configuration (its `cache_budget_bytes` is
+    /// superseded by the arbiter's per-session grant).
+    pub engine: EngineConfig,
+    /// Keep every extraction's feature values in the session reports
+    /// (determinism tests; off for large fleets).
+    pub record_values: bool,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            workers: 4,
+            global_cache_cap_bytes: 4 * 1024 * 1024,
+            live_cap_bytes: usize::MAX,
+            hibernate_after_ms: i64::MAX,
+            engine: EngineConfig::autofeature(),
+            record_values: false,
+        }
+    }
+}
+
+/// Fleet-level outcome of one scheduled run.
+#[derive(Debug)]
+pub struct SchedReport {
+    /// Per-session reports, in user order (same shape as the pool's).
+    pub sessions: Vec<SessionReport>,
+    /// Latency distribution pooled across all sessions.
+    pub fleet: FleetSummary,
+    /// Worker count the run used.
+    pub workers: usize,
+    /// The arbiter's live-tier cap.
+    pub global_cache_cap_bytes: usize,
+    /// Peak live-tier cache bytes over the run.
+    pub peak_live_cache_bytes: usize,
+    /// Peak hibernated-image bytes over the run.
+    pub peak_hibernated_bytes: usize,
+    /// Peak of live + hibernated bytes (the whole ledger).
+    pub peak_ledger_bytes: usize,
+    /// Hibernation events over the run.
+    pub hibernations: usize,
+    /// Rehydration events over the run.
+    pub rehydrations: usize,
+    /// Median rehydration latency, ns (0 with no rehydrations).
+    pub rehydrate_p50_ns: u64,
+    /// 99th-percentile rehydration latency, ns (0 with no rehydrations).
+    pub rehydrate_p99_ns: u64,
+}
+
+impl SchedReport {
+    /// Total requests served across the fleet.
+    pub fn total_requests(&self) -> usize {
+        self.sessions.iter().map(|s| s.requests).sum()
+    }
+}
+
+/// A session's resident form between triggers.
+enum CellState {
+    /// Not yet started; trace and log materialize at the first trigger.
+    Cold,
+    /// Fully resident.
+    Live {
+        store: AppLogStore,
+        engine: Engine,
+        trace: Vec<TraceEvent>,
+    },
+    /// Serialized to one applog+session image; the trace is regenerated
+    /// (seeded, deterministic) at rehydration.
+    Hibernated { image: Vec<u8> },
+    /// All triggers served; only the report accumulators remain.
+    Done,
+}
+
+/// One session's private world plus its report accumulators.
+struct Cell {
+    state: CellState,
+    /// Replay cursor into the trace (events `< next_event` are logged).
+    /// Survives hibernation — the log snapshot holds the rows, the
+    /// cursor tells the replay loop where to resume.
+    next_event: usize,
+    /// The session's enqueued successor trigger, if any. Victim-queue
+    /// entries are validated against this under the cell lock (lazy
+    /// invalidation of stale heap entries).
+    next_at: Option<i64>,
+    // -- accumulators --
+    recorder: LatencyRecorder,
+    values: Vec<Vec<FeatureValue>>,
+    peak_cache_bytes: usize,
+    last_prediction: f32,
+    requests: usize,
+    events_logged: usize,
+    hibernations: usize,
+    rehydrations: usize,
+    rehydrate_ns: Vec<u64>,
+}
+
+impl Cell {
+    fn new() -> Cell {
+        Cell {
+            state: CellState::Cold,
+            next_event: 0,
+            next_at: None,
+            recorder: LatencyRecorder::new(),
+            values: Vec::new(),
+            peak_cache_bytes: 0,
+            last_prediction: f32::NAN,
+            requests: 0,
+            events_logged: 0,
+            hibernations: 0,
+            rehydrations: 0,
+            rehydrate_ns: Vec::new(),
+        }
+    }
+}
+
+/// Shared state of one scheduled fleet run.
+struct Fleet<'a> {
+    compiled: Arc<CompiledEngine>,
+    cfg: &'a SchedConfig,
+    catalog: &'a Catalog,
+    users: &'a [SessionConfig],
+    cells: Vec<Mutex<Cell>>,
+    /// Per-worker min-heaps of `(trigger_ms, slot)`; `Reverse` makes the
+    /// `BinaryHeap` pop the earliest due trigger first.
+    queues: Vec<Mutex<BinaryHeap<std::cmp::Reverse<(i64, usize)>>>>,
+    arbiter: CacheArbiter,
+    victims: VictimQueue,
+    remaining: AtomicUsize,
+    abort: AtomicBool,
+    error: Mutex<Option<anyhow::Error>>,
+}
+
+/// The event-driven fleet scheduler for one deployed model.
+pub struct FleetScheduler {
+    compiled: Arc<CompiledEngine>,
+    cfg: SchedConfig,
+}
+
+impl FleetScheduler {
+    /// Compile the model's extraction plan once and build a scheduler.
+    pub fn new(
+        features: Vec<FeatureSpec>,
+        catalog: &Catalog,
+        cfg: SchedConfig,
+    ) -> Result<FleetScheduler> {
+        let compiled = Arc::new(compile(features, catalog, &cfg.engine)?);
+        Ok(Self::from_shared(compiled, cfg))
+    }
+
+    /// Build a scheduler over an existing shared plan.
+    pub fn from_shared(compiled: Arc<CompiledEngine>, cfg: SchedConfig) -> FleetScheduler {
+        FleetScheduler { compiled, cfg }
+    }
+
+    /// The shared compiled plan.
+    pub fn shared_plan(&self) -> Arc<CompiledEngine> {
+        Arc::clone(&self.compiled)
+    }
+
+    /// Run the fleet to completion: seed every session's first trigger,
+    /// let `workers` threads drain the merged timeline (work-stealing
+    /// when a local queue runs dry), and aggregate the fleet report.
+    pub fn run(
+        &self,
+        catalog: &Catalog,
+        users: &[SessionConfig],
+        model: Option<&(dyn InferenceBackend + Sync)>,
+    ) -> Result<SchedReport> {
+        let workers = self.cfg.workers.clamp(1, users.len().max(1));
+        let fleet = Fleet {
+            compiled: Arc::clone(&self.compiled),
+            cfg: &self.cfg,
+            catalog,
+            users,
+            cells: (0..users.len()).map(|_| Mutex::new(Cell::new())).collect(),
+            queues: (0..workers).map(|_| Mutex::new(BinaryHeap::new())).collect(),
+            arbiter: CacheArbiter::new(self.cfg.global_cache_cap_bytes, users.len()),
+            victims: VictimQueue::new(),
+            remaining: AtomicUsize::new(users.len()),
+            abort: AtomicBool::new(false),
+            error: Mutex::new(None),
+        };
+
+        // Seed: one entry per session (its first trigger), round-robin
+        // across worker queues so the initial load spreads evenly.
+        for (slot, user) in users.iter().enumerate() {
+            let at = first_trigger(&user.sim);
+            if at > user.sim.warmup_ms + user.sim.duration_ms {
+                // Degenerate workload with no measured triggers.
+                fleet.arbiter.complete(slot);
+                fleet.cells[slot].lock().unwrap().state = CellState::Done;
+                fleet.remaining.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            fleet.cells[slot].lock().unwrap().next_at = Some(at);
+            fleet.queues[slot % workers].lock().unwrap().push(std::cmp::Reverse((at, slot)));
+        }
+
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let fleet = &fleet;
+                scope.spawn(move || worker_loop(fleet, model, w));
+            }
+        });
+
+        if let Some(err) = fleet.error.lock().unwrap().take() {
+            return Err(err);
+        }
+
+        let mut sessions = Vec::with_capacity(users.len());
+        let mut hibernations = 0usize;
+        let mut rehydrations = 0usize;
+        let mut rehydrate_ns = Vec::new();
+        for (slot, cell) in fleet.cells.into_iter().enumerate() {
+            let cell = cell.into_inner().unwrap();
+            anyhow::ensure!(
+                matches!(cell.state, CellState::Done),
+                "session for user {} never completed",
+                users[slot].user_id
+            );
+            hibernations += cell.hibernations;
+            rehydrations += cell.rehydrations;
+            rehydrate_ns.extend_from_slice(&cell.rehydrate_ns);
+            sessions.push(SessionReport {
+                user_id: users[slot].user_id,
+                requests: cell.requests,
+                events_logged: cell.events_logged,
+                metrics: cell.recorder,
+                peak_cache_bytes: cell.peak_cache_bytes,
+                last_prediction: cell.last_prediction,
+                values: cell.values,
+            });
+        }
+        rehydrate_ns.sort_unstable();
+        let pct = |q: f64| -> u64 {
+            if rehydrate_ns.is_empty() {
+                0
+            } else {
+                rehydrate_ns[((rehydrate_ns.len() - 1) as f64 * q).round() as usize]
+            }
+        };
+        let fleet_summary = FleetSummary::from_recorders(sessions.iter().map(|s| &s.metrics));
+        Ok(SchedReport {
+            fleet: fleet_summary,
+            sessions,
+            workers,
+            global_cache_cap_bytes: self.cfg.global_cache_cap_bytes,
+            peak_live_cache_bytes: fleet.arbiter.peak_total_bytes(),
+            peak_hibernated_bytes: fleet.arbiter.peak_hibernated_bytes(),
+            peak_ledger_bytes: fleet.arbiter.peak_ledger_bytes(),
+            hibernations,
+            rehydrations,
+            rehydrate_p50_ns: pct(0.5),
+            rehydrate_p99_ns: pct(0.99),
+        })
+    }
+}
+
+/// One worker: pop the earliest due trigger from the local queue (steal
+/// from siblings when dry), serve it, repeat until the fleet drains.
+fn worker_loop(fleet: &Fleet<'_>, model: Option<&(dyn InferenceBackend + Sync)>, me: usize) {
+    while fleet.remaining.load(Ordering::SeqCst) > 0 && !fleet.abort.load(Ordering::SeqCst) {
+        let item = pop_local_or_steal(fleet, me);
+        let Some((at, slot)) = item else {
+            // Every queued trigger is being served by some other worker;
+            // its successor will appear shortly.
+            std::thread::yield_now();
+            continue;
+        };
+        if let Err(err) = serve_trigger(fleet, model, me, at, slot) {
+            let mut guard = fleet.error.lock().unwrap();
+            if guard.is_none() {
+                let user_id = fleet.users[slot].user_id;
+                *guard = Some(err.context(format!("session for user {user_id}")));
+            }
+            fleet.abort.store(true, Ordering::SeqCst);
+            return;
+        }
+        if fleet.cfg.live_cap_bytes != usize::MAX {
+            relieve_pressure(fleet);
+        }
+    }
+}
+
+fn pop_local_or_steal(fleet: &Fleet<'_>, me: usize) -> Option<(i64, usize)> {
+    let n = fleet.queues.len();
+    for i in 0..n {
+        let q = &fleet.queues[(me + i) % n];
+        if let Some(std::cmp::Reverse(item)) = q.lock().unwrap().pop() {
+            return Some(item);
+        }
+    }
+    None
+}
+
+/// Serve one (trigger, session) event: make the session resident, replay
+/// its behaviors up to the trigger, extract + infer, then either
+/// re-enqueue the successor trigger (possibly hibernating across the
+/// gap) or retire the session.
+fn serve_trigger(
+    fleet: &Fleet<'_>,
+    model: Option<&(dyn InferenceBackend + Sync)>,
+    me: usize,
+    at: i64,
+    slot: usize,
+) -> Result<()> {
+    let user = &fleet.users[slot];
+    let sim = &user.sim;
+    let codec = sim.codec.build();
+    let mut cell = fleet.cells[slot].lock().unwrap();
+    let cell = &mut *cell;
+    debug_assert_eq!(cell.next_at, Some(at), "trigger served out of order");
+
+    // -- make resident --
+    match cell.state {
+        CellState::Live { .. } => {}
+        CellState::Cold => {
+            let trace = TraceGenerator::new(fleet.catalog).generate(&TraceConfig {
+                period: sim.period,
+                activity: sim.activity,
+                start_ms: 0,
+                duration_ms: sim.warmup_ms + sim.duration_ms,
+                seed: sim.seed,
+            });
+            let mut store = AppLogStore::new(StoreConfig {
+                segment_rows: sim.segment_rows,
+                ..StoreConfig::default()
+            });
+            let warm_end = trace.partition_point(|e| e.timestamp_ms < sim.warmup_ms);
+            log_events(&mut store, codec.as_ref(), &trace[..warm_end])?;
+            cell.next_event = warm_end;
+            let engine_cfg = EngineConfig {
+                cache_budget_bytes: fleet.arbiter.activate(slot),
+                ..fleet.cfg.engine
+            };
+            let engine = Engine::from_shared(Arc::clone(&fleet.compiled), engine_cfg);
+            cell.state = CellState::Live {
+                store,
+                engine,
+                trace,
+            };
+        }
+        CellState::Hibernated { ref image } => {
+            // Trace regeneration is deterministic bookkeeping a real
+            // device wouldn't do (its behaviors just keep arriving), so
+            // it stays outside the measured rehydration latency.
+            let trace = TraceGenerator::new(fleet.catalog).generate(&TraceConfig {
+                period: sim.period,
+                activity: sim.activity,
+                start_ms: 0,
+                duration_ms: sim.warmup_ms + sim.duration_ms,
+                seed: sim.seed,
+            });
+            let t0 = std::time::Instant::now();
+            let (store, session_state) = persist::from_bytes_with_session(
+                image,
+                StoreConfig {
+                    segment_rows: sim.segment_rows,
+                    ..StoreConfig::default()
+                },
+            )
+            .context("rehydrating app-log snapshot")?;
+            let session_state = session_state
+                .ok_or_else(|| anyhow!("hibernation image lacks a session-state block"))?;
+            let engine_cfg = EngineConfig {
+                cache_budget_bytes: fleet.arbiter.rehydrate(slot),
+                ..fleet.cfg.engine
+            };
+            let mut engine = Engine::from_shared(Arc::clone(&fleet.compiled), engine_cfg);
+            engine
+                .import_state(&session_state)
+                .context("rehydrating session state")?;
+            cell.rehydrate_ns.push(t0.elapsed().as_nanos() as u64);
+            cell.rehydrations += 1;
+            cell.state = CellState::Live {
+                store,
+                engine,
+                trace,
+            };
+        }
+        CellState::Done => unreachable!("trigger queued for a retired session"),
+    }
+    let CellState::Live {
+        ref mut store,
+        ref mut engine,
+        ref trace,
+    } = cell.state
+    else {
+        unreachable!()
+    };
+
+    // -- replay behaviors strictly before the trigger (the sequential
+    //    driver's exact cut-off) --
+    let upto = trace.partition_point(|e| e.timestamp_ms < at);
+    if upto > cell.next_event {
+        log_events(store, codec.as_ref(), &trace[cell.next_event..upto])?;
+        cell.next_event = upto;
+    }
+
+    // -- serve the inference --
+    engine.set_cache_budget(fleet.arbiter.session_budget(slot), sim.inference_interval_ms);
+    let extraction = engine.extract(store, at)?;
+    cell.peak_cache_bytes = cell.peak_cache_bytes.max(extraction.cache_bytes);
+    fleet.arbiter.report_usage(slot, extraction.cache_bytes);
+    let inference_ns = match model {
+        Some(rt) => {
+            let meta = rt.meta();
+            let recent = recent_observations(store, at, meta.seq_len, meta.seq_dim);
+            let inputs = pack_inputs(
+                meta,
+                &extraction.values,
+                &DEVICE_FEATS,
+                &recent,
+                &cloud_feats(),
+            );
+            let t0 = std::time::Instant::now();
+            cell.last_prediction = rt.infer(&inputs)?;
+            t0.elapsed().as_nanos() as u64
+        }
+        None => 0,
+    };
+    cell.recorder
+        .record(extraction.wall_ns, inference_ns, &extraction.breakdown);
+    cell.requests += 1;
+    cell.events_logged = store.len();
+    if fleet.cfg.record_values {
+        cell.values.push(extraction.values);
+    }
+
+    // -- schedule the successor or retire --
+    match next_trigger(sim, at) {
+        Some(next) => {
+            if next - at >= fleet.cfg.hibernate_after_ms {
+                hibernate_locked(fleet, slot, cell);
+            } else {
+                fleet.victims.push(next, slot);
+            }
+            cell.next_at = Some(next);
+            fleet.queues[me].lock().unwrap().push(std::cmp::Reverse((next, slot)));
+        }
+        None => {
+            cell.next_at = None;
+            cell.state = CellState::Done;
+            fleet.arbiter.complete(slot);
+            fleet.remaining.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    Ok(())
+}
+
+/// Hibernate a live session (cell lock already held): pack the app log
+/// and engine state into one image, move the ledger bytes to the
+/// hibernated tier, drop every resident structure.
+fn hibernate_locked(fleet: &Fleet<'_>, slot: usize, cell: &mut Cell) {
+    let CellState::Live {
+        ref store,
+        ref engine,
+        ..
+    } = cell.state
+    else {
+        return;
+    };
+    let image = persist::to_bytes_with_session(store, &engine.export_state());
+    fleet.arbiter.hibernate(slot, image.len());
+    cell.hibernations += 1;
+    cell.state = CellState::Hibernated { image };
+}
+
+/// Ledger pressure relief: while live cache usage exceeds the live cap,
+/// hibernate the session whose next trigger is farthest away. Runs with
+/// no cell lock held; each popped victim is re-validated under its own
+/// cell lock (the heap is lazily invalidated).
+fn relieve_pressure(fleet: &Fleet<'_>) {
+    while fleet.arbiter.total_bytes() > fleet.cfg.live_cap_bytes {
+        let Some((next_at, slot)) = fleet.victims.pop() else {
+            return;
+        };
+        let mut cell = fleet.cells[slot].lock().unwrap();
+        let fresh = cell.next_at == Some(next_at) && matches!(cell.state, CellState::Live { .. });
+        if fresh {
+            hibernate_locked(fleet, slot, &mut cell);
+        }
+    }
+}
+
+/// The sequential driver's fixed model-input constants, duplicated here
+/// so scheduled predictions are bit-identical to
+/// [`crate::workload::driver::run_simulation`]'s.
+const DEVICE_FEATS: [f32; 8] = [0.6, 0.8, 0.3, 0.5, 0.2, 0.9, 0.1, 0.7];
+
+fn cloud_feats() -> Vec<f32> {
+    (0..64).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 - 0.5).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::schema::CatalogConfig;
+    use crate::coordinator::pool::{PoolConfig, SessionPool};
+    use crate::features::catalog::{generate_feature_set, FeatureSetConfig, MEANINGFUL_WINDOWS};
+    use crate::runtime::SurrogateModel;
+    use crate::workload::driver::{run_simulation, SimConfig};
+    use crate::workload::services::ServiceKind;
+
+    fn catalog() -> Catalog {
+        Catalog::generate(&CatalogConfig::paper(), 42)
+    }
+
+    fn specs(cat: &Catalog) -> Vec<FeatureSpec> {
+        generate_feature_set(
+            cat,
+            &FeatureSetConfig {
+                num_features: 12,
+                num_types: 4,
+                identical_share: 0.6,
+                windows: MEANINGFUL_WINDOWS[..3].to_vec(),
+                multi_type_prob: 0.2,
+                seed: 7,
+            },
+        )
+    }
+
+    fn base_sim() -> SimConfig {
+        SimConfig {
+            warmup_ms: 6 * 60_000,
+            duration_ms: 2 * 60_000,
+            inference_interval_ms: 30_000,
+            seed: 11,
+            ..SimConfig::default()
+        }
+    }
+
+    fn sched_cfg(workers: usize) -> SchedConfig {
+        SchedConfig {
+            workers,
+            global_cache_cap_bytes: 96 * 1024,
+            record_values: true,
+            ..SchedConfig::default()
+        }
+    }
+
+    fn assert_reports_identical(a: &[SessionReport], b: &[SessionReport], label: &str) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.user_id, y.user_id, "{label}");
+            assert_eq!(x.requests, y.requests, "{label}: user {}", x.user_id);
+            assert_eq!(
+                x.events_logged, y.events_logged,
+                "{label}: user {}",
+                x.user_id
+            );
+            assert_eq!(x.values, y.values, "{label}: user {}", x.user_id);
+        }
+    }
+
+    #[test]
+    fn scheduler_matches_pool_and_sequential_for_any_worker_count() {
+        let cat = catalog();
+        let fs = specs(&cat);
+        let users = SessionConfig::fleet(&base_sim(), 6);
+
+        let pool = SessionPool::new(
+            fs.clone(),
+            &cat,
+            PoolConfig {
+                num_shards: 2,
+                global_cache_cap_bytes: 96 * 1024,
+                record_values: true,
+                ..PoolConfig::default()
+            },
+        )
+        .unwrap()
+        .run(&cat, &users, None)
+        .unwrap();
+
+        for workers in [1, 3] {
+            let sched = FleetScheduler::new(fs.clone(), &cat, sched_cfg(workers))
+                .unwrap()
+                .run(&cat, &users, None)
+                .unwrap();
+            assert_eq!(sched.workers, workers);
+            assert_reports_identical(
+                &sched.sessions,
+                &pool.sessions,
+                &format!("sched({workers}) vs pool"),
+            );
+            assert_eq!(sched.hibernations, 0);
+            assert_eq!(sched.rehydrations, 0);
+        }
+
+        // Sequential oracle: a private engine driven by run_simulation.
+        for user in &users {
+            let mut standalone =
+                Engine::new(fs.clone(), &cat, EngineConfig::autofeature()).unwrap();
+            let seq = run_simulation(&cat, &mut standalone, None, &user.sim).unwrap();
+            let mine = &pool.sessions[user.user_id as usize];
+            assert_eq!(seq.records.len(), mine.requests);
+            for (got, rec) in mine.values.iter().zip(&seq.records) {
+                for (x, y) in got.iter().zip(&rec.extraction.values) {
+                    assert!(x.approx_eq(y, 1e-9), "user {}: {x:?} vs {y:?}", user.user_id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hibernation_policies_do_not_change_values() {
+        let cat = catalog();
+        let fs = specs(&cat);
+        let users = SessionConfig::fleet(&base_sim(), 5);
+        let sched = FleetScheduler::new(fs.clone(), &cat, sched_cfg(3)).unwrap();
+        let baseline = sched.run(&cat, &users, None).unwrap();
+        assert_eq!(baseline.hibernations, 0);
+
+        // Threshold: every inter-trigger gap (30 s) crosses 1 ms, so
+        // every session hibernates after every trigger.
+        let always = FleetScheduler::from_shared(
+            sched.shared_plan(),
+            SchedConfig {
+                hibernate_after_ms: 1,
+                ..sched_cfg(3)
+            },
+        )
+        .run(&cat, &users, None)
+        .unwrap();
+        assert_reports_identical(&always.sessions, &baseline.sessions, "always-hibernate");
+        // One hibernation after every non-final trigger (a retiring
+        // session has no gap to sleep across), and each of those images
+        // is rehydrated exactly once at the successor trigger.
+        let triggers = baseline.total_requests();
+        assert_eq!(always.hibernations, triggers - users.len());
+        assert_eq!(always.rehydrations, triggers - users.len());
+        assert!(always.rehydrate_p50_ns > 0);
+        assert!(always.rehydrate_p50_ns <= always.rehydrate_p99_ns);
+        assert!(always.peak_hibernated_bytes > 0);
+        assert!(always.peak_ledger_bytes >= always.peak_hibernated_bytes);
+    }
+
+    #[test]
+    fn pressure_hibernation_bounds_live_tier_without_changing_values() {
+        let cat = catalog();
+        let fs = specs(&cat);
+        let users = SessionConfig::fleet(&base_sim(), 5);
+        // A generous global cap so sessions actually cache (the pool's
+        // cap test shows nonzero usage at this size)...
+        let generous = SchedConfig {
+            global_cache_cap_bytes: 1024 * 1024,
+            workers: 3,
+            record_values: true,
+            ..SchedConfig::default()
+        };
+        let sched = FleetScheduler::new(fs, &cat, generous.clone()).unwrap();
+        let baseline = sched.run(&cat, &users, None).unwrap();
+        assert!(baseline.peak_live_cache_bytes > 0, "cache never used");
+
+        // ...then a 1-byte live cap: any reported usage makes the
+        // pressure loop hibernate farthest-next-trigger victims.
+        let pressure = FleetScheduler::from_shared(
+            sched.shared_plan(),
+            SchedConfig {
+                live_cap_bytes: 1,
+                ..generous
+            },
+        )
+        .run(&cat, &users, None)
+        .unwrap();
+        assert_reports_identical(&pressure.sessions, &baseline.sessions, "pressure");
+        assert!(
+            pressure.hibernations > 0,
+            "a 1-byte live cap must evict someone"
+        );
+        assert_eq!(pressure.rehydrations, pressure.hibernations);
+        assert!(pressure.peak_live_cache_bytes <= pressure.global_cache_cap_bytes);
+    }
+
+    #[test]
+    fn hibernation_preserves_incremental_state_without_replay() {
+        // The delta engine's acceptance bar: a rehydrated session's next
+        // extraction replays zero rows (watermark + IncBank continuity).
+        let cat = catalog();
+        let fs = specs(&cat);
+        let users = SessionConfig::fleet(&base_sim(), 3);
+        let cfg = SchedConfig {
+            engine: EngineConfig::incremental(),
+            hibernate_after_ms: 1,
+            workers: 2,
+            record_values: true,
+            ..SchedConfig::default()
+        };
+        let sched = FleetScheduler::new(fs.clone(), &cat, cfg).unwrap();
+        let report = sched.run(&cat, &users, None).unwrap();
+
+        let baseline = FleetScheduler::from_shared(
+            sched.shared_plan(),
+            SchedConfig {
+                engine: EngineConfig::incremental(),
+                workers: 2,
+                record_values: true,
+                ..SchedConfig::default()
+            },
+        )
+        .run(&cat, &users, None)
+        .unwrap();
+        assert_reports_identical(&report.sessions, &baseline.sessions, "incremental");
+        assert!(report.hibernations > 0);
+    }
+
+    #[test]
+    fn scheduler_runs_inference_and_matches_sequential_predictions() {
+        let cat = catalog();
+        let fs = specs(&cat);
+        let users = SessionConfig::fleet(&base_sim(), 3);
+        let surrogate = SurrogateModel::for_service(ServiceKind::SR);
+        let model: Option<&(dyn InferenceBackend + Sync)> = Some(&surrogate);
+        let report = FleetScheduler::new(
+            fs.clone(),
+            &cat,
+            SchedConfig {
+                hibernate_after_ms: 1,
+                ..sched_cfg(2)
+            },
+        )
+        .unwrap()
+        .run(&cat, &users, model)
+        .unwrap();
+        for user in &users {
+            let mut engine = Engine::new(fs.clone(), &cat, EngineConfig::autofeature()).unwrap();
+            let seq = run_simulation(&cat, &mut engine, None, &user.sim).unwrap();
+            let mine = &report.sessions[user.user_id as usize];
+            assert_eq!(mine.requests, seq.records.len());
+            let p = mine.last_prediction;
+            assert!(p > 0.0 && p < 1.0, "user {}: prediction {p}", user.user_id);
+        }
+        assert!(report.fleet.extraction_share > 0.0);
+    }
+}

@@ -11,13 +11,16 @@
 //!   (every strategy, with per-operator counters),
 //! * [`online`] — the per-request online phase: a thin driver that
 //!   schedules the lowered pipelines and keeps the session state
-//!   (cache, watermarks, staleness fast path).
+//!   (cache, watermarks, staleness fast path),
+//! * [`state`] — hibernation: versioned, CRC-checked serialization of
+//!   the session-private mutable state (`export_state`/`import_state`).
 
 pub mod config;
 pub mod exec;
 pub mod offline;
 pub mod online;
 pub mod profiler;
+pub(crate) mod state;
 
 use crate::applog::event::TimestampMs;
 use crate::applog::store::AppLogStore;

@@ -170,6 +170,41 @@ impl Engine {
             _ => self.cfg.expected_interval_ms,
         }
     }
+
+    /// Serialize all session-private mutable state — cached lanes with
+    /// their watermarks, the incremental state bank, the staleness
+    /// fast-path clock — into a versioned, CRC-checked blob (see
+    /// [`super::state`]). The blob pins the compiled plan's fingerprint;
+    /// the engine itself stays usable (export is non-destructive).
+    /// Exporting the same state twice yields identical bytes.
+    pub fn export_state(&self) -> Vec<u8> {
+        super::state::encode(
+            &self.compiled,
+            &self.cache,
+            self.last_now,
+            &self.last_values,
+            &self.inc,
+        )
+    }
+
+    /// Rehydrate from an [`export_state`](Self::export_state) blob,
+    /// replacing this session's mutable state wholesale. Fails (leaving
+    /// the current state untouched) on any corruption, version mismatch,
+    /// or plan-fingerprint mismatch. On success the session continues
+    /// exactly where the exported one stopped: watermark continuity
+    /// makes the next delta extraction replay zero rows.
+    pub fn import_state(&mut self, data: &[u8]) -> Result<()> {
+        let st = super::state::decode(&self.compiled, self.cache.budget(), data)?;
+        self.cache = st.cache;
+        self.last_now = st.last_now;
+        self.last_values = st.last_values;
+        self.inc = st.inc;
+        // Re-establish the budget invariant under this session's current
+        // (possibly shrunken) grant: evicts lowest-priority lanes if the
+        // restored state no longer fits.
+        self.set_cache_budget(self.cache.budget(), self.cfg.expected_interval_ms);
+        Ok(())
+    }
 }
 
 impl Extractor for Engine {
@@ -377,6 +412,62 @@ mod tests {
         let (cat, specs, _) = setup();
         let eng = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
         assert_eq!(eng.label(), "AutoFeature");
+    }
+
+    #[test]
+    fn export_import_roundtrips_mid_stream() {
+        // Hibernate after the second trigger, rehydrate into a fresh
+        // sibling over the same shared plan, and continue both: values,
+        // cache footprint and incremental state must stay identical.
+        let (cat, specs, store) = setup();
+        for cfg in [
+            EngineConfig::autofeature(),
+            EngineConfig::incremental(),
+            EngineConfig::fusion_only(),
+            EngineConfig::stale_tolerant(60_000),
+        ] {
+            let compiled = std::sync::Arc::new(
+                crate::engine::offline::compile(specs.clone(), &cat, &cfg).unwrap(),
+            );
+            let mut a = Engine::from_shared(std::sync::Arc::clone(&compiled), cfg);
+            a.extract(&store, 20 * 60_000).unwrap();
+            a.extract(&store, 21 * 60_000).unwrap();
+            let blob = a.export_state();
+            // Determinism: exporting unchanged state twice is byte-equal.
+            assert_eq!(blob, a.export_state());
+            let mut b = Engine::from_shared(std::sync::Arc::clone(&compiled), cfg);
+            b.import_state(&blob).unwrap();
+            assert_eq!(a.cache_bytes(), b.cache_bytes());
+            assert_eq!(a.has_incremental_state(), b.has_incremental_state());
+            for now in [22 * 60_000i64, 25 * 60_000, 40 * 60_000] {
+                let ra = a.extract(&store, now).unwrap();
+                let rb = b.extract(&store, now).unwrap();
+                assert_eq!(ra.values, rb.values, "diverged @ {now}");
+                assert_eq!(ra.cache_bytes, rb.cache_bytes, "cache drift @ {now}");
+                assert_eq!(ra.served_stale, rb.served_stale);
+            }
+        }
+    }
+
+    #[test]
+    fn import_rejects_corruption_and_foreign_plans() {
+        let (cat, specs, store) = setup();
+        let cfg = EngineConfig::incremental();
+        let mut eng = Engine::new(specs.clone(), &cat, cfg).unwrap();
+        eng.extract(&store, 20 * 60_000).unwrap();
+        let blob = eng.export_state();
+        // Any single-byte corruption is caught by the CRC (or the
+        // header checks for the length/magic bytes).
+        let mut bad = blob.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x04;
+        assert!(eng.import_state(&bad).is_err());
+        assert!(eng.import_state(&blob[..blob.len() - 1]).is_err());
+        // A plan with different features must refuse the blob.
+        let mut other = Engine::new(specs[..specs.len() - 1].to_vec(), &cat, cfg).unwrap();
+        assert!(other.import_state(&blob).is_err());
+        // The original still imports cleanly.
+        assert!(eng.import_state(&blob).is_ok());
     }
 
     #[test]

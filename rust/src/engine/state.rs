@@ -1,0 +1,323 @@
+//! Session-state serialization for hibernation.
+//!
+//! [`super::online::Engine::export_state`] flattens everything
+//! session-private and mutable — the cached lanes (rows + watermarks),
+//! the persistent [`IncrementalState`] bank, and the §5 staleness
+//! fast-path clock — into one versioned, CRC-checked blob; `import_state`
+//! rebuilds it into a fresh engine over the same shared compiled plan.
+//! Together with the applog snapshot (packed side by side by
+//! [`crate::applog::persist::to_bytes_with_session`]) this is the whole
+//! hibernation image of a session: a rehydrated engine is
+//! indistinguishable from one that never slept — same values, same
+//! watermark continuity, `rows_replayed == 0` on its next delta
+//! extraction.
+//!
+//! Layout (all multi-byte integers varint/zigzag unless noted, `f64`s
+//! raw IEEE bits — see [`crate::util::wire`]):
+//!
+//! ```text
+//! magic "AFSS" | version=1 u16 | blob_len u32 |
+//! plan_fingerprint u64 | feature_count varint | flags u8 |
+//! [ last_now ] [ last_values: ts, value* ] |
+//! lane_count | ( event_type, watermark, row_count,
+//!                ( ts, seq, attr_count, (attr_id, tagged value)* )* )* |
+//! [ inc bank: synced flag [+ ts], ( present u8 [+ state] )* ] |
+//! crc32 u32   (IEEE, over everything before it)
+//! ```
+//!
+//! The embedded plan fingerprint pins the blob to the exact lowered
+//! [`crate::optimizer::lower::ExecPlan`]: state hibernated under one
+//! compilation never silently feeds a different one. Lanes serialize in
+//! ascending event-type order so exporting the same state twice yields
+//! identical bytes.
+//!
+//! [`IncrementalState`]: crate::features::incremental::IncrementalState
+
+use anyhow::{bail, ensure, Result};
+
+use crate::applog::event::{AttrValue, TimestampMs};
+use crate::cache::entry::{CachedLane, CachedRow};
+use crate::cache::store::CacheStore;
+use crate::features::incremental::IncrementalState;
+use crate::features::value::FeatureValue;
+use crate::optimizer::lower::AggMode;
+use crate::util::wire;
+
+use super::exec::delta::IncBank;
+use super::offline::CompiledEngine;
+
+const MAGIC: &[u8; 4] = b"AFSS";
+const VERSION: u16 = 1;
+
+const FLAG_LAST_NOW: u8 = 1 << 0;
+const FLAG_LAST_VALUES: u8 = 1 << 1;
+const FLAG_INC: u8 = 1 << 2;
+
+/// The decoded session-private mutable state, handed back to the engine.
+pub(crate) struct SessionState {
+    pub cache: CacheStore,
+    pub last_now: Option<TimestampMs>,
+    pub last_values: Option<(TimestampMs, Vec<FeatureValue>)>,
+    pub inc: Option<IncBank>,
+}
+
+pub(crate) fn encode(
+    compiled: &CompiledEngine,
+    cache: &CacheStore,
+    last_now: Option<TimestampMs>,
+    last_values: &Option<(TimestampMs, Vec<FeatureValue>)>,
+    inc: &Option<IncBank>,
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes()); // blob_len, patched below
+    out.extend_from_slice(&compiled.exec.fingerprint.to_le_bytes());
+    wire::put_varint(&mut out, compiled.plan.features.len() as u64);
+    let mut flags = 0u8;
+    if last_now.is_some() {
+        flags |= FLAG_LAST_NOW;
+    }
+    if last_values.is_some() {
+        flags |= FLAG_LAST_VALUES;
+    }
+    if inc.is_some() {
+        flags |= FLAG_INC;
+    }
+    out.push(flags);
+    if let Some(t) = last_now {
+        wire::put_varint_i64(&mut out, t);
+    }
+    if let Some((t, values)) = last_values {
+        wire::put_varint_i64(&mut out, *t);
+        for v in values {
+            put_value(&mut out, v);
+        }
+    }
+    let lanes = cache.lanes_sorted();
+    wire::put_varint(&mut out, lanes.len() as u64);
+    for lane in lanes {
+        wire::put_varint(&mut out, lane.event_type as u64);
+        wire::put_varint_i64(&mut out, lane.watermark);
+        wire::put_varint(&mut out, lane.rows.len() as u64);
+        for row in &lane.rows {
+            wire::put_varint_i64(&mut out, row.ts);
+            wire::put_varint(&mut out, row.seq);
+            wire::put_varint(&mut out, row.attrs.len() as u64);
+            for (id, v) in &row.attrs {
+                wire::put_varint(&mut out, *id as u64);
+                match v {
+                    AttrValue::Int(x) => {
+                        out.push(0);
+                        wire::put_varint_i64(&mut out, *x);
+                    }
+                    AttrValue::Float(x) => {
+                        out.push(1);
+                        wire::put_f64(&mut out, *x);
+                    }
+                    AttrValue::Str(s) => {
+                        out.push(2);
+                        wire::put_bytes(&mut out, s.as_bytes());
+                    }
+                }
+            }
+        }
+    }
+    if let Some(bank) = inc {
+        match bank.synced_at {
+            None => out.push(0),
+            Some(t) => {
+                out.push(1);
+                wire::put_varint_i64(&mut out, t);
+            }
+        }
+        for state in &bank.states {
+            match state {
+                None => out.push(0),
+                Some(st) => {
+                    out.push(1);
+                    st.write_state(&mut out);
+                }
+            }
+        }
+    }
+    let blob_len = (out.len() + 4) as u32;
+    out[6..10].copy_from_slice(&blob_len.to_le_bytes());
+    let crc = wire::crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Decode a session-state blob against `compiled` (the plan the session
+/// must resume under) with `budget` as the restored cache's byte budget.
+/// Length, CRC and the plan fingerprint are verified before any parsing,
+/// so a damaged or mismatched blob is rejected instead of rehydrating a
+/// silently wrong session.
+pub(crate) fn decode(
+    compiled: &CompiledEngine,
+    budget: usize,
+    data: &[u8],
+) -> Result<SessionState> {
+    ensure!(data.len() >= 14, "truncated session-state header");
+    ensure!(&data[..4] == MAGIC, "bad session-state magic");
+    let version = u16::from_le_bytes(data[4..6].try_into().unwrap());
+    ensure!(version == VERSION, "unsupported session-state version {version}");
+    let declared = u32::from_le_bytes(data[6..10].try_into().unwrap()) as usize;
+    ensure!(
+        declared == data.len(),
+        "session-state length mismatch: header says {declared}, blob is {}",
+        data.len()
+    );
+    let body = &data[..data.len() - 4];
+    let stored_crc = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+    let actual = wire::crc32(body);
+    ensure!(
+        stored_crc == actual,
+        "session-state checksum mismatch (stored {stored_crc:08x}, computed {actual:08x})"
+    );
+
+    let pos = &mut 10usize;
+    let fp = u64::from_le_bytes(wire::take(body, pos, 8)?.try_into().unwrap());
+    ensure!(
+        fp == compiled.exec.fingerprint,
+        "session state was hibernated under plan {fp:016x}, resuming under {:016x}",
+        compiled.exec.fingerprint
+    );
+    let features = &compiled.plan.features;
+    let n_features = wire::get_varint(body, pos)? as usize;
+    ensure!(
+        n_features == features.len(),
+        "session state has {n_features} features, plan has {}",
+        features.len()
+    );
+    let flags = wire::get_u8(body, pos)?;
+    ensure!(flags & !(FLAG_LAST_NOW | FLAG_LAST_VALUES | FLAG_INC) == 0, "unknown state flags");
+
+    let last_now = if flags & FLAG_LAST_NOW != 0 {
+        Some(wire::get_varint_i64(body, pos)?)
+    } else {
+        None
+    };
+    let last_values = if flags & FLAG_LAST_VALUES != 0 {
+        let t = wire::get_varint_i64(body, pos)?;
+        let mut values = Vec::new();
+        for _ in 0..n_features {
+            values.push(get_value(body, pos)?);
+        }
+        Some((t, values))
+    } else {
+        None
+    };
+
+    let mut cache = CacheStore::new(budget);
+    let lane_count = wire::get_varint(body, pos)? as usize;
+    let mut prev_type: Option<u16> = None;
+    for _ in 0..lane_count {
+        let t = wire::get_varint(body, pos)?;
+        ensure!(t <= u16::MAX as u64, "lane event type {t} out of range");
+        let t = t as u16;
+        ensure!(
+            prev_type.is_none_or(|p| p < t),
+            "cache lanes not in ascending type order"
+        );
+        prev_type = Some(t);
+        let watermark = wire::get_varint_i64(body, pos)?;
+        let row_count = wire::get_varint(body, pos)? as usize;
+        let mut lane = CachedLane::new(t, watermark);
+        let mut prev_key: Option<(TimestampMs, u64)> = None;
+        for _ in 0..row_count {
+            let ts = wire::get_varint_i64(body, pos)?;
+            let seq = wire::get_varint(body, pos)?;
+            ensure!(
+                prev_key.is_none_or(|p| p < (ts, seq)),
+                "cache rows not chronological"
+            );
+            prev_key = Some((ts, seq));
+            let attr_count = wire::get_varint(body, pos)? as usize;
+            let mut attrs = Vec::new();
+            for _ in 0..attr_count {
+                let id = wire::get_varint(body, pos)?;
+                ensure!(id <= u16::MAX as u64, "attr id {id} out of range");
+                let v = match wire::get_u8(body, pos)? {
+                    0 => AttrValue::Int(wire::get_varint_i64(body, pos)?),
+                    1 => AttrValue::Float(wire::get_f64(body, pos)?),
+                    2 => {
+                        let bytes = wire::get_bytes(body, pos)?;
+                        AttrValue::Str(String::from_utf8(bytes.to_vec())?)
+                    }
+                    tag => bail!("unknown attr value tag {tag}"),
+                };
+                attrs.push((id as u16, v));
+            }
+            lane.push(CachedRow { ts, seq, attrs });
+        }
+        cache.restore_lane(lane);
+    }
+
+    let inc = if flags & FLAG_INC != 0 {
+        let synced_at = if wire::get_u8(body, pos)? != 0 {
+            Some(wire::get_varint_i64(body, pos)?)
+        } else {
+            None
+        };
+        let mut states = Vec::new();
+        for (i, spec) in features.iter().enumerate() {
+            if wire::get_u8(body, pos)? != 0 {
+                ensure!(
+                    matches!(compiled.exec.agg_modes[i], AggMode::Persistent),
+                    "persistent state for one-shot feature '{}'",
+                    spec.name
+                );
+                states.push(Some(IncrementalState::read_state(spec, body, pos)?));
+            } else {
+                states.push(None);
+            }
+        }
+        Some(IncBank { synced_at, states })
+    } else {
+        None
+    };
+
+    ensure!(
+        *pos == body.len(),
+        "trailing garbage after session state ({} bytes)",
+        body.len() - *pos
+    );
+    Ok(SessionState {
+        cache,
+        last_now,
+        last_values,
+        inc,
+    })
+}
+
+fn put_value(out: &mut Vec<u8>, v: &FeatureValue) {
+    match v {
+        FeatureValue::Scalar(x) => {
+            out.push(0);
+            wire::put_f64(out, *x);
+        }
+        FeatureValue::Vector(xs) => {
+            out.push(1);
+            wire::put_varint(out, xs.len() as u64);
+            for x in xs {
+                wire::put_f64(out, *x);
+            }
+        }
+    }
+}
+
+fn get_value(data: &[u8], pos: &mut usize) -> Result<FeatureValue> {
+    match wire::get_u8(data, pos)? {
+        0 => Ok(FeatureValue::Scalar(wire::get_f64(data, pos)?)),
+        1 => {
+            let n = wire::get_varint(data, pos)? as usize;
+            let mut xs = Vec::new();
+            for _ in 0..n {
+                xs.push(wire::get_f64(data, pos)?);
+            }
+            Ok(FeatureValue::Vector(xs))
+        }
+        tag => bail!("unknown feature value tag {tag}"),
+    }
+}

@@ -45,7 +45,10 @@
 use std::cmp::{Ordering, Reverse};
 use std::collections::VecDeque;
 
+use anyhow::{anyhow, ensure, Result};
+
 use crate::applog::event::{AttrValue, TimestampMs};
+use crate::util::wire;
 
 use super::compute::CompFunc;
 use super::spec::FeatureSpec;
@@ -423,6 +426,200 @@ impl IncrementalState {
             Core::Decayed { acc, .. } => FeatureValue::Scalar(if empty { 0.0 } else { *acc }),
         }
     }
+
+    /// Serialize for session hibernation (the engine's `export_state`).
+    /// Layout: `comp_tag u8 | now zigzag | n varint | corrupt u8 | core`
+    /// where the core payload is variant-specific. `f64`s are raw bit
+    /// patterns, so the round-trip is exact. The enclosing blob carries
+    /// the CRC; this layer only validates structure.
+    pub fn write_state(&self, out: &mut Vec<u8>) {
+        out.push(comp_tag(&self.comp));
+        wire::put_varint_i64(out, self.now);
+        wire::put_varint(out, self.n);
+        out.push(self.corrupt as u8);
+        let put_key = |out: &mut Vec<u8>, key: &Key| {
+            wire::put_varint_i64(out, key.0);
+            wire::put_varint(out, key.1);
+        };
+        match &self.core {
+            Core::Count => {}
+            Core::Sum { sum } | Core::Mean { sum } => wire::put_f64(out, *sum),
+            // Min/Max payloads equal the key's value by construction, so
+            // each item is `value f64 | ts | seq`.
+            Core::Min { set } => {
+                wire::put_varint(out, set.items.len() as u64);
+                for ((OrdF64(v), key), _) in &set.items {
+                    wire::put_f64(out, *v);
+                    put_key(out, key);
+                }
+            }
+            Core::Max { set } => {
+                wire::put_varint(out, set.items.len() as u64);
+                for ((Reverse(OrdF64(v)), key), _) in &set.items {
+                    wire::put_f64(out, *v);
+                    put_key(out, key);
+                }
+            }
+            Core::Latest { best } => match best {
+                None => out.push(0),
+                Some((key, v)) => {
+                    out.push(1);
+                    put_key(out, key);
+                    wire::put_f64(out, *v);
+                }
+            },
+            Core::Earliest { set } => {
+                wire::put_varint(out, set.items.len() as u64);
+                for (key, v) in &set.items {
+                    put_key(out, key);
+                    wire::put_f64(out, *v);
+                }
+            }
+            Core::Distinct { set } => {
+                wire::put_varint(out, set.len() as u64);
+                for (bits, count) in set {
+                    wire::put_varint(out, *bits);
+                    wire::put_varint(out, *count as u64);
+                }
+            }
+            Core::Concat { ring, .. } => {
+                wire::put_varint(out, ring.len() as u64);
+                for (key, v) in ring {
+                    put_key(out, key);
+                    wire::put_f64(out, *v);
+                }
+            }
+            Core::Decayed { acc, .. } => wire::put_f64(out, *acc),
+        }
+    }
+
+    /// Rebuild a hibernated state for `spec`, consuming bytes written by
+    /// [`write_state`] at `*pos`. The comp tag must match the spec (the
+    /// caller already validated the whole-plan fingerprint; this guards
+    /// against per-feature misalignment) and every bounded-set invariant
+    /// is re-checked, so a structurally damaged blob errors instead of
+    /// producing a silently wrong accumulator.
+    pub fn read_state(spec: &FeatureSpec, data: &[u8], pos: &mut usize) -> Result<IncrementalState> {
+        let mut st = IncrementalState::for_spec(spec)
+            .ok_or_else(|| anyhow!("feature '{}' has no persistent form", spec.name))?;
+        let tag = wire::get_u8(data, pos)?;
+        ensure!(
+            tag == comp_tag(&st.comp),
+            "state comp tag {tag} does not match feature '{}'",
+            spec.name
+        );
+        st.now = wire::get_varint_i64(data, pos)?;
+        st.n = wire::get_varint(data, pos)?;
+        st.corrupt = wire::get_u8(data, pos)? != 0;
+        let get_key = |data: &[u8], pos: &mut usize| -> Result<Key> {
+            Ok((wire::get_varint_i64(data, pos)?, wire::get_varint(data, pos)?))
+        };
+        let n = st.n;
+        match &mut st.core {
+            Core::Count => {}
+            Core::Sum { sum } | Core::Mean { sum } => *sum = wire::get_f64(data, pos)?,
+            Core::Min { set } => {
+                let k = wire::get_varint(data, pos)? as usize;
+                ensure!(k <= AUX_CAP && k as u64 <= n, "min set size {k} out of bounds");
+                for _ in 0..k {
+                    let v = wire::get_f64(data, pos)?;
+                    let key = get_key(data, pos)?;
+                    let item = ((OrdF64(v), key), v);
+                    ensure!(
+                        set.items.last().is_none_or(|last| last.0 <= item.0),
+                        "min set not sorted"
+                    );
+                    set.items.push(item);
+                }
+            }
+            Core::Max { set } => {
+                let k = wire::get_varint(data, pos)? as usize;
+                ensure!(k <= AUX_CAP && k as u64 <= n, "max set size {k} out of bounds");
+                for _ in 0..k {
+                    let v = wire::get_f64(data, pos)?;
+                    let key = get_key(data, pos)?;
+                    let item = ((Reverse(OrdF64(v)), key), v);
+                    ensure!(
+                        set.items.last().is_none_or(|last| last.0 <= item.0),
+                        "max set not sorted"
+                    );
+                    set.items.push(item);
+                }
+            }
+            Core::Latest { best } => {
+                if wire::get_u8(data, pos)? != 0 {
+                    let key = get_key(data, pos)?;
+                    let v = wire::get_f64(data, pos)?;
+                    *best = Some((key, v));
+                }
+            }
+            Core::Earliest { set } => {
+                let k = wire::get_varint(data, pos)? as usize;
+                ensure!(
+                    k <= AUX_CAP && k as u64 <= n,
+                    "earliest set size {k} out of bounds"
+                );
+                for _ in 0..k {
+                    let key = get_key(data, pos)?;
+                    let v = wire::get_f64(data, pos)?;
+                    ensure!(
+                        set.items.last().is_none_or(|last| last.0 <= key),
+                        "earliest set not sorted"
+                    );
+                    set.items.push((key, v));
+                }
+            }
+            Core::Distinct { set } => {
+                let k = wire::get_varint(data, pos)? as usize;
+                ensure!(k as u64 <= n, "distinct set size {k} exceeds live count {n}");
+                let mut total = 0u64;
+                for _ in 0..k {
+                    let bits = wire::get_varint(data, pos)?;
+                    let count = wire::get_varint(data, pos)? as u32;
+                    ensure!(count > 0, "distinct refcount of zero");
+                    ensure!(
+                        set.last().is_none_or(|&(b, _)| b < bits),
+                        "distinct set not strictly sorted"
+                    );
+                    total += count as u64;
+                    set.push((bits, count));
+                }
+                ensure!(total == n, "distinct refcounts {total} != live count {n}");
+            }
+            Core::Concat { ring, max_len } => {
+                let k = wire::get_varint(data, pos)? as usize;
+                ensure!(k <= *max_len, "concat ring size {k} exceeds max_len {max_len}");
+                for _ in 0..k {
+                    let key = get_key(data, pos)?;
+                    let v = wire::get_f64(data, pos)?;
+                    ensure!(
+                        ring.back().is_none_or(|&(last, _)| last <= key),
+                        "concat ring not chronological"
+                    );
+                    ring.push_back((key, v));
+                }
+            }
+            Core::Decayed { acc, .. } => *acc = wire::get_f64(data, pos)?,
+        }
+        Ok(st)
+    }
+}
+
+/// Stable wire tag per [`CompFunc`] variant (parameters live in the
+/// spec, not the blob, so parameterized variants share one tag).
+fn comp_tag(comp: &CompFunc) -> u8 {
+    match comp {
+        CompFunc::Count => 0,
+        CompFunc::Sum => 1,
+        CompFunc::Mean => 2,
+        CompFunc::Min => 3,
+        CompFunc::Max => 4,
+        CompFunc::Latest => 5,
+        CompFunc::Earliest => 6,
+        CompFunc::DistinctCount => 7,
+        CompFunc::Concat { .. } => 8,
+        CompFunc::DecayedSum { .. } => 9,
+    }
 }
 
 #[cfg(test)]
@@ -790,6 +987,72 @@ mod tests {
             IncrementalState::for_spec(&spec_for(CompFunc::Concat { max_len: 3 }, vec![0]))
                 .is_some()
         );
+    }
+
+    #[test]
+    fn state_serialization_roundtrips_and_stays_equivalent() {
+        // Serialize mid-stream, deserialize, and drive BOTH copies
+        // through the same subsequent deltas: snapshots must stay
+        // bit-identical (f64s round-trip as raw bits).
+        let mut rng = SimRng::seed_from_u64(0x5E55);
+        for comp in COMPS {
+            let spec = spec_for(comp, vec![0]);
+            let mut obs: Vec<(i64, u64, f64)> = Vec::new();
+            let mut ts = 0i64;
+            for seq in 0..200u64 {
+                ts += rng.range_i(1, 250);
+                obs.push((ts, seq, rng.range_i(0, 30) as f64 / 8.0));
+            }
+            let w = 8_000i64;
+            let mut st = IncrementalState::for_spec(&spec).unwrap();
+            let mut prev: Option<i64> = None;
+            let mut now = 1_000i64;
+            let mut twin: Option<IncrementalState> = None;
+            while now < ts + w {
+                step(&mut st, &obs, prev, now, w);
+                if twin.is_none() && now > ts / 2 {
+                    let mut buf = Vec::new();
+                    st.write_state(&mut buf);
+                    let mut pos = 0;
+                    let back = IncrementalState::read_state(&spec, &buf, &mut pos).unwrap();
+                    assert_eq!(pos, buf.len(), "{comp:?}: trailing state bytes");
+                    twin = Some(back);
+                } else if let Some(t) = twin.as_mut() {
+                    step(t, &obs, prev, now, w);
+                }
+                if let Some(t) = &twin {
+                    assert_eq!(
+                        format!("{:?}", st.snapshot()),
+                        format!("{:?}", t.snapshot()),
+                        "{comp:?} diverged after rehydrate @ {now}"
+                    );
+                    assert_eq!(st.live(), t.live(), "{comp:?}");
+                    assert_eq!(st.is_dirty(), t.is_dirty(), "{comp:?}");
+                }
+                prev = Some(now);
+                now += rng.range_i(1, 2_200);
+            }
+            assert!(twin.is_some(), "{comp:?}: stream too short to hibernate");
+        }
+    }
+
+    #[test]
+    fn state_deserialization_rejects_structural_damage() {
+        let spec = spec_for(CompFunc::Min, vec![0]);
+        let mut st = IncrementalState::for_spec(&spec).unwrap();
+        st.reset(0);
+        for i in 0..6i64 {
+            st.push(i, i as u64, &AttrValue::Float((10 - i) as f64));
+        }
+        let mut buf = Vec::new();
+        st.write_state(&mut buf);
+        // Wrong comp tag for the spec.
+        let sum_spec = spec_for(CompFunc::Sum, vec![0]);
+        let mut pos = 0;
+        assert!(IncrementalState::read_state(&sum_spec, &buf, &mut pos).is_err());
+        // Truncation mid-payload.
+        let mut pos = 0;
+        assert!(IncrementalState::read_state(&spec, &buf[..buf.len() - 3], &mut pos).is_err());
     }
 
     #[test]

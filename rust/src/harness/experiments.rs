@@ -912,6 +912,60 @@ pub fn ext_fleet(scale: Scale) -> Result<Vec<Row>> {
         "Extension — multi-user session pool: shard sweep (VR fleet)",
         &rows,
     );
+
+    // Event-driven scheduler arms: same fleet through the trigger queue,
+    // without and with hibernation (every inter-trigger gap sleeps), so
+    // the table shows what hibernation costs (rehydrate latency) and
+    // buys (live-tier footprint).
+    let workers = match scale {
+        Scale::Quick => 4usize,
+        Scale::Full => 8,
+    };
+    let mut sched_rows = Vec::new();
+    for (label, hibernate_after_ms) in [("sched", i64::MAX), ("sched+hibernate", 1)] {
+        let t0 = Instant::now();
+        let report = crate::harness::run_fleet_sched(
+            &catalog,
+            &svc,
+            &base,
+            num_users,
+            workers,
+            cap,
+            usize::MAX,
+            hibernate_after_ms,
+            None,
+        )?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut row = Row::new(format!("{label} ({workers} workers)"));
+        row.push("users", num_users as f64);
+        row.push("requests", report.total_requests() as f64);
+        row.push("fleet_p50_ms", report.fleet.p50_ms);
+        row.push("fleet_p99_ms", report.fleet.p99_ms);
+        row.push(
+            "peak_live_kb",
+            report.peak_live_cache_bytes as f64 / 1024.0,
+        );
+        row.push(
+            "peak_hib_kb",
+            report.peak_hibernated_bytes as f64 / 1024.0,
+        );
+        row.push("hibernations", report.hibernations as f64);
+        row.push(
+            "rehydrate_p50_us",
+            report.rehydrate_p50_ns as f64 / 1e3,
+        );
+        row.push(
+            "rehydrate_p99_us",
+            report.rehydrate_p99_ns as f64 / 1e3,
+        );
+        row.push("wall_s", wall_s);
+        sched_rows.push(row);
+    }
+    print_rows(
+        "Extension — event-driven fleet scheduler: hibernation (VR fleet)",
+        &sched_rows,
+    );
+    rows.extend(sched_rows);
     Ok(rows)
 }
 
@@ -1056,8 +1110,10 @@ mod tests {
     #[test]
     fn fleet_experiment_reports_bounded_percentiles() {
         let rows = ext_fleet(Scale::Quick).unwrap();
-        assert_eq!(rows.len(), 2); // shard counts 1 and 4
-        for row in &rows {
+        // Shard counts 1 and 4, then the scheduler without/with
+        // hibernation.
+        assert_eq!(rows.len(), 4);
+        for row in &rows[..2] {
             assert_eq!(row.get("users").unwrap(), 8.0);
             let (p50, p95, p99) = (
                 row.get("fleet_p50_ms").unwrap(),
@@ -1070,11 +1126,27 @@ mod tests {
                 "{row:?}"
             );
         }
-        // Shard count must not change the amount of work performed.
-        assert_eq!(
-            rows[0].get("requests").unwrap(),
-            rows[1].get("requests").unwrap()
-        );
+        for row in &rows[2..] {
+            assert_eq!(row.get("users").unwrap(), 8.0);
+            let (p50, p99) = (
+                row.get("fleet_p50_ms").unwrap(),
+                row.get("fleet_p99_ms").unwrap(),
+            );
+            assert!(p50 > 0.0 && p50 <= p99, "{row:?}");
+        }
+        // Neither sharding, the scheduler, nor hibernation may change
+        // the amount of work performed.
+        for row in &rows[1..] {
+            assert_eq!(
+                rows[0].get("requests").unwrap(),
+                row.get("requests").unwrap(),
+                "{row:?}"
+            );
+        }
+        // The hibernating arm actually hibernated and measured it.
+        assert!(rows[3].get("hibernations").unwrap() > 0.0);
+        assert!(rows[3].get("rehydrate_p50_us").unwrap() > 0.0);
+        assert_eq!(rows[2].get("hibernations").unwrap(), 0.0);
     }
 
     #[test]

@@ -171,6 +171,40 @@ pub fn run_fleet(
     pool.run(catalog, &users, model)
 }
 
+/// Run a multi-user fleet of one service through the event-driven
+/// [`crate::coordinator::sched::FleetScheduler`]: same fan-out as
+/// [`run_fleet`], but sessions multiplex onto `workers` threads via the
+/// trigger queue and hibernate per `live_cap_bytes` /
+/// `hibernate_after_ms` (see [`crate::coordinator::sched::SchedConfig`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_sched(
+    catalog: &Catalog,
+    service: &ServiceSpec,
+    base_sim: &SimConfig,
+    num_users: usize,
+    workers: usize,
+    global_cache_cap_bytes: usize,
+    live_cap_bytes: usize,
+    hibernate_after_ms: i64,
+    model: Option<&(dyn crate::runtime::InferenceBackend + Sync)>,
+) -> Result<crate::coordinator::sched::SchedReport> {
+    use crate::coordinator::pool::SessionConfig;
+    use crate::coordinator::sched::{FleetScheduler, SchedConfig};
+    let sched = FleetScheduler::new(
+        service.features.clone(),
+        catalog,
+        SchedConfig {
+            workers,
+            global_cache_cap_bytes,
+            live_cap_bytes,
+            hibernate_after_ms,
+            ..SchedConfig::default()
+        },
+    )?;
+    let users = SessionConfig::fleet(base_sim, num_users);
+    sched.run(catalog, &users, model)
+}
+
 /// Load a service's model runtime if its artifact exists.
 pub fn try_load_model(artifact_dir: &Path, service: ServiceKind) -> Option<ModelRuntime> {
     if artifact_dir

@@ -72,6 +72,7 @@ pub mod prelude {
     pub use crate::cache::arbiter::CacheArbiter;
     pub use crate::cache::policy::PolicyKind;
     pub use crate::coordinator::pool::{PoolConfig, PoolReport, SessionConfig, SessionPool};
+    pub use crate::coordinator::sched::{FleetScheduler, SchedConfig, SchedReport};
     pub use crate::engine::{
         config::EngineConfig,
         online::{Engine, ExtractionResult},

@@ -21,6 +21,8 @@ USAGE:
                        [--period noon|evening|night] [--minutes N] [--artifacts DIR] [--no-model] [--seed N]
   autofeature coordinator [--service ID] [--minutes N] [--artifacts DIR]
   autofeature fleet [--service ID] [--users N] [--shards N] [--minutes N] [--cache-kb N] [--surrogate] [--seed N]
+                    [--workers N] [--live-cap-kb N] [--hibernate-secs N]   (any of these three selects the
+                    event-driven scheduler with session hibernation instead of the run-to-completion pool)
   autofeature inspect
   autofeature explain [--service cp|kp|sr|pr|vr|all] [--no-fusion] [--no-cache] [--incremental] [--direct-filter]
   autofeature experiment [fig4|fig10|fig11|fig16|fig17|fig18|fig19a|fig19b|fig20|fig21|
@@ -221,27 +223,91 @@ fn main() -> Result<()> {
             let model = surrogate
                 .as_ref()
                 .map(|m| m as &(dyn autofeature::runtime::InferenceBackend + Sync));
+            let use_sched =
+                args.has("workers") || args.has("live-cap-kb") || args.has("hibernate-secs");
             let t0 = std::time::Instant::now();
-            let report =
-                harness::run_fleet(&catalog, &svc, &sim, users, shards, cache_kb * 1024, model)?;
-            println!(
-                "{}: {} users / {} shards, {} requests, {} events in {:.2} s wall",
-                kind.name(),
-                users,
-                report.num_shards,
-                report.total_requests(),
-                report.total_events_logged(),
-                t0.elapsed().as_secs_f64(),
-            );
-            println!(
-                "  fleet latency p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  (mean {:.3} ms)",
-                report.fleet.p50_ms, report.fleet.p95_ms, report.fleet.p99_ms, report.fleet.mean_ms
-            );
-            println!(
-                "  cache: peak total {:.1} KB under the {:.0} KB arbiter cap",
-                report.peak_total_cache_bytes as f64 / 1024.0,
-                report.global_cache_cap_bytes as f64 / 1024.0
-            );
+            if use_sched {
+                // Event-driven scheduler: sessions multiplex onto the
+                // worker pool and hibernate per the live-tier cap /
+                // trigger-gap threshold.
+                let workers: usize = args.get("workers").unwrap_or("8").parse()?;
+                let live_cap_bytes = match args.get("live-cap-kb") {
+                    Some(kb) => kb.parse::<usize>()? * 1024,
+                    None => usize::MAX,
+                };
+                let hibernate_after_ms = match args.get("hibernate-secs") {
+                    Some(s) => s.parse::<i64>()? * 1000,
+                    None => i64::MAX,
+                };
+                let report = harness::run_fleet_sched(
+                    &catalog,
+                    &svc,
+                    &sim,
+                    users,
+                    workers,
+                    cache_kb * 1024,
+                    live_cap_bytes,
+                    hibernate_after_ms,
+                    model,
+                )?;
+                println!(
+                    "{}: {} users / {} workers (event-driven), {} requests in {:.2} s wall",
+                    kind.name(),
+                    users,
+                    report.workers,
+                    report.total_requests(),
+                    t0.elapsed().as_secs_f64(),
+                );
+                println!(
+                    "  fleet latency p50 {:.3} ms  p99 {:.3} ms",
+                    report.fleet.p50_ms, report.fleet.p99_ms
+                );
+                println!(
+                    "  ledger: peak live {:.1} KB (cap {:.0} KB), peak hibernated {:.1} KB, peak total {:.1} KB",
+                    report.peak_live_cache_bytes as f64 / 1024.0,
+                    report.global_cache_cap_bytes as f64 / 1024.0,
+                    report.peak_hibernated_bytes as f64 / 1024.0,
+                    report.peak_ledger_bytes as f64 / 1024.0
+                );
+                println!(
+                    "  hibernation: {} hibernations, {} rehydrations, rehydrate p50 {:.1} us / p99 {:.1} us",
+                    report.hibernations,
+                    report.rehydrations,
+                    report.rehydrate_p50_ns as f64 / 1e3,
+                    report.rehydrate_p99_ns as f64 / 1e3
+                );
+            } else {
+                let report = harness::run_fleet(
+                    &catalog,
+                    &svc,
+                    &sim,
+                    users,
+                    shards,
+                    cache_kb * 1024,
+                    model,
+                )?;
+                println!(
+                    "{}: {} users / {} shards, {} requests, {} events in {:.2} s wall",
+                    kind.name(),
+                    users,
+                    report.num_shards,
+                    report.total_requests(),
+                    report.total_events_logged(),
+                    t0.elapsed().as_secs_f64(),
+                );
+                println!(
+                    "  fleet latency p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  (mean {:.3} ms)",
+                    report.fleet.p50_ms,
+                    report.fleet.p95_ms,
+                    report.fleet.p99_ms,
+                    report.fleet.mean_ms
+                );
+                println!(
+                    "  cache: peak total {:.1} KB under the {:.0} KB arbiter cap",
+                    report.peak_total_cache_bytes as f64 / 1024.0,
+                    report.global_cache_cap_bytes as f64 / 1024.0
+                );
+            }
         }
         "inspect" => {
             experiments::motivation_stats();

@@ -5,3 +5,4 @@
 //! of `rand` (see DESIGN.md §Substitutions).
 
 pub mod rng;
+pub mod wire;

@@ -1,0 +1,179 @@
+//! Shared wire-format helpers for snapshot and session-state blobs.
+//!
+//! Both the applog snapshot ([`crate::applog::persist`]) and the engine
+//! session-state blob ([`crate::engine::state`]) are length-prefixed,
+//! CRC-terminated byte images. The CRC-32 table used to be rebuilt on
+//! every `crc32` call inside `persist.rs`; it is now computed once at
+//! compile time (`const fn`) and shared by every serializer.
+//!
+//! Varints are unsigned LEB128; signed values are ZigZag-folded first so
+//! small-magnitude negatives stay short. `f64`s are stored as raw IEEE
+//! bit patterns (exact round-trip, NaN-safe).
+
+use anyhow::{ensure, Result};
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB8_8320) lookup table,
+/// built once at compile time.
+const fn build_crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC32_TABLE: [u32; 256] = build_crc32_table();
+
+/// CRC-32 (IEEE 802.3, reflected) over `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = CRC32_TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+/// Append an unsigned LEB128 varint.
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Append a ZigZag-folded signed varint.
+pub fn put_varint_i64(out: &mut Vec<u8>, v: i64) {
+    put_varint(out, ((v << 1) ^ (v >> 63)) as u64);
+}
+
+/// Append an `f64` as its raw little-endian IEEE bit pattern.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Append a length-prefixed byte string.
+pub fn put_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
+    put_varint(out, bytes.len() as u64);
+    out.extend_from_slice(bytes);
+}
+
+/// Read `n` raw bytes at `*pos`, advancing it.
+pub fn take<'a>(data: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    ensure!(
+        n <= data.len().saturating_sub(*pos),
+        "truncated blob at offset {pos}"
+    );
+    let s = &data[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+/// Read one byte.
+pub fn get_u8(data: &[u8], pos: &mut usize) -> Result<u8> {
+    Ok(take(data, pos, 1)?[0])
+}
+
+/// Read an unsigned LEB128 varint.
+pub fn get_varint(data: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = get_u8(data, pos)?;
+        ensure!(shift < 64, "varint overflows u64 at offset {pos}");
+        v |= u64::from(byte & 0x7F) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Read a ZigZag-folded signed varint.
+pub fn get_varint_i64(data: &[u8], pos: &mut usize) -> Result<i64> {
+    let v = get_varint(data, pos)?;
+    Ok(((v >> 1) as i64) ^ -((v & 1) as i64))
+}
+
+/// Read an `f64` bit pattern.
+pub fn get_f64(data: &[u8], pos: &mut usize) -> Result<f64> {
+    let raw = take(data, pos, 8)?;
+    Ok(f64::from_bits(u64::from_le_bytes(raw.try_into().unwrap())))
+}
+
+/// Read a length-prefixed byte string.
+pub fn get_bytes<'a>(data: &'a [u8], pos: &mut usize) -> Result<&'a [u8]> {
+    let len = get_varint(data, pos)? as usize;
+    take(data, pos, len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // IEEE CRC-32 of "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn varint_roundtrip_edges() {
+        let cases: &[u64] = &[0, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &v in cases {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn signed_varint_roundtrip_edges() {
+        let cases: &[i64] = &[0, -1, 1, -64, 64, i64::MIN, i64::MAX];
+        for &v in cases {
+            let mut buf = Vec::new();
+            put_varint_i64(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_varint_i64(&buf, &mut pos).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn f64_roundtrip_preserves_bits() {
+        for v in [0.0f64, -0.0, 1.5, f64::NAN, f64::INFINITY, f64::MIN_POSITIVE] {
+            let mut buf = Vec::new();
+            put_f64(&mut buf, v);
+            let mut pos = 0;
+            let back = get_f64(&buf, &mut pos).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip_and_truncation_rejected() {
+        let mut buf = Vec::new();
+        put_bytes(&mut buf, b"hello");
+        let mut pos = 0;
+        assert_eq!(get_bytes(&buf, &mut pos).unwrap(), b"hello");
+        let mut pos = 0;
+        assert!(get_bytes(&buf[..3], &mut pos).is_err());
+        // A varint cut off mid-continuation is an error, not a hang.
+        let mut pos = 0;
+        assert!(get_varint(&[0x80, 0x80], &mut pos).is_err());
+    }
+}

@@ -183,6 +183,50 @@ pub fn fan_out(base: &SimConfig, num_users: usize) -> Vec<SimConfig> {
         .collect()
 }
 
+/// One entry of the merged fleet trigger timeline: user `user` fires an
+/// inference at absolute simulated time `at_ms`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetTrigger {
+    /// Trigger time (simulated ms).
+    pub at_ms: i64,
+    /// Index into the fleet's `SimConfig` slice.
+    pub user: usize,
+}
+
+/// First inference trigger of a simulation — the same instant
+/// [`run_simulation`] starts its measured loop at.
+pub fn first_trigger(cfg: &SimConfig) -> i64 {
+    cfg.warmup_ms + cfg.inference_interval_ms
+}
+
+/// The trigger after `at_ms`, or `None` once the measured span is over.
+/// Mirrors [`run_simulation`]'s `now <= warmup + duration` loop bound
+/// exactly, so an event-driven scheduler walking this function visits
+/// precisely the sequential driver's trigger set.
+pub fn next_trigger(cfg: &SimConfig, at_ms: i64) -> Option<i64> {
+    let next = at_ms + cfg.inference_interval_ms;
+    (next <= cfg.warmup_ms + cfg.duration_ms).then_some(next)
+}
+
+/// Merge every user's trigger sequence into one globally time-ordered
+/// timeline (ties broken by user index, so the order is total and
+/// deterministic). The event-driven fleet scheduler seeds its run queues
+/// from the *first* trigger per user and then re-derives each user's
+/// successors with [`next_trigger`]; this eager form is for tests and
+/// capacity estimates.
+pub fn fleet_timeline(users: &[SimConfig]) -> Vec<FleetTrigger> {
+    let mut out = Vec::new();
+    for (user, cfg) in users.iter().enumerate() {
+        let mut at = first_trigger(cfg);
+        while at <= cfg.warmup_ms + cfg.duration_ms {
+            out.push(FleetTrigger { at_ms: at, user });
+            at += cfg.inference_interval_ms;
+        }
+    }
+    out.sort_unstable_by_key(|t| (t.at_ms, t.user));
+    out
+}
+
 /// Run one simulation: replay the trace, trigger extraction (+ optional
 /// model inference) every `inference_interval_ms`.
 pub fn run_simulation(
@@ -355,6 +399,37 @@ mod tests {
                 .zip(&b)
                 .any(|(x, y)| x.timestamp_ms != y.timestamp_ms);
         assert!(differs, "users share one trace");
+    }
+
+    #[test]
+    fn fleet_timeline_matches_sequential_trigger_set() {
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        let base = quick_cfg();
+        let users = fan_out(&base, 3);
+        let timeline = fleet_timeline(&users);
+        // Per-user extraction of the merged timeline must equal the
+        // sequential driver's record times.
+        for (u, cfg) in users.iter().enumerate() {
+            let mut naive = NaiveExtractor::new(specs(&cat), CodecKind::Jsonish);
+            let out = run_simulation(&cat, &mut naive, None, cfg).unwrap();
+            let mine: Vec<i64> = timeline
+                .iter()
+                .filter(|t| t.user == u)
+                .map(|t| t.at_ms)
+                .collect();
+            let expect: Vec<i64> = out.records.iter().map(|r| r.now).collect();
+            assert_eq!(mine, expect, "user {u} trigger set diverges");
+            // The incremental walk agrees with the eager form.
+            let mut walked = vec![first_trigger(cfg)];
+            while let Some(next) = next_trigger(cfg, *walked.last().unwrap()) {
+                walked.push(next);
+            }
+            assert_eq!(walked, expect, "user {u} next_trigger walk diverges");
+        }
+        // Globally time-ordered with total tie-break.
+        for w in timeline.windows(2) {
+            assert!((w[0].at_ms, w[0].user) < (w[1].at_ms, w[1].user));
+        }
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Hibernate/rehydrate integration suite: a session serialized to its
+//! applog+state image at arbitrary trigger boundaries and rebuilt from
+//! it must be indistinguishable from a twin that never slept —
+//! bit-identical values, identical cache footprint, identical replay
+//! counters — across all five services and the classic / cached /
+//! incremental engine configurations. Damaged images must never
+//! rehydrate: every single-byte corruption of either the packed image
+//! or the bare state blob is rejected.
+
+use autofeature::applog::codec::CodecKind;
+use autofeature::applog::persist;
+use autofeature::applog::store::{AppLogStore, StoreConfig};
+use autofeature::engine::config::EngineConfig;
+use autofeature::engine::online::Engine;
+use autofeature::engine::Extractor;
+use autofeature::features::compute::CompFunc;
+use autofeature::features::spec::{FeatureId, FeatureSpec, TimeRange};
+use autofeature::harness::eval_catalog;
+use autofeature::util::rng::SimRng;
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+use autofeature::workload::traces::{log_events, TraceConfig, TraceGenerator};
+
+/// Hibernate `engine` (with its `store`) into one image and rebuild
+/// both from it.
+fn round_trip(engine: &Engine, store: &AppLogStore, cfg: EngineConfig) -> (Engine, AppLogStore) {
+    let image = persist::to_bytes_with_session(store, &engine.export_state());
+    let (new_store, state) =
+        persist::from_bytes_with_session(&image, StoreConfig::default()).unwrap();
+    let mut revived = Engine::from_shared(engine.shared_plan(), cfg);
+    revived.import_state(&state.expect("image carries a session block")).unwrap();
+    (revived, new_store)
+}
+
+#[test]
+fn hibernation_is_invisible_across_services_and_configs() {
+    let catalog = eval_catalog();
+    let mut rng = SimRng::seed_from_u64(0x5E55_10);
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+            duration_ms: 14 * 60_000,
+            seed: 0xFEED ^ kind.id().len() as u64,
+            ..TraceConfig::default()
+        });
+        for (label, cfg) in [
+            ("classic", EngineConfig::fusion_only()),
+            ("cached", EngineConfig::autofeature()),
+            ("incremental", EngineConfig::incremental()),
+        ] {
+            let ctx = |extra: &dyn std::fmt::Display| {
+                format!("{}/{label}: {extra}", kind.id())
+            };
+            let mut twin = Engine::new(svc.features.clone(), &catalog, cfg).unwrap();
+            let mut hib = Engine::from_shared(twin.shared_plan(), cfg);
+            let mut store = AppLogStore::new(StoreConfig::default());
+            let mut hib_store = AppLogStore::new(StoreConfig::default());
+            let codec = CodecKind::Jsonish.build();
+            let mut next_event = 0usize;
+            let mut hib_next_event = 0usize;
+            let mut hibernated = 0usize;
+            // Triggers every 30 s over the back half of the trace; the
+            // hibernating session sleeps at random boundaries.
+            for step in 0..14i64 {
+                let now = 7 * 60_000 + step * 30_000;
+                let upto = trace.partition_point(|e| e.timestamp_ms < now);
+                if upto > next_event {
+                    log_events(&mut store, codec.as_ref(), &trace[next_event..upto]).unwrap();
+                    next_event = upto;
+                }
+                if upto > hib_next_event {
+                    log_events(
+                        &mut hib_store,
+                        codec.as_ref(),
+                        &trace[hib_next_event..upto],
+                    )
+                    .unwrap();
+                    hib_next_event = upto;
+                }
+                let a = twin.extract(&store, now).unwrap();
+                let b = hib.extract(&hib_store, now).unwrap();
+                assert_eq!(a.values, b.values, "{}", ctx(&format!("step {step}")));
+                assert_eq!(
+                    a.cache_bytes,
+                    b.cache_bytes,
+                    "{}",
+                    ctx(&format!("step {step} cache"))
+                );
+                assert_eq!(
+                    a.breakdown.rows_replayed,
+                    b.breakdown.rows_replayed,
+                    "{}",
+                    ctx(&format!("step {step} replay"))
+                );
+                if rng.bool_p(0.4) {
+                    let (revived, revived_store) = round_trip(&hib, &hib_store, cfg);
+                    hib = revived;
+                    hib_store = revived_store;
+                    hibernated += 1;
+                }
+            }
+            assert!(hibernated > 0, "{}", ctx(&"rng never hibernated"));
+        }
+    }
+}
+
+#[test]
+fn clean_rehydrate_replays_zero_rows() {
+    // Count/Sum windows never exhaust their delta state, so a warm
+    // incremental session replays zero rows per trigger — and a
+    // rehydrated one must too (watermark + IncBank continuity).
+    let catalog = eval_catalog();
+    let specs: Vec<FeatureSpec> = [CompFunc::Count, CompFunc::Sum, CompFunc::Mean]
+        .iter()
+        .enumerate()
+        .map(|(i, comp)| {
+            FeatureSpec {
+                id: FeatureId(i as u32),
+                name: format!("steady_{i}"),
+                event_types: vec![2],
+                window: TimeRange::mins(5),
+                attrs: vec![0],
+                comp: *comp,
+            }
+            .normalized()
+        })
+        .collect();
+    let cfg = EngineConfig::incremental();
+    let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+        duration_ms: 12 * 60_000,
+        seed: 0xC0FFEE,
+        ..TraceConfig::default()
+    });
+    let codec = CodecKind::Jsonish.build();
+    let mut store = AppLogStore::new(StoreConfig::default());
+    let mut engine = Engine::new(specs, &catalog, cfg).unwrap();
+    let mut next_event = 0usize;
+    let mut warm_replay = None;
+    for step in 0..8i64 {
+        let now = 6 * 60_000 + step * 30_000;
+        let upto = trace.partition_point(|e| e.timestamp_ms < now);
+        if upto > next_event {
+            log_events(&mut store, codec.as_ref(), &trace[next_event..upto]).unwrap();
+            next_event = upto;
+        }
+        let r = engine.extract(&store, now).unwrap();
+        if step > 0 {
+            assert_eq!(r.breakdown.rows_replayed, 0, "warm step {step} replayed");
+            warm_replay = Some(r.breakdown.rows_replayed);
+        }
+    }
+    assert_eq!(warm_replay, Some(0));
+
+    let (mut revived, revived_store) = round_trip(&engine, &store, cfg);
+    // Same trigger cadence, no new events: the rehydrated engine's very
+    // next extraction is pure delta work.
+    let now = 6 * 60_000 + 8 * 30_000;
+    let r = revived.extract(&revived_store, now).unwrap();
+    assert_eq!(
+        r.breakdown.rows_replayed, 0,
+        "rehydration forced a replay ({} rows)",
+        r.breakdown.rows_replayed
+    );
+    let want = engine.extract(&store, now).unwrap();
+    assert_eq!(want.values, r.values);
+}
+
+#[test]
+fn every_single_byte_corruption_is_rejected() {
+    // A deliberately small session: short trace, few features, so the
+    // full-image sweep stays cheap while still covering the header, the
+    // applog rows, the session block and both CRCs.
+    let catalog = eval_catalog();
+    let specs: Vec<FeatureSpec> = vec![
+        FeatureSpec {
+            id: FeatureId(0),
+            name: "probe_count".into(),
+            event_types: vec![1],
+            window: TimeRange::mins(3),
+            attrs: vec![0],
+            comp: CompFunc::Count,
+        }
+        .normalized(),
+        FeatureSpec {
+            id: FeatureId(1),
+            name: "probe_latest".into(),
+            event_types: vec![1, 3],
+            window: TimeRange::mins(2),
+            attrs: vec![0, 1],
+            comp: CompFunc::Latest,
+        }
+        .normalized(),
+    ];
+    let cfg = EngineConfig::incremental();
+    let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+        duration_ms: 3 * 60_000,
+        seed: 99,
+        ..TraceConfig::default()
+    });
+    let codec = CodecKind::Jsonish.build();
+    let mut store = AppLogStore::new(StoreConfig::default());
+    let mut engine = Engine::new(specs, &catalog, cfg).unwrap();
+    let mut next_event = 0usize;
+    for now in [2 * 60_000i64, 2 * 60_000 + 30_000] {
+        let upto = trace.partition_point(|e| e.timestamp_ms < now);
+        log_events(&mut store, codec.as_ref(), &trace[next_event..upto]).unwrap();
+        next_event = upto;
+        engine.extract(&store, now).unwrap();
+    }
+
+    // The packed image: any single corrupt byte must fail the load (the
+    // snapshot CRC covers the embedded session block too).
+    let image = persist::to_bytes_with_session(&store, &engine.export_state());
+    assert!(persist::from_bytes_with_session(&image, StoreConfig::default()).is_ok());
+    for i in 0..image.len() {
+        let mut bad = image.clone();
+        bad[i] ^= 0xA5;
+        assert!(
+            persist::from_bytes_with_session(&bad, StoreConfig::default()).is_err(),
+            "byte {i}/{} corruption of the image went unnoticed",
+            image.len()
+        );
+    }
+
+    // The bare state blob: any single corrupt byte must fail the import
+    // and leave the target engine intact.
+    let state = engine.export_state();
+    for i in 0..state.len() {
+        let mut bad = state.clone();
+        bad[i] ^= 0xA5;
+        let mut target = Engine::from_shared(engine.shared_plan(), cfg);
+        assert!(
+            target.import_state(&bad).is_err(),
+            "byte {i}/{} corruption of the state blob went unnoticed",
+            state.len()
+        );
+        target.import_state(&state).unwrap();
+    }
+}
