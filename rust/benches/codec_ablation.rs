@@ -1,0 +1,141 @@
+//! Bench: sealed-segment block-codec ablation (PR 8 tentpole) — the
+//! bytes-on-device vs extraction-latency trade per codec policy, plus a
+//! crash-recovery cost probe: v4 snapshot + torn-WAL replay wall time.
+//! `BENCH_QUICK=1` shrinks the cells; `BENCH_JSON_OUT=<path>` writes the
+//! sweep as BENCH_8.json.
+
+mod common;
+
+use std::time::Instant;
+
+use autofeature::applog::blockcodec::CodecPolicy;
+use autofeature::applog::codec::{AttrCodec, CodecKind};
+use autofeature::applog::wal::DurableAppLog;
+use autofeature::applog::store::StoreConfig;
+use autofeature::engine::config::EngineConfig;
+use autofeature::engine::online::Engine;
+use autofeature::harness::{eval_catalog, experiments};
+use autofeature::workload::driver::{run_simulation, Period};
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+use autofeature::workload::traces::{TraceConfig, TraceGenerator};
+
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok()
+}
+
+struct Arm {
+    label: &'static str,
+    bytes_on_device: usize,
+    extraction_ms: f64,
+    recover_clean_us: f64,
+    recover_torn_us: f64,
+}
+
+/// One arm per codec policy over the VR headline cell: run the
+/// simulation for latency + final storage footprint, then measure
+/// snapshot+replay recovery wall time (clean WAL and torn-frame WAL).
+fn codec_sweep() -> anyhow::Result<Vec<Arm>> {
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let mut arms = Vec::new();
+    for (label, policy) in [
+        ("raw", CodecPolicy::Raw),
+        ("lz", CodecPolicy::Lz),
+        ("rle", CodecPolicy::Rle),
+        ("probe", CodecPolicy::Probe),
+    ] {
+        let mut sim = common::scale().sim(Period::Night, svc.inference_interval_ms, 91);
+        sim.block_codec = policy;
+        let mut eng = Engine::new(
+            svc.features.clone(),
+            &catalog,
+            EngineConfig::autofeature(),
+        )?;
+        let out = run_simulation(&catalog, &mut eng, None, &sim)?;
+
+        // Recovery probe: rebuild the same trace through the WAL path,
+        // snapshot at 60%, then time recover() on the suffix.
+        let cfg = StoreConfig {
+            block_codec: policy,
+            ..StoreConfig::default()
+        };
+        let codec = CodecKind::Jsonish.build();
+        let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+            duration_ms: if quick() { 10 * 60_000 } else { 60 * 60_000 },
+            seed: 91,
+            ..TraceConfig::default()
+        });
+        let mut log = DurableAppLog::new(cfg.clone());
+        let mut snapshot = None;
+        for (i, e) in trace.iter().enumerate() {
+            if i == trace.len() * 3 / 5 {
+                snapshot = Some(log.snapshot()?);
+            }
+            log.append(e.event_type, e.timestamp_ms, codec.encode(&e.attrs))?;
+        }
+        let snapshot = snapshot.expect("trace long enough to snapshot");
+        let wal = log.wal().bytes();
+        let t0 = Instant::now();
+        let (rec, _) = DurableAppLog::recover(Some(&snapshot), wal, cfg.clone())?;
+        let recover_clean_us = t0.elapsed().as_secs_f64() * 1e6;
+        assert_eq!(rec.store().len(), log.store().len());
+        let torn = &wal[..wal.len() - 3]; // tear the last frame
+        let t0 = Instant::now();
+        let (rec, report) = DurableAppLog::recover(Some(&snapshot), torn, cfg)?;
+        let recover_torn_us = t0.elapsed().as_secs_f64() * 1e6;
+        assert!(report.torn_frame);
+        assert_eq!(rec.store().len(), log.store().len() - 1);
+
+        println!(
+            "[codec {label}] bytes-on-device {:.1} KB, extraction {:.4} ms, \
+             recover clean {recover_clean_us:.1} us / torn {recover_torn_us:.1} us",
+            out.raw_storage_bytes as f64 / 1024.0,
+            out.mean_extraction_ms(),
+        );
+        arms.push(Arm {
+            label,
+            bytes_on_device: out.raw_storage_bytes,
+            extraction_ms: out.mean_extraction_ms(),
+            recover_clean_us,
+            recover_torn_us,
+        });
+    }
+    Ok(arms)
+}
+
+fn write_json(path: &str, arms: &[Arm]) {
+    let mut json_arms = String::new();
+    for arm in arms {
+        if !json_arms.is_empty() {
+            json_arms.push_str(",\n");
+        }
+        json_arms.push_str(&format!(
+            "    {{\"label\": \"{}\", \"bytes_on_device\": {}, \"extraction_ms\": {:.5}, \
+             \"recover_clean_us\": {:.2}, \"recover_torn_us\": {:.2}}}",
+            arm.label,
+            arm.bytes_on_device,
+            arm.extraction_ms,
+            arm.recover_clean_us,
+            arm.recover_torn_us,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"pr\": 8,\n  \"bench\": \"codec_ablation block-codec sweep\",\n  \
+         \"quick\": {},\n  \"arms\": [\n{}\n  ]\n}}\n",
+        quick(),
+        json_arms
+    );
+    std::fs::write(path, json).unwrap();
+    println!("wrote {path}");
+}
+
+fn main() {
+    common::run("codec_ablation", || {
+        experiments::ext_codec_ablation(common::scale()).map(|_| ())?;
+        let arms = codec_sweep()?;
+        if let Ok(path) = std::env::var("BENCH_JSON_OUT") {
+            write_json(&path, &arms);
+        }
+        Ok(())
+    });
+}

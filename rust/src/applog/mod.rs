@@ -20,12 +20,17 @@
 //!   types, delta/varint timestamps and seq_nos, de-duplicated payload
 //!   arena, zone maps),
 //! * [`compact`] — sealing the tail into segments,
-//! * [`persist`] — snapshot save/load (v2 segmented columnar with CRC,
-//!   plus the legacy v1 flat-row loader),
+//! * [`blockcodec`] — the per-column block codecs (raw / LZ-class /
+//!   RLE) that sealed-segment images choose between at seal time,
+//! * [`persist`] — snapshot save/load (v4 compressed columnar with CRC
+//!   and WAL watermark, plus loaders for every legacy format),
+//! * [`wal`] — the append-ahead log for the mutable tail and the
+//!   snapshot+replay crash-recovery path,
 //! * [`query`] — the `Retrieve` query path
 //!   (`SELECT * WHERE event_name IN (..) AND timestamp > t`) with
 //!   zone-map segment pruning and the fused Retrieve+Decode projection.
 
+pub mod blockcodec;
 pub mod codec;
 pub mod compact;
 pub mod event;
@@ -34,3 +39,4 @@ pub mod query;
 pub mod schema;
 pub mod segment;
 pub mod store;
+pub mod wal;

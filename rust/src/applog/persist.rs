@@ -1,15 +1,16 @@
 //! App-log persistence (the SQLite-analogue's on-disk role).
 //!
-//! Mobile app logs survive process restarts. Two snapshot formats exist:
+//! Mobile app logs survive process restarts. Four snapshot formats
+//! exist; all remain loadable:
 //!
-//! **v1** (legacy, flat rows — still loadable):
+//! **v1** (legacy, flat rows):
 //!
 //! ```text
 //! magic "AFLG" | version=1 u16 | row_count u64 |
 //!   ( seq u64 | event_type u16 | ts i64 | payload_len u32 | payload )*
 //! ```
 //!
-//! **v2** (current, segmented columnar — what [`to_bytes`] writes):
+//! **v2** (segmented columnar, raw segment blocks):
 //!
 //! ```text
 //! magic "AFLG" | version=2 u16 | blob_len u32 |
@@ -19,28 +20,44 @@
 //! crc32 u32   (IEEE, over everything before it)
 //! ```
 //!
-//! **v3** (v2 + session-state block — what hibernation images use):
+//! **v3** (v2 + trailing session-state block):
 //!
 //! ```text
-//! magic "AFLG" | version=3 u16 | blob_len u32 |
-//! ... v2 body (next_seq .. tail rows) ... |
-//! session_len u32 | session-state bytes ([`crate::engine::state`]) |
+//! ... v2 body ... | session_len u32 | session-state bytes | crc32 u32
+//! ```
+//!
+//! **v4** (current — what [`to_bytes`] writes): compressed sealed-segment
+//! images persisted **verbatim** (no re-encode at snapshot time; each
+//! image carries its own CRC and decodes lazily after load), plus the
+//! crash-consistency header: a flags byte and the **WAL watermark** — the
+//! [`super::wal`] byte offset already reflected in this snapshot, where
+//! recovery resumes replay.
+//!
+//! ```text
+//! magic "AFLG" | version=4 u16 | blob_len u32 |
+//! flags u8 (bit0 = session block present) | wal_watermark u64 |
+//! next_seq u64 | total_appended u64 |
+//! segment_count u32 | ( image_len u32 | sealed-segment image )* |
+//! tail_count u32 | ( seq u64 | event_type u16 | ts i64 | len u32 | payload )* |
+//! [ session_len u32 | session-state bytes ]   (iff flags bit0) |
 //! crc32 u32   (IEEE, over everything before it)
 //! ```
 //!
 //! Snapshots round-trip exactly (rows, order, seq_nos, payload bytes).
-//! v2/v3 loads verify the declared blob length and the trailing CRC-32
+//! v2+ loads verify the declared blob length and the trailing CRC-32
 //! before parsing, so **any** single-byte truncation or corruption is
 //! rejected with an error — a damaged file never produces a silently
 //! wrong log (CRC-32 detects every burst error of up to 32 bits). The
 //! property sweep in `rust/tests/prop_invariants.rs` pins this
-//! byte-by-byte. The CRC shares the const-built table in
-//! [`crate::util::wire`] with the session-state serializer.
+//! byte-by-byte for v2 and v4 alike. Writers are fallible: the
+//! `blob_len` header is a `u32`, and an image that would overflow it is
+//! rejected **at encode time** ([`declared_blob_len`]) instead of
+//! wrapping silently and only failing at load (data loss).
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::event::BehaviorEvent;
-use super::segment::Segment;
+use super::segment::{SealedSegment, Segment};
 use super::store::{AppLogStore, StoreConfig};
 use crate::util::wire::crc32;
 
@@ -48,20 +65,126 @@ const MAGIC: &[u8; 4] = b"AFLG";
 const VERSION_V1: u16 = 1;
 const VERSION_V2: u16 = 2;
 const VERSION_V3: u16 = 3;
+const VERSION_V4: u16 = 4;
 
-/// Serialize the live log to a v2 (segmented columnar) snapshot blob.
-pub fn to_bytes(store: &AppLogStore) -> Vec<u8> {
-    encode(store, None)
+/// v4 flags bit: a session-state block trails the tail rows.
+const FLAG_SESSION: u8 = 0b0000_0001;
+
+/// Everything a snapshot blob holds, version-normalized: pre-v4 blobs
+/// load with a zero watermark (they predate the WAL).
+#[derive(Debug)]
+pub struct LoadedSnapshot {
+    /// The restored store.
+    pub store: AppLogStore,
+    /// Opaque engine session state (v3/v4 images with the block).
+    pub session_state: Option<Vec<u8>>,
+    /// WAL byte offset already reflected in this snapshot; recovery
+    /// replays frames from here on.
+    pub wal_watermark: u64,
+}
+
+/// The `blob_len` header is a `u32`. Guard the cast at encode time: a
+/// >4 GiB image must fail the save, not wrap and poison the snapshot.
+/// `body_len` is the blob length *before* the trailing 4-byte CRC.
+fn declared_blob_len(body_len: usize) -> Result<u32> {
+    let total = body_len + 4;
+    ensure!(
+        total <= u32::MAX as usize,
+        "snapshot image of {total} bytes overflows the u32 blob_len header"
+    );
+    Ok(total as u32)
+}
+
+/// Serialize the live log to a v4 snapshot blob (no session state,
+/// zero WAL watermark).
+pub fn to_bytes(store: &AppLogStore) -> Result<Vec<u8>> {
+    encode_v4(store, None, 0)
 }
 
 /// Serialize the live log *plus* an opaque session-state blob (produced
-/// by [`crate::engine::online::Engine::export_state`]) into one v3
+/// by [`crate::engine::online::Engine::export_state`]) into one v4
 /// hibernation image. One CRC covers both parts.
-pub fn to_bytes_with_session(store: &AppLogStore, session_state: &[u8]) -> Vec<u8> {
-    encode(store, Some(session_state))
+pub fn to_bytes_with_session(store: &AppLogStore, session_state: &[u8]) -> Result<Vec<u8>> {
+    encode_v4(store, Some(session_state), 0)
 }
 
-fn encode(store: &AppLogStore, session_state: Option<&[u8]>) -> Vec<u8> {
+/// Serialize a v4 snapshot recording a WAL watermark — the byte offset
+/// of [`super::wal::Wal`] already reflected in the store. Crash recovery
+/// ([`super::wal::DurableAppLog::recover`]) replays WAL frames from this
+/// offset.
+pub fn to_bytes_v4(
+    store: &AppLogStore,
+    session_state: Option<&[u8]>,
+    wal_watermark: u64,
+) -> Result<Vec<u8>> {
+    encode_v4(store, session_state, wal_watermark)
+}
+
+fn encode_v4(
+    store: &AppLogStore,
+    session_state: Option<&[u8]>,
+    wal_watermark: u64,
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION_V4.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes()); // blob_len, patched below
+    out.push(if session_state.is_some() { FLAG_SESSION } else { 0 });
+    out.extend_from_slice(&wal_watermark.to_le_bytes());
+    out.extend_from_slice(&store.next_seq().to_le_bytes());
+    out.extend_from_slice(&store.total_appended().to_le_bytes());
+    let segments = store.segments();
+    out.extend_from_slice(&(segments.len() as u32).to_le_bytes());
+    for seg in segments {
+        // The compressed image persists verbatim — sealing already paid
+        // the codec cost, and a hibernation image must not re-encode.
+        let image = seg.image();
+        out.extend_from_slice(&(image.len() as u32).to_le_bytes());
+        out.extend_from_slice(image);
+    }
+    encode_tail(&mut out, store);
+    if let Some(state) = session_state {
+        out.extend_from_slice(&(state.len() as u32).to_le_bytes());
+        out.extend_from_slice(state);
+    }
+    seal_blob(out)
+}
+
+/// Shared tail-row writer (identical across v2/v3/v4).
+fn encode_tail(out: &mut Vec<u8>, store: &AppLogStore) {
+    let tail = store.tail();
+    out.extend_from_slice(&(tail.len() as u32).to_le_bytes());
+    for r in tail {
+        out.extend_from_slice(&r.seq_no.to_le_bytes());
+        out.extend_from_slice(&r.event_type.to_le_bytes());
+        out.extend_from_slice(&r.timestamp_ms.to_le_bytes());
+        out.extend_from_slice(&(r.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&r.payload);
+    }
+}
+
+/// Patch the guarded blob_len header and append the trailing CRC.
+fn seal_blob(mut out: Vec<u8>) -> Result<Vec<u8>> {
+    let blob_len = declared_blob_len(out.len())?;
+    out[6..10].copy_from_slice(&blob_len.to_le_bytes());
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    Ok(out)
+}
+
+/// Serialize in the legacy v2 (raw segmented columnar) format. Kept so
+/// the v2-compatibility path stays testable against freshly written
+/// blobs. Decodes any cold segment (v2 blocks are uncompressed).
+pub fn to_bytes_v2(store: &AppLogStore) -> Result<Vec<u8>> {
+    encode_v2plus(store, None)
+}
+
+/// Serialize in the legacy v3 (v2 + session block) format.
+pub fn to_bytes_v3(store: &AppLogStore, session_state: &[u8]) -> Result<Vec<u8>> {
+    encode_v2plus(store, Some(session_state))
+}
+
+fn encode_v2plus(store: &AppLogStore, session_state: Option<&[u8]>) -> Result<Vec<u8>> {
     let version = if session_state.is_some() {
         VERSION_V3
     } else {
@@ -76,28 +199,16 @@ fn encode(store: &AppLogStore, session_state: Option<&[u8]>) -> Vec<u8> {
     let segments = store.segments();
     out.extend_from_slice(&(segments.len() as u32).to_le_bytes());
     for seg in segments {
-        let block = seg.encode();
+        let block = seg.hot().encode();
         out.extend_from_slice(&(block.len() as u32).to_le_bytes());
         out.extend_from_slice(&block);
     }
-    let tail = store.tail();
-    out.extend_from_slice(&(tail.len() as u32).to_le_bytes());
-    for r in tail {
-        out.extend_from_slice(&r.seq_no.to_le_bytes());
-        out.extend_from_slice(&r.event_type.to_le_bytes());
-        out.extend_from_slice(&r.timestamp_ms.to_le_bytes());
-        out.extend_from_slice(&(r.payload.len() as u32).to_le_bytes());
-        out.extend_from_slice(&r.payload);
-    }
+    encode_tail(&mut out, store);
     if let Some(state) = session_state {
         out.extend_from_slice(&(state.len() as u32).to_le_bytes());
         out.extend_from_slice(state);
     }
-    let blob_len = (out.len() + 4) as u32;
-    out[6..10].copy_from_slice(&blob_len.to_le_bytes());
-    let crc = crc32(&out);
-    out.extend_from_slice(&crc.to_le_bytes());
-    out
+    seal_blob(out)
 }
 
 /// Serialize in the legacy v1 (flat row) format. Kept so the
@@ -118,25 +229,34 @@ pub fn to_bytes_v1(store: &AppLogStore) -> Vec<u8> {
     out
 }
 
-/// Load a snapshot blob (v1, v2, or v3) into a fresh store. A v3
-/// image's session-state block is validated by the CRC but otherwise
-/// ignored; use [`from_bytes_with_session`] to recover it.
+/// Load a snapshot blob (any version) into a fresh store, dropping the
+/// session block and watermark; use [`from_bytes_full`] to recover them.
 pub fn from_bytes(data: &[u8], cfg: StoreConfig) -> Result<AppLogStore> {
-    from_bytes_with_session(data, cfg).map(|(store, _)| store)
+    from_bytes_full(data, cfg).map(|s| s.store)
 }
 
-/// Load a snapshot blob and, for v3 images, the embedded session-state
-/// block. v1/v2 blobs load with `None` — old snapshots stay readable.
+/// Load a snapshot blob and, for v3/v4 images, the embedded
+/// session-state block. v1/v2 blobs load with `None` — old snapshots
+/// stay readable.
 pub fn from_bytes_with_session(
     data: &[u8],
     cfg: StoreConfig,
 ) -> Result<(AppLogStore, Option<Vec<u8>>)> {
+    from_bytes_full(data, cfg).map(|s| (s.store, s.session_state))
+}
+
+/// Load a snapshot blob of any version with every block it carries.
+pub fn from_bytes_full(data: &[u8], cfg: StoreConfig) -> Result<LoadedSnapshot> {
     ensure!(data.len() >= 6, "snapshot too short");
     ensure!(&data[..4] == MAGIC, "bad snapshot magic");
     let version = u16::from_le_bytes(data[4..6].try_into().unwrap());
     match version {
-        VERSION_V1 => from_bytes_v1(data, cfg).map(|store| (store, None)),
-        VERSION_V2 | VERSION_V3 => from_bytes_v2plus(data, cfg, version),
+        VERSION_V1 => from_bytes_v1(data, cfg).map(|store| LoadedSnapshot {
+            store,
+            session_state: None,
+            wal_watermark: 0,
+        }),
+        VERSION_V2 | VERSION_V3 | VERSION_V4 => from_bytes_v2plus(data, cfg, version),
         v => bail!("unsupported snapshot version {v}"),
     }
 }
@@ -191,15 +311,17 @@ fn from_bytes_v1(data: &[u8], cfg: StoreConfig) -> Result<AppLogStore> {
     Ok(AppLogStore::from_parts(cfg, Vec::new(), rows, next_seq, total))
 }
 
-/// Segmented columnar loader (v2 and v3): verify length + CRC first,
-/// then parse and re-validate every store invariant (global chronology,
-/// strictly increasing seq_nos across segment boundaries). v3 carries
-/// one extra trailing block — the opaque session state — returned as-is.
-fn from_bytes_v2plus(
-    data: &[u8],
-    cfg: StoreConfig,
-    version: u16,
-) -> Result<(AppLogStore, Option<Vec<u8>>)> {
+/// Segmented columnar loader (v2, v3 and v4): verify length + CRC
+/// first, then parse and re-validate every store invariant (global
+/// chronology, strictly increasing seq_nos across segment boundaries).
+///
+/// v2/v3 segment blocks decode eagerly (hot) and are re-sealed under
+/// the store's codec policy — deterministic codecs make the re-seal
+/// byte-stable. v4 images load **cold**: their own CRC and zone
+/// metadata are validated here, but column blocks stay compressed until
+/// a query's zone map admits them, so rehydrating a device with days of
+/// history never pays a full decode up front.
+fn from_bytes_v2plus(data: &[u8], cfg: StoreConfig, version: u16) -> Result<LoadedSnapshot> {
     ensure!(data.len() >= 14, "truncated v2 snapshot header");
     let declared = u32::from_le_bytes(data[6..10].try_into().unwrap()) as usize;
     ensure!(
@@ -224,25 +346,38 @@ fn from_bytes_v2plus(
         Ok(s)
     };
     let mut i = 10usize;
+    let (has_session_flag, wal_watermark) = if version >= VERSION_V4 {
+        let flags = take(&mut i, 1)?[0];
+        ensure!(flags & !FLAG_SESSION == 0, "unknown snapshot flags {flags:#x}");
+        let mark = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
+        (flags & FLAG_SESSION != 0, mark)
+    } else {
+        (version >= VERSION_V3, 0)
+    };
     let next_seq = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
     let total_appended = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap());
 
     let seg_count = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
-    let mut segments = Vec::with_capacity(seg_count);
+    let mut segments: Vec<SealedSegment> = Vec::with_capacity(seg_count);
     let mut last_ts: Option<i64> = None;
     let mut last_seq: Option<u64> = None;
     for _ in 0..seg_count {
         let block_len = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
-        let seg = Segment::decode(take(&mut i, block_len)?)?;
+        let block = take(&mut i, block_len)?;
+        let sealed = if version >= VERSION_V4 {
+            SealedSegment::from_image(block.to_vec())?
+        } else {
+            SealedSegment::from_segment(Segment::decode(block)?, cfg.block_codec)
+        };
         if let Some(t) = last_ts {
-            ensure!(seg.min_ts >= t, "segments out of chronological order");
+            ensure!(sealed.min_ts() >= t, "segments out of chronological order");
         }
         if let Some(s) = last_seq {
-            ensure!(seg.seq[0] > s, "segment seq_nos overlap");
+            ensure!(sealed.first_seq() > s, "segment seq_nos overlap");
         }
-        last_ts = Some(seg.max_ts);
-        last_seq = Some(*seg.seq.last().unwrap());
-        segments.push(seg);
+        last_ts = Some(sealed.max_ts());
+        last_seq = Some(sealed.last_seq());
+        segments.push(sealed);
     }
 
     let tail_count = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
@@ -268,7 +403,7 @@ fn from_bytes_v2plus(
             payload,
         });
     }
-    let session_state = if version >= VERSION_V3 {
+    let session_state = if has_session_flag {
         let len = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
         Some(take(&mut i, len)?.to_vec())
     } else {
@@ -286,12 +421,16 @@ fn from_bytes_v2plus(
         "total_appended {total_appended} below live row count {rows}"
     );
     let store = AppLogStore::from_parts(cfg, segments, tail, next_seq, total_appended);
-    Ok((store, session_state))
+    Ok(LoadedSnapshot {
+        store,
+        session_state,
+        wal_watermark,
+    })
 }
 
 /// Write a snapshot to a file.
 pub fn save(store: &AppLogStore, path: &std::path::Path) -> Result<()> {
-    std::fs::write(path, to_bytes(store)).with_context(|| format!("writing {}", path.display()))
+    std::fs::write(path, to_bytes(store)?).with_context(|| format!("writing {}", path.display()))
 }
 
 /// Load a snapshot from a file.
@@ -305,6 +444,7 @@ pub fn load(path: &std::path::Path, cfg: StoreConfig) -> Result<AppLogStore> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::applog::blockcodec::CodecPolicy;
     use crate::applog::codec::{AttrCodec, JsonishCodec};
     use crate::applog::schema::{Catalog, CatalogConfig};
     use crate::util::rng::SimRng;
@@ -339,21 +479,72 @@ mod tests {
     }
 
     #[test]
-    fn v2_roundtrip_preserves_rows_exactly() {
+    fn v4_roundtrip_preserves_rows_exactly() {
+        for segment_rows in [1usize, 32, usize::MAX] {
+            for policy in [CodecPolicy::Raw, CodecPolicy::Lz, CodecPolicy::Probe] {
+                let cfg = StoreConfig {
+                    segment_rows,
+                    block_codec: policy,
+                    ..StoreConfig::default()
+                };
+                let mut a = AppLogStore::new(cfg.clone());
+                let cat = Catalog::generate(&CatalogConfig::small(), 1);
+                let mut rng = SimRng::seed_from_u64(2);
+                for i in 0..100i64 {
+                    let t = (i % 4) as u16;
+                    let attrs = cat.schema(t).sample_attrs(&mut rng);
+                    a.append(t, i * 777, JsonishCodec.encode(&attrs)).unwrap();
+                }
+                let b = from_bytes(&to_bytes(&a).unwrap(), cfg).unwrap();
+                assert_rows_equal(&a, &b);
+                assert_eq!(a.storage_bytes(), b.storage_bytes());
+                assert_eq!(a.total_appended(), b.total_appended());
+                assert_eq!(a.num_segments(), b.num_segments());
+            }
+        }
+    }
+
+    #[test]
+    fn v4_segments_load_cold_and_decode_on_demand() {
+        let a = populated_with(16);
+        let b = from_bytes(&to_bytes(&a).unwrap(), StoreConfig::default()).unwrap();
+        assert!(b.num_segments() > 0);
+        // Every sealed segment comes back compressed-cold.
+        assert_eq!(b.hot_segments(), 0);
+        assert_eq!(
+            b.cold_bytes(),
+            b.segments().iter().map(|s| s.image_bytes()).sum::<usize>()
+        );
+        // A narrow query decodes only the admitted segments.
+        use crate::applog::query::{retrieve, TimeWindow};
+        let w = TimeWindow::last(99 * 777 + 1, 10 * 777);
+        let got = retrieve(&b, &[0, 1, 2, 3], w);
+        assert!(!got.is_empty());
+        assert!(b.hot_segments() > 0);
+        assert!(
+            b.hot_segments() < b.num_segments(),
+            "zone maps must keep out-of-window segments cold"
+        );
+        let cold_after = b.cold_bytes();
+        assert!(cold_after < b.storage_bytes());
+        // Full materialization heats everything.
+        let _ = b.iter().count();
+        assert_eq!(b.hot_segments(), b.num_segments());
+        assert_eq!(b.cold_bytes(), 0);
+    }
+
+    #[test]
+    fn v2_blob_still_loads() {
         for segment_rows in [1usize, 32, usize::MAX] {
             let a = populated_with(segment_rows);
-            let b = from_bytes(
-                &to_bytes(&a),
-                StoreConfig {
-                    segment_rows,
-                    ..StoreConfig::default()
-                },
-            )
-            .unwrap();
+            let cfg = StoreConfig {
+                segment_rows,
+                ..StoreConfig::default()
+            };
+            let b = from_bytes(&to_bytes_v2(&a).unwrap(), cfg).unwrap();
             assert_rows_equal(&a, &b);
+            // Re-sealed under the same policy: accounting matches too.
             assert_eq!(a.storage_bytes(), b.storage_bytes());
-            assert_eq!(a.total_appended(), b.total_appended());
-            assert_eq!(a.num_segments(), b.num_segments());
         }
     }
 
@@ -368,7 +559,7 @@ mod tests {
     fn loaded_store_answers_queries_identically() {
         use crate::applog::query::{retrieve, TimeWindow};
         let a = populated();
-        let b = from_bytes(&to_bytes(&a), StoreConfig::default()).unwrap();
+        let b = from_bytes(&to_bytes(&a).unwrap(), StoreConfig::default()).unwrap();
         let w = TimeWindow::last(80_000, 50_000);
         let ra = retrieve(&a, &[0, 2], w);
         let rb = retrieve(&b, &[0, 2], w);
@@ -382,7 +573,7 @@ mod tests {
     #[test]
     fn loaded_store_keeps_appending_with_fresh_seqs() {
         let a = populated();
-        let mut b = from_bytes(&to_bytes(&a), StoreConfig::default()).unwrap();
+        let mut b = from_bytes(&to_bytes(&a).unwrap(), StoreConfig::default()).unwrap();
         let last = b.iter().last().unwrap().seq_no;
         let seq = b.append(0, 99 * 777 + 1, vec![1]).unwrap();
         assert_eq!(seq, last + 1);
@@ -390,26 +581,43 @@ mod tests {
 
     #[test]
     fn rejects_corruption() {
-        let bytes = to_bytes(&populated());
-        // Bad magic.
-        let mut bad = bytes.clone();
-        bad[0] = b'X';
-        assert!(from_bytes(&bad, StoreConfig::default()).is_err());
-        // Truncation.
-        assert!(from_bytes(&bytes[..bytes.len() - 5], StoreConfig::default()).is_err());
-        // Trailing garbage.
-        let mut long = bytes.clone();
-        long.push(0);
-        assert!(from_bytes(&long, StoreConfig::default()).is_err());
-        // Bad version.
-        let mut v = bytes.clone();
-        v[4] = 9;
-        assert!(from_bytes(&v, StoreConfig::default()).is_err());
-        // Payload bit flip deep in a segment arena: caught by the CRC.
-        let mut flipped = bytes;
-        let mid = flipped.len() / 2;
-        flipped[mid] ^= 0x10;
-        assert!(from_bytes(&flipped, StoreConfig::default()).is_err());
+        for bytes in [
+            to_bytes(&populated()).unwrap(),
+            to_bytes_v2(&populated()).unwrap(),
+        ] {
+            // Bad magic.
+            let mut bad = bytes.clone();
+            bad[0] = b'X';
+            assert!(from_bytes(&bad, StoreConfig::default()).is_err());
+            // Truncation.
+            assert!(from_bytes(&bytes[..bytes.len() - 5], StoreConfig::default()).is_err());
+            // Trailing garbage.
+            let mut long = bytes.clone();
+            long.push(0);
+            assert!(from_bytes(&long, StoreConfig::default()).is_err());
+            // Bad version.
+            let mut v = bytes.clone();
+            v[4] = 9;
+            assert!(from_bytes(&v, StoreConfig::default()).is_err());
+            // Payload bit flip deep in a segment block: caught by the CRC.
+            let mut flipped = bytes;
+            let mid = flipped.len() / 2;
+            flipped[mid] ^= 0x10;
+            assert!(from_bytes(&flipped, StoreConfig::default()).is_err());
+        }
+    }
+
+    #[test]
+    fn blob_len_guard_rejects_overflow_at_encode_time() {
+        // Synthetic lengths — no 4 GiB buffer needed to pin the guard.
+        assert_eq!(declared_blob_len(0).unwrap(), 4);
+        assert_eq!(
+            declared_blob_len(u32::MAX as usize - 4).unwrap(),
+            u32::MAX
+        );
+        assert!(declared_blob_len(u32::MAX as usize - 3).is_err());
+        assert!(declared_blob_len(u32::MAX as usize).is_err());
+        assert!(declared_blob_len(usize::MAX - 4).is_err());
     }
 
     #[test]
@@ -427,7 +635,7 @@ mod tests {
     #[test]
     fn empty_store_roundtrips() {
         let s = AppLogStore::new(StoreConfig::default());
-        let b = from_bytes(&to_bytes(&s), StoreConfig::default()).unwrap();
+        let b = from_bytes(&to_bytes(&s).unwrap(), StoreConfig::default()).unwrap();
         assert!(b.is_empty());
     }
 
@@ -438,36 +646,76 @@ mod tests {
     }
 
     #[test]
-    fn v3_session_block_roundtrips_and_plain_loaders_ignore_it() {
+    fn session_block_roundtrips_and_plain_loaders_ignore_it() {
         let a = populated();
         let state = vec![7u8, 0, 255, 42, 1, 2, 3];
-        let bytes = to_bytes_with_session(&a, &state);
-        let (b, got) = from_bytes_with_session(&bytes, StoreConfig::default()).unwrap();
-        assert_rows_equal(&a, &b);
-        assert_eq!(got.as_deref(), Some(&state[..]));
-        // The store-only loader accepts v3 and drops the block.
-        let c = from_bytes(&bytes, StoreConfig::default()).unwrap();
-        assert_rows_equal(&a, &c);
-        // v2 blobs report no session state.
-        let (_, none) = from_bytes_with_session(&to_bytes(&a), StoreConfig::default()).unwrap();
+        for bytes in [
+            to_bytes_with_session(&a, &state).unwrap(), // v4
+            to_bytes_v3(&a, &state).unwrap(),           // legacy v3
+        ] {
+            let (b, got) = from_bytes_with_session(&bytes, StoreConfig::default()).unwrap();
+            assert_rows_equal(&a, &b);
+            assert_eq!(got.as_deref(), Some(&state[..]));
+            // The store-only loader accepts the image and drops the block.
+            let c = from_bytes(&bytes, StoreConfig::default()).unwrap();
+            assert_rows_equal(&a, &c);
+        }
+        // Session-less blobs report no session state.
+        let (_, none) =
+            from_bytes_with_session(&to_bytes(&a).unwrap(), StoreConfig::default()).unwrap();
         assert!(none.is_none());
         // Empty session state is a valid (if pointless) image.
-        let (_, empty) =
-            from_bytes_with_session(&to_bytes_with_session(&a, &[]), StoreConfig::default())
-                .unwrap();
+        let (_, empty) = from_bytes_with_session(
+            &to_bytes_with_session(&a, &[]).unwrap(),
+            StoreConfig::default(),
+        )
+        .unwrap();
         assert_eq!(empty.as_deref(), Some(&[][..]));
     }
 
     #[test]
-    fn v3_rejects_corruption_of_session_block() {
+    fn rejects_corruption_of_session_block() {
         let a = populated();
-        let bytes = to_bytes_with_session(&a, &[9u8; 64]);
+        let bytes = to_bytes_with_session(&a, &[9u8; 64]).unwrap();
         // Flip a byte inside the trailing session block: CRC catches it.
         let mut bad = bytes.clone();
         let off = bad.len() - 20;
         bad[off] ^= 0x01;
         assert!(from_bytes_with_session(&bad, StoreConfig::default()).is_err());
         // Truncation mid-block.
-        assert!(from_bytes_with_session(&bytes[..bytes.len() - 8], StoreConfig::default()).is_err());
+        assert!(
+            from_bytes_with_session(&bytes[..bytes.len() - 8], StoreConfig::default()).is_err()
+        );
+    }
+
+    #[test]
+    fn wal_watermark_roundtrips_and_is_zero_for_legacy_blobs() {
+        let a = populated_with(16);
+        let img = to_bytes_v4(&a, None, 7_777).unwrap();
+        let loaded = from_bytes_full(&img, StoreConfig::default()).unwrap();
+        assert_eq!(loaded.wal_watermark, 7_777);
+        assert!(loaded.session_state.is_none());
+        assert_rows_equal(&a, &loaded.store);
+        let with_state = to_bytes_v4(&a, Some(&[1, 2, 3]), 42).unwrap();
+        let loaded = from_bytes_full(&with_state, StoreConfig::default()).unwrap();
+        assert_eq!(loaded.wal_watermark, 42);
+        assert_eq!(loaded.session_state.as_deref(), Some(&[1u8, 2, 3][..]));
+        for legacy in [to_bytes_v2(&a).unwrap(), to_bytes_v1(&a)] {
+            let loaded = from_bytes_full(&legacy, StoreConfig::default()).unwrap();
+            assert_eq!(loaded.wal_watermark, 0);
+        }
+    }
+
+    #[test]
+    fn unknown_v4_flags_are_rejected() {
+        let a = populated();
+        let mut img = to_bytes_v4(&a, None, 0).unwrap();
+        img[10] |= 0b1000_0000; // flags byte sits right after blob_len
+        // Re-seal the CRC so only the flag check can fire.
+        let body_len = img.len() - 4;
+        let crc = crc32(&img[..body_len]);
+        img[body_len..].copy_from_slice(&crc.to_le_bytes());
+        let err = from_bytes_full(&img, StoreConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("unknown snapshot flags"), "{err:#}");
     }
 }

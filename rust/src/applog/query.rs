@@ -35,7 +35,7 @@ use anyhow::Result;
 
 use super::codec::AttrCodec;
 use super::event::{AttrId, AttrValue, BehaviorEvent, EventTypeId, TimestampMs};
-use super::segment::Segment;
+use super::segment::SealedSegment;
 use super::store::AppLogStore;
 
 /// Inclusive-exclusive time window `[start, end)` over event timestamps.
@@ -147,12 +147,15 @@ fn or_mask_u16(mask: &mut [u64], types: &[EventTypeId], want: EventTypeId) {
     }
 }
 
-/// Column source behind a batch: an immutable sealed segment or the
-/// store's mutable tail (via its lockstep column mirrors).
+/// Column source behind a batch: an immutable sealed segment (hot or
+/// compressed-cold) or the store's mutable tail (via its lockstep
+/// column mirrors).
 #[derive(Debug, Clone, Copy)]
 enum BatchCols<'a> {
-    Seg(&'a Segment),
+    Seg(&'a SealedSegment),
     Tail {
+        ts: &'a [TimestampMs],
+        seq: &'a [u64],
         types: &'a [EventTypeId],
         rows: &'a [BehaviorEvent],
     },
@@ -162,30 +165,36 @@ enum BatchCols<'a> {
 /// the app log — the unit the batch executor operates on. No `RowRef`
 /// or owned row is materialized to *produce* a batch; consumers decide
 /// per selected position whether to decode or clone.
+///
+/// A batch over a **cold** sealed segment answers every zone-map
+/// question (`len`, `overlaps`, `contains_type`) from metadata alone;
+/// the first row- or column-touching accessor decodes the compressed
+/// image once and memoizes it ([`SealedSegment::hot`]). The predicate
+/// kernels check the zone map *before* touching columns, so segments
+/// the window or bitmap rejects never leave the compressed tier.
 #[derive(Debug, Clone, Copy)]
 pub struct ColumnBatch<'a> {
-    ts: &'a [TimestampMs],
-    seq: &'a [u64],
     cols: BatchCols<'a>,
 }
 
 impl<'a> ColumnBatch<'a> {
-    fn from_segment(seg: &'a Segment) -> Self {
+    fn from_segment(seg: &'a SealedSegment) -> Self {
         ColumnBatch {
-            ts: &seg.ts,
-            seq: &seg.seq,
             cols: BatchCols::Seg(seg),
         }
     }
 
-    /// Number of rows in the batch.
+    /// Number of rows in the batch (zone metadata; never decodes).
     pub fn len(&self) -> usize {
-        self.ts.len()
+        match self.cols {
+            BatchCols::Seg(seg) => seg.len(),
+            BatchCols::Tail { ts, .. } => ts.len(),
+        }
     }
 
     /// Whether the batch holds no rows.
     pub fn is_empty(&self) -> bool {
-        self.ts.is_empty()
+        self.len() == 0
     }
 
     /// Whether this batch views a sealed segment (vs the mutable tail).
@@ -194,12 +203,13 @@ impl<'a> ColumnBatch<'a> {
     }
 
     /// Zone map: can the window select anything here? Segments answer
-    /// from their min/max timestamps; the tail from its ts column ends.
+    /// from their min/max timestamps (without decoding); the tail from
+    /// its ts column ends.
     #[inline]
     pub fn overlaps(&self, window: TimeWindow) -> bool {
         match self.cols {
             BatchCols::Seg(seg) => seg.overlaps(window.start_ms, window.end_ms),
-            BatchCols::Tail { .. } => match (self.ts.first(), self.ts.last()) {
+            BatchCols::Tail { ts, .. } => match (ts.first(), ts.last()) {
                 (Some(&first), Some(&last)) => first < window.end_ms && last >= window.start_ms,
                 _ => false,
             },
@@ -207,8 +217,8 @@ impl<'a> ColumnBatch<'a> {
     }
 
     /// Zone map: can the batch hold rows of type `t`? Segments answer
-    /// from their occupancy bitmap; the tail has no zone map and always
-    /// answers yes (the bitmask kernel resolves it).
+    /// from their occupancy bitmap (without decoding); the tail has no
+    /// zone map and always answers yes (the bitmask kernel resolves it).
     #[inline]
     pub fn contains_type(&self, t: EventTypeId) -> bool {
         match self.cols {
@@ -217,39 +227,45 @@ impl<'a> ColumnBatch<'a> {
         }
     }
 
-    /// The timestamp column.
+    /// The timestamp column. **Decodes** a cold segment.
     #[inline]
     pub fn ts(&self) -> &'a [TimestampMs] {
-        self.ts
+        match self.cols {
+            BatchCols::Seg(seg) => &seg.hot().ts,
+            BatchCols::Tail { ts, .. } => ts,
+        }
     }
 
-    /// Timestamp of the row at `pos`.
+    /// Timestamp of the row at `pos`. **Decodes** a cold segment.
     #[inline]
     pub fn ts_at(&self, pos: u32) -> TimestampMs {
-        self.ts[pos as usize]
+        self.ts()[pos as usize]
     }
 
-    /// Seq_no of the row at `pos`.
+    /// Seq_no of the row at `pos`. **Decodes** a cold segment.
     #[inline]
     pub fn seq_at(&self, pos: u32) -> u64 {
-        self.seq[pos as usize]
+        match self.cols {
+            BatchCols::Seg(seg) => seg.hot().seq[pos as usize],
+            BatchCols::Tail { seq, .. } => seq[pos as usize],
+        }
     }
 
-    /// Behavior type of the row at `pos`.
+    /// Behavior type of the row at `pos`. **Decodes** a cold segment.
     #[inline]
     pub fn event_type_at(&self, pos: u32) -> EventTypeId {
         match self.cols {
-            BatchCols::Seg(seg) => seg.event_type_at(pos),
+            BatchCols::Seg(seg) => seg.hot().event_type_at(pos),
             BatchCols::Tail { types, .. } => types[pos as usize],
         }
     }
 
     /// Payload bytes of the row at `pos`, borrowed from the segment
-    /// arena or the tail row.
+    /// arena or the tail row. **Decodes** a cold segment.
     #[inline]
     pub fn payload_at(&self, pos: u32) -> &'a [u8] {
         match self.cols {
-            BatchCols::Seg(seg) => seg.payload_at(pos),
+            BatchCols::Seg(seg) => seg.hot().payload_at(pos),
             BatchCols::Tail { rows, .. } => &rows[pos as usize].payload,
         }
     }
@@ -260,7 +276,7 @@ impl<'a> ColumnBatch<'a> {
     #[inline]
     pub fn payload_code(&self, pos: u32) -> Option<u32> {
         match self.cols {
-            BatchCols::Seg(seg) => Some(seg.payload_codes[pos as usize]),
+            BatchCols::Seg(seg) => Some(seg.hot().payload_codes[pos as usize]),
             BatchCols::Tail { .. } => None,
         }
     }
@@ -269,7 +285,10 @@ impl<'a> ColumnBatch<'a> {
     /// (decode memoization is only worth keying when it does).
     pub fn dedup_payloads(&self) -> bool {
         match self.cols {
-            BatchCols::Seg(seg) => seg.unique_payloads() < seg.len(),
+            BatchCols::Seg(seg) => {
+                let hot = seg.hot();
+                hot.unique_payloads() < hot.len()
+            }
             BatchCols::Tail { .. } => false,
         }
     }
@@ -277,7 +296,7 @@ impl<'a> ColumnBatch<'a> {
     /// Materialize the row at `pos` as an owned event (clones payload).
     pub fn materialize(&self, pos: u32) -> BehaviorEvent {
         match self.cols {
-            BatchCols::Seg(seg) => seg.materialize(pos),
+            BatchCols::Seg(seg) => seg.hot().materialize(pos),
             BatchCols::Tail { rows, .. } => rows[pos as usize].clone(),
         }
     }
@@ -285,6 +304,11 @@ impl<'a> ColumnBatch<'a> {
     /// The batch predicate kernel: zone-map skip → ts range by binary
     /// search → per-type equality bitmask over the type column → sorted
     /// selection vector. `sel` is overwritten (reusable scratch).
+    ///
+    /// Both zone-map gates (window overlap and type occupancy) are
+    /// checked from metadata **before** any column access, so a cold
+    /// segment only pays its one-time decode when the zone map admits
+    /// the query.
     ///
     /// `types` must be free of duplicates for SQL `IN` semantics —
     /// duplicates are harmless to correctness (the mask OR is
@@ -300,14 +324,19 @@ impl<'a> ColumnBatch<'a> {
         if !self.overlaps(window) {
             return;
         }
-        let lo = self.ts.partition_point(|&t| t < window.start_ms);
-        let hi = self.ts.partition_point(|&t| t < window.end_ms);
+        if !types.iter().any(|&t| self.contains_type(t)) {
+            return;
+        }
+        let ts = self.ts();
+        let lo = ts.partition_point(|&t| t < window.start_ms);
+        let hi = ts.partition_point(|&t| t < window.end_ms);
         if lo >= hi {
             return;
         }
         sel.mask.resize((hi - lo).div_ceil(64), 0);
         match self.cols {
-            BatchCols::Seg(seg) => {
+            BatchCols::Seg(sealed) => {
+                let seg = sealed.hot();
                 for &t in types {
                     if let Some(code) = seg.code_of(t) {
                         or_mask_u8(&mut sel.mask, &seg.type_codes()[lo..hi], code);
@@ -334,9 +363,9 @@ pub fn column_batches(store: &AppLogStore) -> Vec<ColumnBatch<'_>> {
         .collect();
     if !store.tail().is_empty() {
         out.push(ColumnBatch {
-            ts: store.tail_ts(),
-            seq: store.tail_seq(),
             cols: BatchCols::Tail {
+                ts: store.tail_ts(),
+                seq: store.tail_seq(),
                 types: store.tail_types(),
                 rows: store.tail(),
             },
@@ -491,10 +520,13 @@ pub fn retrieve_scan(
 /// whole segments exactly as in [`retrieve`].
 pub fn count(store: &AppLogStore, event_type: EventTypeId, window: TimeWindow) -> usize {
     let mut n = 0usize;
-    for seg in store.segments() {
-        if !seg.overlaps(window.start_ms, window.end_ms) || !seg.bitmap().contains(event_type) {
+    for sealed in store.segments() {
+        if !sealed.overlaps(window.start_ms, window.end_ms)
+            || !sealed.bitmap().contains(event_type)
+        {
             continue;
         }
+        let seg = sealed.hot();
         let pos = seg.positions_of(event_type);
         let lo = pos.partition_point(|&p| seg.ts[p as usize] < window.start_ms);
         let hi = pos.partition_point(|&p| seg.ts[p as usize] < window.end_ms);

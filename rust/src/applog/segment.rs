@@ -7,16 +7,31 @@
 //! (min/max timestamp + event-type occupancy bitmap) so the `Retrieve`
 //! path can discard whole segments before touching a row.
 //!
-//! In memory a segment keeps the decoded hot columns (`ts`, `seq`,
-//! per-type position lists) as acceleration structures; the durable
-//! columnar encoding ([`Segment::encode`]) is what persistence writes
-//! and what [`Segment::encoded_bytes`] accounts as storage footprint.
+//! In memory a segment exists in one of two tiers:
+//!
+//! * **hot** — a decoded [`Segment`] with its acceleration structures
+//!   (`ts`, `seq`, per-type position lists), what queries walk;
+//! * **cold** — a [`SealedSegment`] holding only the zone-map metadata
+//!   plus the **compressed columnar image** (each column block run
+//!   through a [`super::blockcodec`] codec picked at seal time by a size
+//!   probe). A cold segment answers zone-map questions without decoding;
+//!   the first query the zone map *admits* decodes the image once and
+//!   memoizes the hot form ([`SealedSegment::hot`]), mirroring the
+//!   per-segment payload-dict decode memoization in the query path.
+//!
+//! The raw columnar encoding ([`Segment::encode`]) is the legacy v2
+//! snapshot block; v4 snapshots persist the compressed image verbatim
+//! ([`SealedSegment::image`]), whose length is what
+//! `AppLogStore::storage_bytes` accounts as bytes-on-device.
 
 use std::collections::HashMap;
+use std::sync::OnceLock;
 
 use anyhow::{ensure, Result};
 
+use super::blockcodec::{self, BlockCodec, CodecPolicy};
 use super::event::{BehaviorEvent, EventTypeId, TimestampMs};
+use crate::util::wire;
 
 /// Dictionary capacity: type codes are one byte, so a single segment can
 /// hold at most this many distinct behavior types (the compactor splits
@@ -24,12 +39,23 @@ use super::event::{BehaviorEvent, EventTypeId, TimestampMs};
 pub const MAX_DICT_TYPES: usize = 255;
 
 /// Occupancy bitmap over behavior-type ids (zone-map component).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TypeBitmap {
     words: Vec<u64>,
 }
 
 impl TypeBitmap {
+    /// Backing words (little-endian bit order; serialized into sealed
+    /// images).
+    pub(crate) fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from serialized words.
+    pub(crate) fn from_words(words: Vec<u64>) -> Self {
+        TypeBitmap { words }
+    }
+
     /// Mark a type as present.
     pub fn set(&mut self, t: EventTypeId) {
         let w = t as usize / 64;
@@ -215,7 +241,21 @@ impl Segment {
         self.ts.is_empty()
     }
 
-    /// Zone map: does the window `[start, end)` overlap this segment?
+    /// Zone map: does the **half-open** window `[start, end)` overlap
+    /// this segment?
+    ///
+    /// The edge treatment is deliberately asymmetric because the window
+    /// itself is: `TimeWindow` is start-inclusive / end-exclusive
+    /// (`ts >= start && ts < end`), matching the batch walkers'
+    /// `duration >= now - ts` membership test (`ts >= now - duration`,
+    /// inclusive at the window start). The closed row range
+    /// `[min_ts, max_ts]` intersects `[start, end)` iff
+    /// `min_ts < end && max_ts >= start` — so a segment whose `max_ts`
+    /// sits exactly on `start` still overlaps (that row is *in* the
+    /// window), while one whose `min_ts` sits exactly on `end` does not
+    /// (its earliest row is already excluded). Pinned by the
+    /// exact-boundary regression tests below and the segmented-vs-flat
+    /// differential in `query.rs`.
     #[inline]
     pub fn overlaps(&self, start_ms: TimestampMs, end_ms: TimestampMs) -> bool {
         self.min_ts < end_ms && self.max_ts >= start_ms
@@ -293,34 +333,60 @@ impl Segment {
     pub fn encode(&self) -> Vec<u8> {
         let n = self.len();
         let mut out = Vec::with_capacity(32 + self.arena.len() + n * 4);
-        out.extend_from_slice(&(n as u32).to_le_bytes());
+        self.encode_header(&mut out);
+        for col in self.encode_columns() {
+            out.extend_from_slice(&col);
+        }
+        out
+    }
+
+    /// The fixed 28-byte block header (`row_count u32 | first_ts i64 |
+    /// max_ts i64 | seq_first u64`), shared by the raw v2 block and the
+    /// reassembly buffer a sealed image decodes through.
+    fn encode_header(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.len() as u32).to_le_bytes());
         out.extend_from_slice(&self.min_ts.to_le_bytes());
         out.extend_from_slice(&self.max_ts.to_le_bytes());
         out.extend_from_slice(&self.seq[0].to_le_bytes());
+    }
+
+    /// The five column blocks of the durable encoding, as separate
+    /// buffers in layout order: ts deltas, seq deltas, type dict+codes,
+    /// payload dict, payload codes. Concatenated after the header they
+    /// are byte-identical to the body of [`Segment::encode`]; sealed
+    /// images compress each buffer independently (per-column codec
+    /// choice — delta columns and dictionary blocks compress very
+    /// differently).
+    pub(crate) fn encode_columns(&self) -> [Vec<u8>; 5] {
+        let mut ts_col = Vec::with_capacity(self.len() * 2);
         let mut prev = self.min_ts;
         for &t in &self.ts {
-            put_varint(&mut out, (t - prev) as u64);
+            put_varint(&mut ts_col, (t - prev) as u64);
             prev = t;
         }
+        let mut seq_col = Vec::with_capacity(self.len());
         let mut prev = self.seq[0];
         for &s in &self.seq {
-            put_varint(&mut out, s - prev);
+            put_varint(&mut seq_col, s - prev);
             prev = s;
         }
-        out.extend_from_slice(&(self.type_dict.len() as u16).to_le_bytes());
+        let mut type_col = Vec::with_capacity(2 + 2 * self.type_dict.len() + self.len());
+        type_col.extend_from_slice(&(self.type_dict.len() as u16).to_le_bytes());
         for &t in &self.type_dict {
-            out.extend_from_slice(&t.to_le_bytes());
+            type_col.extend_from_slice(&t.to_le_bytes());
         }
-        out.extend_from_slice(&self.type_codes);
-        out.extend_from_slice(&(self.payload_dict.len() as u32).to_le_bytes());
+        type_col.extend_from_slice(&self.type_codes);
+        let mut pdict_col = Vec::with_capacity(4 + self.arena.len());
+        pdict_col.extend_from_slice(&(self.payload_dict.len() as u32).to_le_bytes());
         for &(off, len) in &self.payload_dict {
-            put_varint(&mut out, len as u64);
-            out.extend_from_slice(&self.arena[off as usize..(off + len) as usize]);
+            put_varint(&mut pdict_col, len as u64);
+            pdict_col.extend_from_slice(&self.arena[off as usize..(off + len) as usize]);
         }
+        let mut pcode_col = Vec::with_capacity(self.len());
         for &c in &self.payload_codes {
-            put_varint(&mut out, c as u64);
+            put_varint(&mut pcode_col, c as u64);
         }
-        out
+        [ts_col, seq_col, type_col, pdict_col, pcode_col]
     }
 
     /// Decode a durable columnar image back into a segment, rebuilding
@@ -429,6 +495,285 @@ impl Segment {
     }
 }
 
+/// Magic prefix of a sealed-segment image.
+const SEAL_MAGIC: &[u8; 4] = b"AFSG";
+/// Sealed-segment image format version.
+const SEAL_VERSION: u8 = 1;
+
+/// One compressed column block inside a sealed image: codec tag, the
+/// uncompressed length, and the encoded byte range within the image.
+#[derive(Debug, Clone, Copy)]
+struct ColumnBlock {
+    codec: BlockCodec,
+    raw_len: u32,
+    start: u32,
+    len: u32,
+}
+
+/// A sealed segment: zone-map metadata plus the self-contained
+/// compressed columnar image, with the decoded hot [`Segment`] produced
+/// lazily (once, memoized) when a zone map first admits a query.
+///
+/// Image layout (all integers little-endian, varints LEB128):
+///
+/// ```text
+/// magic "AFSG" | version u8 |
+/// rows u32 | min_ts i64 | max_ts i64 | first_seq u64 | last_seq u64 |
+/// bitmap word count varint | bitmap words u64* |
+/// 5 x ( codec u8 | raw_len varint | enc_len varint | enc bytes ) |
+/// crc32 u32   (IEEE, over everything before it)
+/// ```
+///
+/// The five column blocks are [`Segment::encode_columns`] outputs, each
+/// independently compressed. [`SealedSegment::from_image`] validates the
+/// CRC and every header invariant eagerly (cheap — no decompression), so
+/// any single-byte corruption of an image is rejected at load time; the
+/// lazy decode can then only fail on a writer bug, which panics rather
+/// than serving wrong rows.
+#[derive(Debug)]
+pub struct SealedSegment {
+    rows: u32,
+    min_ts: TimestampMs,
+    max_ts: TimestampMs,
+    first_seq: u64,
+    last_seq: u64,
+    bitmap: TypeBitmap,
+    cols: [ColumnBlock; 5],
+    image: Vec<u8>,
+    hot: OnceLock<Segment>,
+}
+
+impl SealedSegment {
+    /// Seal a freshly built segment under a codec policy. The hot form
+    /// is retained (the rows were just in memory — dropping them only to
+    /// re-decode on the next query would be pure waste); the image is
+    /// what persistence and storage accounting see.
+    pub(crate) fn from_segment(seg: Segment, policy: CodecPolicy) -> SealedSegment {
+        let mut image = Vec::with_capacity(64 + seg.encoded_bytes() / 2);
+        image.extend_from_slice(SEAL_MAGIC);
+        image.push(SEAL_VERSION);
+        image.extend_from_slice(&(seg.len() as u32).to_le_bytes());
+        image.extend_from_slice(&seg.min_ts.to_le_bytes());
+        image.extend_from_slice(&seg.max_ts.to_le_bytes());
+        image.extend_from_slice(&seg.seq[0].to_le_bytes());
+        image.extend_from_slice(&seg.seq.last().unwrap().to_le_bytes());
+        let words = seg.bitmap.words();
+        put_varint(&mut image, words.len() as u64);
+        for &w in words {
+            image.extend_from_slice(&w.to_le_bytes());
+        }
+        for raw in seg.encode_columns() {
+            let (codec, enc) = blockcodec::encode_block(policy, &raw);
+            image.push(codec.tag());
+            put_varint(&mut image, raw.len() as u64);
+            put_varint(&mut image, enc.len() as u64);
+            image.extend_from_slice(&enc);
+        }
+        let crc = wire::crc32(&image);
+        image.extend_from_slice(&crc.to_le_bytes());
+        let sealed = SealedSegment::from_image(image)
+            .expect("freshly sealed segment image must validate");
+        if sealed.hot.set(seg).is_err() {
+            unreachable!("fresh OnceLock cannot be initialized");
+        }
+        sealed
+    }
+
+    /// Load a sealed segment **cold** from its image (the v4 snapshot
+    /// path): CRC and header invariants are verified now, column blocks
+    /// stay compressed until [`SealedSegment::hot`] is first called.
+    pub fn from_image(image: Vec<u8>) -> Result<SealedSegment> {
+        ensure!(image.len() >= 4 + 1 + 41 + 4, "sealed-segment image too short");
+        ensure!(
+            image.len() <= u32::MAX as usize,
+            "sealed-segment image exceeds u32 addressing"
+        );
+        let body = &image[..image.len() - 4];
+        let stored = u32::from_le_bytes(image[image.len() - 4..].try_into().unwrap());
+        let actual = wire::crc32(body);
+        ensure!(
+            stored == actual,
+            "sealed-segment checksum mismatch (stored {stored:08x}, computed {actual:08x})"
+        );
+        let mut i = 0usize;
+        ensure!(wire::take(body, &mut i, 4)? == SEAL_MAGIC, "bad sealed-segment magic");
+        let ver = wire::get_u8(body, &mut i)?;
+        ensure!(ver == SEAL_VERSION, "unsupported sealed-segment version {ver}");
+        let rows = u32::from_le_bytes(wire::take(body, &mut i, 4)?.try_into().unwrap());
+        ensure!(rows > 0, "empty sealed segment");
+        let min_ts = i64::from_le_bytes(wire::take(body, &mut i, 8)?.try_into().unwrap());
+        let max_ts = i64::from_le_bytes(wire::take(body, &mut i, 8)?.try_into().unwrap());
+        ensure!(min_ts <= max_ts, "zone map min_ts past max_ts");
+        let first_seq = u64::from_le_bytes(wire::take(body, &mut i, 8)?.try_into().unwrap());
+        let last_seq = u64::from_le_bytes(wire::take(body, &mut i, 8)?.try_into().unwrap());
+        ensure!(
+            last_seq >= first_seq && last_seq - first_seq >= rows as u64 - 1,
+            "seq span shorter than row count"
+        );
+        let word_count = wire::get_varint(body, &mut i)?;
+        // Type ids are u16, so the occupancy bitmap spans at most
+        // 65536 bits = 1024 words.
+        ensure!(word_count <= 1024, "type bitmap too large ({word_count} words)");
+        let mut words = Vec::with_capacity(word_count as usize);
+        for _ in 0..word_count {
+            words.push(u64::from_le_bytes(
+                wire::take(body, &mut i, 8)?.try_into().unwrap(),
+            ));
+        }
+        let bitmap = TypeBitmap::from_words(words);
+        let mut cols = [ColumnBlock {
+            codec: BlockCodec::Raw,
+            raw_len: 0,
+            start: 0,
+            len: 0,
+        }; 5];
+        for col in cols.iter_mut() {
+            let codec = BlockCodec::from_tag(wire::get_u8(body, &mut i)?)?;
+            let raw_len = wire::get_varint(body, &mut i)?;
+            ensure!(raw_len <= u32::MAX as u64, "column raw length overflow");
+            let enc_len = wire::get_varint(body, &mut i)?;
+            ensure!(enc_len <= u32::MAX as u64, "column encoded length overflow");
+            let start = i;
+            wire::take(body, &mut i, enc_len as usize)?;
+            *col = ColumnBlock {
+                codec,
+                raw_len: raw_len as u32,
+                start: start as u32,
+                len: enc_len as u32,
+            };
+        }
+        ensure!(i == body.len(), "trailing bytes in sealed-segment image");
+        Ok(SealedSegment {
+            rows,
+            min_ts,
+            max_ts,
+            first_seq,
+            last_seq,
+            bitmap,
+            cols,
+            image,
+            hot: OnceLock::new(),
+        })
+    }
+
+    /// Decompress the column blocks into a v2-shaped buffer and run it
+    /// through [`Segment::decode`], inheriting its full structural
+    /// validation, then cross-check the decoded rows against the image
+    /// header's zone metadata.
+    fn decode_hot(&self) -> Result<Segment> {
+        let body = &self.image[..self.image.len() - 4];
+        let raw_total: usize = self.cols.iter().map(|c| c.raw_len as usize).sum();
+        let mut buf = Vec::with_capacity(28 + raw_total);
+        buf.extend_from_slice(&self.rows.to_le_bytes());
+        buf.extend_from_slice(&self.min_ts.to_le_bytes());
+        buf.extend_from_slice(&self.max_ts.to_le_bytes());
+        buf.extend_from_slice(&self.first_seq.to_le_bytes());
+        for c in &self.cols {
+            let enc = &body[c.start as usize..(c.start + c.len) as usize];
+            buf.extend_from_slice(&blockcodec::decompress(c.codec, enc, c.raw_len as usize)?);
+        }
+        let seg = Segment::decode(&buf)?;
+        ensure!(
+            *seg.seq.last().unwrap() == self.last_seq,
+            "sealed-segment last_seq mismatch"
+        );
+        ensure!(seg.bitmap == self.bitmap, "sealed-segment type bitmap mismatch");
+        Ok(seg)
+    }
+
+    /// The decoded hot segment — lazily produced on first call, then
+    /// memoized (`OnceLock`, so concurrent readers race benignly). The
+    /// image was CRC-validated at construction; a decode failure here
+    /// means the writer produced a corrupt-but-checksummed image, which
+    /// is a bug worth crashing on rather than silently serving wrong
+    /// rows.
+    pub(crate) fn hot(&self) -> &Segment {
+        self.hot.get_or_init(|| {
+            self.decode_hot()
+                .expect("CRC-validated sealed-segment image failed to decode")
+        })
+    }
+
+    /// Whether the hot form has been decoded (the segment left the
+    /// compressed-cold tier).
+    pub fn is_hot(&self) -> bool {
+        self.hot.get().is_some()
+    }
+
+    /// Number of rows (zone metadata; never decodes).
+    pub fn len(&self) -> usize {
+        self.rows as usize
+    }
+
+    /// Sealed segments are never empty.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Zone map: earliest row timestamp.
+    #[inline]
+    pub fn min_ts(&self) -> TimestampMs {
+        self.min_ts
+    }
+
+    /// Zone map: latest row timestamp.
+    #[inline]
+    pub fn max_ts(&self) -> TimestampMs {
+        self.max_ts
+    }
+
+    /// Seq_no of the first row.
+    #[inline]
+    pub fn first_seq(&self) -> u64 {
+        self.first_seq
+    }
+
+    /// Seq_no of the last row.
+    #[inline]
+    pub fn last_seq(&self) -> u64 {
+        self.last_seq
+    }
+
+    /// Zone map: half-open window overlap (same convention as
+    /// [`Segment::overlaps`]), answered from metadata without decoding.
+    #[inline]
+    pub fn overlaps(&self, start_ms: TimestampMs, end_ms: TimestampMs) -> bool {
+        self.min_ts < end_ms && self.max_ts >= start_ms
+    }
+
+    /// Zone map: type-occupancy bitmap (metadata; never decodes).
+    pub fn bitmap(&self) -> &TypeBitmap {
+        &self.bitmap
+    }
+
+    /// The compressed image (what v4 snapshots persist verbatim).
+    pub fn image(&self) -> &[u8] {
+        &self.image
+    }
+
+    /// Compressed footprint in bytes (storage accounting).
+    pub fn image_bytes(&self) -> usize {
+        self.image.len()
+    }
+
+    /// Uncompressed columnar size (header + raw column blocks) — the
+    /// denominator of the compression ratio the ablation reports.
+    pub fn raw_bytes(&self) -> usize {
+        28 + self.cols.iter().map(|c| c.raw_len as usize).sum::<usize>()
+    }
+
+    /// Per-column codec choices, in [`Segment::encode_columns`] order.
+    pub fn codecs(&self) -> [BlockCodec; 5] {
+        [
+            self.cols[0].codec,
+            self.cols[1].codec,
+            self.cols[2].codec,
+            self.cols[3].codec,
+            self.cols[4].codec,
+        ]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -524,6 +869,128 @@ mod tests {
             assert_eq!(get_varint(&buf, &mut i).unwrap(), v);
             assert_eq!(i, buf.len());
         }
+    }
+
+    #[test]
+    fn overlaps_pins_half_open_boundaries_exactly() {
+        // Segment spans [1_000, 3_500] (rows(12): last ts = 1000+5*500).
+        let seg = Segment::build(&rows(12));
+        let (lo, hi) = (seg.min_ts, seg.max_ts);
+        // Window end exactly on min_ts: the earliest row is excluded by
+        // end-exclusivity, so the segment must NOT overlap.
+        assert!(!seg.overlaps(lo - 100, lo));
+        // One past: the earliest row is in.
+        assert!(seg.overlaps(lo - 100, lo + 1));
+        // Window start exactly on max_ts: the latest row is included by
+        // start-inclusivity, so the segment MUST overlap.
+        assert!(seg.overlaps(hi, hi + 100));
+        // One past max_ts: nothing can match.
+        assert!(!seg.overlaps(hi + 1, hi + 100));
+        // Degenerate empty window never overlaps.
+        assert!(!seg.overlaps(lo, lo));
+        // Sealed (cold) segments answer identically from metadata alone.
+        let sealed = SealedSegment::from_image(
+            SealedSegment::from_segment(Segment::build(&rows(12)), CodecPolicy::Probe)
+                .image()
+                .to_vec(),
+        )
+        .unwrap();
+        for (s, e) in [
+            (lo - 100, lo),
+            (lo - 100, lo + 1),
+            (hi, hi + 100),
+            (hi + 1, hi + 100),
+            (lo, lo),
+        ] {
+            assert_eq!(sealed.overlaps(s, e), seg.overlaps(s, e), "window [{s},{e})");
+        }
+        assert!(!sealed.is_hot(), "boundary answers must not decode the image");
+    }
+
+    #[test]
+    fn sealed_roundtrip_is_lazy_and_exact() {
+        for policy in [
+            CodecPolicy::Raw,
+            CodecPolicy::Lz,
+            CodecPolicy::Rle,
+            CodecPolicy::Probe,
+        ] {
+            let src = rows(64);
+            let seg = Segment::build(&src);
+            let sealed = SealedSegment::from_segment(Segment::build(&src), policy);
+            assert!(sealed.is_hot(), "seal-time segments keep their hot form");
+            assert_eq!(sealed.len(), 64);
+            assert_eq!(sealed.min_ts(), seg.min_ts);
+            assert_eq!(sealed.max_ts(), seg.max_ts);
+            assert_eq!(sealed.first_seq(), seg.seq[0]);
+            assert_eq!(sealed.last_seq(), *seg.seq.last().unwrap());
+            assert_eq!(sealed.bitmap(), seg.bitmap());
+
+            // Cold reload: metadata identical, rows decoded only on demand.
+            let cold = SealedSegment::from_image(sealed.image().to_vec()).unwrap();
+            assert!(!cold.is_hot());
+            assert_eq!(cold.len(), sealed.len());
+            assert_eq!(cold.bitmap(), sealed.bitmap());
+            assert_eq!(cold.image_bytes(), sealed.image_bytes());
+            let hot = cold.hot();
+            assert!(cold.is_hot());
+            for (pos, r) in src.iter().enumerate() {
+                let m = hot.materialize(pos as u32);
+                assert_eq!(m.seq_no, r.seq_no, "{policy:?}");
+                assert_eq!(m.event_type, r.event_type);
+                assert_eq!(m.timestamp_ms, r.timestamp_ms);
+                assert_eq!(m.payload, r.payload);
+            }
+            // Re-sealing the decoded rows reproduces the image bit-for-bit
+            // (deterministic codecs; persistence round-trips rely on it).
+            let reseal = SealedSegment::from_segment(Segment::build(&src), policy);
+            assert_eq!(reseal.image(), sealed.image());
+        }
+    }
+
+    #[test]
+    fn probe_seal_is_never_larger_than_raw_and_shrinks_this_corpus() {
+        let src = rows(256);
+        let raw = SealedSegment::from_segment(Segment::build(&src), CodecPolicy::Raw);
+        let probe = SealedSegment::from_segment(Segment::build(&src), CodecPolicy::Probe);
+        assert!(probe.image_bytes() <= raw.image_bytes());
+        // Duplicate-heavy rows: the probe must beat raw, not tie it.
+        assert!(
+            probe.image_bytes() < raw.image_bytes(),
+            "probe {} vs raw {}",
+            probe.image_bytes(),
+            raw.image_bytes()
+        );
+        assert!(probe.raw_bytes() >= probe.image_bytes());
+    }
+
+    #[test]
+    fn sealed_image_rejects_every_single_byte_corruption() {
+        let sealed = SealedSegment::from_segment(Segment::build(&rows(24)), CodecPolicy::Probe);
+        let image = sealed.image().to_vec();
+        // Every truncation is rejected.
+        for cut in 0..image.len() {
+            assert!(
+                SealedSegment::from_image(image[..cut].to_vec()).is_err(),
+                "truncation at {cut} accepted"
+            );
+        }
+        // Every single-byte bit flip is rejected (the CRC covers the
+        // whole image, compressed blocks included).
+        for off in 0..image.len() {
+            for mask in [0x01u8, 0x80, 0xFF] {
+                let mut bad = image.clone();
+                bad[off] ^= mask;
+                assert!(
+                    SealedSegment::from_image(bad).is_err(),
+                    "corruption at {off} mask {mask:#x} accepted"
+                );
+            }
+        }
+        // Trailing garbage is rejected.
+        let mut long = image;
+        long.push(0);
+        assert!(SealedSegment::from_image(long).is_err());
     }
 
     #[test]

@@ -16,9 +16,10 @@
 
 use anyhow::{ensure, Result};
 
+use super::blockcodec::CodecPolicy;
 use super::compact;
 use super::event::{BehaviorEvent, EventTypeId, TimestampMs};
-use super::segment::Segment;
+use super::segment::{SealedSegment, Segment};
 
 /// Store configuration.
 #[derive(Debug, Clone)]
@@ -30,6 +31,10 @@ pub struct StoreConfig {
     /// `usize::MAX` keeps every row in the flat tail (the pre-segmented
     /// layout; used as the differential-test oracle).
     pub segment_rows: usize,
+    /// Per-column block-codec policy applied when sealing segments
+    /// (see [`super::blockcodec`]). `Probe` picks the smallest codec per
+    /// column; the fixed variants are the ablation arms.
+    pub block_codec: CodecPolicy,
 }
 
 impl Default for StoreConfig {
@@ -38,6 +43,7 @@ impl Default for StoreConfig {
             // One week: covers the longest feature window the paper mentions.
             retention_ms: 7 * 24 * 3600 * 1000,
             segment_rows: 256,
+            block_codec: CodecPolicy::default(),
         }
     }
 }
@@ -83,8 +89,10 @@ impl RowRef<'_> {
 #[derive(Debug)]
 pub struct AppLogStore {
     cfg: StoreConfig,
-    /// Sealed columnar segments, chronological.
-    segments: Vec<Segment>,
+    /// Sealed columnar segments, chronological. Each is either hot
+    /// (decoded) or compressed-cold; zone maps answer from metadata
+    /// either way.
+    segments: Vec<SealedSegment>,
     /// Global row index at which each segment starts (prefix sums).
     seg_starts: Vec<usize>,
     /// Total rows held in `segments`.
@@ -170,7 +178,8 @@ impl AppLogStore {
         for seg in compact::seal(&self.tail) {
             self.seg_starts.push(self.seg_rows);
             self.seg_rows += seg.len();
-            self.segments.push(seg);
+            self.segments
+                .push(SealedSegment::from_segment(seg, self.cfg.block_codec));
         }
         self.tail.clear();
         self.tail_ts.clear();
@@ -210,7 +219,7 @@ impl AppLogStore {
     pub fn row_at(&self, idx: usize) -> RowRef<'_> {
         if idx < self.seg_rows {
             let si = self.seg_starts.partition_point(|&s| s <= idx) - 1;
-            let seg = &self.segments[si];
+            let seg = self.segments[si].hot();
             let pos = (idx - self.seg_starts[si]) as u32;
             RowRef {
                 seq_no: seg.seq[pos as usize],
@@ -245,19 +254,21 @@ impl AppLogStore {
     pub fn rows_before(&self, ts: TimestampMs) -> usize {
         let mut n = 0usize;
         for seg in &self.segments {
-            if seg.max_ts < ts {
+            if seg.max_ts() < ts {
                 n += seg.len();
-            } else if seg.min_ts >= ts {
+            } else if seg.min_ts() >= ts {
                 return n;
             } else {
-                return n + seg.ts.partition_point(|&t| t < ts);
+                // Zone map straddles the cut: this one segment must
+                // decode to locate the partition point.
+                return n + seg.hot().ts.partition_point(|&t| t < ts);
             }
         }
         n + self.tail.partition_point(|r| r.timestamp_ms < ts)
     }
 
     /// Sealed segments (query path).
-    pub(crate) fn segments(&self) -> &[Segment] {
+    pub(crate) fn segments(&self) -> &[SealedSegment] {
         &self.segments
     }
 
@@ -301,9 +312,25 @@ impl AppLogStore {
     pub fn storage_bytes(&self) -> usize {
         self.segments
             .iter()
-            .map(|s| s.encoded_bytes())
+            .map(|s| s.image_bytes())
             .sum::<usize>()
             + self.tail.iter().map(|r| r.storage_bytes()).sum::<usize>()
+    }
+
+    /// Bytes held by segments still in the compressed-cold tier (their
+    /// images are resident but no query has decoded them). This is the
+    /// quantity the `CacheArbiter` accounts as a third ledger tier.
+    pub fn cold_bytes(&self) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| !s.is_hot())
+            .map(|s| s.image_bytes())
+            .sum()
+    }
+
+    /// Segments whose hot form has been decoded (left the cold tier).
+    pub fn hot_segments(&self) -> usize {
+        self.segments.iter().filter(|s| s.is_hot()).count()
     }
 
     /// Drop rows older than the retention horizon relative to `now`.
@@ -313,20 +340,25 @@ impl AppLogStore {
     pub fn prune(&mut self, now: TimestampMs) -> usize {
         let cutoff = now - self.cfg.retention_ms;
         let mut dropped = 0usize;
-        let mut keep: Vec<Segment> = Vec::with_capacity(self.segments.len());
-        for seg in self.segments.drain(..) {
-            if seg.max_ts < cutoff {
-                dropped += seg.len();
-            } else if seg.min_ts >= cutoff {
-                keep.push(seg);
+        let mut keep: Vec<SealedSegment> = Vec::with_capacity(self.segments.len());
+        let block_codec = self.cfg.block_codec;
+        for sealed in self.segments.drain(..) {
+            if sealed.max_ts() < cutoff {
+                dropped += sealed.len();
+            } else if sealed.min_ts() >= cutoff {
+                keep.push(sealed);
             } else {
+                let seg = sealed.hot();
                 let first_kept = seg.ts.partition_point(|&t| t < cutoff);
                 dropped += first_kept;
                 let survivors: Vec<BehaviorEvent> = (first_kept..seg.len())
                     .map(|p| seg.materialize(p as u32))
                     .collect();
                 if !survivors.is_empty() {
-                    keep.push(Segment::build(&survivors));
+                    keep.push(SealedSegment::from_segment(
+                        Segment::build(&survivors),
+                        block_codec,
+                    ));
                 }
             }
         }
@@ -364,13 +396,13 @@ impl AppLogStore {
         self.tail
             .last()
             .map(|r| r.timestamp_ms)
-            .or_else(|| self.segments.last().map(|s| s.max_ts))
+            .or_else(|| self.segments.last().map(|s| s.max_ts()))
     }
 
-    /// Restore a store from pre-validated parts (persistence v2 loader).
+    /// Restore a store from pre-validated parts (persistence loaders).
     pub(crate) fn from_parts(
         cfg: StoreConfig,
-        segments: Vec<Segment>,
+        segments: Vec<SealedSegment>,
         tail: Vec<BehaviorEvent>,
         next_seq: u64,
         total_appended: u64,
@@ -507,6 +539,7 @@ mod tests {
             let mut s = AppLogStore::new(StoreConfig {
                 retention_ms: 5000,
                 segment_rows: seg_rows,
+                ..StoreConfig::default()
             });
             for i in 0..10 {
                 s.append(0, i * 1000, vec![]).unwrap();
@@ -563,6 +596,7 @@ mod tests {
                 StoreConfig {
                     retention_ms: 5000,
                     segment_rows: seg_rows,
+                    ..StoreConfig::default()
                 },
             );
             check(&s);
@@ -574,6 +608,27 @@ mod tests {
             check(&s);
             assert!(s.tail().is_empty() == s.tail_ts().is_empty());
         }
+    }
+
+    #[test]
+    fn freshly_sealed_segments_stay_hot_and_account_compressed_bytes() {
+        let s = store_with_cfg(
+            64,
+            StoreConfig {
+                segment_rows: 16,
+                ..StoreConfig::default()
+            },
+        );
+        assert_eq!(s.num_segments(), 4);
+        // Seal-time segments keep their hot form: nothing is cold.
+        assert_eq!(s.hot_segments(), 4);
+        assert_eq!(s.cold_bytes(), 0);
+        // Accounting is the compressed image, which on this duplicate-
+        // heavy corpus beats the raw columnar encoding.
+        let raw: usize = s.segments().iter().map(|seg| seg.raw_bytes()).sum();
+        let img: usize = s.segments().iter().map(|seg| seg.image_bytes()).sum();
+        assert!(img < raw, "compressed {img} vs raw {raw}");
+        assert_eq!(s.storage_bytes(), img);
     }
 
     #[test]

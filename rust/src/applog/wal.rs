@@ -1,0 +1,502 @@
+//! Append-ahead WAL for the mutable tail + snapshot/replay recovery.
+//!
+//! The segmented store's sealed segments are immutable and persist as
+//! CRC-guarded images, but tail rows live only in memory between
+//! snapshots — before this module, an app killed mid-burst silently
+//! replayed the paper's worst case (cold extraction over the full
+//! window) after restart. The fix is the classic SQLite-style pairing:
+//! every append is framed into a WAL **before** it mutates the store,
+//! and recovery is *load last snapshot + replay the WAL suffix past the
+//! snapshot's watermark, truncating at the first torn frame*.
+//!
+//! Frame format (little-endian, one frame per append):
+//!
+//! ```text
+//! len u32 | crc32 u32 (IEEE, over payload) | payload
+//! payload = seq varint | event_type varint | ts zigzag-varint | payload_len varint | bytes
+//! ```
+//!
+//! Torn-write semantics: a crash can truncate the file at any byte.
+//! [`replay`] walks frames and stops at the first one that is
+//! incomplete, fails its CRC, or mis-parses — everything before it is
+//! the committed prefix, everything from it on is discarded. The
+//! torn-truncation sweep in `rust/tests/crash_recovery.rs` pins this at
+//! **every** byte offset of the final frame.
+
+use anyhow::{bail, ensure, Result};
+
+use super::event::{EventTypeId, TimestampMs};
+use super::persist;
+use super::store::{AppLogStore, StoreConfig};
+use crate::util::wire::{
+    crc32, get_bytes, get_varint, get_varint_i64, put_bytes, put_varint, put_varint_i64,
+};
+
+/// Frame header: len u32 + crc u32.
+const FRAME_HEADER: usize = 8;
+
+/// An in-memory append-ahead log. The buffer *is* the durable
+/// representation — callers persist [`Wal::bytes`] however they like
+/// (the simulation keeps it in memory; a device would `fsync` it).
+#[derive(Debug, Default, Clone)]
+pub struct Wal {
+    buf: Vec<u8>,
+}
+
+impl Wal {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Frame one append. Returns the byte offset the WAL had *before*
+    /// this frame — the mark to truncate back to if the paired store
+    /// append is rejected.
+    pub fn append(
+        &mut self,
+        seq: u64,
+        event_type: EventTypeId,
+        ts: TimestampMs,
+        payload: &[u8],
+    ) -> usize {
+        let mark = self.buf.len();
+        let mut body = Vec::with_capacity(payload.len() + 16);
+        put_varint(&mut body, seq);
+        put_varint(&mut body, event_type as u64);
+        put_varint_i64(&mut body, ts);
+        put_bytes(&mut body, payload);
+        self.buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(&crc32(&body).to_le_bytes());
+        self.buf.extend_from_slice(&body);
+        mark
+    }
+
+    /// The framed bytes (what a device would have on disk).
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Current byte length — the watermark a snapshot records.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Drop all frames (after a checkpoint snapshot absorbed them).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Roll back to a mark returned by [`Wal::append`].
+    pub fn truncate_to(&mut self, mark: usize) {
+        self.buf.truncate(mark);
+    }
+}
+
+/// One replayed WAL row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WalRow {
+    pub seq: u64,
+    pub event_type: EventTypeId,
+    pub ts: TimestampMs,
+    pub payload: Vec<u8>,
+}
+
+/// Outcome of scanning a (possibly torn) WAL byte stream.
+#[derive(Debug)]
+pub struct WalReplay {
+    /// Rows from every intact frame, in append order.
+    pub rows: Vec<WalRow>,
+    /// Byte length of the valid prefix (frames before the tear).
+    pub valid_len: usize,
+    /// Whether trailing bytes were discarded as torn/corrupt.
+    pub torn: bool,
+}
+
+/// Scan `data` frame by frame, stopping at the first torn frame: an
+/// incomplete header, a length past end-of-buffer, a CRC mismatch, or a
+/// payload that mis-parses. Never errors — a torn tail is the expected
+/// crash artifact, and the committed prefix is always recovered.
+pub fn replay(data: &[u8]) -> WalReplay {
+    let mut rows = Vec::new();
+    let mut pos = 0usize;
+    // Every early break leaves `pos` short of `data.len()`, so the
+    // single exit below classifies clean-end vs torn correctly.
+    while data.len() - pos >= FRAME_HEADER {
+        let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()) as usize;
+        let stored_crc = u32::from_le_bytes(data[pos + 4..pos + 8].try_into().unwrap());
+        let body_start = pos + FRAME_HEADER;
+        if len > data.len() - body_start {
+            break;
+        }
+        let body = &data[body_start..body_start + len];
+        if crc32(body) != stored_crc {
+            break;
+        }
+        match parse_frame(body) {
+            Some(row) => rows.push(row),
+            None => break,
+        }
+        pos = body_start + len;
+    }
+    WalReplay {
+        rows,
+        valid_len: pos,
+        torn: pos != data.len(),
+    }
+}
+
+fn parse_frame(body: &[u8]) -> Option<WalRow> {
+    let mut p = 0usize;
+    let seq = get_varint(body, &mut p).ok()?;
+    let event_type = get_varint(body, &mut p).ok()?;
+    if event_type > u16::MAX as u64 {
+        return None;
+    }
+    let ts = get_varint_i64(body, &mut p).ok()?;
+    let payload = get_bytes(body, &mut p).ok()?.to_vec();
+    if p != body.len() {
+        return None; // trailing bytes inside a CRC-clean frame: writer bug
+    }
+    Some(WalRow {
+        seq,
+        event_type: event_type as EventTypeId,
+        ts,
+        payload,
+    })
+}
+
+/// What [`DurableAppLog::recover`] found.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Frames replayed into the store (past the snapshot watermark).
+    pub frames_replayed: usize,
+    /// Whether the WAL ended in a torn frame that was truncated away.
+    pub torn_frame: bool,
+    /// Byte length of the WAL's valid prefix after recovery.
+    pub wal_valid_bytes: usize,
+}
+
+/// An [`AppLogStore`] paired with its WAL: appends frame into the WAL
+/// first, snapshots record the watermark, and [`DurableAppLog::recover`]
+/// rebuilds the exact committed state from the two artifacts.
+#[derive(Debug)]
+pub struct DurableAppLog {
+    store: AppLogStore,
+    wal: Wal,
+}
+
+impl DurableAppLog {
+    pub fn new(cfg: StoreConfig) -> Self {
+        Self {
+            store: AppLogStore::new(cfg),
+            wal: Wal::new(),
+        }
+    }
+
+    /// Append-ahead: the WAL frame is written before the store mutates,
+    /// so a crash between the two replays the row (never loses it). If
+    /// the store rejects the append (out-of-order timestamp), the frame
+    /// is rolled back — the WAL never records a row the store refused.
+    pub fn append(
+        &mut self,
+        event_type: EventTypeId,
+        timestamp_ms: TimestampMs,
+        payload: Vec<u8>,
+    ) -> Result<u64> {
+        let seq = self.store.next_seq();
+        let mark = self.wal.append(seq, event_type, timestamp_ms, &payload);
+        match self.store.append(event_type, timestamp_ms, payload) {
+            Ok(assigned) => {
+                debug_assert_eq!(assigned, seq);
+                Ok(assigned)
+            }
+            Err(e) => {
+                self.wal.truncate_to(mark);
+                Err(e)
+            }
+        }
+    }
+
+    pub fn store(&self) -> &AppLogStore {
+        &self.store
+    }
+
+    pub fn store_mut(&mut self) -> &mut AppLogStore {
+        &mut self.store
+    }
+
+    pub fn wal(&self) -> &Wal {
+        &self.wal
+    }
+
+    /// Snapshot the store, recording the current WAL watermark. The WAL
+    /// keeps growing afterwards; recovery replays only the suffix.
+    pub fn snapshot(&self) -> Result<Vec<u8>> {
+        persist::to_bytes_v4(&self.store, None, self.wal.len() as u64)
+    }
+
+    /// [`DurableAppLog::snapshot`] with an engine session-state block.
+    pub fn snapshot_with_session(&self, session_state: &[u8]) -> Result<Vec<u8>> {
+        persist::to_bytes_v4(&self.store, Some(session_state), self.wal.len() as u64)
+    }
+
+    /// Checkpoint: snapshot with a zero watermark and drop the WAL —
+    /// every frame is now absorbed into the image.
+    pub fn checkpoint(&mut self) -> Result<Vec<u8>> {
+        let img = persist::to_bytes_v4(&self.store, None, 0)?;
+        self.wal.clear();
+        Ok(img)
+    }
+
+    /// Crash recovery: load the last snapshot (if any), then replay the
+    /// WAL suffix past its watermark, truncating at the first torn
+    /// frame. Replayed frames must continue the snapshot's seq space
+    /// exactly — a gap or overlap means the artifacts are mismatched
+    /// (a WAL from a different run) and recovery refuses rather than
+    /// fabricating a log.
+    pub fn recover(
+        snapshot: Option<&[u8]>,
+        wal_bytes: &[u8],
+        cfg: StoreConfig,
+    ) -> Result<(Self, RecoveryReport)> {
+        let (mut store, watermark) = match snapshot {
+            Some(img) => {
+                let loaded = persist::from_bytes_full(img, cfg)?;
+                (loaded.store, loaded.wal_watermark as usize)
+            }
+            None => (AppLogStore::new(cfg), 0),
+        };
+        ensure!(
+            watermark <= wal_bytes.len(),
+            "snapshot watermark {watermark} past WAL end {}",
+            wal_bytes.len()
+        );
+        let suffix = replay(&wal_bytes[watermark..]);
+        let mut frames_replayed = 0usize;
+        for row in suffix.rows {
+            let expect = store.next_seq();
+            if row.seq != expect {
+                bail!(
+                    "WAL frame seq {} does not continue snapshot (expected {expect})",
+                    row.seq
+                );
+            }
+            store.append(row.event_type, row.ts, row.payload)?;
+            frames_replayed += 1;
+        }
+        // The rebuilt WAL holds exactly the valid bytes, so a snapshot
+        // taken now records a watermark consistent with them.
+        let wal = Wal {
+            buf: wal_bytes[..watermark + suffix.valid_len].to_vec(),
+        };
+        Ok((
+            Self { store, wal },
+            RecoveryReport {
+                frames_replayed,
+                torn_frame: suffix.torn,
+                wal_valid_bytes: watermark + suffix.valid_len,
+            },
+        ))
+    }
+}
+
+/// ISSUE-8 naming: `AppLogStore::recover` = load last snapshot + replay
+/// WAL. Delegates to [`DurableAppLog::recover`].
+impl AppLogStore {
+    pub fn recover(
+        snapshot: Option<&[u8]>,
+        wal_bytes: &[u8],
+        cfg: StoreConfig,
+    ) -> Result<(DurableAppLog, RecoveryReport)> {
+        DurableAppLog::recover(snapshot, wal_bytes, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SimRng;
+
+    fn sample_log(n: usize, segment_rows: usize) -> DurableAppLog {
+        let mut log = DurableAppLog::new(StoreConfig {
+            segment_rows,
+            ..StoreConfig::default()
+        });
+        let mut rng = SimRng::seed_from_u64(8);
+        for i in 0..n as i64 {
+            let t = (i % 5) as u16;
+            let len = rng.range_u(0, 40);
+            let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            log.append(t, i * 321, payload).unwrap();
+        }
+        log
+    }
+
+    fn assert_same_rows(a: &AppLogStore, b: &AppLogStore) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.seq_no, y.seq_no);
+            assert_eq!(x.event_type, y.event_type);
+            assert_eq!(x.timestamp_ms, y.timestamp_ms);
+            assert_eq!(x.payload, y.payload);
+        }
+    }
+
+    #[test]
+    fn replay_roundtrips_intact_wal() {
+        let log = sample_log(50, usize::MAX);
+        let out = replay(log.wal().bytes());
+        assert!(!out.torn);
+        assert_eq!(out.valid_len, log.wal().len());
+        assert_eq!(out.rows.len(), 50);
+        for (row, r) in out.rows.iter().zip(log.store().iter()) {
+            assert_eq!(row.seq, r.seq_no);
+            assert_eq!(row.event_type, r.event_type);
+            assert_eq!(row.ts, r.timestamp_ms);
+            assert_eq!(row.payload, r.payload);
+        }
+    }
+
+    #[test]
+    fn recover_without_snapshot_rebuilds_from_wal_alone() {
+        let log = sample_log(64, 16);
+        let (rec, report) =
+            DurableAppLog::recover(None, log.wal().bytes(), StoreConfig::default()).unwrap();
+        assert_eq!(report.frames_replayed, 64);
+        assert!(!report.torn_frame);
+        assert_same_rows(log.store(), rec.store());
+    }
+
+    #[test]
+    fn recover_with_snapshot_replays_only_the_suffix() {
+        let mut log = sample_log(40, 8);
+        let snap = log.snapshot().unwrap();
+        for i in 40..55i64 {
+            log.append((i % 5) as u16, i * 321, vec![i as u8]).unwrap();
+        }
+        let (rec, report) =
+            DurableAppLog::recover(Some(&snap), log.wal().bytes(), StoreConfig::default())
+                .unwrap();
+        assert_eq!(report.frames_replayed, 15);
+        assert!(!report.torn_frame);
+        assert_eq!(report.wal_valid_bytes, log.wal().len());
+        assert_same_rows(log.store(), rec.store());
+        // Recovery is idempotent: snapshot the recovered log and recover
+        // again.
+        let snap2 = rec.snapshot().unwrap();
+        let (rec2, rep2) =
+            DurableAppLog::recover(Some(&snap2), rec.wal().bytes(), StoreConfig::default())
+                .unwrap();
+        assert_eq!(rep2.frames_replayed, 0);
+        assert_same_rows(rec.store(), rec2.store());
+    }
+
+    #[test]
+    fn truncation_at_every_byte_of_last_frame_yields_exact_prefix() {
+        let log = sample_log(20, usize::MAX);
+        let wal = log.wal().bytes();
+        // Find the last frame's start offset by walking the frames.
+        let mut frame_starts = Vec::new();
+        let mut pos = 0usize;
+        while pos < wal.len() {
+            frame_starts.push(pos);
+            let len =
+                u32::from_le_bytes(wal[pos..pos + 4].try_into().unwrap()) as usize;
+            pos += FRAME_HEADER + len;
+        }
+        let last = *frame_starts.last().unwrap();
+        for cut in last..wal.len() {
+            let (rec, report) =
+                DurableAppLog::recover(None, &wal[..cut], StoreConfig::default()).unwrap();
+            assert_eq!(rec.store().len(), 19, "cut at {cut}");
+            assert_eq!(report.torn_frame, cut != last, "cut at {cut}");
+            assert_eq!(report.wal_valid_bytes, last, "cut at {cut}");
+            // The committed prefix is exact: rows 0..19 intact.
+            for (i, r) in rec.store().iter().enumerate() {
+                assert_eq!(r.seq_no, i as u64);
+            }
+        }
+        // The intact WAL recovers all 20.
+        let (rec, _) = DurableAppLog::recover(None, wal, StoreConfig::default()).unwrap();
+        assert_eq!(rec.store().len(), 20);
+    }
+
+    #[test]
+    fn corrupt_frame_interior_truncates_there() {
+        let log = sample_log(10, usize::MAX);
+        let mut wal = log.wal().bytes().to_vec();
+        let mid = wal.len() / 2;
+        wal[mid] ^= 0x40;
+        let out = replay(&wal);
+        assert!(out.torn);
+        assert!(out.rows.len() < 10);
+        // Every surviving row is a committed prefix row, in order.
+        for (i, row) in out.rows.iter().enumerate() {
+            assert_eq!(row.seq, i as u64);
+        }
+    }
+
+    #[test]
+    fn mismatched_wal_is_refused_not_spliced() {
+        let log_a = sample_log(30, 8);
+        let snap = log_a.snapshot().unwrap();
+        // A WAL from a different run: seqs restart at 0.
+        let log_b = sample_log(5, usize::MAX);
+        let err = DurableAppLog::recover(Some(&snap), log_b.wal().bytes(), StoreConfig::default());
+        assert!(err.is_err());
+        // Watermark past WAL end is also refused.
+        let err2 = DurableAppLog::recover(Some(&snap), &[], StoreConfig::default());
+        assert!(err2.is_err());
+    }
+
+    #[test]
+    fn rejected_append_rolls_the_wal_back() {
+        let mut log = DurableAppLog::new(StoreConfig::default());
+        log.append(0, 100, vec![1]).unwrap();
+        let before = log.wal().len();
+        // Out-of-order timestamp: store refuses, WAL must not record it.
+        assert!(log.append(0, 50, vec![2]).is_err());
+        assert_eq!(log.wal().len(), before);
+        let out = replay(log.wal().bytes());
+        assert_eq!(out.rows.len(), 1);
+        assert!(!out.torn);
+    }
+
+    #[test]
+    fn checkpoint_clears_wal_and_recovers_clean() {
+        let mut log = sample_log(25, 8);
+        let img = log.checkpoint().unwrap();
+        assert!(log.wal().is_empty());
+        for i in 25..30i64 {
+            log.append(0, i * 321, vec![]).unwrap();
+        }
+        let (rec, report) =
+            DurableAppLog::recover(Some(&img), log.wal().bytes(), StoreConfig::default()).unwrap();
+        assert_eq!(report.frames_replayed, 5);
+        assert_same_rows(log.store(), rec.store());
+    }
+
+    #[test]
+    fn store_recover_alias_matches_durable_recover() {
+        let log = sample_log(12, 4);
+        let snap = log.snapshot().unwrap();
+        let (a, ra) =
+            AppLogStore::recover(Some(&snap), log.wal().bytes(), StoreConfig::default()).unwrap();
+        let (b, rb) =
+            DurableAppLog::recover(Some(&snap), log.wal().bytes(), StoreConfig::default())
+                .unwrap();
+        assert_eq!(ra, rb);
+        assert_same_rows(a.store(), b.store());
+    }
+
+    #[test]
+    fn empty_artifacts_recover_to_empty_log() {
+        let (rec, report) = DurableAppLog::recover(None, &[], StoreConfig::default()).unwrap();
+        assert!(rec.store().is_empty());
+        assert_eq!(report.frames_replayed, 0);
+        assert!(!report.torn_frame);
+    }
+}

@@ -3,12 +3,17 @@
 //! One host process serving many user sessions (the thread-per-shard
 //! [`crate::coordinator::pool::SessionPool`] and the event-driven
 //! [`crate::coordinator::sched::FleetScheduler`]) must keep the *sum* of
-//! all per-session memory under control. The ledger spans two tiers:
+//! all per-session memory under control. The ledger spans three tiers:
 //!
 //! * **Live tier** — sessions with materialized state (cache lanes,
 //!   incremental banks, applog). Their cache budgets are *grants* from a
 //!   global cap, and their reported resident bytes are summed O(1) per
 //!   report.
+//! * **Compressed-cold tier** — live sessions' sealed applog segments
+//!   that are resident but still compressed (see
+//!   [`crate::applog::segment::SealedSegment`]): loaded from a snapshot
+//!   and not yet admitted by any zone map. Cheaper than live bytes,
+//!   dearer than hibernated — a query can heat them without I/O.
 //! * **Hibernated tier** — sessions serialized down to one blob (see
 //!   [`crate::engine::state`]); only the blob length is accounted.
 //!
@@ -79,13 +84,19 @@ pub struct CacheArbiter {
     total: AtomicUsize,
     /// Peak of `total` ever observed.
     peak_total: AtomicUsize,
+    /// Compressed-cold sealed-segment bytes per live slot.
+    cold: Vec<AtomicUsize>,
+    /// Running sum of `cold`.
+    cold_total: AtomicUsize,
+    /// Peak of `cold_total`.
+    peak_cold: AtomicUsize,
     /// Hibernation-blob bytes per slot.
     hib: Vec<AtomicUsize>,
     /// Running sum of `hib`.
     hib_total: AtomicUsize,
     /// Peak of `hib_total`.
     peak_hib: AtomicUsize,
-    /// Peak of `total + hib_total` (the whole ledger).
+    /// Peak of `total + cold_total + hib_total` (the whole ledger).
     peak_ledger: AtomicUsize,
 }
 
@@ -105,6 +116,9 @@ impl CacheArbiter {
             usage: (0..num_sessions).map(|_| AtomicUsize::new(0)).collect(),
             total: AtomicUsize::new(0),
             peak_total: AtomicUsize::new(0),
+            cold: (0..num_sessions).map(|_| AtomicUsize::new(0)).collect(),
+            cold_total: AtomicUsize::new(0),
+            peak_cold: AtomicUsize::new(0),
             hib: (0..num_sessions).map(|_| AtomicUsize::new(0)).collect(),
             hib_total: AtomicUsize::new(0),
             peak_hib: AtomicUsize::new(0),
@@ -188,8 +202,34 @@ impl CacheArbiter {
             self.total.fetch_sub(d, Ordering::AcqRel) - d
         };
         self.peak_total.fetch_max(total, Ordering::AcqRel);
-        self.peak_ledger
-            .fetch_max(total + self.hib_total.load(Ordering::Acquire), Ordering::AcqRel);
+        self.peak_ledger.fetch_max(
+            total
+                + self.cold_total.load(Ordering::Acquire)
+                + self.hib_total.load(Ordering::Acquire),
+            Ordering::AcqRel,
+        );
+    }
+
+    /// Record one live session's compressed-cold sealed-segment bytes
+    /// (its store's [`crate::applog::store::AppLogStore::cold_bytes`]).
+    /// O(1) delta, same discipline as [`Self::report_usage`]. Shrinks as
+    /// zone maps admit segments and queries heat them.
+    pub fn report_cold(&self, slot: usize, bytes: usize) {
+        let prev = self.cold[slot].swap(bytes, Ordering::AcqRel);
+        let cold = if bytes >= prev {
+            let d = bytes - prev;
+            self.cold_total.fetch_add(d, Ordering::AcqRel) + d
+        } else {
+            let d = prev - bytes;
+            self.cold_total.fetch_sub(d, Ordering::AcqRel) - d
+        };
+        self.peak_cold.fetch_max(cold, Ordering::AcqRel);
+        self.peak_ledger.fetch_max(
+            cold
+                + self.total.load(Ordering::Acquire)
+                + self.hib_total.load(Ordering::Acquire),
+            Ordering::AcqRel,
+        );
     }
 
     /// Move a live session into the hibernated tier: its grant returns
@@ -206,6 +246,10 @@ impl CacheArbiter {
         }
         let prev = self.usage[slot].swap(0, Ordering::AcqRel);
         let total = self.total.fetch_sub(prev, Ordering::AcqRel) - prev;
+        // The store's compressed segments serialize into the blob: their
+        // bytes move tiers rather than double-count.
+        let prev_cold = self.cold[slot].swap(0, Ordering::AcqRel);
+        let cold = self.cold_total.fetch_sub(prev_cold, Ordering::AcqRel) - prev_cold;
         let prev_hib = self.hib[slot].swap(blob_bytes, Ordering::AcqRel);
         let hib = if blob_bytes >= prev_hib {
             let d = blob_bytes - prev_hib;
@@ -215,7 +259,7 @@ impl CacheArbiter {
             self.hib_total.fetch_sub(d, Ordering::AcqRel) - d
         };
         self.peak_hib.fetch_max(hib, Ordering::AcqRel);
-        self.peak_ledger.fetch_max(total + hib, Ordering::AcqRel);
+        self.peak_ledger.fetch_max(total + cold + hib, Ordering::AcqRel);
     }
 
     /// Mark a session finished from any tier: every grant and byte it
@@ -232,6 +276,8 @@ impl CacheArbiter {
         }
         let prev = self.usage[slot].swap(0, Ordering::AcqRel);
         self.total.fetch_sub(prev, Ordering::AcqRel);
+        let prev_cold = self.cold[slot].swap(0, Ordering::AcqRel);
+        self.cold_total.fetch_sub(prev_cold, Ordering::AcqRel);
         let prev_hib = self.hib[slot].swap(0, Ordering::AcqRel);
         self.hib_total.fetch_sub(prev_hib, Ordering::AcqRel);
     }
@@ -246,6 +292,16 @@ impl CacheArbiter {
         self.peak_total.load(Ordering::Acquire)
     }
 
+    /// Current summed compressed-cold sealed-segment bytes.
+    pub fn cold_bytes(&self) -> usize {
+        self.cold_total.load(Ordering::Acquire)
+    }
+
+    /// Peak summed compressed-cold bytes observed over the run.
+    pub fn peak_cold_bytes(&self) -> usize {
+        self.peak_cold.load(Ordering::Acquire)
+    }
+
     /// Current summed hibernation-blob bytes.
     pub fn hibernated_bytes(&self) -> usize {
         self.hib_total.load(Ordering::Acquire)
@@ -256,9 +312,10 @@ impl CacheArbiter {
         self.peak_hib.load(Ordering::Acquire)
     }
 
-    /// Current whole-ledger footprint (live + hibernated).
+    /// Current whole-ledger footprint (live + compressed-cold +
+    /// hibernated).
     pub fn ledger_bytes(&self) -> usize {
-        self.total_bytes() + self.hibernated_bytes()
+        self.total_bytes() + self.cold_bytes() + self.hibernated_bytes()
     }
 
     /// Peak whole-ledger footprint observed over the run.
@@ -426,6 +483,33 @@ mod tests {
         assert!(a.peak_ledger_bytes() >= 16_000);
         a.complete(0);
         a.complete(1);
+        assert_eq!(a.ledger_bytes(), 0);
+    }
+
+    #[test]
+    fn compressed_cold_is_a_third_accounted_tier() {
+        let a = CacheArbiter::new(50_000, 2);
+        a.activate(0);
+        a.activate(1);
+        a.report_usage(0, 8_000);
+        a.report_cold(0, 3_000);
+        a.report_cold(1, 1_000);
+        assert_eq!(a.cold_bytes(), 4_000);
+        assert_eq!(a.ledger_bytes(), 12_000);
+        // Heating segments shrinks the cold tier via the same O(1) delta.
+        a.report_cold(0, 500);
+        assert_eq!(a.cold_bytes(), 1_500);
+        assert_eq!(a.peak_cold_bytes(), 4_000);
+        assert!(a.peak_ledger_bytes() >= 12_000);
+        // Hibernation folds the slot's cold bytes into its blob tier.
+        a.session_budget(0);
+        a.hibernate(0, 2_000);
+        assert_eq!(a.cold_bytes(), 1_000);
+        assert_eq!(a.ledger_bytes(), 1_000 + 2_000);
+        // Completion releases the rest.
+        a.complete(1);
+        assert_eq!(a.cold_bytes(), 0);
+        a.complete(0);
         assert_eq!(a.ledger_bytes(), 0);
     }
 

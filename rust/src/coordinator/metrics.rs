@@ -59,8 +59,7 @@ impl LatencyRecorder {
             .map(|(e, i)| e + i)
             .collect();
         v.sort_unstable();
-        let idx = ((v.len() - 1) as f64 * q).round() as usize;
-        v[idx] as f64 / 1e6
+        crate::util::stats::percentile_u64(&v, q) as f64 / 1e6
     }
 
     /// Share of total time spent in feature extraction (the Fig. 4

@@ -117,9 +117,13 @@ pub struct SchedReport {
     pub global_cache_cap_bytes: usize,
     /// Peak live-tier cache bytes over the run.
     pub peak_live_cache_bytes: usize,
+    /// Peak compressed-cold sealed-segment bytes over the run (resident
+    /// but not yet decoded — the ledger's third tier).
+    pub peak_cold_bytes: usize,
     /// Peak hibernated-image bytes over the run.
     pub peak_hibernated_bytes: usize,
-    /// Peak of live + hibernated bytes (the whole ledger).
+    /// Peak of live + compressed-cold + hibernated bytes (the whole
+    /// ledger).
     pub peak_ledger_bytes: usize,
     /// Hibernation events over the run.
     pub hibernations: usize,
@@ -316,13 +320,7 @@ impl FleetScheduler {
             });
         }
         rehydrate_ns.sort_unstable();
-        let pct = |q: f64| -> u64 {
-            if rehydrate_ns.is_empty() {
-                0
-            } else {
-                rehydrate_ns[((rehydrate_ns.len() - 1) as f64 * q).round() as usize]
-            }
-        };
+        let pct = |q: f64| crate::util::stats::percentile_u64(&rehydrate_ns, q);
         let fleet_summary = FleetSummary::from_recorders(sessions.iter().map(|s| &s.metrics));
         Ok(SchedReport {
             fleet: fleet_summary,
@@ -330,6 +328,7 @@ impl FleetScheduler {
             workers,
             global_cache_cap_bytes: self.cfg.global_cache_cap_bytes,
             peak_live_cache_bytes: fleet.arbiter.peak_total_bytes(),
+            peak_cold_bytes: fleet.arbiter.peak_cold_bytes(),
             peak_hibernated_bytes: fleet.arbiter.peak_hibernated_bytes(),
             peak_ledger_bytes: fleet.arbiter.peak_ledger_bytes(),
             hibernations,
@@ -351,7 +350,13 @@ fn worker_loop(fleet: &Fleet<'_>, model: Option<&(dyn InferenceBackend + Sync)>,
             std::thread::yield_now();
             continue;
         };
-        if let Err(err) = serve_trigger(fleet, model, me, at, slot) {
+        let served = serve_trigger(fleet, model, me, at, slot).and_then(|()| {
+            if fleet.cfg.live_cap_bytes != usize::MAX {
+                relieve_pressure(fleet)?;
+            }
+            Ok(())
+        });
+        if let Err(err) = served {
             let mut guard = fleet.error.lock().unwrap();
             if guard.is_none() {
                 let user_id = fleet.users[slot].user_id;
@@ -359,9 +364,6 @@ fn worker_loop(fleet: &Fleet<'_>, model: Option<&(dyn InferenceBackend + Sync)>,
             }
             fleet.abort.store(true, Ordering::SeqCst);
             return;
-        }
-        if fleet.cfg.live_cap_bytes != usize::MAX {
-            relieve_pressure(fleet);
         }
     }
 }
@@ -486,6 +488,9 @@ fn serve_trigger(
     let extraction = engine.extract(store, at)?;
     cell.peak_cache_bytes = cell.peak_cache_bytes.max(extraction.cache_bytes);
     fleet.arbiter.report_usage(slot, extraction.cache_bytes);
+    // Sealed segments still compressed after this extraction are the
+    // ledger's third tier: resident but cold.
+    fleet.arbiter.report_cold(slot, store.cold_bytes());
     let inference_ns = match model {
         Some(rt) => {
             let meta = rt.meta();
@@ -515,7 +520,7 @@ fn serve_trigger(
     match next_trigger(sim, at) {
         Some(next) => {
             if next - at >= fleet.cfg.hibernate_after_ms {
-                hibernate_locked(fleet, slot, cell);
+                hibernate_locked(fleet, slot, cell)?;
             } else {
                 fleet.victims.push(next, slot);
             }
@@ -535,36 +540,39 @@ fn serve_trigger(
 /// Hibernate a live session (cell lock already held): pack the app log
 /// and engine state into one image, move the ledger bytes to the
 /// hibernated tier, drop every resident structure.
-fn hibernate_locked(fleet: &Fleet<'_>, slot: usize, cell: &mut Cell) {
+fn hibernate_locked(fleet: &Fleet<'_>, slot: usize, cell: &mut Cell) -> Result<()> {
     let CellState::Live {
         ref store,
         ref engine,
         ..
     } = cell.state
     else {
-        return;
+        return Ok(());
     };
-    let image = persist::to_bytes_with_session(store, &engine.export_state());
+    let image = persist::to_bytes_with_session(store, &engine.export_state())
+        .context("serializing hibernation image")?;
     fleet.arbiter.hibernate(slot, image.len());
     cell.hibernations += 1;
     cell.state = CellState::Hibernated { image };
+    Ok(())
 }
 
 /// Ledger pressure relief: while live cache usage exceeds the live cap,
 /// hibernate the session whose next trigger is farthest away. Runs with
 /// no cell lock held; each popped victim is re-validated under its own
 /// cell lock (the heap is lazily invalidated).
-fn relieve_pressure(fleet: &Fleet<'_>) {
+fn relieve_pressure(fleet: &Fleet<'_>) -> Result<()> {
     while fleet.arbiter.total_bytes() > fleet.cfg.live_cap_bytes {
         let Some((next_at, slot)) = fleet.victims.pop() else {
-            return;
+            return Ok(());
         };
         let mut cell = fleet.cells[slot].lock().unwrap();
         let fresh = cell.next_at == Some(next_at) && matches!(cell.state, CellState::Live { .. });
         if fresh {
-            hibernate_locked(fleet, slot, &mut cell);
+            hibernate_locked(fleet, slot, &mut cell)?;
         }
     }
+    Ok(())
 }
 
 /// The sequential driver's fixed model-input constants, duplicated here

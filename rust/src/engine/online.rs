@@ -471,6 +471,42 @@ mod tests {
     }
 
     #[test]
+    fn legacy_v1_state_blob_still_imports() {
+        use crate::applog::blockcodec::{self, BlockCodec};
+        use crate::util::wire;
+        let (cat, specs, store) = setup();
+        let cfg = EngineConfig::incremental();
+        let mut eng = Engine::new(specs.clone(), &cat, cfg).unwrap();
+        eng.extract(&store, 20 * 60_000).unwrap();
+        eng.extract(&store, 21 * 60_000).unwrap();
+        let v2 = eng.export_state();
+        // Down-convert by hand to the retired v1 layout: same payload,
+        // uncompressed, directly after the blob_len header.
+        let body = &v2[..v2.len() - 4];
+        let hp = &mut 10usize;
+        let codec = BlockCodec::from_tag(wire::get_u8(body, hp).unwrap()).unwrap();
+        let raw_len = wire::get_varint(body, hp).unwrap() as usize;
+        let payload = blockcodec::decompress(codec, &body[*hp..], raw_len).unwrap();
+        // v2 must actually shrink this cache-heavy payload.
+        assert!(v2.len() < payload.len() + 14, "codec probe failed to shrink state");
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(b"AFSS");
+        v1.extend_from_slice(&1u16.to_le_bytes());
+        v1.extend_from_slice(&((payload.len() + 14) as u32).to_le_bytes());
+        v1.extend_from_slice(&payload);
+        let crc = wire::crc32(&v1);
+        v1.extend_from_slice(&crc.to_le_bytes());
+        let mut revived = Engine::new(specs, &cat, cfg).unwrap();
+        revived.import_state(&v1).unwrap();
+        assert_eq!(revived.cache_bytes(), eng.cache_bytes());
+        let now = 22 * 60_000i64;
+        assert_eq!(
+            revived.extract(&store, now).unwrap().values,
+            eng.extract(&store, now).unwrap().values
+        );
+    }
+
+    #[test]
     fn sessions_share_one_compiled_plan() {
         // The plan/state split: one offline compile, many independent
         // per-session engines over the same Arc'd plan, each with its

@@ -16,14 +16,23 @@
 //! raw IEEE bits — see [`crate::util::wire`]):
 //!
 //! ```text
-//! magic "AFSS" | version=1 u16 | blob_len u32 |
+//! magic "AFSS" | version=2 u16 | blob_len u32 |
+//! codec u8 | raw_len varint | compressed payload |
+//! crc32 u32   (IEEE, over everything before it)
+//!
+//! payload (before compression):
 //! plan_fingerprint u64 | feature_count varint | flags u8 |
 //! [ last_now ] [ last_values: ts, value* ] |
 //! lane_count | ( event_type, watermark, row_count,
 //!                ( ts, seq, attr_count, (attr_id, tagged value)* )* )* |
-//! [ inc bank: synced flag [+ ts], ( present u8 [+ state] )* ] |
-//! crc32 u32   (IEEE, over everything before it)
+//! [ inc bank: synced flag [+ ts], ( present u8 [+ state] )* ]
 //! ```
+//!
+//! v2 runs the payload through the same per-block codec probe as sealed
+//! applog segments ([`crate::applog::blockcodec`]) — cached lanes repeat
+//! attr ids and string values heavily, so hibernation images shrink for
+//! free and a fleet holds more hibernated sessions per byte. v1 blobs
+//! (same payload, uncompressed, directly after `blob_len`) still decode.
 //!
 //! The embedded plan fingerprint pins the blob to the exact lowered
 //! [`crate::optimizer::lower::ExecPlan`]: state hibernated under one
@@ -35,6 +44,7 @@
 
 use anyhow::{bail, ensure, Result};
 
+use crate::applog::blockcodec::{self, BlockCodec, CodecPolicy};
 use crate::applog::event::{AttrValue, TimestampMs};
 use crate::cache::entry::{CachedLane, CachedRow};
 use crate::cache::store::CacheStore;
@@ -47,7 +57,8 @@ use super::exec::delta::IncBank;
 use super::offline::CompiledEngine;
 
 const MAGIC: &[u8; 4] = b"AFSS";
-const VERSION: u16 = 1;
+const VERSION_V1: u16 = 1;
+const VERSION_V2: u16 = 2;
 
 const FLAG_LAST_NOW: u8 = 1 << 0;
 const FLAG_LAST_VALUES: u8 = 1 << 1;
@@ -68,10 +79,8 @@ pub(crate) fn encode(
     last_values: &Option<(TimestampMs, Vec<FeatureValue>)>,
     inc: &Option<IncBank>,
 ) -> Vec<u8> {
+    // Build the uncompressed payload first; the codec probe wraps it.
     let mut out = Vec::new();
-    out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
-    out.extend_from_slice(&0u32.to_le_bytes()); // blob_len, patched below
     out.extend_from_slice(&compiled.exec.fingerprint.to_le_bytes());
     wire::put_varint(&mut out, compiled.plan.features.len() as u64);
     let mut flags = 0u8;
@@ -141,11 +150,19 @@ pub(crate) fn encode(
             }
         }
     }
-    let blob_len = (out.len() + 4) as u32;
-    out[6..10].copy_from_slice(&blob_len.to_le_bytes());
-    let crc = wire::crc32(&out);
-    out.extend_from_slice(&crc.to_le_bytes());
-    out
+    let (codec, enc) = blockcodec::encode_block(CodecPolicy::Probe, &out);
+    let mut blob = Vec::with_capacity(enc.len() + 24);
+    blob.extend_from_slice(MAGIC);
+    blob.extend_from_slice(&VERSION_V2.to_le_bytes());
+    blob.extend_from_slice(&0u32.to_le_bytes()); // blob_len, patched below
+    blob.push(codec.tag());
+    wire::put_varint(&mut blob, out.len() as u64);
+    blob.extend_from_slice(&enc);
+    let blob_len = (blob.len() + 4) as u32;
+    blob[6..10].copy_from_slice(&blob_len.to_le_bytes());
+    let crc = wire::crc32(&blob);
+    blob.extend_from_slice(&crc.to_le_bytes());
+    blob
 }
 
 /// Decode a session-state blob against `compiled` (the plan the session
@@ -161,22 +178,38 @@ pub(crate) fn decode(
     ensure!(data.len() >= 14, "truncated session-state header");
     ensure!(&data[..4] == MAGIC, "bad session-state magic");
     let version = u16::from_le_bytes(data[4..6].try_into().unwrap());
-    ensure!(version == VERSION, "unsupported session-state version {version}");
+    ensure!(
+        version == VERSION_V1 || version == VERSION_V2,
+        "unsupported session-state version {version}"
+    );
     let declared = u32::from_le_bytes(data[6..10].try_into().unwrap()) as usize;
     ensure!(
         declared == data.len(),
         "session-state length mismatch: header says {declared}, blob is {}",
         data.len()
     );
-    let body = &data[..data.len() - 4];
+    let outer = &data[..data.len() - 4];
     let stored_crc = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
-    let actual = wire::crc32(body);
+    let actual = wire::crc32(outer);
     ensure!(
         stored_crc == actual,
         "session-state checksum mismatch (stored {stored_crc:08x}, computed {actual:08x})"
     );
 
-    let pos = &mut 10usize;
+    // v1 carries the payload raw after the header; v2 wraps it in a
+    // probed block codec. Either way parsing below sees plain payload
+    // bytes from offset 0.
+    let decompressed: Vec<u8>;
+    let body: &[u8] = if version == VERSION_V2 {
+        let hp = &mut 10usize;
+        let codec = BlockCodec::from_tag(wire::get_u8(outer, hp)?)?;
+        let raw_len = wire::get_varint(outer, hp)? as usize;
+        decompressed = blockcodec::decompress(codec, &outer[*hp..], raw_len)?;
+        &decompressed
+    } else {
+        &outer[10..]
+    };
+    let pos = &mut 0usize;
     let fp = u64::from_le_bytes(wire::take(body, pos, 8)?.try_into().unwrap());
     ensure!(
         fp == compiled.exec.fingerprint,

@@ -8,6 +8,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::applog::blockcodec::CodecPolicy;
 use crate::applog::codec::{CodecKind, JsonishCodec};
 use crate::applog::codec::AttrCodec;
 use crate::applog::schema::{AttrKind, AttrSchema, BehaviorSchema};
@@ -713,8 +714,32 @@ pub fn ext_codec_ablation(scale: Scale) -> Result<Vec<Row>> {
             rows.push(row);
         }
     }
+    // Block-codec arms (PR 8 tentpole): the same segmented jsonish cell
+    // under each sealed-segment block-codec policy. `raw_log_kb` is now
+    // literally bytes-on-device (compressed sealed images + tail), so
+    // these arms chart the storage / extraction-latency trade per codec
+    // — the fixed policies stay honest even where they inflate.
+    for (name, policy) in [
+        ("block-raw", CodecPolicy::Raw),
+        ("block-lz", CodecPolicy::Lz),
+        ("block-rle", CodecPolicy::Rle),
+        ("block-probe", CodecPolicy::Probe),
+    ] {
+        let mut sim = scale.sim(Period::Night, svc.inference_interval_ms, 91);
+        sim.block_codec = policy;
+        let mut eng = Engine::new(
+            svc.features.clone(),
+            &catalog,
+            EngineConfig::autofeature(),
+        )?;
+        let out = run_simulation(&catalog, &mut eng, None, &sim)?;
+        let mut row = Row::new(name);
+        row.push("autofeature_ms", out.mean_extraction_ms());
+        row.push("bytes_on_device_kb", out.raw_storage_bytes as f64 / 1024.0);
+        rows.push(row);
+    }
     print_rows(
-        "Ablation — app-log codec × storage layout, VR extraction",
+        "Ablation — app-log codec × storage layout × block codec, VR extraction",
         &rows,
     );
     Ok(rows)
@@ -1068,6 +1093,22 @@ mod tests {
                 flat.get("raw_log_kb")
             );
         }
+        // Block-codec arms: every policy reports both axes, the probe
+        // never stores more than raw, and on this jsonish corpus it
+        // strictly shrinks the log.
+        let kb = |label: &str| {
+            let r = rows.iter().find(|r| r.label == label).unwrap();
+            assert!(r.get("autofeature_ms").is_some(), "{label} lost its latency axis");
+            r.get("bytes_on_device_kb").unwrap()
+        };
+        assert!(kb("block-probe") <= kb("block-lz"));
+        assert!(kb("block-probe") <= kb("block-rle"));
+        assert!(
+            kb("block-probe") < kb("block-raw"),
+            "probe {:?} vs raw {:?}",
+            kb("block-probe"),
+            kb("block-raw")
+        );
     }
 
     #[test]

@@ -5,4 +5,5 @@
 //! of `rand` (see DESIGN.md §Substitutions).
 
 pub mod rng;
+pub mod stats;
 pub mod wire;

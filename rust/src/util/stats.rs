@@ -1,0 +1,78 @@
+//! Shared order statistics.
+//!
+//! One nearest-rank percentile for every reporter. The convention is the
+//! ceil-based nearest rank: `rank = max(1, ceil(q·n))`, index `rank-1`.
+//! The previous ad-hoc copies used `((n-1)·q).round()`, which rounds
+//! *down* near the tail — at n=100, p99 picked the 99th sample instead
+//! of the 100th, underreporting tail latency by exactly the outlier the
+//! percentile exists to expose.
+
+/// Nearest-rank index into a sorted sample of `len` items for quantile
+/// `q ∈ [0, 1]`. Returns `None` for an empty sample. `q` outside the
+/// unit interval clamps.
+pub fn nearest_rank_index(len: usize, q: f64) -> Option<usize> {
+    if len == 0 {
+        return None;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let rank = (q * len as f64).ceil() as usize;
+    Some(rank.max(1).min(len) - 1)
+}
+
+/// Nearest-rank percentile of an **already sorted** `u64` sample.
+/// Returns 0 for an empty sample (reporting convention).
+pub fn percentile_u64(sorted: &[u64], q: f64) -> u64 {
+    nearest_rank_index(sorted.len(), q).map_or(0, |i| sorted[i])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_sample_has_no_rank() {
+        assert_eq!(nearest_rank_index(0, 0.99), None);
+        assert_eq!(percentile_u64(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile_u64(&[42], q), 42);
+        }
+    }
+
+    #[test]
+    fn small_n_uses_ceil_convention() {
+        // n=3: ranks are ceil(3q) clamped to [1,3].
+        let s = [10u64, 20, 30];
+        assert_eq!(percentile_u64(&s, 0.0), 10); // rank clamps up to 1
+        assert_eq!(percentile_u64(&s, 0.33), 10); // ceil(0.99)=1
+        assert_eq!(percentile_u64(&s, 0.34), 20); // ceil(1.02)=2
+        assert_eq!(percentile_u64(&s, 0.5), 20);
+        assert_eq!(percentile_u64(&s, 0.67), 30); // ceil(2.01)=3
+        assert_eq!(percentile_u64(&s, 1.0), 30);
+    }
+
+    #[test]
+    fn p99_at_n100_picks_the_worst_sample() {
+        // The bug this helper fixes: round((100-1)*0.99)=98 picked
+        // sorted[98]; nearest-rank p99 of 100 samples is sorted[98]...
+        // but at q=0.999 round() stayed at 98 while ceil picks 99.
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_u64(&s, 0.99), 99); // rank ceil(99)=99
+        assert_eq!(percentile_u64(&s, 0.999), 100); // rank ceil(99.9)=100
+        assert_eq!(percentile_u64(&s, 1.0), 100);
+        // n=10, p99: round(9*0.99)=9 → sorted[9] (ok by luck);
+        // n=200, p99: ceil(198)=198 → sorted[197].
+        let t: Vec<u64> = (1..=200).collect();
+        assert_eq!(percentile_u64(&t, 0.99), 198);
+    }
+
+    #[test]
+    fn out_of_range_q_clamps() {
+        let s = [1u64, 2, 3];
+        assert_eq!(percentile_u64(&s, -0.5), 1);
+        assert_eq!(percentile_u64(&s, 7.0), 3);
+    }
+}

@@ -5,6 +5,7 @@
 
 use anyhow::Result;
 
+use crate::applog::blockcodec::CodecPolicy;
 use crate::applog::codec::CodecKind;
 use crate::applog::schema::Catalog;
 use crate::applog::store::{AppLogStore, StoreConfig};
@@ -36,6 +37,9 @@ pub struct SimConfig {
     /// App-log compaction threshold (`usize::MAX` keeps the flat
     /// row-vector layout; see [`StoreConfig::segment_rows`]).
     pub segment_rows: usize,
+    /// Per-column block-codec policy for sealed segments (see
+    /// [`StoreConfig::block_codec`]); the codec-ablation arms pin it.
+    pub block_codec: CodecPolicy,
 }
 
 impl Default for SimConfig {
@@ -49,6 +53,7 @@ impl Default for SimConfig {
             seed: 0,
             codec: CodecKind::Jsonish,
             segment_rows: StoreConfig::default().segment_rows,
+            block_codec: CodecPolicy::default(),
         }
     }
 }
@@ -246,6 +251,7 @@ pub fn run_simulation(
     let codec = cfg.codec.build();
     let mut store = AppLogStore::new(StoreConfig {
         segment_rows: cfg.segment_rows,
+        block_codec: cfg.block_codec,
         ..StoreConfig::default()
     });
     let mut next_event = 0usize;

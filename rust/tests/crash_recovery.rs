@@ -1,0 +1,225 @@
+//! Crash-recovery differential suite (ISSUE 8 acceptance).
+//!
+//! A device can die at any byte of a WAL write. This suite pins the
+//! recovery contract end to end: for a real service trace, *snapshot +
+//! WAL replay* — including **every** torn-frame truncation point of the
+//! final frame — rebuilds a store whose rows and extraction values are
+//! bit-identical to an uninterrupted twin over the same committed
+//! prefix, across all five services and every block-codec policy. It
+//! also pins the ledger side: compressed-cold bytes of a recovered
+//! store are visible in the `CacheArbiter` as the third accounted tier.
+
+use autofeature::applog::blockcodec::CodecPolicy;
+use autofeature::applog::codec::{AttrCodec, CodecKind};
+use autofeature::applog::store::{AppLogStore, StoreConfig};
+use autofeature::applog::wal::DurableAppLog;
+use autofeature::cache::arbiter::CacheArbiter;
+use autofeature::engine::config::EngineConfig;
+use autofeature::engine::online::Engine;
+use autofeature::engine::Extractor;
+use autofeature::features::value::FeatureValue;
+use autofeature::harness::eval_catalog;
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+use autofeature::workload::traces::{TraceConfig, TraceGenerator};
+
+const POLICIES: [CodecPolicy; 4] = [
+    CodecPolicy::Raw,
+    CodecPolicy::Lz,
+    CodecPolicy::Rle,
+    CodecPolicy::Probe,
+];
+
+fn store_cfg(policy: CodecPolicy) -> StoreConfig {
+    StoreConfig {
+        segment_rows: 16, // several sealed segments from a short trace
+        block_codec: policy,
+        ..StoreConfig::default()
+    }
+}
+
+/// Walk the framed WAL and return each frame's starting byte offset.
+fn frame_starts(wal: &[u8]) -> Vec<usize> {
+    let mut starts = Vec::new();
+    let mut pos = 0usize;
+    while pos < wal.len() {
+        starts.push(pos);
+        let len = u32::from_le_bytes(wal[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 8 + len;
+    }
+    assert_eq!(pos, wal.len(), "intact WAL must end on a frame boundary");
+    starts
+}
+
+fn assert_stores_identical(a: &AppLogStore, b: &AppLogStore, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: row count");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.seq_no, y.seq_no, "{ctx}: row {i} seq");
+        assert_eq!(x.event_type, y.event_type, "{ctx}: row {i} type");
+        assert_eq!(x.timestamp_ms, y.timestamp_ms, "{ctx}: row {i} ts");
+        assert_eq!(x.payload, y.payload, "{ctx}: row {i} payload");
+    }
+}
+
+/// Extraction values from a fresh engine over `store` at `now` —
+/// deterministic, so two identical stores must agree bit for bit.
+fn extract_values(
+    svc: &ServiceSpec,
+    catalog: &autofeature::applog::schema::Catalog,
+    store: &AppLogStore,
+    now: i64,
+) -> Vec<FeatureValue> {
+    let mut eng = Engine::new(svc.features.clone(), catalog, EngineConfig::autofeature()).unwrap();
+    eng.extract(store, now).unwrap().values
+}
+
+/// The acceptance differential: every service × every codec policy,
+/// snapshot mid-trace, then recover at (a) the intact WAL and (b) every
+/// byte-offset truncation of the final frame. Each recovery must equal
+/// an uninterrupted store over the same committed prefix — rows AND
+/// extraction values.
+#[test]
+fn recovery_is_bit_identical_across_services_and_codecs() {
+    let catalog = eval_catalog();
+    let codec = CodecKind::Jsonish.build();
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+            duration_ms: 20 * 60_000,
+            seed: 0xC4A5 ^ kind.id().len() as u64,
+            ..TraceConfig::default()
+        });
+        assert!(trace.len() >= 40, "{}: trace too thin to exercise recovery", kind.id());
+        for policy in POLICIES {
+            let ctx = format!("{}/{policy:?}", kind.id());
+            // -- the interrupted run: append-ahead, snapshot mid-burst --
+            let mut log = DurableAppLog::new(store_cfg(policy));
+            let snap_at = trace.len() * 3 / 5;
+            let mut snapshot = None;
+            for (i, e) in trace.iter().enumerate() {
+                if i == snap_at {
+                    snapshot = Some(log.snapshot().unwrap());
+                }
+                log.append(e.event_type, e.timestamp_ms, codec.encode(&e.attrs))
+                    .unwrap();
+            }
+            let snapshot = snapshot.unwrap();
+            let wal = log.wal().bytes().to_vec();
+            let now = trace.last().unwrap().timestamp_ms + 1;
+
+            // -- (a) clean crash right after the last append --
+            let (rec, report) =
+                DurableAppLog::recover(Some(&snapshot), &wal, store_cfg(policy)).unwrap();
+            assert!(!report.torn_frame, "{ctx}");
+            assert_eq!(report.frames_replayed, trace.len() - snap_at, "{ctx}");
+            assert_stores_identical(log.store(), rec.store(), &ctx);
+            assert_eq!(
+                extract_values(&svc, &catalog, log.store(), now),
+                extract_values(&svc, &catalog, rec.store(), now),
+                "{ctx}: clean recovery diverged"
+            );
+
+            // -- (b) torn crash at every byte of the final frame --
+            let starts = frame_starts(&wal);
+            let last = *starts.last().unwrap();
+            // The uninterrupted twin over the committed prefix (all rows
+            // but the torn last one).
+            let mut prefix = AppLogStore::new(store_cfg(policy));
+            for e in &trace[..trace.len() - 1] {
+                prefix
+                    .append(e.event_type, e.timestamp_ms, codec.encode(&e.attrs))
+                    .unwrap();
+            }
+            let prefix_values = extract_values(&svc, &catalog, &prefix, now);
+            for cut in last..wal.len() {
+                let (rec, report) =
+                    DurableAppLog::recover(Some(&snapshot), &wal[..cut], store_cfg(policy))
+                        .unwrap();
+                assert_eq!(report.torn_frame, cut != last, "{ctx} cut {cut}");
+                assert_eq!(report.wal_valid_bytes, last, "{ctx} cut {cut}");
+                assert_stores_identical(&prefix, rec.store(), &format!("{ctx} cut {cut}"));
+                assert_eq!(
+                    prefix_values,
+                    extract_values(&svc, &catalog, rec.store(), now),
+                    "{ctx}: torn recovery at byte {cut} diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Recovery from snapshot alone (WAL lost entirely) yields exactly the
+/// snapshot prefix — never an error, never extra rows.
+#[test]
+fn snapshot_only_recovery_yields_the_snapshot_prefix() {
+    let catalog = eval_catalog();
+    let codec = CodecKind::Jsonish.build();
+    let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+        duration_ms: 8 * 60_000,
+        seed: 77,
+        ..TraceConfig::default()
+    });
+    let mut log = DurableAppLog::new(store_cfg(CodecPolicy::Probe));
+    let cut = trace.len() / 2;
+    for e in &trace[..cut] {
+        log.append(e.event_type, e.timestamp_ms, codec.encode(&e.attrs))
+            .unwrap();
+    }
+    // Checkpoint absorbs the WAL; the image alone carries everything.
+    let image = log.checkpoint().unwrap();
+    for e in &trace[cut..] {
+        log.append(e.event_type, e.timestamp_ms, codec.encode(&e.attrs))
+            .unwrap();
+    }
+    let (rec, report) =
+        DurableAppLog::recover(Some(&image), &[], store_cfg(CodecPolicy::Probe)).unwrap();
+    assert_eq!(report.frames_replayed, 0);
+    assert_eq!(rec.store().len(), cut);
+    // And with the post-checkpoint WAL present, the tail comes back.
+    let (full, report) =
+        DurableAppLog::recover(Some(&image), log.wal().bytes(), store_cfg(CodecPolicy::Probe))
+            .unwrap();
+    assert_eq!(report.frames_replayed, trace.len() - cut);
+    assert_stores_identical(log.store(), full.store(), "post-checkpoint replay");
+}
+
+/// The ledger criterion: a store recovered from a v4 snapshot holds its
+/// sealed segments compressed-cold, and those bytes surface in the
+/// `CacheArbiter` as the third accounted tier until queries heat them.
+#[test]
+fn recovered_cold_bytes_surface_in_the_arbiter_ledger() {
+    let catalog = eval_catalog();
+    let codec = CodecKind::Jsonish.build();
+    let trace = TraceGenerator::new(&catalog).generate(&TraceConfig {
+        duration_ms: 10 * 60_000,
+        seed: 31,
+        ..TraceConfig::default()
+    });
+    let mut log = DurableAppLog::new(store_cfg(CodecPolicy::Probe));
+    for e in &trace {
+        log.append(e.event_type, e.timestamp_ms, codec.encode(&e.attrs))
+            .unwrap();
+    }
+    let snapshot = log.snapshot().unwrap();
+    let (rec, _) =
+        DurableAppLog::recover(Some(&snapshot), log.wal().bytes(), store_cfg(CodecPolicy::Probe))
+            .unwrap();
+    let store = rec.store();
+    assert!(store.num_segments() > 0, "trace must seal segments");
+    let cold = store.cold_bytes();
+    assert!(cold > 0, "v4-loaded segments must start compressed-cold");
+
+    let arbiter = CacheArbiter::new(1 << 20, 1);
+    arbiter.activate(0);
+    arbiter.report_usage(0, 4_096);
+    arbiter.report_cold(0, cold);
+    assert_eq!(arbiter.cold_bytes(), cold);
+    assert_eq!(arbiter.ledger_bytes(), 4_096 + cold);
+    assert!(arbiter.peak_cold_bytes() >= cold);
+
+    // Materializing the log heats every segment; the ledger follows.
+    let _ = store.iter().count();
+    assert_eq!(store.cold_bytes(), 0);
+    arbiter.report_cold(0, store.cold_bytes());
+    assert_eq!(arbiter.cold_bytes(), 0);
+    assert_eq!(arbiter.ledger_bytes(), 4_096);
+}

@@ -372,19 +372,24 @@ fn assert_stores_identical(a: &AppLogStore, b: &AppLogStore, ctx: &str) {
     }
 }
 
-/// PROPERTY: snapshot round-trips (current v2 segmented format AND the
-/// legacy v1 flat format) are exact — rows, order, seq_nos and payload
-/// bytes — for random logs over random storage layouts and both codecs.
+/// PROPERTY: snapshot round-trips (current v4 compressed format AND the
+/// legacy v2 segmented / v1 flat formats) are exact — rows, order,
+/// seq_nos and payload bytes — for random logs over random storage
+/// layouts and both codecs.
 #[test]
-fn prop_snapshot_roundtrip_v1_and_v2_exact() {
-    use autofeature::applog::persist::{from_bytes, to_bytes, to_bytes_v1};
+fn prop_snapshot_roundtrip_v1_v2_and_v4_exact() {
+    use autofeature::applog::persist::{from_bytes, to_bytes, to_bytes_v1, to_bytes_v2};
     for case in 0..CASES {
         let mut rng = SimRng::seed_from_u64(7000 + case);
         let catalog = Catalog::generate(&CatalogConfig::small(), case);
         let codec: &dyn AttrCodec = if case % 2 == 0 { &JsonishCodec } else { &BinaryCodec };
         let store = random_store(&mut rng, &catalog, codec, 120);
 
-        let v2 = from_bytes(&to_bytes(&store), StoreConfig::default()).unwrap();
+        let v4 = from_bytes(&to_bytes(&store).unwrap(), StoreConfig::default()).unwrap();
+        assert_stores_identical(&store, &v4, &format!("case {case} v4"));
+        assert_eq!(store.total_appended(), v4.total_appended());
+
+        let v2 = from_bytes(&to_bytes_v2(&store).unwrap(), StoreConfig::default()).unwrap();
         assert_stores_identical(&store, &v2, &format!("case {case} v2"));
         assert_eq!(store.total_appended(), v2.total_appended());
 
@@ -399,7 +404,7 @@ fn prop_snapshot_roundtrip_v1_and_v2_exact() {
             let b = rng.range_i(0, latest + 1000);
             let w = TimeWindow { start_ms: a.min(b), end_ms: a.max(b) };
             let want = retrieve(&store, &[t], w);
-            for (name, loaded) in [("v2", &v2), ("v1", &v1)] {
+            for (name, loaded) in [("v4", &v4), ("v2", &v2), ("v1", &v1)] {
                 let got = retrieve(loaded, &[t], w);
                 assert_eq!(got.len(), want.len(), "case {case} {name}");
                 for (x, y) in got.iter().zip(&want) {
@@ -413,12 +418,14 @@ fn prop_snapshot_roundtrip_v1_and_v2_exact() {
 
 /// PROPERTY: every single-byte truncation of a valid snapshot blob, and
 /// every single-byte corruption of it (bit flips at every offset), is
-/// rejected with an error — never a silently wrong log. v2 carries a
-/// declared length + CRC-32, which detects all 8-bit burst errors; v1
-/// (no checksum) still rejects every truncation via its length fields.
+/// rejected with an error — never a silently wrong log. v4 and v2 carry
+/// a declared length + CRC-32, which detects all 8-bit burst errors —
+/// for v4 the sweep necessarily walks every byte of the embedded
+/// compressed sealed-segment images too; v1 (no checksum) still rejects
+/// every truncation via its length fields.
 #[test]
 fn prop_snapshot_rejects_every_single_byte_mutation() {
-    use autofeature::applog::persist::{from_bytes, to_bytes, to_bytes_v1};
+    use autofeature::applog::persist::{from_bytes, to_bytes, to_bytes_v1, to_bytes_v2};
     let mut rng = SimRng::seed_from_u64(7777);
     let catalog = Catalog::generate(&CatalogConfig::small(), 3);
     // Several segments plus a non-empty tail.
@@ -434,23 +441,27 @@ fn prop_snapshot_rejects_every_single_byte_mutation() {
         store.append(t, ts, JsonishCodec.encode(&attrs)).unwrap();
     }
 
-    let blob = to_bytes(&store);
-    assert!(from_bytes(&blob, StoreConfig::default()).is_ok());
-    for cut in 0..blob.len() {
-        assert!(
-            from_bytes(&blob[..cut], StoreConfig::default()).is_err(),
-            "v2 truncation to {cut}/{} bytes was accepted",
-            blob.len()
-        );
-    }
-    for i in 0..blob.len() {
-        for mask in [0x01u8, 0x80, 0xFF] {
-            let mut bad = blob.clone();
-            bad[i] ^= mask;
+    for (name, blob) in [
+        ("v4", to_bytes(&store).unwrap()),
+        ("v2", to_bytes_v2(&store).unwrap()),
+    ] {
+        assert!(from_bytes(&blob, StoreConfig::default()).is_ok());
+        for cut in 0..blob.len() {
             assert!(
-                from_bytes(&bad, StoreConfig::default()).is_err(),
-                "v2 corruption at byte {i} (mask {mask:#x}) was accepted"
+                from_bytes(&blob[..cut], StoreConfig::default()).is_err(),
+                "{name} truncation to {cut}/{} bytes was accepted",
+                blob.len()
             );
+        }
+        for i in 0..blob.len() {
+            for mask in [0x01u8, 0x80, 0xFF] {
+                let mut bad = blob.clone();
+                bad[i] ^= mask;
+                assert!(
+                    from_bytes(&bad, StoreConfig::default()).is_err(),
+                    "{name} corruption at byte {i} (mask {mask:#x}) was accepted"
+                );
+            }
         }
     }
 

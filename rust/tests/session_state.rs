@@ -23,7 +23,7 @@ use autofeature::workload::traces::{log_events, TraceConfig, TraceGenerator};
 /// Hibernate `engine` (with its `store`) into one image and rebuild
 /// both from it.
 fn round_trip(engine: &Engine, store: &AppLogStore, cfg: EngineConfig) -> (Engine, AppLogStore) {
-    let image = persist::to_bytes_with_session(store, &engine.export_state());
+    let image = persist::to_bytes_with_session(store, &engine.export_state()).unwrap();
     let (new_store, state) =
         persist::from_bytes_with_session(&image, StoreConfig::default()).unwrap();
     let mut revived = Engine::from_shared(engine.shared_plan(), cfg);
@@ -209,7 +209,7 @@ fn every_single_byte_corruption_is_rejected() {
 
     // The packed image: any single corrupt byte must fail the load (the
     // snapshot CRC covers the embedded session block too).
-    let image = persist::to_bytes_with_session(&store, &engine.export_state());
+    let image = persist::to_bytes_with_session(&store, &engine.export_state()).unwrap();
     assert!(persist::from_bytes_with_session(&image, StoreConfig::default()).is_ok());
     for i in 0..image.len() {
         let mut bad = image.clone();
