@@ -1,0 +1,53 @@
+//! Bench: adaptive re-lowering scenario suite — trigger trains that
+//! force workload shifts (diurnal density swing, bursts, clock skew)
+//! under pinned static lowerings vs the adaptive engine. Shows the
+//! closed loop: adaptive tracks the best static arm per phase with ≥ 1
+//! replan on the diurnal train, zero replans on stationary trains, and
+//! bit-identical values throughout. `BENCH_QUICK=1` shrinks the phase
+//! count; `BENCH_JSON_OUT=<path>` writes the suite as BENCH_9.json.
+
+mod common;
+
+use autofeature::harness::experiments;
+
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok()
+}
+
+fn main() {
+    common::run("adaptive_replan", || {
+        let rows = experiments::ext_adaptive(common::scale())?;
+        if let Ok(path) = std::env::var("BENCH_JSON_OUT") {
+            let mut arms = String::new();
+            for row in &rows {
+                if !arms.is_empty() {
+                    arms.push_str(",\n");
+                }
+                let col = |n: &str| row.get(n).unwrap_or(f64::NAN);
+                arms.push_str(&format!(
+                    "    {{\"scenario\": \"{}\", \"triggers\": {}, \
+                     \"oneshot_ms\": {:.4}, \"cached_ms\": {:.4}, \
+                     \"adaptive_ms\": {:.4}, \"best_static_ms\": {:.4}, \
+                     \"replans\": {}, \"values_equal\": {}}}",
+                    row.label,
+                    col("triggers") as u64,
+                    col("oneshot_ms"),
+                    col("cached_ms"),
+                    col("adaptive_ms"),
+                    col("best_static_ms"),
+                    col("replans") as u64,
+                    col("values_equal") as u64,
+                ));
+            }
+            let json = format!(
+                "{{\n  \"pr\": 9,\n  \"bench\": \"adaptive_replan scenario suite\",\n  \
+                 \"quick\": {},\n  \"arms\": [\n{}\n  ]\n}}\n",
+                quick(),
+                arms
+            );
+            std::fs::write(&path, json).unwrap();
+            println!("wrote {path}");
+        }
+        Ok(())
+    });
+}

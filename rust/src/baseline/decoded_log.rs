@@ -149,6 +149,7 @@ impl Extractor for DecodedLogExtractor {
             boundary_cmps: 0,
             served_stale: false,
             extra_storage_bytes: self.mirror_bytes,
+            replan: None,
         })
     }
 

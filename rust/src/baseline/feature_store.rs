@@ -141,6 +141,7 @@ impl Extractor for FeatureStoreExtractor {
             boundary_cmps: 0,
             served_stale: false,
             extra_storage_bytes: self.store_bytes,
+            replan: None,
         })
     }
 

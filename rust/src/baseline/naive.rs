@@ -61,6 +61,7 @@ impl Extractor for NaiveExtractor {
             boundary_cmps: 0,
             served_stale: false,
             extra_storage_bytes: 0,
+            replan: None,
         })
     }
 

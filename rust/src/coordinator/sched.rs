@@ -50,9 +50,11 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::applog::codec::AttrCodec;
 use crate::applog::persist;
 use crate::applog::schema::Catalog;
 use crate::applog::store::{AppLogStore, StoreConfig};
+use crate::applog::wal::Wal;
 use crate::cache::arbiter::{CacheArbiter, VictimQueue};
 use crate::engine::config::EngineConfig;
 use crate::engine::offline::{compile, CompiledEngine};
@@ -89,6 +91,15 @@ pub struct SchedConfig {
     /// Keep every extraction's feature values in the session reports
     /// (determinism tests; off for large fleets).
     pub record_values: bool,
+    /// Background WAL-checkpoint policy: when not `usize::MAX`, every
+    /// logged behavior event is framed into a per-session append-ahead
+    /// WAL, and the scheduler folds the WAL into a fresh snapshot —
+    /// clearing it — whenever it crosses this byte threshold or the
+    /// session hibernates (the hibernation image doubles as the
+    /// checkpoint). Sessions never call
+    /// [`crate::applog::wal::DurableAppLog::checkpoint`] explicitly; the
+    /// scheduler's trigger servicing is the checkpoint daemon.
+    pub wal_checkpoint_bytes: usize,
 }
 
 impl Default for SchedConfig {
@@ -100,6 +111,7 @@ impl Default for SchedConfig {
             hibernate_after_ms: i64::MAX,
             engine: EngineConfig::autofeature(),
             record_values: false,
+            wal_checkpoint_bytes: usize::MAX,
         }
     }
 }
@@ -133,6 +145,12 @@ pub struct SchedReport {
     pub rehydrate_p50_ns: u64,
     /// 99th-percentile rehydration latency, ns (0 with no rehydrations).
     pub rehydrate_p99_ns: u64,
+    /// Background WAL checkpoints folded by the scheduler (0 when the
+    /// policy is off).
+    pub wal_checkpoints: usize,
+    /// Final durable artifacts per session under the WAL-checkpoint
+    /// policy, in user order (`None` entries when the policy is off).
+    pub durables: Vec<Option<SessionDurable>>,
 }
 
 impl SchedReport {
@@ -140,6 +158,29 @@ impl SchedReport {
     pub fn total_requests(&self) -> usize {
         self.sessions.iter().map(|s| s.requests).sum()
     }
+
+    /// Total adaptive replans across the fleet (0 for static engines).
+    /// Per-session counts live in each report's merged
+    /// [`crate::fegraph::node::OpBreakdown`].
+    pub fn total_replans(&self) -> u64 {
+        self.sessions.iter().map(|s| s.metrics.breakdown().replans).sum()
+    }
+}
+
+/// What the WAL-checkpoint policy leaves behind for one session: the
+/// crash-recovery artifacts as they stood when the session retired.
+/// `DurableAppLog::recover(snapshot, &wal, ..)` must rebuild exactly
+/// `store_image` — the crash-consistency acceptance bar.
+#[derive(Debug)]
+pub struct SessionDurable {
+    /// Last checkpoint image (`None` if the session never crossed the
+    /// byte threshold and never hibernated). Always carries a zero WAL
+    /// watermark: every checkpoint clears the WAL it absorbed.
+    pub snapshot: Option<Vec<u8>>,
+    /// WAL frames appended after the last checkpoint.
+    pub wal: Vec<u8>,
+    /// Ground truth: the final store serialized at retirement.
+    pub store_image: Vec<u8>,
 }
 
 /// A session's resident form between triggers.
@@ -159,6 +200,19 @@ enum CellState {
     Done,
 }
 
+/// Per-session durable-logging state under the WAL-checkpoint policy.
+/// Unlike the resident store/engine, this survives hibernation as-is:
+/// the WAL and last snapshot *are* the durable artifacts, not caches.
+struct Durable {
+    wal: Wal,
+    /// Last checkpoint image (at hibernation, the hibernation image
+    /// itself — it absorbs the same rows, so it doubles as one).
+    snapshot: Option<Vec<u8>>,
+    checkpoints: usize,
+    /// Final store image captured at retirement (recovery ground truth).
+    final_image: Option<Vec<u8>>,
+}
+
 /// One session's private world plus its report accumulators.
 struct Cell {
     state: CellState,
@@ -170,6 +224,8 @@ struct Cell {
     /// entries are validated against this under the cell lock (lazy
     /// invalidation of stale heap entries).
     next_at: Option<i64>,
+    /// WAL + checkpoint artifacts (`Some` only under the policy).
+    durable: Option<Durable>,
     // -- accumulators --
     recorder: LatencyRecorder,
     values: Vec<Vec<FeatureValue>>,
@@ -188,6 +244,7 @@ impl Cell {
             state: CellState::Cold,
             next_event: 0,
             next_at: None,
+            durable: None,
             recorder: LatencyRecorder::new(),
             values: Vec::new(),
             peak_cache_bytes: 0,
@@ -299,6 +356,8 @@ impl FleetScheduler {
         let mut hibernations = 0usize;
         let mut rehydrations = 0usize;
         let mut rehydrate_ns = Vec::new();
+        let mut wal_checkpoints = 0usize;
+        let mut durables = Vec::with_capacity(users.len());
         for (slot, cell) in fleet.cells.into_iter().enumerate() {
             let cell = cell.into_inner().unwrap();
             anyhow::ensure!(
@@ -309,6 +368,22 @@ impl FleetScheduler {
             hibernations += cell.hibernations;
             rehydrations += cell.rehydrations;
             rehydrate_ns.extend_from_slice(&cell.rehydrate_ns);
+            durables.push(match cell.durable {
+                None => None,
+                Some(d) => {
+                    wal_checkpoints += d.checkpoints;
+                    Some(SessionDurable {
+                        snapshot: d.snapshot,
+                        wal: d.wal.bytes().to_vec(),
+                        store_image: d.final_image.ok_or_else(|| {
+                            anyhow!(
+                                "session for user {} retired without a durable ground truth",
+                                users[slot].user_id
+                            )
+                        })?,
+                    })
+                }
+            });
             sessions.push(SessionReport {
                 user_id: users[slot].user_id,
                 requests: cell.requests,
@@ -335,6 +410,8 @@ impl FleetScheduler {
             rehydrations,
             rehydrate_p50_ns: pct(0.5),
             rehydrate_p99_ns: pct(0.99),
+            wal_checkpoints,
+            durables,
         })
     }
 }
@@ -379,6 +456,29 @@ fn pop_local_or_steal(fleet: &Fleet<'_>, me: usize) -> Option<(i64, usize)> {
     None
 }
 
+/// [`log_events`] under the WAL-checkpoint policy: the append-ahead
+/// discipline of [`crate::applog::wal::DurableAppLog::append`], inlined
+/// here because the scheduler owns the store and WAL as separate pieces.
+/// Each event frames into the WAL before the store mutates; a rejected
+/// store append rolls its frame back so the WAL never records a row the
+/// store refused.
+fn log_events_walled(
+    store: &mut AppLogStore,
+    wal: &mut Wal,
+    codec: &dyn AttrCodec,
+    events: &[TraceEvent],
+) -> Result<()> {
+    for e in events {
+        let payload = codec.encode(&e.attrs);
+        let mark = wal.append(store.next_seq(), e.event_type, e.timestamp_ms, &payload);
+        if let Err(err) = store.append(e.event_type, e.timestamp_ms, payload) {
+            wal.truncate_to(mark);
+            return Err(err);
+        }
+    }
+    Ok(())
+}
+
 /// Serve one (trigger, session) event: make the session resident, replay
 /// its behaviors up to the trigger, extract + infer, then either
 /// re-enqueue the successor trigger (possibly hibernating across the
@@ -413,7 +513,20 @@ fn serve_trigger(
                 ..StoreConfig::default()
             });
             let warm_end = trace.partition_point(|e| e.timestamp_ms < sim.warmup_ms);
-            log_events(&mut store, codec.as_ref(), &trace[..warm_end])?;
+            if fleet.cfg.wal_checkpoint_bytes != usize::MAX {
+                cell.durable = Some(Durable {
+                    wal: Wal::new(),
+                    snapshot: None,
+                    checkpoints: 0,
+                    final_image: None,
+                });
+            }
+            match cell.durable.as_mut() {
+                Some(d) => {
+                    log_events_walled(&mut store, &mut d.wal, codec.as_ref(), &trace[..warm_end])?
+                }
+                None => log_events(&mut store, codec.as_ref(), &trace[..warm_end])?,
+            }
             cell.next_event = warm_end;
             let engine_cfg = EngineConfig {
                 cache_budget_bytes: fleet.arbiter.activate(slot),
@@ -479,8 +592,24 @@ fn serve_trigger(
     //    driver's exact cut-off) --
     let upto = trace.partition_point(|e| e.timestamp_ms < at);
     if upto > cell.next_event {
-        log_events(store, codec.as_ref(), &trace[cell.next_event..upto])?;
+        match cell.durable.as_mut() {
+            Some(d) => {
+                log_events_walled(store, &mut d.wal, codec.as_ref(), &trace[cell.next_event..upto])?
+            }
+            None => log_events(store, codec.as_ref(), &trace[cell.next_event..upto])?,
+        }
         cell.next_event = upto;
+    }
+    // Background checkpoint: once the WAL crosses the policy threshold,
+    // fold it into a fresh snapshot while the session is already hot in
+    // this worker — no extra wakeup, no explicit `checkpoint()` call
+    // from the session itself.
+    if let Some(d) = cell.durable.as_mut() {
+        if d.wal.len() >= fleet.cfg.wal_checkpoint_bytes {
+            d.snapshot = Some(persist::to_bytes(store).context("folding WAL checkpoint")?);
+            d.wal.clear();
+            d.checkpoints += 1;
+        }
     }
 
     // -- serve the inference --
@@ -528,6 +657,14 @@ fn serve_trigger(
             fleet.queues[me].lock().unwrap().push(std::cmp::Reverse((next, slot)));
         }
         None => {
+            if cell.durable.is_some() {
+                let CellState::Live { ref store, .. } = cell.state else {
+                    unreachable!()
+                };
+                let truth =
+                    persist::to_bytes(store).context("serializing retirement ground truth")?;
+                cell.durable.as_mut().unwrap().final_image = Some(truth);
+            }
             cell.next_at = None;
             cell.state = CellState::Done;
             fleet.arbiter.complete(slot);
@@ -551,6 +688,17 @@ fn hibernate_locked(fleet: &Fleet<'_>, slot: usize, cell: &mut Cell) -> Result<(
     };
     let image = persist::to_bytes_with_session(store, &engine.export_state())
         .context("serializing hibernation image")?;
+    if let Some(d) = cell.durable.as_mut() {
+        // The hibernation image absorbs every logged row but records a
+        // zero WAL watermark (`to_bytes_with_session` semantics), so the
+        // WAL MUST be cleared with it — recovery would otherwise replay
+        // frames the image already holds and refuse on the seq overlap.
+        // The image therefore doubles as a checkpoint: hibernation and
+        // durability fold into one serialization.
+        d.snapshot = Some(image.clone());
+        d.wal.clear();
+        d.checkpoints += 1;
+    }
     fleet.arbiter.hibernate(slot, image.len());
     cell.hibernations += 1;
     cell.state = CellState::Hibernated { image };
@@ -588,6 +736,7 @@ fn cloud_feats() -> Vec<f32> {
 mod tests {
     use super::*;
     use crate::applog::schema::CatalogConfig;
+    use crate::applog::wal::DurableAppLog;
     use crate::coordinator::pool::{PoolConfig, SessionPool};
     use crate::features::catalog::{generate_feature_set, FeatureSetConfig, MEANINGFUL_WINDOWS};
     use crate::runtime::SurrogateModel;
@@ -795,6 +944,140 @@ mod tests {
         .unwrap();
         assert_reports_identical(&report.sessions, &baseline.sessions, "incremental");
         assert!(report.hibernations > 0);
+    }
+
+    /// Crash-recovery bar for one session's durable artifacts: recovery
+    /// from (last checkpoint, WAL suffix) rebuilds the retired store
+    /// row-for-row.
+    fn assert_recovers(durable: &SessionDurable, segment_rows: usize, label: &str) {
+        let cfg = StoreConfig {
+            segment_rows,
+            ..StoreConfig::default()
+        };
+        let (recovered, _report) =
+            DurableAppLog::recover(durable.snapshot.as_deref(), &durable.wal, cfg.clone())
+                .unwrap_or_else(|e| panic!("{label}: recovery failed: {e:#}"));
+        let truth = persist::from_bytes(&durable.store_image, cfg).unwrap();
+        assert_eq!(recovered.store().len(), truth.len(), "{label}: row count");
+        for (x, y) in recovered.store().iter().zip(truth.iter()) {
+            assert_eq!(x.seq_no, y.seq_no, "{label}");
+            assert_eq!(x.event_type, y.event_type, "{label}");
+            assert_eq!(x.timestamp_ms, y.timestamp_ms, "{label}");
+            assert_eq!(x.payload, y.payload, "{label}");
+        }
+    }
+
+    #[test]
+    fn wal_checkpoint_policy_preserves_values_and_recovers_stores() {
+        let cat = catalog();
+        let fs = specs(&cat);
+        let users = SessionConfig::fleet(&base_sim(), 5);
+        let sched = FleetScheduler::new(fs.clone(), &cat, sched_cfg(2)).unwrap();
+        let baseline = sched.run(&cat, &users, None).unwrap();
+        assert_eq!(baseline.wal_checkpoints, 0);
+        assert!(baseline.durables.iter().all(|d| d.is_none()));
+
+        // Tiny threshold: the scheduler folds a checkpoint at every
+        // trigger that logged anything (the warmup replay alone crosses
+        // it). Values must not notice.
+        let eager = FleetScheduler::from_shared(
+            sched.shared_plan(),
+            SchedConfig {
+                wal_checkpoint_bytes: 1,
+                ..sched_cfg(2)
+            },
+        )
+        .run(&cat, &users, None)
+        .unwrap();
+        assert_reports_identical(&eager.sessions, &baseline.sessions, "wal-eager");
+        assert!(eager.wal_checkpoints >= users.len(), "warmup folds alone");
+        for (slot, d) in eager.durables.iter().enumerate() {
+            let d = d.as_ref().expect("policy captures durables");
+            assert_recovers(d, users[slot].sim.segment_rows, "wal-eager");
+        }
+
+        // Huge threshold + aggressive hibernation: checkpoints happen
+        // only because the hibernation image doubles as one, and the
+        // final trigger's frames stay in the WAL — recovery exercises
+        // the snapshot + suffix-replay path.
+        let folded = FleetScheduler::from_shared(
+            sched.shared_plan(),
+            SchedConfig {
+                wal_checkpoint_bytes: 1 << 40,
+                hibernate_after_ms: 1,
+                ..sched_cfg(2)
+            },
+        )
+        .run(&cat, &users, None)
+        .unwrap();
+        assert_reports_identical(&folded.sessions, &baseline.sessions, "wal-hibernate");
+        assert!(folded.hibernations > 0);
+        assert_eq!(folded.wal_checkpoints, folded.hibernations);
+        for (slot, d) in folded.durables.iter().enumerate() {
+            let d = d.as_ref().expect("policy captures durables");
+            assert_recovers(d, users[slot].sim.segment_rows, "wal-hibernate");
+        }
+    }
+
+    #[test]
+    fn adaptive_fleet_is_deterministic_across_hibernation() {
+        let cat = catalog();
+        let fs = specs(&cat);
+        let users = SessionConfig::fleet(&base_sim(), 4);
+        // Generous cap: identical (non-evicting) budgets in both arms,
+        // so the cost model sees identical row counts everywhere.
+        let adaptive_cfg = SchedConfig {
+            engine: EngineConfig::adaptive(),
+            workers: 2,
+            record_values: true,
+            ..SchedConfig::default()
+        };
+        let sched = FleetScheduler::new(fs.clone(), &cat, adaptive_cfg.clone()).unwrap();
+        let resident = sched.run(&cat, &users, None).unwrap();
+
+        // Hibernating after every trigger pushes the cost model through
+        // export/import before every decision: pre-sleep statistics must
+        // seed the post-wake model or replan counts diverge.
+        let hibernating = FleetScheduler::from_shared(
+            sched.shared_plan(),
+            SchedConfig {
+                hibernate_after_ms: 1,
+                ..adaptive_cfg
+            },
+        )
+        .run(&cat, &users, None)
+        .unwrap();
+        assert!(hibernating.hibernations > 0);
+        assert_reports_identical(
+            &hibernating.sessions,
+            &resident.sessions,
+            "adaptive-hibernate",
+        );
+        for (a, b) in resident.sessions.iter().zip(&hibernating.sessions) {
+            assert_eq!(
+                a.metrics.breakdown().replans,
+                b.metrics.breakdown().replans,
+                "replan count diverged across hibernation for user {}",
+                a.user_id
+            );
+        }
+        assert_eq!(hibernating.total_replans(), resident.total_replans());
+
+        // Differential invariant at fleet scale: whatever the adaptive
+        // engines decided, values match a pinned-static fleet exactly.
+        let pinned = FleetScheduler::from_shared(
+            sched.shared_plan(),
+            SchedConfig {
+                engine: EngineConfig::autofeature(),
+                workers: 2,
+                record_values: true,
+                ..SchedConfig::default()
+            },
+        )
+        .run(&cat, &users, None)
+        .unwrap();
+        assert_reports_identical(&resident.sessions, &pinned.sessions, "adaptive vs pinned");
+        assert_eq!(pinned.total_replans(), 0);
     }
 
     #[test]

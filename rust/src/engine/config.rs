@@ -42,6 +42,17 @@ pub struct EngineConfig {
     /// differential oracle switch: the row walk survives solely so the
     /// batch executor can be checked bit-for-bit against it.
     pub row_walk_exec: bool,
+    /// Adaptive re-lowering: feed each trigger's `ExecCounters` into a
+    /// per-session cost model ([`crate::optimizer::cost`]) and re-lower
+    /// the session's plan (strategy / filter mode) when the observed
+    /// workload shifts. The replanned plan lives in a per-session
+    /// overlay — the `Arc`-shared compiled plan is never touched, so one
+    /// session's replan cannot perturb co-located sessions. Replans are
+    /// value-transparent (differential-tested); the strategy space is
+    /// {one-shot, cached-rewalk} unless `incremental_compute` is also
+    /// set, which admits incremental-delta (1e-9 equality bar instead
+    /// of bit-identity — see DESIGN.md §Adaptive re-lowering).
+    pub adaptive_replan: bool,
 }
 
 impl Default for EngineConfig {
@@ -64,6 +75,18 @@ impl EngineConfig {
             staleness_ttl_ms: 0,
             codec: CodecKind::Jsonish,
             row_walk_exec: false,
+            adaptive_replan: false,
+        }
+    }
+
+    /// Full AutoFeature plus the adaptive replan loop: the session
+    /// starts on the compiled cached-rewalk plan and re-lowers itself
+    /// when its observed trigger/row statistics say another strategy or
+    /// filter mode is cheaper.
+    pub fn adaptive() -> Self {
+        EngineConfig {
+            adaptive_replan: true,
+            ..Self::autofeature()
         }
     }
 
@@ -130,5 +153,9 @@ mod tests {
         assert!(!EngineConfig::autofeature().incremental_compute);
         assert!(EngineConfig::incremental().incremental_compute);
         assert!(EngineConfig::incremental().enable_cache);
+        assert!(!EngineConfig::autofeature().adaptive_replan);
+        assert!(EngineConfig::adaptive().adaptive_replan);
+        assert!(EngineConfig::adaptive().enable_cache);
+        assert!(!EngineConfig::adaptive().incremental_compute);
     }
 }

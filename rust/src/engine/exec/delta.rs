@@ -99,8 +99,10 @@ impl IncBank {
 /// steady-state delta machinery keeps the two paths bit-equivalent. A
 /// session that expects frequent evictions should simply run the
 /// cached-rewalk strategy.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn feed(
     compiled: &CompiledEngine,
+    exec: &ExecPlan,
     avail: &HashMap<EventTypeId, TypeRows>,
     now: TimestampMs,
     inc: &mut Option<IncBank>,
@@ -109,7 +111,10 @@ pub(crate) fn feed(
 ) -> Vec<Option<FeatureValue>> {
     let plan = &compiled.plan;
     let t0 = Instant::now();
-    let bank = inc.get_or_insert_with(|| IncBank::for_plan(&compiled.exec, &plan.features));
+    // `exec` is the *active* plan (a replanned session's overlay): its
+    // AggMode annotations, not the compiled base plan's, decide which
+    // features run persistently.
+    let bank = inc.get_or_insert_with(|| IncBank::for_plan(exec, &plan.features));
     let prev = bank.synced_at;
     // Per-operator tallies, flushed into the counter table at the end
     // (keeps the per-row hot loops on plain integer adds).

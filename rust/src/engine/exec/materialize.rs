@@ -158,9 +158,13 @@ pub(crate) fn build_type_rows(
 }
 
 /// ❹ Cache update: valuate candidates, select under budget, rebuild.
+/// `strategy` is the *active* plan's (a replanned session's overlay may
+/// differ from the compiled base).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn update_cache(
     cache: &mut CacheStore,
     compiled: &CompiledEngine,
+    strategy: Strategy,
     policy: PolicyKind,
     interval_ms: i64,
     avail: HashMap<EventTypeId, TypeRows>,
@@ -195,7 +199,7 @@ pub(crate) fn update_cache(
     // continuity for every feature touching an idle type, forcing a
     // full O(window) rebuild of the feature's *other* lanes on each
     // trigger.
-    let keep_empty = compiled.exec.strategy == Strategy::IncrementalDelta;
+    let keep_empty = strategy == Strategy::IncrementalDelta;
     for (keep, (_, lane)) in selection.into_iter().zip(entries) {
         if (keep && !lane.is_empty()) || (keep_empty && lane.is_empty()) {
             // Selection cost == lane bytes (zero for the empty

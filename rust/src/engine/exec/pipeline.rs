@@ -117,6 +117,10 @@ impl ExecCounters {
             rows_replayed: self.stage(Stage::Filter).rows_in,
             rows_delta: self.stage(Stage::WindowSlice).rows_out,
             rows_materialized: self.rows_materialized,
+            // Replans are an engine-level event, stamped by
+            // `Engine::extract` after the executor returns.
+            replans: 0,
+            replan_ns: 0,
         }
     }
 }
@@ -365,9 +369,16 @@ fn emit(
 /// Execute a compiled plan for one extraction trigger: the single
 /// driver behind [`crate::engine::online::Engine::extract`], dispatching
 /// on the strategy lowering chose.
+///
+/// `exec` is the *active* plan — usually `compiled.exec`, but an
+/// adaptively replanned session passes its per-session overlay instead
+/// (same lane geometry, possibly different strategy / filter modes).
+/// Lane geometry, type windows and attr unions still come from
+/// `compiled`: overlays only re-lower, they never re-fuse.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn execute(
     compiled: &CompiledEngine,
+    exec: &ExecPlan,
     codec: &dyn AttrCodec,
     policy: PolicyKind,
     cache: &mut CacheStore,
@@ -376,7 +387,6 @@ pub(crate) fn execute(
     now: TimestampMs,
     interval_ms: i64,
 ) -> Result<ExecOutput> {
-    let exec = &compiled.exec;
     let opt = &compiled.plan;
     let mut c = ExecCounters::default();
     let mut boundary_cmps = 0u64;
@@ -415,7 +425,9 @@ pub(crate) fn execute(
                 }
             }
             if exec.strategy == Strategy::IncrementalDelta {
-                inc_values = Some(delta::feed(compiled, &avail, now, inc, &mut sinks, &mut c));
+                inc_values = Some(delta::feed(
+                    compiled, exec, &avail, now, inc, &mut sinks, &mut c,
+                ));
             } else {
                 for pipe in &exec.pipelines {
                     let lane = &opt.lanes[pipe.lane_idx];
@@ -456,7 +468,16 @@ pub(crate) fn execute(
                     );
                 }
             }
-            materialize::update_cache(cache, compiled, policy, interval_ms, avail, now, &mut c);
+            materialize::update_cache(
+                cache,
+                compiled,
+                exec.strategy,
+                policy,
+                interval_ms,
+                avail,
+                now,
+                &mut c,
+            );
         }
     }
 
@@ -545,6 +566,9 @@ mod tests {
         assert_eq!(bd.rows_delta, 7);
         assert_eq!(bd.rows_materialized, 5);
         assert_eq!(bd.branch_ns, 0);
+        // Replan events are stamped by the engine, never the executor.
+        assert_eq!(bd.replans, 0);
+        assert_eq!(bd.replan_ns, 0);
     }
 
     #[test]

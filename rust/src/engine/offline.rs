@@ -66,6 +66,29 @@ pub struct CompiledEngine {
     pub stats: OfflineStats,
 }
 
+impl CompiledEngine {
+    /// The plan's longest feature window, ms (≥ 1). The adaptive cost
+    /// model's gap/span fresh-volume counterfactual normalizes trigger
+    /// gaps against this constant.
+    pub fn span_ms(&self) -> i64 {
+        self.type_windows.values().copied().max().unwrap_or(0).max(1)
+    }
+}
+
+/// The [`EngineConfig`] → [`LowerConfig`] projection used at compile
+/// time. The adaptive engine replicates it as the baseline of its
+/// per-session overlay, so the cost model's "current configuration"
+/// starts exactly where `compile` left the shared plan.
+pub(crate) fn lower_config(cfg: &EngineConfig) -> LowerConfig {
+    LowerConfig {
+        enable_cache: cfg.enable_cache,
+        incremental_compute: cfg.incremental_compute,
+        hierarchical_filter: cfg.hierarchical_filter,
+        projected_decode: true,
+        batch_exec: !cfg.row_walk_exec,
+    }
+}
+
 /// Compile a feature set for online execution.
 pub fn compile(
     features: Vec<FeatureSpec>,
@@ -84,16 +107,7 @@ pub fn compile(
     // branch-by-branch inside the online engine.
     let t0 = Instant::now();
     let plan = fuse(&graph.features, cfg.enable_fusion);
-    let exec = lower(
-        &plan,
-        &LowerConfig {
-            enable_cache: cfg.enable_cache,
-            incremental_compute: cfg.incremental_compute,
-            hierarchical_filter: cfg.hierarchical_filter,
-            projected_decode: true,
-            batch_exec: !cfg.row_walk_exec,
-        },
-    );
+    let exec = lower(&plan, &lower_config(cfg));
     let mut type_windows: HashMap<EventTypeId, i64> = HashMap::new();
     let mut attr_unions: HashMap<EventTypeId, Vec<AttrId>> = HashMap::new();
     for lane in &plan.lanes {

@@ -29,6 +29,8 @@ use crate::cache::store::CacheStore;
 use crate::features::spec::FeatureSpec;
 use crate::features::value::FeatureValue;
 use crate::fegraph::node::OpBreakdown;
+use crate::optimizer::cost::{CostConfig, CostModel, Observation, StrategySpace};
+use crate::optimizer::lower::{self, ExecPlan, LowerConfig, ReplanDelta, Strategy};
 
 use super::config::EngineConfig;
 use super::exec::delta::IncBank;
@@ -58,6 +60,55 @@ pub struct ExtractionResult {
     /// App-log storage the method requires beyond the raw log (cloud
     /// baselines inflate this; AutoFeature keeps it 0).
     pub extra_storage_bytes: usize,
+    /// The adaptive replan applied *after* this trigger, if any: the
+    /// values above were still produced by the old plan; the next
+    /// trigger runs the new one. `None` on non-adaptive engines.
+    pub replan: Option<ReplanDelta>,
+}
+
+/// Per-session adaptive re-lowering state (`EngineConfig::adaptive_replan`).
+///
+/// The session's *active* plan is `exec` when present, else the shared
+/// compiled plan. The overlay is an ordinary [`ExecPlan`] produced by
+/// [`lower::replan`] from the same [`crate::optimizer::plan::OptimizedPlan`]
+/// — replans only re-lower, they never re-fuse — so lane geometry,
+/// fingerprint discipline and the explain format all carry over.
+pub(crate) struct Adaptive {
+    /// The active lowering configuration (starts at the compiled base).
+    pub cfg: LowerConfig,
+    /// The overlay plan; `None` while the active configuration is still
+    /// the compiled base (the `Arc`-shared plan serves directly, and the
+    /// overlay costs nothing).
+    pub exec: Option<ExecPlan>,
+    /// Windowed cost model fed from each trigger's counters.
+    pub cost: CostModel,
+    /// Replans applied over this session's lifetime (survives
+    /// hibernation; the diff log below does not).
+    pub replans: u64,
+    /// Recent replan deltas, oldest first (observability only — capped,
+    /// not serialized).
+    pub log: Vec<ReplanDelta>,
+}
+
+/// Cap on the in-memory replan diff log.
+const REPLAN_LOG_CAP: usize = 32;
+
+impl Adaptive {
+    pub(crate) fn new(cfg: &EngineConfig, compiled: &CompiledEngine) -> Adaptive {
+        Adaptive {
+            cfg: super::offline::lower_config(cfg),
+            exec: None,
+            cost: CostModel::new(
+                CostConfig::default(),
+                StrategySpace {
+                    allow_incremental: cfg.incremental_compute,
+                },
+                compiled.span_ms(),
+            ),
+            replans: 0,
+            log: Vec::new(),
+        }
+    }
 }
 
 /// The AutoFeature online engine.
@@ -81,6 +132,8 @@ pub struct Engine {
     last_values: Option<(TimestampMs, Vec<FeatureValue>)>,
     /// Persistent incremental state banks (delta-strategy plans).
     inc: Option<IncBank>,
+    /// Adaptive re-lowering state (`cfg.adaptive_replan` only).
+    adaptive: Option<Adaptive>,
 }
 
 impl Engine {
@@ -107,12 +160,71 @@ impl Engine {
         Engine {
             codec: cfg.codec.build(),
             cache: CacheStore::new(cfg.cache_budget_bytes),
+            adaptive: cfg.adaptive_replan.then(|| Adaptive::new(&cfg, &compiled)),
             cfg,
             compiled,
             last_now: None,
             last_values: None,
             inc: None,
         }
+    }
+
+    /// The plan this session actually runs: the per-session overlay when
+    /// an adaptive replan has diverged from the compiled base, else the
+    /// shared compiled plan.
+    pub fn active_exec(&self) -> &ExecPlan {
+        match &self.adaptive {
+            Some(a) => a.exec.as_ref().unwrap_or(&self.compiled.exec),
+            None => &self.compiled.exec,
+        }
+    }
+
+    /// Replans applied over this session's lifetime (0 on non-adaptive
+    /// engines). Survives hibernation.
+    pub fn replans(&self) -> u64 {
+        self.adaptive.as_ref().map_or(0, |a| a.replans)
+    }
+
+    /// Recent replan deltas, oldest first (adaptive engines only;
+    /// in-memory observability, not serialized).
+    pub fn replan_log(&self) -> &[ReplanDelta] {
+        self.adaptive.as_ref().map_or(&[], |a| a.log.as_slice())
+    }
+
+    /// Render the adaptive view of this session: the compiled base plan,
+    /// the cost model's current estimates, every replan diff applied so
+    /// far, and the active overlay (when diverged). Static sessions get
+    /// the plain [`CompiledEngine::explain`] plus a note.
+    pub fn explain_adaptive(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "# base plan (compiled, Arc-shared)");
+        s.push_str(&self.compiled.explain());
+        let Some(a) = &self.adaptive else {
+            s.push_str("\nadaptive: off (static session)\n");
+            return s;
+        };
+        let (gap, fresh, window, sel) = a.cost.estimates();
+        let _ = writeln!(s, "\n# cost model ({} observations)", a.cost.observations());
+        let _ = writeln!(
+            s,
+            "est gap_ms={gap:.1} fresh_rows={fresh:.1} window_rows={window:.1} selectivity={sel:.3}"
+        );
+        let _ = writeln!(s, "replans={}", a.replans);
+        for d in &a.log {
+            let _ = writeln!(s, "\n# replan: {}", d.summary());
+            s.push_str(&d.diff);
+        }
+        match &a.exec {
+            Some(exec) => {
+                let _ = writeln!(s, "\n# active plan (session overlay)");
+                s.push_str(&exec.explain());
+            }
+            None => {
+                let _ = writeln!(s, "\n# active plan = base (no divergence)");
+            }
+        }
+        s
     }
 
     /// The compiled plan (inspection / reports).
@@ -171,6 +283,64 @@ impl Engine {
         }
     }
 
+    /// Apply a re-lowering decision: build the overlay plan from the
+    /// shared compiled plan and migrate or deliberately invalidate the
+    /// session state pinned to the outgoing one (DESIGN.md §Adaptive
+    /// re-lowering has the full migration-vs-invalidation table).
+    /// Returns the delta when the plan actually changed; no-op on
+    /// non-adaptive engines. Also the deterministic test seam: the
+    /// differential suite forces transitions through here without
+    /// depending on cost-model dynamics.
+    pub(crate) fn apply_replan(&mut self, next_cfg: LowerConfig) -> Option<ReplanDelta> {
+        let adaptive = self.adaptive.as_mut()?;
+        let active = adaptive.exec.as_ref().unwrap_or(&self.compiled.exec);
+        let from = active.strategy;
+        let (next_exec, delta) = match lower::replan(&self.compiled.plan, active, &next_cfg) {
+            Some(x) => x,
+            None => {
+                // Identical lowering (defensive): adopt the config so
+                // the cost model stops proposing it, count no replan.
+                adaptive.cfg = next_cfg;
+                return None;
+            }
+        };
+        match (from, next_exec.strategy) {
+            // Filter-mode flip within one strategy: cached rows carry
+            // the full attr union, so they are valid under either
+            // filter mode — pure migration, nothing to drop.
+            (a, b) if a == b => {}
+            // One-shot plans have no cache bridge: keeping lanes around
+            // would hold memory against a plan that never reads them.
+            // Deliberate invalidation.
+            (_, Strategy::OneShot) => {
+                self.cache.clear();
+                self.inc = None;
+            }
+            // The cached window migrates as-is (watermark continuity
+            // holds: lanes gate only on their own watermarks);
+            // incremental banks are deltas over the delta plan's slice
+            // discipline and are dropped.
+            (_, Strategy::CachedRewalk) => {
+                self.inc = None;
+            }
+            // Cache migrates; the IncBank is rebuilt lazily by the
+            // delta executor on the next trigger (fresh bank → exact
+            // full-rewalk rebuild).
+            (_, Strategy::IncrementalDelta) => {}
+        }
+        adaptive.cfg = next_cfg;
+        // Replanning back onto the compiled base drops the overlay —
+        // the session serves from the shared plan again.
+        adaptive.exec =
+            (next_exec.fingerprint != self.compiled.exec.fingerprint).then_some(next_exec);
+        adaptive.replans += 1;
+        if adaptive.log.len() == REPLAN_LOG_CAP {
+            adaptive.log.remove(0);
+        }
+        adaptive.log.push(delta.clone());
+        Some(delta)
+    }
+
     /// Serialize all session-private mutable state — cached lanes with
     /// their watermarks, the incremental state bank, the staleness
     /// fast-path clock — into a versioned, CRC-checked blob (see
@@ -184,6 +354,7 @@ impl Engine {
             self.last_now,
             &self.last_values,
             &self.inc,
+            &self.adaptive,
         )
     }
 
@@ -195,6 +366,23 @@ impl Engine {
     /// makes the next delta extraction replay zero rows.
     pub fn import_state(&mut self, data: &[u8]) -> Result<()> {
         let st = super::state::decode(&self.compiled, self.cache.budget(), data)?;
+        match (self.cfg.adaptive_replan, st.adaptive) {
+            (false, None) => {}
+            (false, Some(_)) => {
+                anyhow::bail!("adaptive session state offered to a non-adaptive engine")
+            }
+            // Static or legacy blob into an adaptive engine: resume on
+            // the compiled base with a cold cost model (the blob pinned
+            // the base fingerprint, so the plan itself is compatible).
+            (true, None) => self.adaptive = Some(Adaptive::new(&self.cfg, &self.compiled)),
+            (true, Some(sa)) => {
+                ensure!(
+                    sa.cost.space().allow_incremental == self.cfg.incremental_compute,
+                    "adaptive session state was hibernated under a different strategy space"
+                );
+                self.adaptive = Some(sa);
+            }
+        }
         self.cache = st.cache;
         self.last_now = st.last_now;
         self.last_values = st.last_values;
@@ -236,6 +424,7 @@ impl Extractor for Engine {
                         boundary_cmps: 0,
                         served_stale: true,
                         extra_storage_bytes: 0,
+                        replan: None,
                     });
                 }
             }
@@ -245,8 +434,19 @@ impl Extractor for Engine {
         // the executor.
         let wall = Instant::now();
         let interval_ms = self.interval_ms(now);
+        // The trigger gap feeds the cost model *before* the clock
+        // advances (0 on the first trigger: no gap to observe).
+        let gap_ms = match self.last_now {
+            Some(last) => now - last,
+            None => 0,
+        };
+        let exec = match &self.adaptive {
+            Some(a) => a.exec.as_ref().unwrap_or(&self.compiled.exec),
+            None => &self.compiled.exec,
+        };
         let out = pipeline::execute(
             &self.compiled,
+            exec,
             self.codec.as_ref(),
             self.cfg.policy,
             &mut self.cache,
@@ -260,15 +460,39 @@ impl Extractor for Engine {
         if self.cfg.staleness_ttl_ms > 0 {
             self.last_values = Some((now, out.values.clone()));
         }
+        let mut breakdown = out.counters.breakdown();
+        let mut replan = None;
+        let mut due = None;
+        if let Some(adaptive) = &mut self.adaptive {
+            let filter = out.counters.stage(crate::optimizer::lower::Stage::Filter);
+            adaptive.cost.observe(&Observation {
+                gap_ms,
+                fresh_rows: breakdown.rows_retrieved,
+                window_rows: breakdown.rows_from_cache + breakdown.rows_retrieved,
+                filter_rows_in: filter.rows_in,
+                filter_rows_out: filter.rows_out,
+                extract_ns: wall.elapsed().as_nanos() as u64,
+            });
+            due = adaptive.cost.maybe_replan(&adaptive.cfg);
+        }
+        if let Some(next_cfg) = due {
+            let t0 = Instant::now();
+            replan = self.apply_replan(next_cfg);
+            if replan.is_some() {
+                breakdown.replans = 1;
+                breakdown.replan_ns = t0.elapsed().as_nanos() as u64;
+            }
+        }
         Ok(ExtractionResult {
             values: out.values,
-            breakdown: out.counters.breakdown(),
+            breakdown,
             wall_ns: wall.elapsed().as_nanos() as u64,
             cache_bytes: self.cache.used_bytes(),
             cached_types: self.cache.num_types(),
             boundary_cmps: out.boundary_cmps,
             served_stale: false,
             extra_storage_bytes: 0,
+            replan,
         })
     }
 
@@ -289,6 +513,11 @@ impl Extractor for Engine {
         // Incremental states are deltas *over the cache* — they die
         // with it.
         self.inc = None;
+        // A reset session observed nothing: drop the overlay back to the
+        // compiled base and start the cost model cold.
+        if self.adaptive.is_some() {
+            self.adaptive = Some(Adaptive::new(&self.cfg, &self.compiled));
+        }
     }
 }
 
@@ -340,6 +569,7 @@ mod tests {
                 enable_fusion: false,
                 ..EngineConfig::incremental()
             },
+            EngineConfig::adaptive(),
         ] {
             let got = extract_with(cfg, &specs, &cat, &store, &nows);
             for (step, (g, e)) in got.iter().zip(&expected).enumerate() {
@@ -425,6 +655,7 @@ mod tests {
             EngineConfig::incremental(),
             EngineConfig::fusion_only(),
             EngineConfig::stale_tolerant(60_000),
+            EngineConfig::adaptive(),
         ] {
             let compiled = std::sync::Arc::new(
                 crate::engine::offline::compile(specs.clone(), &cat, &cfg).unwrap(),
@@ -504,6 +735,128 @@ mod tests {
             revived.extract(&store, now).unwrap().values,
             eng.extract(&store, now).unwrap().values
         );
+    }
+
+    #[test]
+    fn forced_replans_are_value_transparent() {
+        // The differential invariant of the adaptive loop, in its
+        // deterministic form: drive every strategy/filter transition
+        // through `apply_replan` and hold the session's values exactly
+        // equal to a never-replanned twin's at every trigger.
+        let (cat, specs, store) = setup();
+        let cfg = EngineConfig::adaptive();
+        let base = crate::engine::offline::lower_config(&cfg);
+        let mut adap = Engine::new(specs.clone(), &cat, cfg).unwrap();
+        let mut twin = Engine::new(specs, &cat, EngineConfig::autofeature()).unwrap();
+        let nows = [20, 21, 22, 25, 30, 31, 32, 40].map(|m| m * 60_000i64);
+        for (i, &now) in nows.iter().enumerate() {
+            let ra = adap.extract(&store, now).unwrap();
+            let rt = twin.extract(&store, now).unwrap();
+            assert_eq!(ra.values, rt.values, "diverged at step {i}");
+            match i {
+                1 => {
+                    // cached-rewalk -> one-shot: deliberate invalidation.
+                    let d = adap
+                        .apply_replan(LowerConfig {
+                            enable_cache: false,
+                            ..base
+                        })
+                        .expect("replan to one-shot");
+                    assert_eq!(d.to_strategy, Strategy::OneShot);
+                    assert_eq!(adap.cache_bytes(), 0, "one-shot invalidates the cache");
+                    assert!(!adap.has_incremental_state());
+                }
+                3 => {
+                    // one-shot -> cached-rewalk: back onto the shared
+                    // base plan, overlay dropped.
+                    let d = adap.apply_replan(base).expect("replan back to cached");
+                    assert_eq!(d.to_strategy, Strategy::CachedRewalk);
+                    assert_eq!(
+                        adap.active_exec().fingerprint,
+                        adap.compiled().exec.fingerprint,
+                        "returning to the base config must drop the overlay"
+                    );
+                }
+                5 => {
+                    // Filter-mode flip: same strategy, cache migrates.
+                    assert!(adap.cache_bytes() > 0);
+                    let d = adap
+                        .apply_replan(LowerConfig {
+                            hierarchical_filter: false,
+                            ..base
+                        })
+                        .expect("filter flip");
+                    assert_eq!(d.from_strategy, d.to_strategy);
+                    assert!(adap.cache_bytes() > 0, "filter flip migrates the cache");
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(adap.replans(), 3);
+        assert_eq!(adap.replan_log().len(), 3);
+        let text = adap.explain_adaptive();
+        assert!(text.contains("# base plan"), "{text}");
+        assert!(text.contains("replans=3"), "{text}");
+        assert!(text.contains("# active plan (session overlay)"), "{text}");
+        // Reset drops the overlay and starts the cost model cold.
+        adap.reset();
+        assert_eq!(adap.replans(), 0);
+        assert_eq!(
+            adap.active_exec().fingerprint,
+            adap.compiled().exec.fingerprint
+        );
+    }
+
+    #[test]
+    fn adaptive_state_survives_hibernation() {
+        let (cat, specs, store) = setup();
+        let cfg = EngineConfig::adaptive();
+        let base = crate::engine::offline::lower_config(&cfg);
+        let compiled = std::sync::Arc::new(
+            crate::engine::offline::compile(specs.clone(), &cat, &cfg).unwrap(),
+        );
+        let mut a = Engine::from_shared(std::sync::Arc::clone(&compiled), cfg);
+        a.extract(&store, 20 * 60_000).unwrap();
+        a.extract(&store, 21 * 60_000).unwrap();
+        a.apply_replan(LowerConfig {
+            hierarchical_filter: false,
+            ..base
+        })
+        .expect("forced filter flip");
+        a.extract(&store, 22 * 60_000).unwrap();
+        let blob = a.export_state();
+        assert_eq!(blob, a.export_state(), "export must be deterministic");
+        let mut b = Engine::from_shared(std::sync::Arc::clone(&compiled), cfg);
+        b.import_state(&blob).unwrap();
+        // The replan tally, the overlay plan and the pre-sleep cost
+        // model all cross hibernation.
+        assert_eq!(b.replans(), 1);
+        assert_eq!(b.active_exec().fingerprint, a.active_exec().fingerprint);
+        assert_ne!(b.active_exec().fingerprint, compiled.exec.fingerprint);
+        assert_eq!(
+            b.adaptive.as_ref().unwrap().cost,
+            a.adaptive.as_ref().unwrap().cost,
+            "post-wake cost model must resume from pre-sleep statistics"
+        );
+        for now in [23 * 60_000i64, 25 * 60_000, 40 * 60_000] {
+            assert_eq!(
+                a.extract(&store, now).unwrap().values,
+                b.extract(&store, now).unwrap().values,
+                "diverged @ {now}"
+            );
+        }
+        // An adaptive blob must not rehydrate a non-adaptive session...
+        let mut plain =
+            Engine::from_shared(std::sync::Arc::clone(&compiled), EngineConfig::autofeature());
+        plain.extract(&store, 20 * 60_000).unwrap();
+        assert!(plain.import_state(&blob).is_err());
+        // ...while a static blob into an adaptive session resumes on the
+        // compiled base with a cold model.
+        let static_blob = plain.export_state();
+        let mut c = Engine::from_shared(std::sync::Arc::clone(&compiled), cfg);
+        c.import_state(&static_blob).unwrap();
+        assert_eq!(c.replans(), 0);
+        assert_eq!(c.active_exec().fingerprint, compiled.exec.fingerprint);
     }
 
     #[test]

@@ -23,10 +23,22 @@
 //! payload (before compression):
 //! plan_fingerprint u64 | feature_count varint | flags u8 |
 //! [ last_now ] [ last_values: ts, value* ] |
+//! [ adaptive: allow_incremental u8, cfg_bits u8, replans varint,
+//!   cost-model state ] |
 //! lane_count | ( event_type, watermark, row_count,
 //!                ( ts, seq, attr_count, (attr_id, tagged value)* )* )* |
 //! [ inc bank: synced flag [+ ts], ( present u8 [+ state] )* ]
 //! ```
+//!
+//! The adaptive block (flag `1 << 3`) sits *before* the lanes so decode
+//! can reconstruct the session's overlay plan — re-lowered from
+//! `cfg_bits` over the shared compiled plan — and validate the inc bank
+//! against the **active** plan's aggregation modes, not the base's. The
+//! fingerprint field always pins the *base* plan: the overlay is
+//! derivable (base plan + cfg bits), so a hibernated adaptive session
+//! rehydrates under any sibling of the same compilation. The replan diff
+//! log is observability-only and deliberately not serialized; the cost
+//! model state is, so pre-sleep statistics seed the post-wake model.
 //!
 //! v2 runs the payload through the same per-block codec probe as sealed
 //! applog segments ([`crate::applog::blockcodec`]) — cached lanes repeat
@@ -50,11 +62,13 @@ use crate::cache::entry::{CachedLane, CachedRow};
 use crate::cache::store::CacheStore;
 use crate::features::incremental::IncrementalState;
 use crate::features::value::FeatureValue;
-use crate::optimizer::lower::AggMode;
+use crate::optimizer::cost::{CostConfig, CostModel, StrategySpace};
+use crate::optimizer::lower::{lower, AggMode, LowerConfig};
 use crate::util::wire;
 
 use super::exec::delta::IncBank;
 use super::offline::CompiledEngine;
+use super::online::Adaptive;
 
 const MAGIC: &[u8; 4] = b"AFSS";
 const VERSION_V1: u16 = 1;
@@ -63,6 +77,7 @@ const VERSION_V2: u16 = 2;
 const FLAG_LAST_NOW: u8 = 1 << 0;
 const FLAG_LAST_VALUES: u8 = 1 << 1;
 const FLAG_INC: u8 = 1 << 2;
+const FLAG_ADAPTIVE: u8 = 1 << 3;
 
 /// The decoded session-private mutable state, handed back to the engine.
 pub(crate) struct SessionState {
@@ -70,6 +85,7 @@ pub(crate) struct SessionState {
     pub last_now: Option<TimestampMs>,
     pub last_values: Option<(TimestampMs, Vec<FeatureValue>)>,
     pub inc: Option<IncBank>,
+    pub adaptive: Option<Adaptive>,
 }
 
 pub(crate) fn encode(
@@ -78,6 +94,7 @@ pub(crate) fn encode(
     last_now: Option<TimestampMs>,
     last_values: &Option<(TimestampMs, Vec<FeatureValue>)>,
     inc: &Option<IncBank>,
+    adaptive: &Option<Adaptive>,
 ) -> Vec<u8> {
     // Build the uncompressed payload first; the codec probe wraps it.
     let mut out = Vec::new();
@@ -93,6 +110,9 @@ pub(crate) fn encode(
     if inc.is_some() {
         flags |= FLAG_INC;
     }
+    if adaptive.is_some() {
+        flags |= FLAG_ADAPTIVE;
+    }
     out.push(flags);
     if let Some(t) = last_now {
         wire::put_varint_i64(&mut out, t);
@@ -102,6 +122,12 @@ pub(crate) fn encode(
         for v in values {
             put_value(&mut out, v);
         }
+    }
+    if let Some(a) = adaptive {
+        out.push(a.cost.space().allow_incremental as u8);
+        out.push(a.cfg.to_bits());
+        wire::put_varint(&mut out, a.replans);
+        a.cost.write_state(&mut out);
     }
     let lanes = cache.lanes_sorted();
     wire::put_varint(&mut out, lanes.len() as u64);
@@ -224,7 +250,10 @@ pub(crate) fn decode(
         features.len()
     );
     let flags = wire::get_u8(body, pos)?;
-    ensure!(flags & !(FLAG_LAST_NOW | FLAG_LAST_VALUES | FLAG_INC) == 0, "unknown state flags");
+    ensure!(
+        flags & !(FLAG_LAST_NOW | FLAG_LAST_VALUES | FLAG_INC | FLAG_ADAPTIVE) == 0,
+        "unknown state flags"
+    );
 
     let last_now = if flags & FLAG_LAST_NOW != 0 {
         Some(wire::get_varint_i64(body, pos)?)
@@ -238,6 +267,35 @@ pub(crate) fn decode(
             values.push(get_value(body, pos)?);
         }
         Some((t, values))
+    } else {
+        None
+    };
+
+    // The adaptive block precedes the lanes so the overlay plan exists
+    // before the inc bank is validated against its aggregation modes.
+    let adaptive = if flags & FLAG_ADAPTIVE != 0 {
+        let allow_incremental = wire::get_u8(body, pos)? != 0;
+        let bits = wire::get_u8(body, pos)?;
+        let lcfg = LowerConfig::from_bits(bits);
+        let replans = wire::get_varint(body, pos)?;
+        let cost = CostModel::read_state(
+            CostConfig::default(),
+            StrategySpace { allow_incremental },
+            compiled.span_ms(),
+            body,
+            pos,
+        )?;
+        // Re-lower the overlay from the shared plan; when the bits still
+        // describe the compiled base the overlay stays empty.
+        let lowered = lower(&compiled.plan, &lcfg);
+        let exec = (lowered.fingerprint != compiled.exec.fingerprint).then_some(lowered);
+        Some(Adaptive {
+            cfg: lcfg,
+            exec,
+            cost,
+            replans,
+            log: Vec::new(),
+        })
     } else {
         None
     };
@@ -293,11 +351,18 @@ pub(crate) fn decode(
         } else {
             None
         };
+        // Persistent slots are pinned to the *active* plan's aggregation
+        // modes: an adaptive session that re-lowered to incremental-delta
+        // hibernates banks the base plan doesn't know about.
+        let active_agg = adaptive
+            .as_ref()
+            .and_then(|a| a.exec.as_ref())
+            .map_or(&compiled.exec.agg_modes, |e| &e.agg_modes);
         let mut states = Vec::new();
         for (i, spec) in features.iter().enumerate() {
             if wire::get_u8(body, pos)? != 0 {
                 ensure!(
-                    matches!(compiled.exec.agg_modes[i], AggMode::Persistent),
+                    matches!(active_agg[i], AggMode::Persistent),
                     "persistent state for one-shot feature '{}'",
                     spec.name
                 );
@@ -321,6 +386,7 @@ pub(crate) fn decode(
         last_now,
         last_values,
         inc,
+        adaptive,
     })
 }
 

@@ -125,6 +125,13 @@ pub struct OpBreakdown {
     /// `ColumnBatch + SelectionVector` end-to-end; only the row-walk
     /// oracle and the cache bridge construct rows.
     pub rows_materialized: u64,
+    /// Adaptive replans applied during this extraction (0 or 1 per
+    /// trigger; sums across merges). A replan takes effect *after* the
+    /// trigger that decided it, so the values of the deciding trigger
+    /// were still produced by the old plan.
+    pub replans: u64,
+    /// Time spent re-lowering + migrating session state for replans.
+    pub replan_ns: u64,
 }
 
 impl OpBreakdown {
@@ -136,6 +143,7 @@ impl OpBreakdown {
             + self.compute_ns
             + self.branch_ns
             + self.cache_ns
+            + self.replan_ns
     }
 
     /// Accumulate another breakdown into this one.
@@ -152,6 +160,8 @@ impl OpBreakdown {
         self.rows_replayed += o.rows_replayed;
         self.rows_delta += o.rows_delta;
         self.rows_materialized += o.rows_materialized;
+        self.replans += o.replans;
+        self.replan_ns += o.replan_ns;
     }
 
     /// Time attributed to one op kind.
@@ -185,15 +195,19 @@ mod tests {
             rows_replayed: 5,
             rows_delta: 2,
             rows_materialized: 3,
+            replans: 1,
+            replan_ns: 6,
         };
-        assert_eq!(a.total_ns(), 40);
+        assert_eq!(a.total_ns(), 46);
         let b = a;
         a.merge(&b);
-        assert_eq!(a.total_ns(), 80);
+        assert_eq!(a.total_ns(), 92);
         assert_eq!(a.rows_retrieved, 10);
         assert_eq!(a.rows_replayed, 10);
         assert_eq!(a.rows_delta, 4);
         assert_eq!(a.rows_materialized, 6);
+        assert_eq!(a.replans, 2);
+        assert_eq!(a.replan_ns, 12);
     }
 
     #[test]

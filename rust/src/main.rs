@@ -25,8 +25,10 @@ USAGE:
                     event-driven scheduler with session hibernation instead of the run-to-completion pool)
   autofeature inspect
   autofeature explain [--service cp|kp|sr|pr|vr|all] [--no-fusion] [--no-cache] [--incremental] [--direct-filter]
+                      [--adaptive]   (drive the adaptive scenario set through a diurnal density swing and
+                                      print the cost-model estimates, replan diffs and active overlay)
   autofeature experiment [fig4|fig10|fig11|fig16|fig17|fig18|fig19a|fig19b|fig20|fig21|
-                          ext-staleness|ext-codec|ext-incremental|ext-multimodel|ext-fleet|all]
+                          ext-staleness|ext-codec|ext-incremental|ext-multimodel|ext-fleet|ext-adaptive|all]
                          [--full] [--artifacts DIR]
   autofeature help
 ";
@@ -313,6 +315,45 @@ fn main() -> Result<()> {
             experiments::motivation_stats();
         }
         "explain" => {
+            if args.has("adaptive") {
+                // Drive the adaptive scenario feature set through the
+                // diurnal density swing (sparse phase leads, so the
+                // cost model demotes the cache and later re-enables it)
+                // and print the engine's cost-model view: base plan,
+                // per-strategy estimates, the replan log as annotated
+                // plan diffs, and the active per-session overlay.
+                use autofeature::engine::config::EngineConfig;
+                use autofeature::workload::driver::{run_simulation, TriggerTrain};
+                let catalog = harness::eval_catalog();
+                let cfg = EngineConfig {
+                    adaptive_replan: true,
+                    hierarchical_filter: false,
+                    ..EngineConfig::autofeature()
+                };
+                let phase_ms = 4 * 60 * 60_000;
+                let sim = SimConfig {
+                    period: Period::Night,
+                    activity: ActivityLevel::P90,
+                    warmup_ms: 40 * 60_000,
+                    duration_ms: 2 * phase_ms,
+                    inference_interval_ms: 60_000,
+                    train: TriggerTrain::Diurnal {
+                        phase_ms,
+                        dense_interval_ms: 33 * 60_000, // sparse phase leads
+                        sparse_interval_ms: 60_000,
+                    },
+                    seed: 9,
+                    ..SimConfig::default()
+                };
+                let mut eng = autofeature::engine::online::Engine::new(
+                    experiments::adaptive_feature_set(),
+                    &catalog,
+                    cfg,
+                )?;
+                run_simulation(&catalog, &mut eng, None, &sim)?;
+                print!("{}", eng.explain_adaptive());
+                return Ok(());
+            }
             // Print the lowered ExecPlan IR for a service's feature set
             // (DESIGN.md §ExecPlan). The same rendering the golden
             // plan-snapshot tests pin.
@@ -410,6 +451,9 @@ fn main() -> Result<()> {
             }
             if all || which == "ext-fleet" {
                 experiments::ext_fleet(scale)?;
+            }
+            if all || which == "ext-adaptive" {
+                experiments::ext_adaptive(scale)?;
             }
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),

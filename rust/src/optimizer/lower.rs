@@ -390,7 +390,7 @@ pub struct ExecPlan {
 
 /// Knobs that shape lowering — the subset of the engine configuration
 /// that is *plan structure* rather than per-session state.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LowerConfig {
     /// Cross-execution caching: bridges `Scan` through cached lanes.
     pub enable_cache: bool,
@@ -425,6 +425,40 @@ impl LowerConfig {
             batch_exec: false,
         }
     }
+
+    /// The strategy this config lowers to (the same rules [`lower`]
+    /// applies — kept as one function so replanning and lowering can
+    /// never disagree).
+    pub fn strategy(&self) -> Strategy {
+        if !self.enable_cache {
+            Strategy::OneShot
+        } else if self.incremental_compute {
+            Strategy::IncrementalDelta
+        } else {
+            Strategy::CachedRewalk
+        }
+    }
+
+    /// Pack into one byte (adaptive state blobs; bit order is part of
+    /// the AFSS format and must not change).
+    pub fn to_bits(&self) -> u8 {
+        (self.enable_cache as u8)
+            | (self.incremental_compute as u8) << 1
+            | (self.hierarchical_filter as u8) << 2
+            | (self.projected_decode as u8) << 3
+            | (self.batch_exec as u8) << 4
+    }
+
+    /// Inverse of [`Self::to_bits`] (bits 5..8 ignored).
+    pub fn from_bits(bits: u8) -> Self {
+        LowerConfig {
+            enable_cache: bits & 1 != 0,
+            incremental_compute: bits & 2 != 0,
+            hierarchical_filter: bits & 4 != 0,
+            projected_decode: bits & 8 != 0,
+            batch_exec: bits & 16 != 0,
+        }
+    }
 }
 
 const FNV_OFFSET: u64 = 0xcbf29ce484222325;
@@ -451,13 +485,7 @@ fn fnv_u64(mut h: u64, v: u64) -> u64 {
 ///   [`AggMode::Persistent`] iff [`FeatureAcc::supports_persistent`] —
 ///   the single point where persistent eligibility is decided.
 pub fn lower(plan: &OptimizedPlan, cfg: &LowerConfig) -> ExecPlan {
-    let strategy = if !cfg.enable_cache {
-        Strategy::OneShot
-    } else if cfg.incremental_compute {
-        Strategy::IncrementalDelta
-    } else {
-        Strategy::CachedRewalk
-    };
+    let strategy = cfg.strategy();
     let delta = strategy == Strategy::IncrementalDelta;
 
     let agg_modes: Vec<AggMode> = plan
@@ -628,6 +656,128 @@ impl ExecPlan {
         .unwrap();
         s
     }
+}
+
+/// What one replan changed: strategy transition, the affected pipeline
+/// set, and a rendered before/after operator diff (the observable
+/// `explain()` payoff the ROADMAP item asks for).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplanDelta {
+    /// Plan fingerprint before / after.
+    pub from_fingerprint: u64,
+    pub to_fingerprint: u64,
+    /// Strategy before / after (may be equal on a filter-mode-only
+    /// replan).
+    pub from_strategy: Strategy,
+    pub to_strategy: Strategy,
+    /// Lane indices of pipelines whose operator chain changed.
+    pub changed_lanes: Vec<usize>,
+    /// Unified before/after diff of the changed operators.
+    pub diff: String,
+}
+
+impl ReplanDelta {
+    /// One-line summary: `cached-rewalk -> one-shot (3 pipelines)`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} -> {} ({} pipeline{})",
+            self.from_strategy.label(),
+            self.to_strategy.label(),
+            self.changed_lanes.len(),
+            if self.changed_lanes.len() == 1 { "" } else { "s" },
+        )
+    }
+}
+
+/// Re-lower `plan` under `cfg` and diff the result against the
+/// currently running `current` plan.
+///
+/// Returns `None` when the new config lowers to a fingerprint-identical
+/// plan (nothing to change); otherwise the new plan plus a
+/// [`ReplanDelta`] describing exactly which operators changed. The
+/// *decision* to call this lives in [`super::cost::CostModel`]; the
+/// state consequences (cache/IncBank migration or deliberate
+/// invalidation) live with the caller that owns that state
+/// ([`crate::engine::online::Engine`]).
+pub fn replan(
+    plan: &OptimizedPlan,
+    current: &ExecPlan,
+    cfg: &LowerConfig,
+) -> Option<(ExecPlan, ReplanDelta)> {
+    let next = lower(plan, cfg);
+    if next.fingerprint == current.fingerprint {
+        return None;
+    }
+    let mut changed_lanes = Vec::new();
+    let mut diff = String::new();
+    writeln!(
+        diff,
+        "replan {} -> {} fp {:016x} -> {:016x}",
+        current.strategy.label(),
+        next.strategy.label(),
+        current.fingerprint,
+        next.fingerprint
+    )
+    .unwrap();
+    debug_assert_eq!(current.pipelines.len(), next.pipelines.len());
+    for (old, new) in current.pipelines.iter().zip(&next.pipelines) {
+        if old.fingerprint == new.fingerprint {
+            continue;
+        }
+        changed_lanes.push(new.lane_idx);
+        writeln!(diff, "  pipeline[{}]:", new.lane_idx).unwrap();
+        // Operator chains may differ in length (WindowSlice appears
+        // only under the delta strategy): render removed ops with `-`,
+        // added with `+`, and skip positions that carry over unchanged
+        // (same op + mode; fingerprints always differ downstream of the
+        // first change because they chain).
+        let mut o = old.ops.iter().peekable();
+        let mut n = new.ops.iter().peekable();
+        while o.peek().is_some() || n.peek().is_some() {
+            match (o.peek(), n.peek()) {
+                (Some(a), Some(b)) if a.op == b.op && a.mode == b.mode => {
+                    o.next();
+                    n.next();
+                }
+                (Some(a), Some(b)) if a.op.stage() == b.op.stage() => {
+                    writeln!(diff, "    - {} mode={}", a.op.render(), a.mode.label()).unwrap();
+                    writeln!(diff, "    + {} mode={}", b.op.render(), b.mode.label()).unwrap();
+                    o.next();
+                    n.next();
+                }
+                (Some(a), Some(b)) if (a.op.stage() as u8) < (b.op.stage() as u8) => {
+                    writeln!(diff, "    - {} mode={}", a.op.render(), a.mode.label()).unwrap();
+                    o.next();
+                }
+                (Some(_), Some(b)) => {
+                    writeln!(diff, "    + {} mode={}", b.op.render(), b.mode.label()).unwrap();
+                    n.next();
+                }
+                (Some(a), None) => {
+                    writeln!(diff, "    - {} mode={}", a.op.render(), a.mode.label()).unwrap();
+                    o.next();
+                }
+                (None, Some(b)) => {
+                    writeln!(diff, "    + {} mode={}", b.op.render(), b.mode.label()).unwrap();
+                    n.next();
+                }
+                (None, None) => unreachable!(),
+            }
+        }
+    }
+    if current.emit != next.emit {
+        writeln!(diff, "  - {}", current.emit.op.render()).unwrap();
+        writeln!(diff, "  + {}", next.emit.op.render()).unwrap();
+    }
+    let delta = ReplanDelta {
+        from_fingerprint: current.fingerprint,
+        to_fingerprint: next.fingerprint,
+        from_strategy: current.strategy,
+        to_strategy: next.strategy,
+        changed_lanes,
+        diff,
+    };
+    Some((next, delta))
 }
 
 #[cfg(test)]
@@ -902,5 +1052,68 @@ mod tests {
         let base = lower(&fuse(&plan.features, false), &LowerConfig::baseline());
         assert_eq!(base.strategy, Strategy::OneShot);
         assert!(base.explain().contains("attrs=* (full decode)"));
+    }
+
+    #[test]
+    fn lower_config_bits_roundtrip_and_strategy_rules() {
+        for bits in 0..32u8 {
+            let c = LowerConfig::from_bits(bits);
+            assert_eq!(c.to_bits(), bits);
+            assert_eq!(LowerConfig::from_bits(c.to_bits()), c);
+        }
+        assert_eq!(LowerConfig::baseline().strategy(), Strategy::OneShot);
+        assert_eq!(cfg(true, false).strategy(), Strategy::CachedRewalk);
+        assert_eq!(cfg(true, true).strategy(), Strategy::IncrementalDelta);
+        // lower() and strategy() must agree forever.
+        let plan = sample();
+        for (cache, inc) in [(false, false), (true, false), (true, true)] {
+            let c = cfg(cache, inc);
+            assert_eq!(lower(&plan, &c).strategy, c.strategy());
+        }
+    }
+
+    #[test]
+    fn replan_is_none_for_identical_config() {
+        let plan = sample();
+        let c = cfg(true, false);
+        let current = lower(&plan, &c);
+        assert!(replan(&plan, &current, &c).is_none());
+    }
+
+    #[test]
+    fn replan_diffs_strategy_and_filter_transitions() {
+        let plan = sample();
+        let current = lower(&plan, &cfg(true, false));
+
+        // CachedRewalk -> OneShot: every pipeline's Scan source flips.
+        let mut to = cfg(false, false);
+        let (next, delta) = replan(&plan, &current, &to).unwrap();
+        assert_eq!(next.strategy, Strategy::OneShot);
+        assert_eq!(delta.from_strategy, Strategy::CachedRewalk);
+        assert_eq!(delta.to_strategy, Strategy::OneShot);
+        assert_eq!(delta.changed_lanes.len(), current.pipelines.len());
+        assert_eq!(delta.from_fingerprint, current.fingerprint);
+        assert_eq!(delta.to_fingerprint, next.fingerprint);
+        assert!(delta.diff.contains("replan cached-rewalk -> one-shot"));
+        assert!(delta.diff.contains("- Scan"), "{}", delta.diff);
+        assert!(delta.diff.contains("+ Scan"), "{}", delta.diff);
+        assert!(delta.summary().contains("cached-rewalk -> one-shot"));
+
+        // Filter-mode-only replan: strategy unchanged, Filter ops diff.
+        to = cfg(true, false);
+        to.hierarchical_filter = false;
+        let (next, delta) = replan(&plan, &current, &to).unwrap();
+        assert_eq!(next.strategy, Strategy::CachedRewalk);
+        assert_eq!(delta.from_strategy, delta.to_strategy);
+        assert!(delta.diff.contains("- Filter"), "{}", delta.diff);
+        assert!(delta.diff.contains("+ Filter"), "{}", delta.diff);
+        assert!(!delta.diff.contains("- Scan"), "{}", delta.diff);
+
+        // CachedRewalk -> IncrementalDelta: WindowSlice appears as a
+        // pure insertion; Emit's persistent count changes.
+        let (next, delta) = replan(&plan, &current, &cfg(true, true)).unwrap();
+        assert_eq!(next.strategy, Strategy::IncrementalDelta);
+        assert!(delta.diff.contains("+ WindowSlice"), "{}", delta.diff);
+        assert!(!delta.diff.contains("- WindowSlice"), "{}", delta.diff);
     }
 }

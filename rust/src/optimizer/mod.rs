@@ -21,7 +21,13 @@
 //! into the explicit [`lower::ExecPlan`] operator-pipeline IR that the
 //! single executor in [`crate::engine::exec`] runs for every
 //! configuration (one-shot, cached rewalk, incremental delta).
+//!
+//! Lowering is no longer strictly a compile-time decision: [`cost`]
+//! holds the per-session online cost model whose recommendations feed
+//! [`lower::replan`] — delta re-lowering of a live session's plan when
+//! its observed workload shifts.
 
+pub mod cost;
 pub mod fusion;
 pub mod hierarchical;
 pub mod lower;

@@ -16,6 +16,40 @@ use crate::workload::traces::{log_events, TraceConfig, TraceGenerator};
 
 pub use crate::workload::behavior::{ActivityLevel, Period};
 
+/// Shape of the inference-trigger sequence. The default `Fixed` train is
+/// the historical every-`inference_interval_ms` grid, bit-exact; the
+/// other trains model the workload shifts the adaptive engine must chase
+/// — bursts, diurnal density swings, and one-time clock skew. Every
+/// train is walked statelessly by [`next_trigger`] (pure arithmetic on
+/// the current trigger time), so the sequential driver, the eager
+/// [`fleet_timeline`], and the event-driven scheduler all visit the
+/// exact same set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TriggerTrain {
+    /// One trigger every `inference_interval_ms`.
+    Fixed,
+    /// `burst_len` triggers spaced `burst_interval_ms`, then a `gap_ms`
+    /// lull to the next burst's first trigger (bursty app usage: the
+    /// cost model should steer sparse tails toward one-shot plans).
+    Bursty {
+        burst_len: u32,
+        burst_interval_ms: i64,
+        gap_ms: i64,
+    },
+    /// Alternating phases of length `phase_ms`: dense triggers every
+    /// `dense_interval_ms`, then sparse every `sparse_interval_ms`
+    /// (diurnal day/night density swing).
+    Diurnal {
+        phase_ms: i64,
+        dense_interval_ms: i64,
+        sparse_interval_ms: i64,
+    },
+    /// The fixed grid with a one-time forward clock jump of `skew_ms`
+    /// at the first trigger past `jump_after_ms` into the measured span
+    /// (device clock resync / out-of-order arrival at the boundary).
+    Skew { jump_after_ms: i64, skew_ms: i64 },
+}
+
 /// Simulation parameters.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -28,8 +62,11 @@ pub struct SimConfig {
     pub warmup_ms: i64,
     /// Measured simulation span.
     pub duration_ms: i64,
-    /// Inference trigger interval.
+    /// Inference trigger interval (the `Fixed` train's grid step; the
+    /// base step for `Skew`; unused by `Bursty`/`Diurnal`).
     pub inference_interval_ms: i64,
+    /// Trigger-sequence shape (see [`TriggerTrain`]).
+    pub train: TriggerTrain,
     /// Trace seed (one per simulated user).
     pub seed: u64,
     /// App-log payload codec.
@@ -50,6 +87,7 @@ impl Default for SimConfig {
             warmup_ms: 2 * 60 * 60_000, // 2h of history
             duration_ms: 20 * 60_000,
             inference_interval_ms: 5_000,
+            train: TriggerTrain::Fixed,
             seed: 0,
             codec: CodecKind::Jsonish,
             segment_rows: StoreConfig::default().segment_rows,
@@ -205,11 +243,60 @@ pub fn first_trigger(cfg: &SimConfig) -> i64 {
 }
 
 /// The trigger after `at_ms`, or `None` once the measured span is over.
-/// Mirrors [`run_simulation`]'s `now <= warmup + duration` loop bound
-/// exactly, so an event-driven scheduler walking this function visits
-/// precisely the sequential driver's trigger set.
+/// Stateless: the successor is pure arithmetic on `at_ms` and the
+/// train's geometry (no walker state), so the sequential driver and the
+/// event-driven scheduler — which re-derives successors one at a time,
+/// possibly across hibernation — visit precisely the same trigger set.
+/// For [`TriggerTrain::Fixed`] this is the historical
+/// `at + inference_interval_ms` grid, bit-exact.
 pub fn next_trigger(cfg: &SimConfig, at_ms: i64) -> Option<i64> {
-    let next = at_ms + cfg.inference_interval_ms;
+    let rel = at_ms - first_trigger(cfg);
+    let next = match cfg.train {
+        TriggerTrain::Fixed => at_ms + cfg.inference_interval_ms,
+        TriggerTrain::Bursty {
+            burst_len,
+            burst_interval_ms,
+            gap_ms,
+        } => {
+            // Period = one burst body plus the gap; a trigger inside the
+            // body steps by the burst interval, the body's last trigger
+            // sleeps across the gap.
+            let body = (i64::from(burst_len.max(1)) - 1) * burst_interval_ms;
+            let period = body + gap_ms;
+            if period <= 0 {
+                return None;
+            }
+            if rel.rem_euclid(period) < body {
+                at_ms + burst_interval_ms
+            } else {
+                at_ms + gap_ms
+            }
+        }
+        TriggerTrain::Diurnal {
+            phase_ms,
+            dense_interval_ms,
+            sparse_interval_ms,
+        } => {
+            if (rel / phase_ms.max(1)) % 2 == 0 {
+                at_ms + dense_interval_ms
+            } else {
+                at_ms + sparse_interval_ms
+            }
+        }
+        TriggerTrain::Skew {
+            jump_after_ms,
+            skew_ms,
+        } => {
+            let next = at_ms + cfg.inference_interval_ms;
+            // One-time jump: fires for exactly the first step crossing
+            // `jump_after_ms` (afterwards `rel` is already past it).
+            if rel < jump_after_ms && next - first_trigger(cfg) >= jump_after_ms {
+                next + skew_ms
+            } else {
+                next
+            }
+        }
+    };
     (next <= cfg.warmup_ms + cfg.duration_ms).then_some(next)
 }
 
@@ -223,9 +310,15 @@ pub fn fleet_timeline(users: &[SimConfig]) -> Vec<FleetTrigger> {
     let mut out = Vec::new();
     for (user, cfg) in users.iter().enumerate() {
         let mut at = first_trigger(cfg);
-        while at <= cfg.warmup_ms + cfg.duration_ms {
+        if at > cfg.warmup_ms + cfg.duration_ms {
+            continue;
+        }
+        loop {
             out.push(FleetTrigger { at_ms: at, user });
-            at += cfg.inference_interval_ms;
+            match next_trigger(cfg, at) {
+                Some(n) => at = n,
+                None => break,
+            }
         }
     }
     out.sort_unstable_by_key(|t| (t.at_ms, t.user));
@@ -265,9 +358,9 @@ pub fn run_simulation(
     let cloud: Vec<f32> = (0..64).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 - 0.5).collect();
 
     let mut records = Vec::new();
-    let mut now = cfg.warmup_ms + cfg.inference_interval_ms;
     let horizon = cfg.warmup_ms + cfg.duration_ms;
-    while now <= horizon {
+    let mut pending = Some(first_trigger(cfg)).filter(|&t| t <= horizon);
+    while let Some(now) = pending {
         // Replay newly logged behaviors strictly before the trigger.
         let upto = trace.partition_point(|e| e.timestamp_ms < now);
         if upto > next_event {
@@ -293,7 +386,7 @@ pub fn run_simulation(
             inference_ns,
             prediction,
         });
-        now += cfg.inference_interval_ms;
+        pending = next_trigger(cfg, now);
     }
 
     let extra = records
@@ -436,6 +529,99 @@ mod tests {
         for w in timeline.windows(2) {
             assert!((w[0].at_ms, w[0].user) < (w[1].at_ms, w[1].user));
         }
+    }
+
+    fn walk(cfg: &SimConfig) -> Vec<i64> {
+        let mut v = vec![first_trigger(cfg)];
+        while let Some(n) = next_trigger(cfg, *v.last().unwrap()) {
+            v.push(n);
+        }
+        v
+    }
+
+    #[test]
+    fn trigger_trains_walk_expected_schedules() {
+        let base = SimConfig {
+            warmup_ms: 60_000,
+            duration_ms: 10 * 60_000,
+            inference_interval_ms: 30_000,
+            ..SimConfig::default()
+        };
+        let horizon = base.warmup_ms + base.duration_ms;
+
+        // Fixed: the historical grid, bit-exact.
+        let fixed = walk(&base);
+        assert_eq!(fixed[0], 90_000);
+        assert!(fixed.windows(2).all(|w| w[1] - w[0] == 30_000));
+        assert_eq!(fixed.len(), 20);
+
+        // Bursty: burst_len quick steps, then the gap.
+        let bursty = SimConfig {
+            train: TriggerTrain::Bursty {
+                burst_len: 3,
+                burst_interval_ms: 1_000,
+                gap_ms: 120_000,
+            },
+            ..base.clone()
+        };
+        let gaps: Vec<i64> = walk(&bursty).windows(2).map(|w| w[1] - w[0]).collect();
+        assert_eq!(&gaps[..5], &[1_000, 1_000, 120_000, 1_000, 1_000]);
+
+        // Diurnal: dense phase then sparse phase, both present.
+        let diurnal = SimConfig {
+            train: TriggerTrain::Diurnal {
+                phase_ms: 120_000,
+                dense_interval_ms: 10_000,
+                sparse_interval_ms: 60_000,
+            },
+            ..base.clone()
+        };
+        let gaps: Vec<i64> = walk(&diurnal).windows(2).map(|w| w[1] - w[0]).collect();
+        assert!(gaps.contains(&10_000) && gaps.contains(&60_000), "{gaps:?}");
+        assert!(gaps.iter().all(|g| [10_000, 60_000].contains(g)));
+
+        // Skew: exactly one widened step at the jump, grid otherwise.
+        let skew = SimConfig {
+            train: TriggerTrain::Skew {
+                jump_after_ms: 120_000,
+                skew_ms: 7_000,
+            },
+            ..base.clone()
+        };
+        let gaps: Vec<i64> = walk(&skew).windows(2).map(|w| w[1] - w[0]).collect();
+        assert_eq!(gaps.iter().filter(|&&g| g == 37_000).count(), 1);
+        assert!(gaps.iter().all(|&g| g == 30_000 || g == 37_000));
+
+        // Every train stays inside the measured span, strictly forward.
+        for cfg in [&base, &bursty, &diurnal, &skew] {
+            let t = walk(cfg);
+            assert!(t.windows(2).all(|w| w[1] > w[0]));
+            assert!(*t.last().unwrap() <= horizon);
+            assert!(t[0] == first_trigger(cfg));
+        }
+    }
+
+    #[test]
+    fn simulation_follows_the_trigger_train() {
+        let cat = Catalog::generate(&CatalogConfig::paper(), 42);
+        let cfg = SimConfig {
+            train: TriggerTrain::Bursty {
+                burst_len: 4,
+                burst_interval_ms: 2_000,
+                gap_ms: 90_000,
+            },
+            ..quick_cfg()
+        };
+        let mut naive = NaiveExtractor::new(specs(&cat), CodecKind::Jsonish);
+        let out = run_simulation(&cat, &mut naive, None, &cfg).unwrap();
+        let got: Vec<i64> = out.records.iter().map(|r| r.now).collect();
+        assert_eq!(got, walk(&cfg));
+        // And the merged fleet timeline agrees with the same walk.
+        let mine: Vec<i64> = fleet_timeline(std::slice::from_ref(&cfg))
+            .iter()
+            .map(|t| t.at_ms)
+            .collect();
+        assert_eq!(mine, got);
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Adaptive re-lowering differential suite (ISSUE 9 acceptance).
+//!
+//! The tentpole invariant: **every replan is value-transparent**. An
+//! adaptive session driven through workload shifts — bursty trigger
+//! trains, diurnal density swings, one-time clock skew — must produce
+//! feature values bit-identical to a never-replanned pinned-static twin
+//! at every trigger, across all five services. The opted-in incremental
+//! strategy space relaxes bit equality to the incremental layer's 1e-9
+//! bar. The scheduler arms pin worker-count invariance and hibernation
+//! transparency: the cost model's pre-sleep estimators must seed the
+//! post-wake model so the replan sequence is unchanged.
+
+use autofeature::coordinator::pool::SessionConfig;
+use autofeature::coordinator::sched::{FleetScheduler, SchedConfig, SchedReport};
+use autofeature::engine::config::EngineConfig;
+use autofeature::engine::online::Engine;
+use autofeature::features::value::FeatureValue;
+use autofeature::harness::eval_catalog;
+use autofeature::workload::behavior::{ActivityLevel, Period};
+use autofeature::workload::driver::{run_simulation, SimConfig, SimOutcome, TriggerTrain};
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+
+/// The scenario suite: every train shape the cost model must cope with,
+/// parameterized by the service's native trigger interval.
+fn trains(interval: i64, duration: i64) -> Vec<(&'static str, TriggerTrain)> {
+    vec![
+        ("fixed", TriggerTrain::Fixed),
+        (
+            "bursty",
+            TriggerTrain::Bursty {
+                burst_len: 3,
+                burst_interval_ms: interval,
+                gap_ms: 10 * interval,
+            },
+        ),
+        (
+            "diurnal",
+            TriggerTrain::Diurnal {
+                phase_ms: (duration / 4).max(1),
+                dense_interval_ms: interval,
+                sparse_interval_ms: 6 * interval,
+            },
+        ),
+        (
+            "skew",
+            TriggerTrain::Skew {
+                jump_after_ms: duration / 2,
+                skew_ms: 90_000,
+            },
+        ),
+    ]
+}
+
+fn run(
+    svc: &ServiceSpec,
+    catalog: &autofeature::applog::schema::Catalog,
+    cfg: EngineConfig,
+    sim: &SimConfig,
+) -> SimOutcome {
+    let mut eng = Engine::new(svc.features.clone(), catalog, cfg).unwrap();
+    run_simulation(catalog, &mut eng, None, sim).unwrap()
+}
+
+fn total_replans(out: &SimOutcome) -> u64 {
+    out.records
+        .iter()
+        .map(|r| r.extraction.breakdown.replans)
+        .sum()
+}
+
+/// Default strategy space ({one-shot, cached-rewalk} × filter modes):
+/// bit-identical values against the pinned twin, per service × train.
+#[test]
+fn adaptive_matches_pinned_static_across_services_and_trains() {
+    let catalog = eval_catalog();
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        let interval = svc.inference_interval_ms;
+        let duration = (20 * interval).max(4 * 60_000);
+        for (train_name, train) in trains(interval, duration) {
+            let sim = SimConfig {
+                period: Period::Evening,
+                activity: ActivityLevel::P70,
+                warmup_ms: 20 * 60_000,
+                duration_ms: duration,
+                inference_interval_ms: interval,
+                train,
+                seed: 2026,
+                ..SimConfig::default()
+            };
+            let stat = run(&svc, &catalog, EngineConfig::autofeature(), &sim);
+            let adap = run(&svc, &catalog, EngineConfig::adaptive(), &sim);
+            assert_eq!(
+                stat.records.len(),
+                adap.records.len(),
+                "{} {train_name}: trigger count",
+                kind.id()
+            );
+            for (i, (s, a)) in stat.records.iter().zip(&adap.records).enumerate() {
+                assert_eq!(s.now, a.now, "{} {train_name}: trigger {i} time", kind.id());
+                assert_eq!(
+                    s.extraction.values, a.extraction.values,
+                    "{} {train_name}: trigger {i} values (replans so far: {})",
+                    kind.id(),
+                    total_replans(&adap)
+                );
+            }
+        }
+    }
+}
+
+/// `|a - b| <= 1e-9 · max(|a|, |b|, 1)` — the incremental layer's
+/// documented equality bar.
+fn approx_eq(a: &FeatureValue, b: &FeatureValue) -> bool {
+    fn close(x: f64, y: f64) -> bool {
+        (x - y).abs() <= 1e-9 * x.abs().max(y.abs()).max(1.0)
+    }
+    match (a, b) {
+        (FeatureValue::Scalar(x), FeatureValue::Scalar(y)) => close(*x, *y),
+        (FeatureValue::Vector(x), FeatureValue::Vector(y)) => {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| close(*p, *q))
+        }
+        _ => false,
+    }
+}
+
+/// Opted-in incremental space: the adaptive engine may re-lower into
+/// `IncrementalDelta`, whose equality bar is 1e-9 rather than bit
+/// identity. Compare against the pinned incremental twin.
+#[test]
+fn adaptive_incremental_space_stays_within_tolerance() {
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let interval = svc.inference_interval_ms;
+    let duration = 4 * 60_000;
+    for (train_name, train) in trains(interval, duration) {
+        let sim = SimConfig {
+            period: Period::Evening,
+            activity: ActivityLevel::P70,
+            warmup_ms: 20 * 60_000,
+            duration_ms: duration,
+            inference_interval_ms: interval,
+            train,
+            seed: 2027,
+            ..SimConfig::default()
+        };
+        let stat = run(&svc, &catalog, EngineConfig::incremental(), &sim);
+        let adap = run(
+            &svc,
+            &catalog,
+            EngineConfig {
+                adaptive_replan: true,
+                ..EngineConfig::incremental()
+            },
+            &sim,
+        );
+        assert_eq!(stat.records.len(), adap.records.len(), "{train_name}");
+        for (i, (s, a)) in stat.records.iter().zip(&adap.records).enumerate() {
+            assert_eq!(
+                s.extraction.values.len(),
+                a.extraction.values.len(),
+                "{train_name}: trigger {i} arity"
+            );
+            for (f, (x, y)) in s
+                .extraction
+                .values
+                .iter()
+                .zip(&a.extraction.values)
+                .enumerate()
+            {
+                assert!(
+                    approx_eq(x, y),
+                    "{train_name}: trigger {i} feature {f}: {x:?} vs {y:?}"
+                );
+            }
+        }
+    }
+}
+
+fn sched_run(
+    svc: &ServiceSpec,
+    catalog: &autofeature::applog::schema::Catalog,
+    users: &[SessionConfig],
+    engine: EngineConfig,
+    workers: usize,
+    hibernate_after_ms: i64,
+) -> SchedReport {
+    let sched = FleetScheduler::new(
+        svc.features.clone(),
+        catalog,
+        SchedConfig {
+            workers,
+            hibernate_after_ms,
+            engine,
+            record_values: true,
+            ..SchedConfig::default()
+        },
+    )
+    .unwrap();
+    sched.run(catalog, users, None).unwrap()
+}
+
+/// Scheduler determinism: the adaptive fleet's values AND replan
+/// sequence are invariant to the worker count and to hibernation
+/// (pre-sleep cost-model state seeds the post-wake model), and the
+/// values match a pinned-static fleet (value transparency at fleet
+/// scale).
+#[test]
+fn scheduler_adaptive_is_worker_and_hibernation_invariant() {
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let base = SimConfig {
+        period: Period::Evening,
+        activity: ActivityLevel::P70,
+        warmup_ms: 6 * 60_000,
+        duration_ms: 2 * 60_000,
+        inference_interval_ms: svc.inference_interval_ms,
+        seed: 77,
+        ..SimConfig::default()
+    };
+    let users = SessionConfig::fleet(&base, 6);
+    let baseline = sched_run(&svc, &catalog, &users, EngineConfig::adaptive(), 1, i64::MAX);
+    for (label, workers, hib) in [("4 workers", 4usize, i64::MAX), ("hibernating", 2, 1)] {
+        let other = sched_run(&svc, &catalog, &users, EngineConfig::adaptive(), workers, hib);
+        assert_eq!(baseline.sessions.len(), other.sessions.len(), "{label}");
+        for (a, b) in baseline.sessions.iter().zip(&other.sessions) {
+            assert_eq!(a.user_id, b.user_id, "{label}");
+            assert_eq!(a.requests, b.requests, "{label}: user {}", a.user_id);
+            assert_eq!(a.values, b.values, "{label}: user {} values", a.user_id);
+            assert_eq!(
+                a.metrics.breakdown().replans,
+                b.metrics.breakdown().replans,
+                "{label}: user {} replan count",
+                a.user_id
+            );
+        }
+        assert_eq!(baseline.total_replans(), other.total_replans(), "{label}");
+    }
+    // Fleet-scale value transparency against the pinned static engine.
+    let pinned = sched_run(&svc, &catalog, &users, EngineConfig::autofeature(), 2, i64::MAX);
+    assert_eq!(pinned.total_replans(), 0, "static engines never replan");
+    for (a, p) in baseline.sessions.iter().zip(&pinned.sessions) {
+        assert_eq!(a.values, p.values, "user {}: adaptive vs pinned values", a.user_id);
+    }
+}

@@ -223,3 +223,72 @@ fn recovered_cold_bytes_surface_in_the_arbiter_ledger() {
     assert_eq!(arbiter.cold_bytes(), 0);
     assert_eq!(arbiter.ledger_bytes(), 4_096);
 }
+
+/// ISSUE 9 satellite: the background WAL-checkpoint policy. Sessions
+/// under the fleet scheduler never call `checkpoint()` themselves — the
+/// scheduler folds each session's WAL into a snapshot when it crosses
+/// the byte threshold or when the session hibernates (the hibernation
+/// image doubles as the checkpoint). Both shapes must leave durable
+/// artifacts from which `recover(snapshot, wal)` rebuilds a store —
+/// rows AND extraction values — bit-identical to the retirement ground
+/// truth.
+#[test]
+fn scheduler_wal_checkpoints_recover_bit_identical_stores() {
+    use autofeature::applog::persist;
+    use autofeature::coordinator::pool::SessionConfig;
+    use autofeature::coordinator::sched::{FleetScheduler, SchedConfig};
+    use autofeature::workload::behavior::{ActivityLevel, Period};
+    use autofeature::workload::driver::SimConfig;
+
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::PR, &catalog);
+    let base = SimConfig {
+        period: Period::Evening,
+        activity: ActivityLevel::P70,
+        warmup_ms: 6 * 60_000,
+        duration_ms: 2 * 60_000,
+        inference_interval_ms: svc.inference_interval_ms,
+        seed: 88,
+        ..SimConfig::default()
+    };
+    let users = SessionConfig::fleet(&base, 4);
+    // Two policy shapes: eager byte-threshold folding (every replay
+    // batch folds) and hibernation-image folding (the final trigger's
+    // WAL suffix survives past the last fold, exercising the
+    // snapshot-plus-replay path).
+    for (label, wal_checkpoint_bytes, hibernate_after_ms) in
+        [("threshold", 1usize, i64::MAX), ("hibernate-fold", 1usize << 40, 1)]
+    {
+        let sched = FleetScheduler::new(
+            svc.features.clone(),
+            &catalog,
+            SchedConfig {
+                workers: 2,
+                wal_checkpoint_bytes,
+                hibernate_after_ms,
+                ..SchedConfig::default()
+            },
+        )
+        .unwrap();
+        let report = sched.run(&catalog, &users, None).unwrap();
+        assert!(report.wal_checkpoints > 0, "{label}: scheduler must checkpoint");
+        let now = base.warmup_ms + base.duration_ms + 1;
+        for (slot, durable) in report.durables.iter().enumerate() {
+            let d = durable.as_ref().expect("checkpoint policy records durables");
+            let cfg = StoreConfig::default();
+            let (recovered, _) =
+                DurableAppLog::recover(d.snapshot.as_deref(), &d.wal, cfg.clone()).unwrap();
+            let truth = persist::from_bytes(&d.store_image, cfg).unwrap();
+            assert_stores_identical(
+                recovered.store(),
+                &truth,
+                &format!("{label}: user {slot}"),
+            );
+            assert_eq!(
+                extract_values(&svc, &catalog, recovered.store(), now),
+                extract_values(&svc, &catalog, &truth, now),
+                "{label}: user {slot} extraction values"
+            );
+        }
+    }
+}
