@@ -3,7 +3,10 @@
 //! multiplexed onto a fixed worker pool, reporting peak resident bytes
 //! (live cache + hibernated images) and rehydration latency
 //! percentiles. `BENCH_QUICK=1` shrinks the fleet for smoke runs;
-//! `BENCH_JSON_OUT=<path>` writes the sweep as BENCH_7.json.
+//! `BENCH_JSON_OUT=<path>` writes the sweep as BENCH_7.json, and
+//! `BENCH_DEDUP_JSON_OUT=<path>` writes the shared-vs-private decode
+//! arms (host-global payload arena + fused same-instant decode) as
+//! BENCH_10.json.
 
 mod common;
 
@@ -95,6 +98,142 @@ fn hibernation_sweep() -> anyhow::Result<Vec<Arm>> {
     Ok(arms)
 }
 
+/// The redundancy-elimination sweep: the same huge fleet once with
+/// private per-session payload storage and per-session decode, once
+/// with the host-global payload arena plus fused same-instant
+/// Retrieve+Decode. Per-user values are bit-identical across arms (the
+/// `fleet_dedup_differential` suite pins that); this sweep measures
+/// what the sharing buys — decode time, memo hit fraction, arena bytes.
+fn dedup_sweep() -> anyhow::Result<Vec<Arm>> {
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let num_users: usize = if quick() { 2_000 } else { 100_000 };
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(8);
+    let base = SimConfig {
+        period: Period::Evening,
+        activity: ActivityLevel::P70,
+        warmup_ms: 2 * 60_000,
+        duration_ms: 60_000,
+        inference_interval_ms: 30_000,
+        seed: 2024,
+        // Narrow segments: the 2-minute traces must still seal, or
+        // nothing ever reaches the interning arena.
+        segment_rows: 64,
+        ..SimConfig::default()
+    };
+    let users = SessionConfig::fleet(&base, num_users);
+    let cap = 64 * 1024 * 1024;
+
+    let sched = FleetScheduler::new(
+        svc.features.clone(),
+        &catalog,
+        SchedConfig {
+            workers,
+            global_cache_cap_bytes: cap,
+            ..SchedConfig::default()
+        },
+    )?;
+    let mut arms = Vec::new();
+    for (label, shared) in [("private", false), ("shared", true)] {
+        let runner = FleetScheduler::from_shared(
+            sched.shared_plan(),
+            SchedConfig {
+                workers,
+                global_cache_cap_bytes: cap,
+                shared_arena: shared,
+                fuse_same_instant: if shared { 16 } else { 0 },
+                ..SchedConfig::default()
+            },
+        );
+        let t0 = Instant::now();
+        let report = runner.run(&catalog, &users, None)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let decode_ns: u64 = report
+            .sessions
+            .iter()
+            .map(|s| s.metrics.breakdown().decode_ns)
+            .sum();
+        let lookups = report.shared_decode_hits + report.shared_decode_misses;
+        let frac = if lookups == 0 {
+            0.0
+        } else {
+            report.shared_decode_hits as f64 / lookups as f64
+        };
+        let saved = report.arena.map(|a| a.bytes_saved).unwrap_or(0);
+        println!(
+            "[dedup {label}] {num_users} users / {workers} workers: {} requests in {wall_s:.2} s, \
+             decode {:.2} ms total, shared-decode fraction {frac:.3}, \
+             {} fused groups ({} triggers), arena saved {:.1} KB, peak shared {:.1} KB",
+            report.total_requests(),
+            decode_ns as f64 / 1e6,
+            report.fused_groups,
+            report.fused_triggers,
+            saved as f64 / 1024.0,
+            report.peak_shared_arena_bytes as f64 / 1024.0,
+        );
+        arms.push(Arm {
+            label,
+            report,
+            wall_s,
+        });
+    }
+    Ok(arms)
+}
+
+fn write_dedup_json(path: &str, arms: &[Arm]) {
+    let mut json_arms = String::new();
+    for arm in arms {
+        if !json_arms.is_empty() {
+            json_arms.push_str(",\n");
+        }
+        let r = &arm.report;
+        let decode_ns: u64 = r
+            .sessions
+            .iter()
+            .map(|s| s.metrics.breakdown().decode_ns)
+            .sum();
+        let lookups = r.shared_decode_hits + r.shared_decode_misses;
+        let frac = if lookups == 0 {
+            0.0
+        } else {
+            r.shared_decode_hits as f64 / lookups as f64
+        };
+        json_arms.push_str(&format!(
+            "    {{\"label\": \"{}\", \"users\": {}, \"workers\": {}, \"requests\": {}, \
+             \"decode_ns\": {}, \"shared_decode_hits\": {}, \"shared_decode_misses\": {}, \
+             \"shared_decode_fraction\": {frac:.4}, \"fused_groups\": {}, \
+             \"fused_triggers\": {}, \"arena_bytes_saved\": {}, \
+             \"arena_unique_payloads\": {}, \"peak_shared_arena_bytes\": {}, \
+             \"fleet_p50_ms\": {:.4}, \"fleet_p99_ms\": {:.4}, \"wall_s\": {:.3}}}",
+            arm.label,
+            r.sessions.len(),
+            r.workers,
+            r.total_requests(),
+            decode_ns,
+            r.shared_decode_hits,
+            r.shared_decode_misses,
+            r.fused_groups,
+            r.fused_triggers,
+            r.arena.map(|a| a.bytes_saved).unwrap_or(0),
+            r.arena.map(|a| a.unique_payloads).unwrap_or(0),
+            r.peak_shared_arena_bytes,
+            r.fleet.p50_ms,
+            r.fleet.p99_ms,
+            arm.wall_s,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"pr\": 10,\n  \"bench\": \"fleet_scaling shared-vs-private decode sweep\",\n  \
+         \"quick\": {},\n  \"arms\": [\n{}\n  ]\n}}\n",
+        quick(),
+        json_arms
+    );
+    std::fs::write(path, json).unwrap();
+    println!("wrote {path}");
+}
+
 fn write_json(path: &str, num_users_hint: usize, arms: &[Arm]) {
     let mut json_arms = String::new();
     for arm in arms {
@@ -138,10 +277,15 @@ fn write_json(path: &str, num_users_hint: usize, arms: &[Arm]) {
 fn main() {
     common::run("fleet_scaling", || {
         experiments::ext_fleet(common::scale()).map(|_| ())?;
+        experiments::ext_fleet_dedup(common::scale()).map(|_| ())?;
         let arms = hibernation_sweep()?;
         let users = arms.first().map(|a| a.report.sessions.len()).unwrap_or(0);
         if let Ok(path) = std::env::var("BENCH_JSON_OUT") {
             write_json(&path, users, &arms);
+        }
+        let dedup = dedup_sweep()?;
+        if let Ok(path) = std::env::var("BENCH_DEDUP_JSON_OUT") {
+            write_dedup_json(&path, &dedup);
         }
         Ok(())
     });

@@ -1,0 +1,322 @@
+//! Host-global payload interning + cross-session decode sharing.
+//!
+//! Co-located sessions of one service log byte-identical payloads (the
+//! same screens, the same items, the same serialized attr blobs). Two
+//! structures lift the per-segment payload dictionary (PR 2) across
+//! session boundaries:
+//!
+//! * [`PayloadArena`] — a sharded interning set of `Arc<[u8]>`. A store
+//!   built with `StoreConfig::arena` resolves every *unique sealed
+//!   payload* to one refcounted host-wide allocation instead of a
+//!   private per-segment arena copy. Reclamation is refcount-driven:
+//!   dropping a session's store (hibernate / done) drops its `Arc`s, and
+//!   [`PayloadArena::sweep`] evicts entries nobody references anymore.
+//!   The `CacheArbiter` accounts `resident_bytes()` once, host-wide, as
+//!   a shared tier — not per session.
+//!
+//! * [`SharedDecodeCache`] — a content-keyed memo of
+//!   `AttrCodec::decode_project(payload, attr_union)` results, created
+//!   by the fleet scheduler per *trigger instant* and shared by every
+//!   co-located same-service session served at that instant. Decoding
+//!   is deterministic (same bytes + same union ⇒ same attrs), so
+//!   sharing results cannot change values — only skip work. The
+//!   hit/miss counters are exact (the decode runs under the map lock),
+//!   which is what lets the differential suite *prove* each unique
+//!   payload decodes at most once per instant.
+//!
+//! Only sealed segments intern: the mutable tail owns its row payloads
+//! (`BehaviorEvent`) and is bounded by `StoreConfig::segment_rows`.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::codec::AttrCodec;
+use super::event::{AttrId, AttrValue};
+
+/// Shard count of the interning set (power of two; keeps cross-session
+/// seal contention off a single lock).
+const SHARDS: usize = 16;
+
+/// FNV-1a over a byte slice (shard selection + union fingerprints).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Point-in-time counters of a [`PayloadArena`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Unique payloads currently resident.
+    pub unique_payloads: usize,
+    /// Bytes of unique payloads currently resident (what the arbiter
+    /// charges, once, as the shared tier).
+    pub resident_bytes: usize,
+    /// High-water mark of `resident_bytes`.
+    pub peak_resident_bytes: usize,
+    /// Intern calls that resolved to an existing allocation.
+    pub dedup_hits: u64,
+    /// Intern calls that allocated (first sight of those bytes).
+    pub interned: u64,
+    /// Payload bytes *not* copied thanks to dedup (sum of hit lengths):
+    /// what private per-segment arenas would have duplicated.
+    pub bytes_saved: u64,
+    /// Entries reclaimed by sweeps so far.
+    pub swept: u64,
+}
+
+/// Host-global payload interning arena (see module docs).
+#[derive(Default)]
+pub struct PayloadArena {
+    shards: [Mutex<HashSet<Arc<[u8]>>>; SHARDS],
+    resident_bytes: AtomicUsize,
+    peak_resident_bytes: AtomicUsize,
+    unique: AtomicUsize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes_saved: AtomicU64,
+    swept: AtomicU64,
+}
+
+impl std::fmt::Debug for PayloadArena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PayloadArena")
+            .field("unique", &self.unique.load(Ordering::Relaxed))
+            .field("resident_bytes", &self.resident_bytes.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl PayloadArena {
+    /// An empty arena.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resolve `bytes` to the one shared allocation holding them,
+    /// allocating on first sight. O(1) expected; copies only on miss.
+    pub fn intern(&self, bytes: &[u8]) -> Arc<[u8]> {
+        let shard = &self.shards[(fnv1a(bytes) as usize) % SHARDS];
+        let mut set = shard.lock().unwrap();
+        if let Some(existing) = set.get(bytes) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.bytes_saved
+                .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+            return Arc::clone(existing);
+        }
+        let fresh: Arc<[u8]> = Arc::from(bytes);
+        set.insert(Arc::clone(&fresh));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.unique.fetch_add(1, Ordering::Relaxed);
+        let now = self
+            .resident_bytes
+            .fetch_add(bytes.len(), Ordering::Relaxed)
+            + bytes.len();
+        self.peak_resident_bytes.fetch_max(now, Ordering::Relaxed);
+        fresh
+    }
+
+    /// Reclaim entries no segment references anymore (their only strong
+    /// count is the arena's own). Called after sessions hibernate or
+    /// retire; returns the number of entries reclaimed. The liveness
+    /// check runs under each shard's lock, so it cannot race a
+    /// concurrent [`intern`](Self::intern) resurrecting the entry.
+    pub fn sweep(&self) -> usize {
+        let mut reclaimed = 0usize;
+        let mut bytes = 0usize;
+        for shard in &self.shards {
+            let mut set = shard.lock().unwrap();
+            set.retain(|a| {
+                if Arc::strong_count(a) > 1 {
+                    true
+                } else {
+                    reclaimed += 1;
+                    bytes += a.len();
+                    false
+                }
+            });
+        }
+        self.resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+        self.unique.fetch_sub(reclaimed, Ordering::Relaxed);
+        self.swept.fetch_add(reclaimed as u64, Ordering::Relaxed);
+        reclaimed
+    }
+
+    /// Bytes of unique payloads currently resident (the shared-tier
+    /// charge).
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Current counters, coherently enough for reports (individual
+    /// fields are relaxed atomics).
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            unique_payloads: self.unique.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+            peak_resident_bytes: self.peak_resident_bytes.load(Ordering::Relaxed),
+            dedup_hits: self.hits.load(Ordering::Relaxed),
+            interned: self.misses.load(Ordering::Relaxed),
+            bytes_saved: self.bytes_saved.load(Ordering::Relaxed),
+            swept: self.swept.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Cross-session decode memo for one trigger instant (see module docs).
+///
+/// Keys are `(attr-union fingerprint, payload bytes)`; values the
+/// projected decode. Lookups borrow the payload as `&[u8]`; inserts
+/// reuse the segment's interned `Arc` when available (zero-copy key) and
+/// copy otherwise (tail rows).
+#[derive(Default)]
+pub struct SharedDecodeCache {
+    map: Mutex<HashMap<u64, HashMap<Arc<[u8]>, Vec<(AttrId, AttrValue)>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SharedDecodeCache {
+    /// An empty cache (one per fused trigger-instant group).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fingerprint of a sorted attr union — the outer memo key. Distinct
+    /// unions must never share decode results (a projection under union
+    /// A is not a projection under union B).
+    pub fn union_fingerprint(wanted: &[AttrId]) -> u64 {
+        let mut h = 0xcbf29ce484222325u64 ^ (wanted.len() as u64);
+        for &a in wanted {
+            h ^= a as u64 + 1;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// `codec.decode_project(payload, wanted)` through the memo.
+    /// `interned` (the segment's arena `Arc`, when the payload is
+    /// interned) avoids copying the key bytes on miss. The decode runs
+    /// under the map lock, so `misses()` counts decode executions
+    /// *exactly* — the property the differential suite asserts on.
+    pub fn decode_project(
+        &self,
+        payload: &[u8],
+        interned: Option<Arc<[u8]>>,
+        union_fp: u64,
+        codec: &dyn AttrCodec,
+        wanted: &[AttrId],
+    ) -> Result<Vec<(AttrId, AttrValue)>> {
+        let mut map = self.map.lock().unwrap();
+        let inner = map.entry(union_fp).or_default();
+        if let Some(attrs) = inner.get(payload) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(attrs.clone());
+        }
+        let attrs = codec.decode_project(payload, wanted)?;
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let key = interned.unwrap_or_else(|| Arc::from(payload));
+        debug_assert_eq!(&key[..], payload, "interned Arc must hold the payload bytes");
+        inner.insert(key, attrs.clone());
+        Ok(attrs)
+    }
+
+    /// Lookups served from the memo (work another session — or an
+    /// earlier batch of this one — already paid for).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Decode executions through this cache == decode-table builds: the
+    /// "each unique payload decodes once per instant" counter.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::applog::codec::JsonishCodec;
+
+    #[test]
+    fn intern_dedups_and_tracks_bytes() {
+        let arena = PayloadArena::new();
+        let a = arena.intern(b"payload-one");
+        let b = arena.intern(b"payload-one");
+        let c = arena.intern(b"payload-two!");
+        assert!(Arc::ptr_eq(&a, &b), "identical bytes must share one allocation");
+        assert!(!Arc::ptr_eq(&a, &c));
+        let st = arena.stats();
+        assert_eq!(st.unique_payloads, 2);
+        assert_eq!(st.resident_bytes, b"payload-one".len() + b"payload-two!".len());
+        assert_eq!(st.dedup_hits, 1);
+        assert_eq!(st.interned, 2);
+        assert_eq!(st.bytes_saved, b"payload-one".len() as u64);
+    }
+
+    #[test]
+    fn sweep_reclaims_only_unreferenced_entries() {
+        let arena = PayloadArena::new();
+        let held = arena.intern(b"held");
+        let dropped = arena.intern(b"dropped");
+        drop(dropped);
+        assert_eq!(arena.sweep(), 1);
+        let st = arena.stats();
+        assert_eq!(st.unique_payloads, 1);
+        assert_eq!(st.resident_bytes, 4);
+        assert_eq!(st.swept, 1);
+        // The survivor is still served shared.
+        let again = arena.intern(b"held");
+        assert!(Arc::ptr_eq(&held, &again));
+        // Re-interning after a sweep re-allocates cleanly.
+        let revived = arena.intern(b"dropped");
+        assert_eq!(&revived[..], b"dropped");
+        assert_eq!(arena.stats().unique_payloads, 2);
+    }
+
+    #[test]
+    fn shared_decode_memoizes_per_union() {
+        let codec = JsonishCodec;
+        let attrs = vec![(0u16, AttrValue::Int(7)), (3u16, AttrValue::Int(9))];
+        let payload = crate::applog::codec::AttrCodec::encode(&codec, &attrs);
+        let cache = SharedDecodeCache::new();
+        let u_a: Vec<AttrId> = vec![0];
+        let u_b: Vec<AttrId> = vec![0, 3];
+        let fp_a = SharedDecodeCache::union_fingerprint(&u_a);
+        let fp_b = SharedDecodeCache::union_fingerprint(&u_b);
+        assert_ne!(fp_a, fp_b);
+
+        let r1 = cache.decode_project(&payload, None, fp_a, &codec, &u_a).unwrap();
+        let r2 = cache.decode_project(&payload, None, fp_a, &codec, &u_a).unwrap();
+        assert_eq!(r1, r2);
+        assert_eq!(r1, codec.decode_project(&payload, &u_a).unwrap());
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+
+        // A different union must decode independently (never share).
+        let r3 = cache.decode_project(&payload, None, fp_b, &codec, &u_b).unwrap();
+        assert_eq!(r3, codec.decode_project(&payload, &u_b).unwrap());
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+
+        // Interned-key inserts behave identically.
+        let arena = PayloadArena::new();
+        let arc = arena.intern(&payload);
+        let other = crate::applog::codec::AttrCodec::encode(
+            &codec,
+            &[(0u16, AttrValue::Int(8))],
+        );
+        let r4 = cache
+            .decode_project(&other, Some(arena.intern(&other)), fp_a, &codec, &u_a)
+            .unwrap();
+        assert_eq!(r4, codec.decode_project(&other, &u_a).unwrap());
+        let r5 = cache.decode_project(&payload, Some(arc), fp_a, &codec, &u_a).unwrap();
+        assert_eq!(r5, r1, "interned and copied keys must hit the same entry");
+        assert_eq!((cache.hits(), cache.misses()), (2, 3));
+    }
+}

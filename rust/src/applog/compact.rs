@@ -7,13 +7,16 @@
 //! differential test sweep (`rust/tests/applog_differential.rs`) pins
 //! bit-for-bit across compaction thresholds.
 
+use super::arena::PayloadArena;
 use super::event::BehaviorEvent;
 use super::segment::{Segment, MAX_DICT_TYPES};
 
 /// Seal `rows` (chronological, seq-increasing) into one or more
 /// segments. Normally produces a single segment; splits early only when
-/// a segment would exceed the one-byte type-dictionary capacity.
-pub fn seal(rows: &[BehaviorEvent]) -> Vec<Segment> {
+/// a segment would exceed the one-byte type-dictionary capacity. With a
+/// `shared` arena the segments intern their unique payloads host-wide
+/// instead of holding private copies.
+pub fn seal(rows: &[BehaviorEvent], shared: Option<&PayloadArena>) -> Vec<Segment> {
     let mut segments = Vec::new();
     let mut start = 0usize;
     while start < rows.len() {
@@ -29,7 +32,7 @@ pub fn seal(rows: &[BehaviorEvent]) -> Vec<Segment> {
             }
             end += 1;
         }
-        segments.push(Segment::build(&rows[start..end]));
+        segments.push(Segment::build_in(&rows[start..end], shared));
         start = end;
     }
     segments
@@ -51,7 +54,7 @@ mod tests {
     #[test]
     fn seal_produces_one_segment_normally() {
         let rows: Vec<_> = (0..100).map(|i| row(i, (i % 5) as u16, i as i64)).collect();
-        let segs = seal(&rows);
+        let segs = seal(&rows, None);
         assert_eq!(segs.len(), 1);
         assert_eq!(segs[0].len(), 100);
     }
@@ -60,7 +63,7 @@ mod tests {
     fn seal_splits_when_type_dictionary_would_overflow() {
         // 300 distinct types cannot share one segment's u8 code space.
         let rows: Vec<_> = (0..300).map(|i| row(i, i as u16, i as i64)).collect();
-        let segs = seal(&rows);
+        let segs = seal(&rows, None);
         assert!(segs.len() >= 2);
         assert_eq!(segs.iter().map(|s| s.len()).sum::<usize>(), 300);
         assert_eq!(segs[0].len(), MAX_DICT_TYPES);
@@ -68,6 +71,6 @@ mod tests {
 
     #[test]
     fn seal_empty_is_empty() {
-        assert!(seal(&[]).is_empty());
+        assert!(seal(&[], None).is_empty());
     }
 }

@@ -8,6 +8,8 @@
 //! counts and storage cost (paper footnote 1).
 //!
 //! This module provides that substrate:
+//! * [`arena`] — the host-global payload interning arena and the
+//!   cross-session shared decode cache (fleet-level dedup),
 //! * [`event`] — event rows and attribute values,
 //! * [`schema`] — the behavior-type catalog (attribute schemas follow the
 //!   paper's Fig. 3 distribution),
@@ -30,6 +32,7 @@
 //!   (`SELECT * WHERE event_name IN (..) AND timestamp > t`) with
 //!   zone-map segment pruning and the fused Retrieve+Decode projection.
 
+pub mod arena;
 pub mod blockcodec;
 pub mod codec;
 pub mod compact;

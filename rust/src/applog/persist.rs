@@ -365,9 +365,14 @@ fn from_bytes_v2plus(data: &[u8], cfg: StoreConfig, version: u16) -> Result<Load
         let block_len = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize;
         let block = take(&mut i, block_len)?;
         let sealed = if version >= VERSION_V4 {
-            SealedSegment::from_image(block.to_vec())?
+            // Cold load: the arena handle rides along so the lazy decode
+            // interns when a query first heats the segment.
+            SealedSegment::from_image_in(block.to_vec(), cfg.arena.clone())?
         } else {
-            SealedSegment::from_segment(Segment::decode(block)?, cfg.block_codec)
+            SealedSegment::from_segment(
+                Segment::decode_in(block, cfg.arena.as_deref())?,
+                cfg.block_codec,
+            )
         };
         if let Some(t) = last_ts {
             ensure!(sealed.min_ts() >= t, "segments out of chronological order");

@@ -33,6 +33,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::arena::SharedDecodeCache;
 use super::codec::AttrCodec;
 use super::event::{AttrId, AttrValue, BehaviorEvent, EventTypeId, TimestampMs};
 use super::segment::SealedSegment;
@@ -281,6 +282,17 @@ impl<'a> ColumnBatch<'a> {
         }
     }
 
+    /// The host-global interned allocation behind the payload at `pos`
+    /// (`None` for tail rows and private-arena segments). Lets the
+    /// cross-session decode cache key inserts without copying bytes.
+    #[inline]
+    pub fn payload_arc(&self, pos: u32) -> Option<std::sync::Arc<[u8]>> {
+        match self.cols {
+            BatchCols::Seg(seg) => seg.hot().payload_arc_at(pos).cloned(),
+            BatchCols::Tail { .. } => None,
+        }
+    }
+
     /// Whether the batch's payload dictionary actually de-duplicates
     /// (decode memoization is only worth keying when it does).
     pub fn dedup_payloads(&self) -> bool {
@@ -445,6 +457,26 @@ pub fn retrieve_project(
     codec: &dyn AttrCodec,
     wanted: &[AttrId],
 ) -> Result<(Vec<DecodedRow>, RetrieveDecodeStats)> {
+    retrieve_project_shared(store, event_type, window, codec, wanted, None)
+}
+
+/// [`retrieve_project`] with an optional cross-session decode cache:
+/// when several co-located sessions of one service fire at the same
+/// timeline instant, the coordinator hands each the same
+/// [`SharedDecodeCache`] so a payload shared between their segments
+/// (via the host-global [`super::arena::PayloadArena`]) decodes once
+/// per unique `(payload, attr union)` across the whole group instead of
+/// once per session. With `shared == None` this is exactly
+/// `retrieve_project`.
+pub fn retrieve_project_shared(
+    store: &AppLogStore,
+    event_type: EventTypeId,
+    window: TimeWindow,
+    codec: &dyn AttrCodec,
+    wanted: &[AttrId],
+    shared: Option<&SharedDecodeCache>,
+) -> Result<(Vec<DecodedRow>, RetrieveDecodeStats)> {
+    let union_fp = shared.map(|_| SharedDecodeCache::union_fingerprint(wanted));
     let mut out = Vec::new();
     let mut stats = RetrieveDecodeStats::default();
     let mut sel = SelectionVector::new();
@@ -473,6 +505,22 @@ pub fn retrieve_project(
         let t0 = Instant::now();
         let dedup = batch.dedup_payloads();
         memo.clear();
+        // One decode per unique payload: the per-segment memo handles
+        // intra-segment duplicates; on a memo miss the cross-session
+        // cache (when present) handles duplicates across the fused
+        // trigger group's segments.
+        let decode_one = |batch: &ColumnBatch, p: u32| -> Result<Vec<(AttrId, AttrValue)>> {
+            match (shared, union_fp) {
+                (Some(cache), Some(fp)) => cache.decode_project(
+                    batch.payload_at(p),
+                    batch.payload_arc(p),
+                    fp,
+                    codec,
+                    wanted,
+                ),
+                _ => codec.decode_project(batch.payload_at(p), wanted),
+            }
+        };
         for &p in sel.positions() {
             let attrs = if dedup {
                 let code = batch
@@ -481,13 +529,13 @@ pub fn retrieve_project(
                 match memo.get(&code) {
                     Some(a) => a.clone(),
                     None => {
-                        let a = codec.decode_project(batch.payload_at(p), wanted)?;
+                        let a = decode_one(&batch, p)?;
                         memo.insert(code, a.clone());
                         a
                     }
                 }
             } else {
-                codec.decode_project(batch.payload_at(p), wanted)?
+                decode_one(&batch, p)?
             };
             out.push(DecodedRow {
                 ts: batch.ts_at(p),

@@ -25,10 +25,11 @@
 //! `AppLogStore::storage_bytes` accounts as bytes-on-device.
 
 use std::collections::HashMap;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{ensure, Result};
 
+use super::arena::PayloadArena;
 use super::blockcodec::{self, BlockCodec, CodecPolicy};
 use super::event::{BehaviorEvent, EventTypeId, TimestampMs};
 use crate::util::wire;
@@ -127,9 +128,15 @@ pub struct Segment {
     /// Per dictionary entry: positions (row offsets) of its rows.
     type_positions: Vec<Vec<u32>>,
     pub(crate) payload_codes: Vec<u32>,
-    /// Per unique payload: `(offset, len)` into the arena.
+    /// Per unique payload: `(offset, len)` into the private arena
+    /// (empty when `interned` holds the payloads instead).
     payload_dict: Vec<(u32, u32)>,
     arena: Vec<u8>,
+    /// Host-global interned payloads, one `Arc` per unique payload
+    /// (replaces `payload_dict`/`arena` when the store carries a
+    /// [`PayloadArena`]): byte-identical payloads across every segment
+    /// and every co-located session share one allocation.
+    interned: Option<Vec<Arc<[u8]>>>,
     // Zone map.
     pub(crate) min_ts: TimestampMs,
     pub(crate) max_ts: TimestampMs,
@@ -198,11 +205,51 @@ impl Segment {
             payload_codes,
             payload_dict,
             arena,
+            interned: None,
             bitmap,
             encoded_bytes: 0,
         };
         seg.encoded_bytes = seg.encoded_size();
         seg
+    }
+
+    /// [`Segment::build`], interning unique payloads into a host-global
+    /// arena when one is attached (the private per-segment copy is
+    /// dropped). Byte layout of [`Segment::encode`] and every query
+    /// answer are identical either way — interning only changes *where*
+    /// the unique payload bytes live.
+    pub fn build_in(rows: &[BehaviorEvent], shared: Option<&PayloadArena>) -> Segment {
+        let mut seg = Segment::build(rows);
+        if let Some(a) = shared {
+            seg.intern_into(a);
+        }
+        seg
+    }
+
+    /// Re-home this segment's unique payloads into `shared`, dropping
+    /// the private arena. Idempotent.
+    pub(crate) fn intern_into(&mut self, shared: &PayloadArena) {
+        if self.interned.is_some() {
+            return;
+        }
+        let mut v: Vec<Arc<[u8]>> = Vec::with_capacity(self.payload_dict.len());
+        for &(off, len) in &self.payload_dict {
+            v.push(shared.intern(&self.arena[off as usize..(off + len) as usize]));
+        }
+        self.interned = Some(v);
+        self.payload_dict = Vec::new();
+        self.arena = Vec::new();
+    }
+
+    /// Whether unique payloads live in a host-global arena.
+    pub fn is_interned(&self) -> bool {
+        self.interned.is_some()
+    }
+
+    /// Bytes of payload data this segment holds *privately* (zero once
+    /// interned — the shared tier owns the bytes then).
+    pub fn private_payload_bytes(&self) -> usize {
+        self.arena.len()
     }
 
     /// Arithmetic size of [`Segment::encode`]'s output, without
@@ -222,8 +269,9 @@ impl Segment {
         }
         size += 2 + 2 * self.type_dict.len() + self.type_codes.len();
         size += 4;
-        for &(_, len) in &self.payload_dict {
-            size += varint_len(len as u64) + len as usize;
+        for code in 0..self.unique_payloads() {
+            let len = self.payload_bytes(code).len();
+            size += varint_len(len as u64) + len;
         }
         for &c in &self.payload_codes {
             size += varint_len(c as u64);
@@ -295,16 +343,41 @@ impl Segment {
         self.type_dict[self.type_codes[pos as usize] as usize]
     }
 
-    /// Payload bytes of the row at `pos` (borrowed from the arena).
+    /// Payload bytes of the row at `pos` (borrowed from the private
+    /// arena or the host-global one).
     #[inline]
     pub(crate) fn payload_at(&self, pos: u32) -> &[u8] {
-        let (off, len) = self.payload_dict[self.payload_codes[pos as usize] as usize];
-        &self.arena[off as usize..(off + len) as usize]
+        self.payload_bytes(self.payload_codes[pos as usize] as usize)
+    }
+
+    /// Bytes of one unique payload by dictionary code.
+    #[inline]
+    pub(crate) fn payload_bytes(&self, code: usize) -> &[u8] {
+        match &self.interned {
+            Some(v) => &v[code],
+            None => {
+                let (off, len) = self.payload_dict[code];
+                &self.arena[off as usize..(off + len) as usize]
+            }
+        }
+    }
+
+    /// The interned allocation behind the row at `pos` (`None` on
+    /// private-arena segments). Lets the shared decode cache key
+    /// inserts without copying payload bytes.
+    #[inline]
+    pub(crate) fn payload_arc_at(&self, pos: u32) -> Option<&Arc<[u8]>> {
+        self.interned
+            .as_ref()
+            .map(|v| &v[self.payload_codes[pos as usize] as usize])
     }
 
     /// Number of unique payloads (dictionary size).
     pub fn unique_payloads(&self) -> usize {
-        self.payload_dict.len()
+        match &self.interned {
+            Some(v) => v.len(),
+            None => self.payload_dict.len(),
+        }
     }
 
     /// Materialize the row at `pos` as an owned event.
@@ -377,10 +450,11 @@ impl Segment {
         }
         type_col.extend_from_slice(&self.type_codes);
         let mut pdict_col = Vec::with_capacity(4 + self.arena.len());
-        pdict_col.extend_from_slice(&(self.payload_dict.len() as u32).to_le_bytes());
-        for &(off, len) in &self.payload_dict {
-            put_varint(&mut pdict_col, len as u64);
-            pdict_col.extend_from_slice(&self.arena[off as usize..(off + len) as usize]);
+        pdict_col.extend_from_slice(&(self.unique_payloads() as u32).to_le_bytes());
+        for code in 0..self.unique_payloads() {
+            let bytes = self.payload_bytes(code);
+            put_varint(&mut pdict_col, bytes.len() as u64);
+            pdict_col.extend_from_slice(bytes);
         }
         let mut pcode_col = Vec::with_capacity(self.len());
         for &c in &self.payload_codes {
@@ -394,6 +468,12 @@ impl Segment {
     /// sealed segment guarantees (chronological timestamps, strictly
     /// increasing seq_nos, in-range dictionary codes).
     pub fn decode(block: &[u8]) -> Result<Segment> {
+        Self::decode_in(block, None)
+    }
+
+    /// [`Segment::decode`], interning unique payloads into a host-global
+    /// arena when one is attached.
+    pub fn decode_in(block: &[u8], shared: Option<&PayloadArena>) -> Result<Segment> {
         // NB: `n` can come from an attacker-controlled varint, so the
         // bounds check must not compute `*i + n` (usize overflow).
         let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
@@ -478,7 +558,7 @@ impl Segment {
         }
         ensure!(i == block.len(), "trailing bytes in segment block");
 
-        Ok(Segment {
+        let mut seg = Segment {
             ts,
             seq,
             type_codes,
@@ -487,11 +567,16 @@ impl Segment {
             payload_codes,
             payload_dict,
             arena,
+            interned: None,
             min_ts,
             max_ts,
             bitmap,
             encoded_bytes: block.len(),
-        })
+        };
+        if let Some(a) = shared {
+            seg.intern_into(a);
+        }
+        Ok(seg)
     }
 }
 
@@ -541,6 +626,10 @@ pub struct SealedSegment {
     cols: [ColumnBlock; 5],
     image: Vec<u8>,
     hot: OnceLock<Segment>,
+    /// Host-global arena the lazy decode interns into (cold loads of a
+    /// store whose config carries one). Seal-time segments intern at
+    /// build and keep their hot form, so they never consult this.
+    shared: Option<Arc<PayloadArena>>,
 }
 
 impl SealedSegment {
@@ -583,6 +672,21 @@ impl SealedSegment {
     /// path): CRC and header invariants are verified now, column blocks
     /// stay compressed until [`SealedSegment::hot`] is first called.
     pub fn from_image(image: Vec<u8>) -> Result<SealedSegment> {
+        Self::from_image_in(image, None)
+    }
+
+    /// [`SealedSegment::from_image`] with a host-global arena for the
+    /// lazy decode to intern unique payloads into.
+    pub fn from_image_in(
+        image: Vec<u8>,
+        shared: Option<Arc<PayloadArena>>,
+    ) -> Result<SealedSegment> {
+        let mut sealed = Self::from_image_cold(image)?;
+        sealed.shared = shared;
+        Ok(sealed)
+    }
+
+    fn from_image_cold(image: Vec<u8>) -> Result<SealedSegment> {
         ensure!(image.len() >= 4 + 1 + 41 + 4, "sealed-segment image too short");
         ensure!(
             image.len() <= u32::MAX as usize,
@@ -653,6 +757,7 @@ impl SealedSegment {
             cols,
             image,
             hot: OnceLock::new(),
+            shared: None,
         })
     }
 
@@ -672,7 +777,7 @@ impl SealedSegment {
             let enc = &body[c.start as usize..(c.start + c.len) as usize];
             buf.extend_from_slice(&blockcodec::decompress(c.codec, enc, c.raw_len as usize)?);
         }
-        let seg = Segment::decode(&buf)?;
+        let seg = Segment::decode_in(&buf, self.shared.as_deref())?;
         ensure!(
             *seg.seq.last().unwrap() == self.last_seq,
             "sealed-segment last_seq mismatch"
@@ -991,6 +1096,60 @@ mod tests {
         let mut long = image;
         long.push(0);
         assert!(SealedSegment::from_image(long).is_err());
+    }
+
+    #[test]
+    fn interned_segments_are_byte_identical_and_shared() {
+        let src = rows(24);
+        let arena = PayloadArena::new();
+        let private = Segment::build(&src);
+        let interned = Segment::build_in(&src, Some(&arena));
+        assert!(interned.is_interned() && !private.is_interned());
+        assert_eq!(interned.unique_payloads(), private.unique_payloads());
+        // Interning is invisible to the durable layout and every query.
+        assert_eq!(private.encode(), interned.encode());
+        assert_eq!(private.encoded_bytes(), interned.encoded_bytes());
+        for pos in 0..src.len() as u32 {
+            assert_eq!(private.payload_at(pos), interned.payload_at(pos));
+            assert!(interned.payload_arc_at(pos).is_some());
+            assert!(private.payload_arc_at(pos).is_none());
+        }
+        assert_eq!(interned.private_payload_bytes(), 0);
+        // A sibling built from the same rows shares the allocations.
+        let sibling = Segment::build_in(&src, Some(&arena));
+        for pos in 0..src.len() as u32 {
+            assert!(Arc::ptr_eq(
+                sibling.payload_arc_at(pos).unwrap(),
+                interned.payload_arc_at(pos).unwrap()
+            ));
+        }
+        assert_eq!(arena.stats().unique_payloads, private.unique_payloads());
+
+        // Sealed images are identical, and a cold load with an arena
+        // attached interns only on first heat.
+        let sealed = SealedSegment::from_segment(
+            Segment::build_in(&src, Some(&arena)),
+            CodecPolicy::Probe,
+        );
+        let plain = SealedSegment::from_segment(Segment::build(&src), CodecPolicy::Probe);
+        assert_eq!(sealed.image(), plain.image());
+        let arena2 = Arc::new(PayloadArena::new());
+        let cold =
+            SealedSegment::from_image_in(sealed.image().to_vec(), Some(Arc::clone(&arena2)))
+                .unwrap();
+        assert!(!cold.is_hot());
+        assert_eq!(arena2.stats().unique_payloads, 0);
+        let hot = cold.hot();
+        assert!(hot.is_interned());
+        assert_eq!(arena2.stats().unique_payloads, private.unique_payloads());
+        for (pos, r) in src.iter().enumerate() {
+            assert_eq!(hot.payload_at(pos as u32), r.payload.as_slice());
+        }
+        // Refcount-driven reclamation: dropping the only holder frees
+        // the entries on the next sweep.
+        drop(cold);
+        assert_eq!(arena2.sweep(), private.unique_payloads());
+        assert_eq!(arena2.resident_bytes(), 0);
     }
 
     #[test]

@@ -14,8 +14,11 @@
 //! previous flat row store exactly — the differential tests use that arm
 //! as the reference oracle.
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
+use super::arena::PayloadArena;
 use super::blockcodec::CodecPolicy;
 use super::compact;
 use super::event::{BehaviorEvent, EventTypeId, TimestampMs};
@@ -35,6 +38,13 @@ pub struct StoreConfig {
     /// (see [`super::blockcodec`]). `Probe` picks the smallest codec per
     /// column; the fixed variants are the ablation arms.
     pub block_codec: CodecPolicy,
+    /// Host-global payload interning arena ([`super::arena`]). When set,
+    /// sealed segments resolve their unique payloads to shared
+    /// refcounted allocations (byte-identical payloads across every
+    /// co-located session are stored once) instead of private
+    /// per-segment copies. `None` (the default) keeps the private
+    /// layout. Durable bytes and query answers are identical either way.
+    pub arena: Option<Arc<PayloadArena>>,
 }
 
 impl Default for StoreConfig {
@@ -44,6 +54,7 @@ impl Default for StoreConfig {
             retention_ms: 7 * 24 * 3600 * 1000,
             segment_rows: 256,
             block_codec: CodecPolicy::default(),
+            arena: None,
         }
     }
 }
@@ -175,7 +186,7 @@ impl AppLogStore {
         if self.tail.is_empty() {
             return;
         }
-        for seg in compact::seal(&self.tail) {
+        for seg in compact::seal(&self.tail, self.cfg.arena.as_deref()) {
             self.seg_starts.push(self.seg_rows);
             self.seg_rows += seg.len();
             self.segments
@@ -272,6 +283,11 @@ impl AppLogStore {
         &self.segments
     }
 
+    /// The host-global payload arena this store interns into, if any.
+    pub fn arena(&self) -> Option<&Arc<PayloadArena>> {
+        self.cfg.arena.as_ref()
+    }
+
     /// Tail rows (query path).
     pub(crate) fn tail(&self) -> &[BehaviorEvent] {
         &self.tail
@@ -333,6 +349,20 @@ impl AppLogStore {
         self.segments.iter().filter(|s| s.is_hot()).count()
     }
 
+    /// In-memory payload bytes privately owned by this session's log:
+    /// hot segments' private arenas plus the row tail. Payloads interned
+    /// into a shared [`PayloadArena`] are excluded — the
+    /// [`crate::cache::arbiter::CacheArbiter`] charges those once
+    /// host-wide through its shared tier, never per session.
+    pub fn private_payload_bytes(&self) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| s.is_hot())
+            .map(|s| s.hot().private_payload_bytes())
+            .sum::<usize>()
+            + self.tail.iter().map(|r| r.payload.len()).sum::<usize>()
+    }
+
     /// Drop rows older than the retention horizon relative to `now`.
     /// Whole expired segments are dropped via their zone maps; a
     /// partially expired segment is rebuilt from its surviving rows.
@@ -342,6 +372,7 @@ impl AppLogStore {
         let mut dropped = 0usize;
         let mut keep: Vec<SealedSegment> = Vec::with_capacity(self.segments.len());
         let block_codec = self.cfg.block_codec;
+        let arena = self.cfg.arena.clone();
         for sealed in self.segments.drain(..) {
             if sealed.max_ts() < cutoff {
                 dropped += sealed.len();
@@ -356,7 +387,7 @@ impl AppLogStore {
                     .collect();
                 if !survivors.is_empty() {
                     keep.push(SealedSegment::from_segment(
-                        Segment::build(&survivors),
+                        Segment::build_in(&survivors, arena.as_deref()),
                         block_codec,
                     ));
                 }
@@ -629,6 +660,49 @@ mod tests {
         let img: usize = s.segments().iter().map(|seg| seg.image_bytes()).sum();
         assert!(img < raw, "compressed {img} vs raw {raw}");
         assert_eq!(s.storage_bytes(), img);
+    }
+
+    #[test]
+    fn arena_backed_store_dedups_across_sessions_and_reclaims() {
+        use crate::applog::arena::PayloadArena;
+        let arena = Arc::new(PayloadArena::new());
+        let cfg = StoreConfig {
+            segment_rows: 4,
+            arena: Some(Arc::clone(&arena)),
+            ..StoreConfig::default()
+        };
+        // Two "sessions" logging byte-identical payloads.
+        let mut a = AppLogStore::new(cfg.clone());
+        let mut b = AppLogStore::new(cfg);
+        let plain = store_with_cfg(
+            16,
+            StoreConfig {
+                segment_rows: 4,
+                ..StoreConfig::default()
+            },
+        );
+        for i in 0..16 {
+            a.append((i % 3) as EventTypeId, (i as i64) * 1000, vec![b'x'; 10])
+                .unwrap();
+            b.append((i % 3) as EventTypeId, (i as i64) * 1000, vec![b'x'; 10])
+                .unwrap();
+        }
+        // Identical rows, images and accounting; one unique payload
+        // host-wide across both sessions.
+        assert_eq!(a.storage_bytes(), plain.storage_bytes());
+        for (x, y) in a.iter().zip(plain.iter()) {
+            assert_eq!(x.payload, y.payload);
+            assert_eq!(x.seq_no, y.seq_no);
+        }
+        let st = arena.stats();
+        assert_eq!(st.unique_payloads, 1);
+        assert_eq!(st.resident_bytes, 10);
+        assert!(st.dedup_hits >= 7, "second store and later segments must hit");
+        // Session teardown drops the refs; sweep reclaims host memory.
+        drop(a);
+        drop(b);
+        assert_eq!(arena.sweep(), 1);
+        assert_eq!(arena.resident_bytes(), 0);
     }
 
     #[test]

@@ -16,6 +16,14 @@
 //!   dearer than hibernated — a query can heat them without I/O.
 //! * **Hibernated tier** — sessions serialized down to one blob (see
 //!   [`crate::engine::state`]); only the blob length is accounted.
+//! * **Shared tier** — the host-global payload arena
+//!   ([`crate::applog::arena::PayloadArena`]): byte-identical payloads
+//!   interned across every session of a service. Bytes here are charged
+//!   to the ledger **once**, no matter how many sessions reference
+//!   them — per-session tiers never include interned payload bytes
+//!   (an interned segment's `storage_bytes` excludes them), so the
+//!   split is exact rather than heuristic. The coordinator reports the
+//!   arena's resident bytes absolutely (not per slot) after sweeps.
 //!
 //! ### Grant accounting (why not `cap / live`?)
 //!
@@ -96,7 +104,13 @@ pub struct CacheArbiter {
     hib_total: AtomicUsize,
     /// Peak of `hib_total`.
     peak_hib: AtomicUsize,
-    /// Peak of `total + cold_total + hib_total` (the whole ledger).
+    /// Host-global shared-arena resident bytes (absolute, not per slot:
+    /// the arena is one allocation pool for the whole service).
+    shared: AtomicUsize,
+    /// Peak of `shared`.
+    peak_shared: AtomicUsize,
+    /// Peak of `total + cold_total + hib_total + shared` (the whole
+    /// ledger).
     peak_ledger: AtomicUsize,
 }
 
@@ -122,6 +136,8 @@ impl CacheArbiter {
             hib: (0..num_sessions).map(|_| AtomicUsize::new(0)).collect(),
             hib_total: AtomicUsize::new(0),
             peak_hib: AtomicUsize::new(0),
+            shared: AtomicUsize::new(0),
+            peak_shared: AtomicUsize::new(0),
             peak_ledger: AtomicUsize::new(0),
         }
     }
@@ -205,7 +221,8 @@ impl CacheArbiter {
         self.peak_ledger.fetch_max(
             total
                 + self.cold_total.load(Ordering::Acquire)
-                + self.hib_total.load(Ordering::Acquire),
+                + self.hib_total.load(Ordering::Acquire)
+                + self.shared.load(Ordering::Acquire),
             Ordering::AcqRel,
         );
     }
@@ -227,6 +244,25 @@ impl CacheArbiter {
         self.peak_ledger.fetch_max(
             cold
                 + self.total.load(Ordering::Acquire)
+                + self.hib_total.load(Ordering::Acquire)
+                + self.shared.load(Ordering::Acquire),
+            Ordering::AcqRel,
+        );
+    }
+
+    /// Record the host-global shared payload arena's resident bytes
+    /// (its [`crate::applog::arena::PayloadArena::resident_bytes`],
+    /// typically after a refcount sweep). Absolute, not a per-slot
+    /// delta: the arena is one pool shared by every session, so its
+    /// bytes enter the ledger exactly once regardless of how many
+    /// sessions hold references into it.
+    pub fn report_shared(&self, bytes: usize) {
+        self.shared.store(bytes, Ordering::Release);
+        self.peak_shared.fetch_max(bytes, Ordering::AcqRel);
+        self.peak_ledger.fetch_max(
+            bytes
+                + self.total.load(Ordering::Acquire)
+                + self.cold_total.load(Ordering::Acquire)
                 + self.hib_total.load(Ordering::Acquire),
             Ordering::AcqRel,
         );
@@ -259,7 +295,10 @@ impl CacheArbiter {
             self.hib_total.fetch_sub(d, Ordering::AcqRel) - d
         };
         self.peak_hib.fetch_max(hib, Ordering::AcqRel);
-        self.peak_ledger.fetch_max(total + cold + hib, Ordering::AcqRel);
+        self.peak_ledger.fetch_max(
+            total + cold + hib + self.shared.load(Ordering::Acquire),
+            Ordering::AcqRel,
+        );
     }
 
     /// Mark a session finished from any tier: every grant and byte it
@@ -312,10 +351,21 @@ impl CacheArbiter {
         self.peak_hib.load(Ordering::Acquire)
     }
 
+    /// Current shared payload-arena resident bytes (charged once
+    /// host-wide).
+    pub fn shared_bytes(&self) -> usize {
+        self.shared.load(Ordering::Acquire)
+    }
+
+    /// Peak shared payload-arena bytes observed over the run.
+    pub fn peak_shared_bytes(&self) -> usize {
+        self.peak_shared.load(Ordering::Acquire)
+    }
+
     /// Current whole-ledger footprint (live + compressed-cold +
-    /// hibernated).
+    /// hibernated + shared arena).
     pub fn ledger_bytes(&self) -> usize {
-        self.total_bytes() + self.cold_bytes() + self.hibernated_bytes()
+        self.total_bytes() + self.cold_bytes() + self.hibernated_bytes() + self.shared_bytes()
     }
 
     /// Peak whole-ledger footprint observed over the run.
@@ -511,6 +561,80 @@ mod tests {
         assert_eq!(a.cold_bytes(), 0);
         a.complete(0);
         assert_eq!(a.ledger_bytes(), 0);
+    }
+
+    #[test]
+    fn shared_arena_tier_enters_ledger_once() {
+        let a = CacheArbiter::new(100_000, 3);
+        a.activate(0);
+        a.activate(1);
+        a.report_usage(0, 4_000);
+        a.report_usage(1, 6_000);
+        a.report_shared(5_000);
+        assert_eq!(a.shared_bytes(), 5_000);
+        assert_eq!(a.ledger_bytes(), 15_000);
+        // Absolute store: a sweep shrinking the arena replaces the value
+        // rather than accumulating per-session deltas.
+        a.report_shared(2_000);
+        assert_eq!(a.ledger_bytes(), 12_000);
+        assert_eq!(a.peak_shared_bytes(), 5_000);
+        assert!(a.peak_ledger_bytes() >= 15_000);
+        a.report_shared(0);
+        a.complete(0);
+        a.complete(1);
+        assert_eq!(a.ledger_bytes(), 0);
+    }
+
+    #[test]
+    fn payload_shared_by_k_sessions_is_charged_once() {
+        // Regression (fleet dedup accounting): K sessions whose logs
+        // intern the same payloads must put those bytes into the ledger
+        // exactly once — in the shared tier — while each session's own
+        // report excludes them.
+        use crate::applog::arena::PayloadArena;
+        use crate::applog::store::{AppLogStore, StoreConfig};
+        use std::sync::Arc;
+
+        const K: usize = 4;
+        let arena = Arc::new(PayloadArena::new());
+        let arbiter = CacheArbiter::new(1 << 20, K);
+        let payload = vec![0xabu8; 1_000];
+        let mut stores: Vec<AppLogStore> = (0..K)
+            .map(|_| {
+                AppLogStore::new(StoreConfig {
+                    segment_rows: 8,
+                    arena: Some(arena.clone()),
+                    ..StoreConfig::default()
+                })
+            })
+            .collect();
+        for (slot, s) in stores.iter_mut().enumerate() {
+            arbiter.activate(slot);
+            for i in 0..8i64 {
+                s.append(1, i * 1_000, payload.clone()).unwrap();
+            }
+            // Sealed + heated: the segment interned its unique payload.
+            let w = crate::applog::query::TimeWindow {
+                start_ms: 0,
+                end_ms: i64::MAX,
+            };
+            assert_eq!(crate::applog::query::count(s, 1, w), 8);
+            arbiter.report_usage(slot, s.private_payload_bytes());
+            arbiter.report_shared(arena.resident_bytes());
+        }
+        // One unique payload host-wide: the ledger carries its 1000
+        // bytes once (shared tier), not K times — every session's
+        // private report is payload-free.
+        assert_eq!(arena.stats().unique_payloads, 1);
+        assert_eq!(arbiter.shared_bytes(), payload.len());
+        assert_eq!(arbiter.total_bytes(), 0);
+        assert_eq!(arbiter.ledger_bytes(), payload.len());
+        // Sessions retiring drop their references; the sweep then
+        // removes the last copy and the shared tier empties.
+        drop(stores);
+        assert_eq!(arena.sweep(), 1);
+        arbiter.report_shared(arena.resident_bytes());
+        assert_eq!(arbiter.shared_bytes(), 0);
     }
 
     #[test]

@@ -65,8 +65,9 @@ pub fn run_service(
 
 /// The coordinator loop over a caller-provided app-log store. Split out
 /// so tests (and embedders that share one log across components) can
-/// observe the store while the loop runs.
-fn run_service_on(
+/// observe the store while the loop runs, and so the pool can back
+/// session stores with a shared payload arena.
+pub(crate) fn run_service_on(
     store: Arc<Mutex<AppLogStore>>,
     catalog: &crate::applog::schema::Catalog,
     extractor: &mut dyn Extractor,

@@ -28,8 +28,9 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::applog::arena::{ArenaStats, PayloadArena};
 use crate::applog::schema::Catalog;
-use crate::applog::store::AppLogStore;
+use crate::applog::store::{AppLogStore, StoreConfig};
 use crate::cache::arbiter::CacheArbiter;
 use crate::engine::config::EngineConfig;
 use crate::engine::offline::{compile, CompiledEngine};
@@ -41,7 +42,7 @@ use crate::runtime::InferenceBackend;
 use crate::workload::driver::{fan_out, SimConfig};
 
 use super::metrics::{FleetSummary, LatencyRecorder};
-use super::run_service;
+use super::run_service_on;
 
 /// Pool-level configuration.
 #[derive(Debug, Clone)]
@@ -56,6 +57,11 @@ pub struct PoolConfig {
     /// Keep every extraction's feature values in the session reports
     /// (determinism tests; off for large fleets).
     pub record_values: bool,
+    /// Share one host-global payload arena across every session's app
+    /// log ([`crate::applog::arena::PayloadArena`]): byte-identical
+    /// sealed payloads are stored once fleet-wide and charged to the
+    /// arbiter's ledger as a single shared tier instead of per session.
+    pub shared_arena: bool,
 }
 
 impl Default for PoolConfig {
@@ -65,6 +71,7 @@ impl Default for PoolConfig {
             global_cache_cap_bytes: 4 * 1024 * 1024,
             engine: EngineConfig::autofeature(),
             record_values: false,
+            shared_arena: false,
         }
     }
 }
@@ -126,6 +133,11 @@ pub struct PoolReport {
     pub global_cache_cap_bytes: usize,
     /// Shard count the run used.
     pub num_shards: usize,
+    /// Peak of the shared payload-arena ledger tier over the run
+    /// (0 without [`PoolConfig::shared_arena`]).
+    pub peak_shared_arena_bytes: usize,
+    /// End-of-run arena statistics (`None` without `shared_arena`).
+    pub arena: Option<ArenaStats>,
 }
 
 impl PoolReport {
@@ -151,6 +163,7 @@ pub struct Session<'a> {
     record_values: bool,
     values: Vec<Vec<FeatureValue>>,
     peak_cache_bytes: usize,
+    arena: Option<Arc<PayloadArena>>,
 }
 
 impl<'a> Session<'a> {
@@ -161,6 +174,7 @@ impl<'a> Session<'a> {
         slot: usize,
         interval_ms: i64,
         record_values: bool,
+        arena: Option<Arc<PayloadArena>>,
     ) -> Session<'a> {
         // Entering the live tier: the ledger grants this session its
         // initial cache budget (an even split over *live* sessions,
@@ -177,6 +191,7 @@ impl<'a> Session<'a> {
             record_values,
             values: Vec::new(),
             peak_cache_bytes: 0,
+            arena,
         }
     }
 }
@@ -190,6 +205,11 @@ impl Extractor for Session<'_> {
         let r = self.engine.extract(store, now)?;
         self.peak_cache_bytes = self.peak_cache_bytes.max(r.cache_bytes);
         self.arbiter.report_usage(self.slot, r.cache_bytes);
+        if let Some(arena) = &self.arena {
+            // Interning happens as the coordinator loop seals segments;
+            // refresh the shared tier so ledger peaks see the arena.
+            self.arbiter.report_shared(arena.resident_bytes());
+        }
         if self.record_values {
             self.values.push(r.values.clone());
         }
@@ -244,6 +264,7 @@ impl SessionPool {
     ) -> Result<PoolReport> {
         let num_shards = self.cfg.num_shards.max(1).min(users.len().max(1));
         let arbiter = CacheArbiter::new(self.cfg.global_cache_cap_bytes, users.len());
+        let arena = self.cfg.shared_arena.then(|| Arc::new(PayloadArena::new()));
         let results: Mutex<Vec<Option<Result<SessionReport>>>> =
             Mutex::new((0..users.len()).map(|_| None).collect());
 
@@ -253,6 +274,7 @@ impl SessionPool {
                 let arbiter = &arbiter;
                 let results = &results;
                 let cfg = &self.cfg;
+                let arena = arena.clone();
                 scope.spawn(move || {
                     // Static user partition: shard s owns users s,
                     // s + num_shards, s + 2·num_shards, ...
@@ -269,8 +291,16 @@ impl SessionPool {
                             slot,
                             user,
                             model,
+                            arena.clone(),
                         );
                         arbiter.complete(slot);
+                        if let Some(a) = &arena {
+                            // The finished session dropped its store and
+                            // with it its arena references: reclaim
+                            // payloads nobody else still holds.
+                            a.sweep();
+                            arbiter.report_shared(a.resident_bytes());
+                        }
                         results.lock().unwrap()[slot] = Some(outcome);
                     }
                 });
@@ -291,11 +321,14 @@ impl SessionPool {
             peak_total_cache_bytes: arbiter.peak_total_bytes(),
             global_cache_cap_bytes: self.cfg.global_cache_cap_bytes,
             num_shards,
+            peak_shared_arena_bytes: arbiter.peak_shared_bytes(),
+            arena: arena.as_ref().map(|a| a.stats()),
         })
     }
 }
 
 /// Drive one user's producer/consumer loop inside the pool.
+#[allow(clippy::too_many_arguments)]
 fn run_pooled_session(
     compiled: Arc<CompiledEngine>,
     cfg: &PoolConfig,
@@ -304,7 +337,13 @@ fn run_pooled_session(
     slot: usize,
     user: &SessionConfig,
     model: Option<&(dyn InferenceBackend + Sync)>,
+    arena: Option<Arc<PayloadArena>>,
 ) -> Result<SessionReport> {
+    let store = Arc::new(Mutex::new(AppLogStore::new(StoreConfig {
+        segment_rows: user.sim.segment_rows,
+        arena: arena.clone(),
+        ..StoreConfig::default()
+    })));
     let mut session = Session::new(
         compiled,
         cfg.engine,
@@ -312,9 +351,10 @@ fn run_pooled_session(
         slot,
         user.sim.inference_interval_ms,
         cfg.record_values,
+        arena,
     );
     let backend = model.map(|m| m as &dyn InferenceBackend);
-    let report = run_service(catalog, &mut session, backend, &user.sim)?;
+    let report = run_service_on(store, catalog, &mut session, backend, &user.sim)?;
     Ok(SessionReport {
         user_id: user.user_id,
         requests: report.requests,
@@ -419,6 +459,47 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn shared_arena_pool_preserves_values_and_reports_stats() {
+        let cat = catalog();
+        let fs = specs(&cat);
+        // Narrow segments so the short test traces seal (interning only
+        // runs at seal time).
+        let sim = SimConfig {
+            segment_rows: 32,
+            ..base_sim()
+        };
+        let users = SessionConfig::fleet(&sim, 5);
+        let private = SessionPool::new(fs.clone(), &cat, pool_cfg(2))
+            .unwrap()
+            .run(&cat, &users, None)
+            .unwrap();
+        assert!(private.arena.is_none());
+        assert_eq!(private.peak_shared_arena_bytes, 0);
+
+        let shared = SessionPool::new(
+            fs,
+            &cat,
+            PoolConfig {
+                shared_arena: true,
+                ..pool_cfg(2)
+            },
+        )
+        .unwrap()
+        .run(&cat, &users, None)
+        .unwrap();
+        for (a, b) in shared.sessions.iter().zip(&private.sessions) {
+            assert_eq!(a.user_id, b.user_id);
+            assert_eq!(a.requests, b.requests);
+            assert_eq!(a.events_logged, b.events_logged);
+            assert_eq!(a.values, b.values, "user {}", a.user_id);
+        }
+        let st = shared.arena.expect("arena stats captured");
+        assert!(st.interned > 0, "sealed segments intern into the arena");
+        assert_eq!(st.resident_bytes, 0, "all sessions done: swept clean");
+        assert!(shared.peak_shared_arena_bytes > 0);
     }
 
     #[test]

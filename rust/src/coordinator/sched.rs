@@ -45,11 +45,12 @@
 //! cycle, no deadlock.
 
 use std::collections::BinaryHeap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::applog::arena::{ArenaStats, PayloadArena, SharedDecodeCache};
 use crate::applog::codec::AttrCodec;
 use crate::applog::persist;
 use crate::applog::schema::Catalog;
@@ -100,6 +101,22 @@ pub struct SchedConfig {
     /// [`crate::applog::wal::DurableAppLog::checkpoint`] explicitly; the
     /// scheduler's trigger servicing is the checkpoint daemon.
     pub wal_checkpoint_bytes: usize,
+    /// Host-global payload interning: when set, every session's sealed
+    /// segments resolve byte-identical payloads to one shared
+    /// refcounted allocation ([`PayloadArena`]), accounted once in the
+    /// arbiter's shared tier and swept (refcount-driven) whenever a
+    /// session hibernates or retires.
+    pub shared_arena: bool,
+    /// Cross-session fused Retrieve+Decode: `0` disables sharing
+    /// entirely (legacy behavior). `>= 1` gives every served trigger a
+    /// per-instant [`SharedDecodeCache`], and a worker popping a
+    /// trigger additionally drains up to `fuse_same_instant - 1` more
+    /// triggers due at the *same* timeline instant from the queues,
+    /// serving the whole group sequentially under one cache — each
+    /// unique `(payload, attr union)` across the group decodes once.
+    /// Values are bit-identical for any setting: decoding is
+    /// deterministic, so the cache only moves work, never results.
+    pub fuse_same_instant: usize,
 }
 
 impl Default for SchedConfig {
@@ -112,6 +129,8 @@ impl Default for SchedConfig {
             engine: EngineConfig::autofeature(),
             record_values: false,
             wal_checkpoint_bytes: usize::MAX,
+            shared_arena: false,
+            fuse_same_instant: 0,
         }
     }
 }
@@ -148,6 +167,27 @@ pub struct SchedReport {
     /// Background WAL checkpoints folded by the scheduler (0 when the
     /// policy is off).
     pub wal_checkpoints: usize,
+    /// Cross-session decode-cache hits: projected decodes served from a
+    /// fused trigger group's memo instead of re-executed (0 with
+    /// `fuse_same_instant == 0`).
+    pub shared_decode_hits: u64,
+    /// Cross-session decode-cache misses — the decode *executions*
+    /// under fusion. Per instant this is exactly the number of unique
+    /// `(payload, attr union)` pairs touched (the counter the
+    /// differential suite proves against).
+    pub shared_decode_misses: u64,
+    /// Same-instant trigger groups of size >= 2 served under one shared
+    /// decode cache.
+    pub fused_groups: usize,
+    /// Triggers served inside those groups.
+    pub fused_triggers: usize,
+    /// Peak shared payload-arena bytes (the ledger's shared tier; 0
+    /// without `shared_arena`).
+    pub peak_shared_arena_bytes: usize,
+    /// Final shared payload-arena counters (`None` without
+    /// `shared_arena`). `bytes_saved` is what private per-session
+    /// arenas would have duplicated.
+    pub arena: Option<ArenaStats>,
     /// Final durable artifacts per session under the WAL-checkpoint
     /// policy, in user order (`None` entries when the policy is off).
     pub durables: Vec<Option<SessionDurable>>,
@@ -273,6 +313,16 @@ struct Fleet<'a> {
     remaining: AtomicUsize,
     abort: AtomicBool,
     error: Mutex<Option<anyhow::Error>>,
+    /// Host-global payload interning arena (`Some` under
+    /// [`SchedConfig::shared_arena`]).
+    arena: Option<Arc<PayloadArena>>,
+    /// Cross-session decode-cache hit/miss totals across every fused
+    /// trigger group of the run.
+    shared_hits: AtomicU64,
+    shared_misses: AtomicU64,
+    /// Same-instant groups of size >= 2, and the triggers they covered.
+    fused_groups: AtomicUsize,
+    fused_triggers: AtomicUsize,
 }
 
 /// The event-driven fleet scheduler for one deployed model.
@@ -324,6 +374,11 @@ impl FleetScheduler {
             remaining: AtomicUsize::new(users.len()),
             abort: AtomicBool::new(false),
             error: Mutex::new(None),
+            arena: self.cfg.shared_arena.then(|| Arc::new(PayloadArena::new())),
+            shared_hits: AtomicU64::new(0),
+            shared_misses: AtomicU64::new(0),
+            fused_groups: AtomicUsize::new(0),
+            fused_triggers: AtomicUsize::new(0),
         };
 
         // Seed: one entry per session (its first trigger), round-robin
@@ -412,6 +467,12 @@ impl FleetScheduler {
             rehydrate_p99_ns: pct(0.99),
             wal_checkpoints,
             durables,
+            shared_decode_hits: fleet.shared_hits.load(Ordering::SeqCst),
+            shared_decode_misses: fleet.shared_misses.load(Ordering::SeqCst),
+            fused_groups: fleet.fused_groups.load(Ordering::SeqCst),
+            fused_triggers: fleet.fused_triggers.load(Ordering::SeqCst),
+            peak_shared_arena_bytes: fleet.arbiter.peak_shared_bytes(),
+            arena: fleet.arena.as_ref().map(|a| a.stats()),
         })
     }
 }
@@ -427,7 +488,34 @@ fn worker_loop(fleet: &Fleet<'_>, model: Option<&(dyn InferenceBackend + Sync)>,
             std::thread::yield_now();
             continue;
         };
-        let served = serve_trigger(fleet, model, me, at, slot).and_then(|()| {
+        // Fused Retrieve+Decode: gather further triggers due at this
+        // exact instant (bounded by the fusion knob) and serve the group
+        // sequentially under one cross-session decode cache. Each
+        // session stays private — grouping only co-schedules, so values
+        // are bit-identical to serving them apart.
+        let mut group = vec![(at, slot)];
+        if fleet.cfg.fuse_same_instant > 1 {
+            drain_same_instant(fleet, me, at, fleet.cfg.fuse_same_instant - 1, &mut group);
+        }
+        let cache = (fleet.cfg.fuse_same_instant > 0).then(SharedDecodeCache::new);
+        let mut served = Ok(());
+        let mut failed_slot = slot;
+        for &(gat, gslot) in &group {
+            served = serve_trigger(fleet, model, me, gat, gslot, cache.as_ref());
+            if served.is_err() {
+                failed_slot = gslot;
+                break;
+            }
+        }
+        if let Some(c) = &cache {
+            fleet.shared_hits.fetch_add(c.hits(), Ordering::SeqCst);
+            fleet.shared_misses.fetch_add(c.misses(), Ordering::SeqCst);
+            if group.len() > 1 {
+                fleet.fused_groups.fetch_add(1, Ordering::SeqCst);
+                fleet.fused_triggers.fetch_add(group.len(), Ordering::SeqCst);
+            }
+        }
+        let served = served.and_then(|()| {
             if fleet.cfg.live_cap_bytes != usize::MAX {
                 relieve_pressure(fleet)?;
             }
@@ -436,11 +524,41 @@ fn worker_loop(fleet: &Fleet<'_>, model: Option<&(dyn InferenceBackend + Sync)>,
         if let Err(err) = served {
             let mut guard = fleet.error.lock().unwrap();
             if guard.is_none() {
-                let user_id = fleet.users[slot].user_id;
+                let user_id = fleet.users[failed_slot].user_id;
                 *guard = Some(err.context(format!("session for user {user_id}")));
             }
             fleet.abort.store(true, Ordering::SeqCst);
             return;
+        }
+    }
+}
+
+/// Drain up to `room` more queue entries due exactly at `at`, local
+/// queue first then siblings. Only ready heads are taken — a same-
+/// instant trigger buried under an earlier one stays put (serving it now
+/// would run it ahead of a strictly earlier trigger).
+fn drain_same_instant(
+    fleet: &Fleet<'_>,
+    me: usize,
+    at: i64,
+    mut room: usize,
+    group: &mut Vec<(i64, usize)>,
+) {
+    let n = fleet.queues.len();
+    for i in 0..n {
+        if room == 0 {
+            return;
+        }
+        let mut q = fleet.queues[(me + i) % n].lock().unwrap();
+        while room > 0 {
+            match q.peek() {
+                Some(&std::cmp::Reverse((t, _))) if t == at => {
+                    let std::cmp::Reverse(item) = q.pop().unwrap();
+                    group.push(item);
+                    room -= 1;
+                }
+                _ => break,
+            }
         }
     }
 }
@@ -489,6 +607,7 @@ fn serve_trigger(
     me: usize,
     at: i64,
     slot: usize,
+    shared: Option<&SharedDecodeCache>,
 ) -> Result<()> {
     let user = &fleet.users[slot];
     let sim = &user.sim;
@@ -510,6 +629,7 @@ fn serve_trigger(
             });
             let mut store = AppLogStore::new(StoreConfig {
                 segment_rows: sim.segment_rows,
+                arena: fleet.arena.clone(),
                 ..StoreConfig::default()
             });
             let warm_end = trace.partition_point(|e| e.timestamp_ms < sim.warmup_ms);
@@ -555,6 +675,7 @@ fn serve_trigger(
                 image,
                 StoreConfig {
                     segment_rows: sim.segment_rows,
+                    arena: fleet.arena.clone(),
                     ..StoreConfig::default()
                 },
             )
@@ -614,12 +735,17 @@ fn serve_trigger(
 
     // -- serve the inference --
     engine.set_cache_budget(fleet.arbiter.session_budget(slot), sim.inference_interval_ms);
-    let extraction = engine.extract(store, at)?;
+    let extraction = engine.extract_shared(store, at, shared)?;
     cell.peak_cache_bytes = cell.peak_cache_bytes.max(extraction.cache_bytes);
     fleet.arbiter.report_usage(slot, extraction.cache_bytes);
     // Sealed segments still compressed after this extraction are the
     // ledger's third tier: resident but cold.
     fleet.arbiter.report_cold(slot, store.cold_bytes());
+    // The shared arena is one host-wide pool: charge its resident bytes
+    // to the ledger once (absolute), never per session.
+    if let Some(arena) = &fleet.arena {
+        fleet.arbiter.report_shared(arena.resident_bytes());
+    }
     let inference_ns = match model {
         Some(rt) => {
             let meta = rt.meta();
@@ -668,6 +794,12 @@ fn serve_trigger(
             cell.next_at = None;
             cell.state = CellState::Done;
             fleet.arbiter.complete(slot);
+            // The retired store dropped its arena references: reclaim
+            // payloads nobody else holds and re-report the shared tier.
+            if let Some(arena) = &fleet.arena {
+                arena.sweep();
+                fleet.arbiter.report_shared(arena.resident_bytes());
+            }
             fleet.remaining.fetch_sub(1, Ordering::SeqCst);
         }
     }
@@ -702,6 +834,13 @@ fn hibernate_locked(fleet: &Fleet<'_>, slot: usize, cell: &mut Cell) -> Result<(
     fleet.arbiter.hibernate(slot, image.len());
     cell.hibernations += 1;
     cell.state = CellState::Hibernated { image };
+    // Dropping the resident store released its arena references:
+    // refcount-driven reclamation runs right here, so the shared tier
+    // only ever charges payloads some resident session still maps.
+    if let Some(arena) = &fleet.arena {
+        arena.sweep();
+        fleet.arbiter.report_shared(arena.resident_bytes());
+    }
     Ok(())
 }
 
@@ -1016,6 +1155,88 @@ mod tests {
         for (slot, d) in folded.durables.iter().enumerate() {
             let d = d.as_ref().expect("policy captures durables");
             assert_recovers(d, users[slot].sim.segment_rows, "wal-hibernate");
+        }
+    }
+
+    #[test]
+    fn shared_arena_and_fused_decode_preserve_values() {
+        let cat = catalog();
+        let fs = specs(&cat);
+        // Narrow segments so the short test traces seal (interning only
+        // runs at seal time).
+        let sim = SimConfig {
+            segment_rows: 32,
+            ..base_sim()
+        };
+        let users = SessionConfig::fleet(&sim, 5);
+        let sched = FleetScheduler::new(fs.clone(), &cat, sched_cfg(3)).unwrap();
+        let baseline = sched.run(&cat, &users, None).unwrap();
+        assert_eq!(baseline.shared_decode_misses, 0, "sharing off by default");
+        assert!(baseline.arena.is_none());
+        assert_eq!(baseline.peak_shared_arena_bytes, 0);
+
+        // Arena + fusion on: values bit-identical, the arena interned
+        // every sealed payload, and retirement sweeps drained it.
+        let fused = FleetScheduler::from_shared(
+            sched.shared_plan(),
+            SchedConfig {
+                shared_arena: true,
+                fuse_same_instant: 8,
+                ..sched_cfg(1)
+            },
+        )
+        .run(&cat, &users, None)
+        .unwrap();
+        assert_reports_identical(&fused.sessions, &baseline.sessions, "fused");
+        assert!(fused.shared_decode_misses > 0, "fused triggers decode through the cache");
+        let arena = fused.arena.expect("arena stats captured");
+        assert!(arena.interned > 0, "sealed segments intern payloads");
+        assert_eq!(arena.resident_bytes, 0, "all sessions retired: swept clean");
+        assert!(fused.peak_shared_arena_bytes > 0);
+
+        // Identical-seed sessions: every payload and trigger instant
+        // repeats K-fold, so grouping engages and cross-session dedup
+        // pays — and hibernating between triggers changes nothing.
+        let clones: Vec<SessionConfig> = (0..4)
+            .map(|u| SessionConfig {
+                user_id: u,
+                sim: sim.clone(),
+            })
+            .collect();
+        let clone_base = FleetScheduler::from_shared(sched.shared_plan(), sched_cfg(1))
+            .run(&cat, &clones, None)
+            .unwrap();
+        for arm in [
+            SchedConfig {
+                shared_arena: true,
+                fuse_same_instant: 8,
+                ..sched_cfg(1)
+            },
+            SchedConfig {
+                shared_arena: true,
+                fuse_same_instant: 8,
+                hibernate_after_ms: 1,
+                ..sched_cfg(1)
+            },
+        ] {
+            let hib = arm.hibernate_after_ms == 1;
+            let r = FleetScheduler::from_shared(sched.shared_plan(), arm)
+                .run(&cat, &clones, None)
+                .unwrap();
+            assert_reports_identical(
+                &r.sessions,
+                &clone_base.sessions,
+                &format!("clones fused hib={hib}"),
+            );
+            let st = r.arena.expect("arena stats");
+            assert!(st.dedup_hits > 0, "identical logs must dedup (hib={hib})");
+            assert!(st.bytes_saved > 0);
+            assert!(r.fused_groups > 0, "same-instant triggers must group (hib={hib})");
+            assert!(r.fused_triggers >= 2 * r.fused_groups);
+            assert!(
+                r.shared_decode_hits > 0,
+                "co-located identical sessions must share decodes (hib={hib})"
+            );
         }
     }
 

@@ -34,6 +34,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::applog::arena::SharedDecodeCache;
 use crate::applog::codec::AttrCodec;
 use crate::applog::event::{AttrId, AttrValue, TimestampMs};
 use crate::applog::query::{column_batches, ColumnBatch, SelectionVector};
@@ -92,12 +93,16 @@ pub(crate) struct DecodedBatch {
 
 impl DecodedBatch {
     /// Decode the selection's surviving payloads into `union` order.
+    /// With a cross-session `shared` cache, each unique payload's
+    /// projected decode is memoized across every session served under
+    /// the same fused trigger instant (misses count decode executions).
     pub(crate) fn decode(
         &mut self,
         cb: &ColumnBatch<'_>,
         sel: &SelectionVector,
         codec: &dyn AttrCodec,
         union: &[AttrId],
+        shared: Option<&SharedDecodeCache>,
     ) -> Result<()> {
         self.flat.clear();
         self.uniq.clear();
@@ -105,6 +110,8 @@ impl DecodedBatch {
         self.row_uniq.clear();
         self.memo.clear();
         self.union_len = union.len();
+        let shared_fp =
+            shared.map(|cache| (cache, SharedDecodeCache::union_fingerprint(union)));
         let dedup = cb.dedup_payloads();
         for &p in sel.positions() {
             let u = if dedup {
@@ -114,13 +121,19 @@ impl DecodedBatch {
                 match self.memo.get(&code) {
                     Some(&u) => u,
                     None => {
-                        let u = self.push_unique(cb.payload_at(p), codec, union)?;
+                        let u = self.push_unique(
+                            cb.payload_at(p),
+                            cb.payload_arc(p),
+                            shared_fp,
+                            codec,
+                            union,
+                        )?;
                         self.memo.insert(code, u);
                         u
                     }
                 }
             } else {
-                self.push_unique(cb.payload_at(p), codec, union)?
+                self.push_unique(cb.payload_at(p), cb.payload_arc(p), shared_fp, codec, union)?
             };
             self.row_uniq.push(u);
         }
@@ -130,10 +143,15 @@ impl DecodedBatch {
     fn push_unique(
         &mut self,
         payload: &[u8],
+        interned: Option<std::sync::Arc<[u8]>>,
+        shared: Option<(&SharedDecodeCache, u64)>,
         codec: &dyn AttrCodec,
         union: &[AttrId],
     ) -> Result<u32> {
-        let attrs = codec.decode_project(payload, union)?;
+        let attrs = match shared {
+            Some((cache, fp)) => cache.decode_project(payload, interned, fp, codec, union)?,
+            None => codec.decode_project(payload, union)?,
+        };
         let start = self.flat.len() as u32;
         // Merge-join decoded attrs (sorted) x union (sorted) into the
         // payload's slot row.
@@ -338,6 +356,7 @@ pub(crate) fn run_lane_oneshot(
     sinks: &mut [FeatureAcc],
     c: &mut ExecCounters,
     boundary_cmps: &mut u64,
+    shared: Option<&SharedDecodeCache>,
 ) -> Result<()> {
     let window = lane.max_window.window_at(now);
     let mut sel = SelectionVector::new();
@@ -362,7 +381,7 @@ pub(crate) fn run_lane_oneshot(
 
         // Project: per-unique-payload decode into the attr union.
         let t0 = Instant::now();
-        dec.decode(&cb, &sel, codec, &lane.attr_union)?;
+        dec.decode(&cb, &sel, codec, &lane.attr_union, shared)?;
         let project = c.stage_mut(Stage::Project);
         project.add_ns(t0);
         project.batches += 1;
@@ -476,7 +495,7 @@ mod tests {
                     if sel.is_empty() {
                         continue;
                     }
-                    dec.decode(&cb, &sel, &codec, &lane.attr_union).unwrap();
+                    dec.decode(&cb, &sel, &codec, &lane.attr_union, None).unwrap();
                     bst.merge(walk_selection(
                         lane, mode, now, &cb, &sel, &dec, &mut sinks_b,
                     ));
@@ -600,7 +619,7 @@ mod tests {
             if sel.is_empty() {
                 continue;
             }
-            dec.decode(&cb, &sel, &codec, &union).unwrap();
+            dec.decode(&cb, &sel, &codec, &union, None).unwrap();
             assert_eq!(dec.row_uniq.len(), sel.len());
             if cb.is_segment() {
                 assert!(dec.uniq.len() <= sel.len());

@@ -60,6 +60,7 @@ pub(crate) fn window_rows(
 /// plus scan+project of the missing interval (❷). Cache-fetch work
 /// lands in the executor's cache counter; log work in the `Scan` /
 /// `Project` operator counters.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn build_type_rows(
     cache: &mut CacheStore,
     compiled: &CompiledEngine,
@@ -68,6 +69,7 @@ pub(crate) fn build_type_rows(
     t: EventTypeId,
     now: TimestampMs,
     c: &mut ExecCounters,
+    shared: Option<&crate::applog::arena::SharedDecodeCache>,
 ) -> Result<TypeRows> {
     let window_ms = compiled.type_windows[&t];
     // Clamped to the log epoch: at session start a retention window
@@ -117,7 +119,7 @@ pub(crate) fn build_type_rows(
     // or unneeded attribute values), producing the rows both the filter
     // and the cache share.
     let union = &compiled.attr_unions[&t];
-    let (rows, stats) = query::retrieve_project(
+    let (rows, stats) = query::retrieve_project_shared(
         store,
         t,
         TimeWindow {
@@ -126,6 +128,7 @@ pub(crate) fn build_type_rows(
         },
         codec,
         union,
+        shared,
     )?;
     let scan = c.stage_mut(Stage::Scan);
     scan.ns += stats.retrieve_ns;

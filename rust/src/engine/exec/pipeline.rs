@@ -34,6 +34,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::applog::arena::SharedDecodeCache;
 use crate::applog::codec::AttrCodec;
 use crate::applog::event::{EventTypeId, TimestampMs};
 use crate::applog::query::{self, DecodedRow};
@@ -233,6 +234,7 @@ fn run_oneshot(
     sinks: &mut [FeatureAcc],
     c: &mut ExecCounters,
     boundary_cmps: &mut u64,
+    shared: Option<&SharedDecodeCache>,
 ) -> Result<()> {
     for pipe in &exec.pipelines {
         let lane = &opt.lanes[pipe.lane_idx];
@@ -250,6 +252,7 @@ fn run_oneshot(
                 sinks,
                 c,
                 boundary_cmps,
+                shared,
             )?;
             continue;
         }
@@ -258,8 +261,14 @@ fn run_oneshot(
             // §Perf: fused lanes only read their attr union, decoded at
             // segment granularity behind the zone maps.
             Some(wanted) => {
-                let (rows, stats) =
-                    query::retrieve_project(store, lane.event_type, window, codec, wanted)?;
+                let (rows, stats) = query::retrieve_project_shared(
+                    store,
+                    lane.event_type,
+                    window,
+                    codec,
+                    wanted,
+                    shared,
+                )?;
                 let scan = c.stage_mut(Stage::Scan);
                 scan.ns += stats.retrieve_ns;
                 scan.rows_out += stats.rows;
@@ -334,7 +343,17 @@ pub(crate) fn run_standalone(
         .iter()
         .map(|f| FeatureAcc::new(f, now))
         .collect();
-    run_oneshot(opt, exec, codec, store, now, &mut sinks, &mut c, &mut boundary_cmps)?;
+    run_oneshot(
+        opt,
+        exec,
+        codec,
+        store,
+        now,
+        &mut sinks,
+        &mut c,
+        &mut boundary_cmps,
+        None,
+    )?;
     let values = emit(sinks, None, &mut c);
     Ok(ExecOutput {
         values,
@@ -386,6 +405,7 @@ pub(crate) fn execute(
     store: &AppLogStore,
     now: TimestampMs,
     interval_ms: i64,
+    shared: Option<&SharedDecodeCache>,
 ) -> Result<ExecOutput> {
     let opt = &compiled.plan;
     let mut c = ExecCounters::default();
@@ -408,6 +428,7 @@ pub(crate) fn execute(
                 &mut sinks,
                 &mut c,
                 &mut boundary_cmps,
+                shared,
             )?;
         }
         Strategy::CachedRewalk | Strategy::IncrementalDelta => {
@@ -419,7 +440,7 @@ pub(crate) fn execute(
                 let t = opt.lanes[pipe.lane_idx].event_type;
                 if !avail.contains_key(&t) {
                     let rows = materialize::build_type_rows(
-                        cache, compiled, codec, store, t, now, &mut c,
+                        cache, compiled, codec, store, t, now, &mut c, shared,
                     )?;
                     avail.insert(t, rows);
                 }

@@ -393,10 +393,21 @@ impl Engine {
         self.set_cache_budget(self.cache.budget(), self.cfg.expected_interval_ms);
         Ok(())
     }
-}
 
-impl Extractor for Engine {
-    fn extract(&mut self, store: &AppLogStore, now: TimestampMs) -> Result<ExtractionResult> {
+    /// [`Extractor::extract`] with an optional cross-session decode
+    /// cache. The fleet coordinator passes one
+    /// [`SharedDecodeCache`](crate::applog::arena::SharedDecodeCache)
+    /// per fused trigger group so payloads shared between co-located
+    /// sessions (via the host-global payload arena) decode once per
+    /// group. With `shared == None` this is exactly `extract` — the
+    /// cache changes only *where* a projection is decoded, never its
+    /// value, so results stay bit-identical either way.
+    pub fn extract_shared(
+        &mut self,
+        store: &AppLogStore,
+        now: TimestampMs,
+        shared: Option<&crate::applog::arena::SharedDecodeCache>,
+    ) -> Result<ExtractionResult> {
         if let Some(last) = self.last_now {
             ensure!(now >= last, "extraction times must be monotonic");
         }
@@ -454,6 +465,7 @@ impl Extractor for Engine {
             store,
             now,
             interval_ms,
+            shared,
         )?;
 
         self.last_now = Some(now);
@@ -494,6 +506,12 @@ impl Extractor for Engine {
             extra_storage_bytes: 0,
             replan,
         })
+    }
+}
+
+impl Extractor for Engine {
+    fn extract(&mut self, store: &AppLogStore, now: TimestampMs) -> Result<ExtractionResult> {
+        self.extract_shared(store, now, None)
     }
 
     fn label(&self) -> &'static str {

@@ -994,6 +994,103 @@ pub fn ext_fleet(scale: Scale) -> Result<Vec<Row>> {
     Ok(rows)
 }
 
+/// Extension — fleet-level redundancy elimination: the host-global
+/// payload arena plus fused same-instant Retrieve+Decode, against the
+/// private-per-session baseline, at increasing session counts. Reports
+/// the measured shared-decode fraction (memo hits over all decode
+/// lookups at trigger instants), total decode time, and the arena's
+/// byte savings. Values stay bit-identical across arms (pinned by the
+/// `fleet_dedup_differential` suite); this table quantifies what the
+/// sharing buys.
+pub fn ext_fleet_dedup(scale: Scale) -> Result<Vec<Row>> {
+    use crate::coordinator::sched::SchedConfig;
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let counts: &[usize] = match scale {
+        Scale::Quick => &[8, 64],
+        Scale::Full => &[64, 1000, 100_000],
+    };
+    let workers = match scale {
+        Scale::Quick => 4usize,
+        Scale::Full => 8,
+    };
+    let cap = 64 * 1024 * 1024;
+    let mut rows = Vec::new();
+    for &num_users in counts {
+        // Deep per-user traces at small fleets; from 1k sessions up the
+        // point is cross-session sharing, so each trace shrinks to the
+        // short-session shape (2 min of history, 2 measured triggers)
+        // to keep the big arms tractable.
+        let base = if num_users >= 1000 {
+            SimConfig {
+                period: Period::Evening,
+                activity: ActivityLevel::P70,
+                warmup_ms: 2 * 60_000,
+                duration_ms: 60_000,
+                inference_interval_ms: 30_000,
+                seed: 2024,
+                // Narrow segments: the 2-minute traces must still seal,
+                // or nothing ever reaches the interning arena.
+                segment_rows: 64,
+                ..SimConfig::default()
+            }
+        } else {
+            scale.sim(Period::Evening, svc.inference_interval_ms, 2024)
+        };
+        for (label, shared) in [("private", false), ("shared", true)] {
+            let t0 = Instant::now();
+            let report = crate::harness::run_fleet_sched_cfg(
+                &catalog,
+                &svc,
+                &base,
+                num_users,
+                SchedConfig {
+                    workers,
+                    global_cache_cap_bytes: cap,
+                    shared_arena: shared,
+                    fuse_same_instant: if shared { 16 } else { 0 },
+                    ..SchedConfig::default()
+                },
+                None,
+            )?;
+            let wall_s = t0.elapsed().as_secs_f64();
+            let lookups = report.shared_decode_hits + report.shared_decode_misses;
+            let decode_ms: f64 = report
+                .sessions
+                .iter()
+                .map(|s| s.metrics.breakdown().decode_ns as f64)
+                .sum::<f64>()
+                / 1e6;
+            let stats = report.arena.unwrap_or_default();
+            let mut row = Row::new(format!("{num_users} users / {label}"));
+            row.push("requests", report.total_requests() as f64);
+            row.push("decode_ms", decode_ms);
+            row.push(
+                "shared_frac",
+                if lookups == 0 {
+                    0.0
+                } else {
+                    report.shared_decode_hits as f64 / lookups as f64
+                },
+            );
+            row.push("fused_groups", report.fused_groups as f64);
+            row.push("arena_saved_kb", stats.bytes_saved as f64 / 1024.0);
+            row.push(
+                "peak_shared_kb",
+                report.peak_shared_arena_bytes as f64 / 1024.0,
+            );
+            row.push("fleet_p50_ms", report.fleet.p50_ms);
+            row.push("wall_s", wall_s);
+            rows.push(row);
+        }
+    }
+    print_rows(
+        "Extension — fleet redundancy elimination: shared arena + fused decode (VR fleet)",
+        &rows,
+    );
+    Ok(rows)
+}
+
 /// The adaptive scenario suite's feature set: 16 features over ONE
 /// shared `<4 named behavior types, 30 min>` condition group. Built by
 /// hand rather than sampled so the scenario outcomes are deterministic

@@ -188,11 +188,12 @@ pub fn run_fleet_sched(
     hibernate_after_ms: i64,
     model: Option<&(dyn crate::runtime::InferenceBackend + Sync)>,
 ) -> Result<crate::coordinator::sched::SchedReport> {
-    use crate::coordinator::pool::SessionConfig;
-    use crate::coordinator::sched::{FleetScheduler, SchedConfig};
-    let sched = FleetScheduler::new(
-        service.features.clone(),
+    use crate::coordinator::sched::SchedConfig;
+    run_fleet_sched_cfg(
         catalog,
+        service,
+        base_sim,
+        num_users,
         SchedConfig {
             workers,
             global_cache_cap_bytes,
@@ -200,7 +201,25 @@ pub fn run_fleet_sched(
             hibernate_after_ms,
             ..SchedConfig::default()
         },
-    )?;
+        model,
+    )
+}
+
+/// Run a fleet through the scheduler with a caller-built
+/// [`crate::coordinator::sched::SchedConfig`] — the shared-arena /
+/// fused-decode arms of the fleet-dedup experiment need knobs the
+/// positional [`run_fleet_sched`] signature doesn't carry.
+pub fn run_fleet_sched_cfg(
+    catalog: &Catalog,
+    service: &ServiceSpec,
+    base_sim: &SimConfig,
+    num_users: usize,
+    cfg: crate::coordinator::sched::SchedConfig,
+    model: Option<&(dyn crate::runtime::InferenceBackend + Sync)>,
+) -> Result<crate::coordinator::sched::SchedReport> {
+    use crate::coordinator::pool::SessionConfig;
+    use crate::coordinator::sched::FleetScheduler;
+    let sched = FleetScheduler::new(service.features.clone(), catalog, cfg)?;
     let users = SessionConfig::fleet(base_sim, num_users);
     sched.run(catalog, &users, model)
 }

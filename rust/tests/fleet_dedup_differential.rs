@@ -1,0 +1,162 @@
+//! Fleet-dedup differential suite: the host-global payload arena plus
+//! coordinator-level fused same-instant Retrieve+Decode must be pure
+//! plumbing — every per-user extraction value bit-identical to the
+//! private sequential driver across all five services, worker counts,
+//! segment widths and hibernation policies — and the fused pass must
+//! decode each unique payload at most once per trigger instant, proven
+//! by counting: with identical-seed sessions the K-way fused fleet
+//! performs exactly as many decode executions (shared-cache misses) as
+//! a single session running alone.
+
+use autofeature::coordinator::pool::SessionConfig;
+use autofeature::coordinator::sched::{FleetScheduler, SchedConfig, SchedReport};
+use autofeature::engine::config::EngineConfig;
+use autofeature::harness::eval_catalog;
+use autofeature::workload::behavior::{ActivityLevel, Period};
+use autofeature::workload::driver::SimConfig;
+use autofeature::workload::services::{ServiceKind, ServiceSpec};
+
+fn base_cfg(workers: usize) -> SchedConfig {
+    SchedConfig {
+        workers,
+        global_cache_cap_bytes: 128 * 1024,
+        record_values: true,
+        ..SchedConfig::default()
+    }
+}
+
+fn base_sim(svc: &ServiceSpec, segment_rows: usize) -> SimConfig {
+    SimConfig {
+        period: Period::Evening,
+        activity: ActivityLevel::P70,
+        warmup_ms: 4 * 60_000,
+        duration_ms: (2 * svc.inference_interval_ms).max(60_000),
+        inference_interval_ms: svc.inference_interval_ms,
+        seed: 0xDED0,
+        segment_rows,
+        ..SimConfig::default()
+    }
+}
+
+fn assert_values_identical(a: &SchedReport, b: &SchedReport, label: &str) {
+    assert_eq!(a.sessions.len(), b.sessions.len(), "{label}");
+    for (x, y) in a.sessions.iter().zip(&b.sessions) {
+        assert_eq!(x.user_id, y.user_id, "{label}");
+        assert_eq!(x.requests, y.requests, "{label}: user {}", x.user_id);
+        assert_eq!(
+            x.events_logged, y.events_logged,
+            "{label}: user {}",
+            x.user_id
+        );
+        assert_eq!(x.values, y.values, "{label}: user {}", x.user_id);
+    }
+}
+
+/// Shared arena + fused decode never change a single value: every
+/// service, worker count {1,4}, segment width {1,8,64} and hibernation
+/// policy produces sessions bit-identical to the private sequential
+/// scheduler (workers=1, no sharing) over the same fleet.
+#[test]
+fn fused_extraction_is_bit_identical_across_arms() {
+    let catalog = eval_catalog();
+    for kind in ServiceKind::ALL {
+        let svc = ServiceSpec::build(kind, &catalog);
+        let plan = FleetScheduler::new(svc.features.clone(), &catalog, base_cfg(1))
+            .unwrap()
+            .shared_plan();
+        for segment_rows in [1usize, 8, 64] {
+            let users = SessionConfig::fleet(&base_sim(&svc, segment_rows), 4);
+            let baseline = FleetScheduler::from_shared(plan.clone(), base_cfg(1))
+                .run(&catalog, &users, None)
+                .unwrap();
+            for workers in [1usize, 4] {
+                for hibernate_after_ms in [i64::MAX, 1] {
+                    let hib = hibernate_after_ms == 1;
+                    let fused = FleetScheduler::from_shared(
+                        plan.clone(),
+                        SchedConfig {
+                            shared_arena: true,
+                            fuse_same_instant: 64,
+                            hibernate_after_ms,
+                            ..base_cfg(workers)
+                        },
+                    )
+                    .run(&catalog, &users, None)
+                    .unwrap();
+                    assert_values_identical(
+                        &fused,
+                        &baseline,
+                        &format!(
+                            "{}/rows={segment_rows}/workers={workers}/hib={hib}",
+                            kind.id()
+                        ),
+                    );
+                    assert!(
+                        fused.shared_decode_misses > 0,
+                        "{}: fused arm never decoded through the shared cache",
+                        kind.id()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The counter proof that a fused pass decodes each unique payload at
+/// most once per trigger instant: K identical-seed sessions fused under
+/// one worker perform exactly the decode executions (shared-cache
+/// misses) of one session running alone — per-instant decode-table
+/// builds are bounded by unique payloads, never by session count — and
+/// the K−1 redundant sessions surface as pure cache hits.
+#[test]
+fn fused_pass_decodes_each_unique_payload_once_per_instant() {
+    let catalog = eval_catalog();
+    let svc = ServiceSpec::build(ServiceKind::VR, &catalog);
+    let sim = base_sim(&svc, 8);
+    let clone_fleet = |k: u64| -> Vec<SessionConfig> {
+        (0..k)
+            .map(|u| SessionConfig {
+                user_id: u,
+                sim: sim.clone(),
+            })
+            .collect()
+    };
+    // Cache-free engines: the arbiter's per-session cache budget
+    // depends on fleet size (K sessions split the cap K ways), and a
+    // different cached-lane set changes how many payloads a trigger
+    // decodes. fusion_only removes that degree of freedom, so each
+    // session's decode demand per instant is a pure function of its
+    // (identical) trace and the miss counts compare exactly.
+    let cache_free = |fuse: usize| SchedConfig {
+        engine: EngineConfig::fusion_only(),
+        shared_arena: true,
+        fuse_same_instant: fuse,
+        ..base_cfg(1)
+    };
+    let plan = FleetScheduler::new(svc.features.clone(), &catalog, cache_free(1))
+        .unwrap()
+        .shared_plan();
+    // Reference arm: one session, per-trigger cache, no grouping — its
+    // miss count is the number of unique (payload, union) decodes one
+    // session needs per run.
+    let solo = FleetScheduler::from_shared(plan.clone(), cache_free(1))
+        .run(&catalog, &clone_fleet(1), None)
+        .unwrap();
+    assert!(solo.shared_decode_misses > 0);
+
+    for k in [4u64, 8] {
+        let fused = FleetScheduler::from_shared(plan.clone(), cache_free(k as usize))
+            .run(&catalog, &clone_fleet(k), None)
+            .unwrap();
+        assert!(fused.fused_groups > 0, "K={k}: grouping never engaged");
+        assert_eq!(
+            fused.shared_decode_misses, solo.shared_decode_misses,
+            "K={k}: a fused instant must decode each unique payload exactly \
+             once, independent of how many co-located sessions need it"
+        );
+        assert!(
+            fused.shared_decode_hits > solo.shared_decode_hits,
+            "K={k}: the K-1 redundant sessions must resolve as cache hits"
+        );
+    }
+}
